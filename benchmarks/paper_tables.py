@@ -1,0 +1,269 @@
+"""One benchmark per paper table/figure (see DESIGN.md SS7 for the mapping).
+
+CPU walltimes here are RELATIVE evidence (the ablation direction, not
+absolute TPS); TPU-targeted numbers come from the dry-run roofline
+(benchmarks/roofline.py). Runs on 8 fake CPU devices set up by run.py.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.dist import DistConfig
+from repro.models import runtime as RT
+from repro.models.common import ShapeConfig
+from repro.models.registry import get_arch
+
+ROWS: list[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    line = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(line)
+    print(line, flush=True)
+
+
+def _dcfg(**kw) -> DistConfig:
+    base = dict(mesh_axes=("data", "model"),
+                mesh_shape=(max(1, jax.device_count() // 2), 2),
+                param_dtype=jnp.float32, reduce_dtype=jnp.float32)
+    base.update(kw)
+    return DistConfig(**base)
+
+
+def _setup(dcfg, arch="qwen3_1_7b", B=8, S=64):
+    cfg, model = get_arch(arch, smoke=True)
+    shape = ShapeConfig("t", S, B, "train")
+    storage = RT.init_storage(model, jax.random.PRNGKey(0), dcfg)
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                     cfg.vocab),
+        "targets": jax.random.randint(jax.random.PRNGKey(2), (B, S), 0,
+                                      cfg.vocab),
+        "valid": jnp.ones((B, S)),
+    }
+    return cfg, model, shape, storage, batch
+
+
+def _timed(fn, *args, iters=8, warmup=2):
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def _train_fn(dcfg, with_opt=False, arch="qwen3_1_7b"):
+    cfg, model, shape, storage, batch = _setup(dcfg, arch)
+    step = RT.make_loss_step(model, dcfg)
+    specs = RT.model_storage_specs(model, dcfg)
+    fn, mesh = RT.wrap_step(model, dcfg, shape, step, (P(), specs))
+    return fn, (storage, batch)
+
+
+def _temp_bytes(fn, args):
+    return fn.lower(*args).compile().memory_analysis().temp_size_in_bytes
+
+
+# ---------------------------------------------------------------------------
+# Table 3 — debuggability: eager vs compiled, same code
+# ---------------------------------------------------------------------------
+def table3_debuggability():
+    dcfg = _dcfg(bucket_mode="block", reorder=False)
+    cfg, model, shape, storage, batch = _setup(dcfg)
+    step = RT.make_loss_step(model, dcfg)
+    specs = RT.model_storage_specs(model, dcfg)
+    jit_fn, mesh = RT.wrap_step(model, dcfg, shape, step, (P(), specs))
+    from jax import shard_map
+    eager_fn = shard_map(step, mesh=mesh,
+                         in_specs=(specs, RT.batch_specs(model, shape, dcfg)),
+                         out_specs=(P(), specs))
+    tokens = shape.seq_len * shape.global_batch
+    t_e = _timed(eager_fn, storage, batch, iters=2, warmup=1)
+    t_c = _timed(jit_fn, storage, batch)
+    emit("table3/eager", t_e, f"tps={tokens/(t_e/1e6):.0f}")
+    emit("table3/compiled", t_c,
+         f"tps={tokens/(t_c/1e6):.0f};speedup={t_e/t_c:.2f}x")
+
+
+# ---------------------------------------------------------------------------
+# Table 4 — compilation time breakdown
+# ---------------------------------------------------------------------------
+def table4_compile_time():
+    for mode, reorder in [("none", False), ("block", False),
+                          ("block", True), ("auto", True)]:
+        dcfg = _dcfg(bucket_mode=mode, reorder=reorder)
+        t0 = time.perf_counter()
+        fn, args = _train_fn(dcfg)
+        lowered = fn.lower(*args)
+        t_lower = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        lowered.compile()
+        t_comp = time.perf_counter() - t0
+        emit(f"table4/bucket={mode},reorder={reorder}",
+             (t_lower + t_comp) * 1e6,
+             f"lower_s={t_lower:.2f};compile_s={t_comp:.2f}")
+
+
+# ---------------------------------------------------------------------------
+# Table 5 — reorder & bucket effectiveness (the paper's core ablation)
+# ---------------------------------------------------------------------------
+def table5_reorder_bucket():
+    rows = [
+        ("vanilla", dict(bucket_mode="none", reorder=False)),
+        ("+reorder", dict(bucket_mode="none", reorder=True)),
+        ("+bucket", dict(bucket_mode="block", reorder=False)),
+        ("+reorder&bucket", dict(bucket_mode="block", reorder=True)),
+    ]
+    tokens = 64 * 8
+    for name, kw in rows:
+        fn, args = _train_fn(_dcfg(**kw))
+        us = _timed(fn, *args)
+        mem = _temp_bytes(fn, args)
+        emit(f"table5/{name}", us,
+             f"tps={tokens/(us/1e6):.0f};temp_mib={mem/2**20:.0f}")
+
+
+# ---------------------------------------------------------------------------
+# Table 6 — AG before/after last AG-wait placements
+# ---------------------------------------------------------------------------
+def table6_ag_placement():
+    tokens = 64 * 8
+    for fwd in (True, False):
+        for bwd in (True, False):
+            dcfg = _dcfg(bucket_mode="block", reorder=True,
+                         ag_before_wait_fwd=fwd, ag_before_wait_bwd=bwd)
+            fn, args = _train_fn(dcfg)
+            us = _timed(fn, *args)
+            mem = _temp_bytes(fn, args)
+            emit(f"table6/fwd_before={fwd},bwd_before={bwd}", us,
+                 f"tps={tokens/(us/1e6):.0f};temp_mib={mem/2**20:.0f}")
+
+
+# ---------------------------------------------------------------------------
+# Fig 3 — SimpleFSDP vs the compiler-auto baseline (GSPMD = FSDP2-compile
+# analogue): same model math, weights sharding-constrained, XLA inserts
+# the collectives itself.
+# ---------------------------------------------------------------------------
+def fig3_vs_gspmd():
+    """Same bring-your-own-module model (examples/quickstart MLP), two
+    compiler paths: SimpleFSDP explicit collectives vs GSPMD auto-sharding
+    (weights sharding-constrained, XLA inserts the collectives itself —
+    the FSDP2-compile analogue)."""
+    import sys
+    sys.path.insert(0, "examples")
+    from quickstart import apply_fn, init_params, VOCAB
+
+    from jax import shard_map
+    from repro.core import simple_fsdp
+    from repro.core.dist import make_mesh as _mk
+
+    dcfg = _dcfg(bucket_mode="block", reorder=True,
+                 mesh_shape=(jax.device_count(), 1))
+    mesh = _mk(dcfg)
+    params = init_params(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (16, 33), 0, VOCAB)
+    tokens, targets = toks[:, :-1], toks[:, 1:]
+
+    def nll(logits, targets):
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+        return -jnp.take_along_axis(logp, targets[..., None], -1).mean()
+
+    # SimpleFSDP path
+    sharded, metas, fsdp_apply = simple_fsdp(apply_fn, params, dcfg)
+    pspecs = jax.tree.map(lambda m: m.storage_spec(dcfg), metas,
+                          is_leaf=lambda x: hasattr(x, "storage_spec"))
+
+    def sf_step(p, tokens, targets):
+        return jax.value_and_grad(
+            lambda pp: nll(fsdp_apply(pp, tokens), targets))(p)
+
+    sf = jax.jit(shard_map(sf_step, mesh=mesh,
+                           in_specs=(pspecs, P("data"), P("data")),
+                           out_specs=(P(), pspecs), check_vma=False))
+    us_sf = _timed(sf, sharded, tokens, targets)
+    mem_sf = sf.lower(sharded, tokens, targets).compile() \
+        .memory_analysis().temp_size_in_bytes
+
+    # GSPMD auto path: shard dim0 over 'data', let XLA place collectives
+    sh = jax.tree.map(
+        lambda p: NamedSharding(
+            mesh, P("data") if p.ndim and p.shape[0] % dcfg.fsdp_size == 0
+            else P()), params)
+    params_g = jax.device_put(params, sh)
+    bsh = NamedSharding(mesh, P("data"))
+    tokens_g = jax.device_put(tokens, bsh)
+    targets_g = jax.device_put(targets, bsh)
+
+    g_fn = jax.jit(jax.value_and_grad(
+        lambda pp, t, y: nll(apply_fn(pp, t), y)))
+    us_g = _timed(g_fn, params_g, tokens_g, targets_g)
+    mem_g = g_fn.lower(params_g, tokens_g, targets_g).compile() \
+        .memory_analysis().temp_size_in_bytes
+    emit("fig3/simplefsdp", us_sf, f"temp_mib={mem_sf/2**20:.1f}")
+    emit("fig3/gspmd_auto(FSDP2-compile analog)", us_g,
+         f"temp_mib={mem_g/2**20:.1f}")
+
+
+# ---------------------------------------------------------------------------
+# Fig 4 — manual vs auto wrapping: analytic exposure on REAL arch workloads
+# ---------------------------------------------------------------------------
+def fig4_autowrap():
+    from repro.core.autowrap import auto_plan, exposed_comm_time
+    from repro.core.bucketing import per_param_plan, whole_block_plan
+    from repro.launch.mesh import production_dcfg
+    dcfg = production_dcfg()
+    for arch in ("llama3_8b", "deepseek_coder_33b", "qwen3_moe_30b_a3b"):
+        cfg, model = get_arch(arch)
+        metas = model.block_metas(dcfg)
+        stats = model.block_stats(dcfg, (1, 4096))
+        for name, plan in [
+            ("vanilla", per_param_plan(metas)),
+            ("manual", whole_block_plan(metas)),
+            ("auto", auto_plan(metas, dcfg, stats)),
+        ]:
+            r = exposed_comm_time(plan, metas, dcfg, stats)
+            emit(f"fig4/{arch}/{name}", r["exposed_s"] * 1e6,
+                 f"buckets={r['n_buckets']};"
+                 f"comm_us={r['total_comm_s']*1e6:.0f};"
+                 f"compute_us={r['compute_s']*1e6:.0f}")
+
+
+# ---------------------------------------------------------------------------
+# Fig 5 — convergence: SimpleFSDP vs the auto-sharded baseline, same data
+# ---------------------------------------------------------------------------
+def fig5_convergence(steps=30):
+    from repro.data.pipeline import DataConfig, SyntheticC4
+    from repro.optim.adamw import AdamWConfig
+    from repro.train.train_step import init_train_state, wrap_train_step
+
+    losses = {}
+    for name, kw in [("simplefsdp", dict(bucket_mode="block", reorder=True)),
+                     ("vanilla", dict(bucket_mode="none", reorder=False))]:
+        dcfg = _dcfg(**kw)
+        cfg, model = get_arch("qwen3_1_7b", smoke=True)
+        shape = ShapeConfig("t", 64, 8, "train")
+        fn, _ = wrap_train_step(model, dcfg, shape, AdamWConfig(lr=1e-3))
+        storage, opt = init_train_state(model, dcfg)
+        ds = SyntheticC4(DataConfig(vocab=cfg.vocab, seq_len=64,
+                                    global_batch=8, seed=0))
+        cur = []
+        for s in range(steps):
+            storage, opt, m = fn(storage, opt, ds.batch(s))
+            cur.append(float(m["loss"]))
+        losses[name] = cur
+        emit(f"fig5/{name}", 0.0,
+             f"loss0={cur[0]:.4f};loss_end={cur[-1]:.4f}")
+    gap = max(abs(a - b) for a, b in
+              zip(losses["simplefsdp"], losses["vanilla"]))
+    emit("fig5/max_divergence", 0.0, f"abs={gap:.6f}")
+    assert gap < 5e-3, "optimizations altered convergence!"

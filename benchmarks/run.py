@@ -1,0 +1,44 @@
+"""Benchmark harness entry point — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Distributed behaviour benches run
+on 8 fake CPU devices (set here, in this entry point only — tests and the
+dry-run manage their own device counts).
+
+Run:  PYTHONPATH=src python -m benchmarks.run [table3 table5 ...]
+"""
+
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+sys.path.insert(0, os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))), "src"))
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+def main() -> None:
+    from benchmarks import paper_tables as T
+    from benchmarks import roofline
+
+    benches = {
+        "table3": T.table3_debuggability,
+        "table4": T.table4_compile_time,
+        "table5": T.table5_reorder_bucket,
+        "table6": T.table6_ag_placement,
+        "fig3": T.fig3_vs_gspmd,
+        "fig4": T.fig4_autowrap,
+        "fig5": T.fig5_convergence,
+        "roofline": lambda: roofline.emit_csv(T.emit),
+    }
+    names = sys.argv[1:] or list(benches)
+    print("name,us_per_call,derived")
+    for n in names:
+        benches[n]()
+
+
+if __name__ == "__main__":
+    main()

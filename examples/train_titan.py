@@ -1,0 +1,71 @@
+"""End-to-end driver: train a ~100M-parameter qwen3-style model for a few
+hundred steps with the full production stack — SimpleFSDP (bucket+reorder),
+mixed precision, microbatching, AdamW + cosine schedule, checkpointing, an
+injected node failure with automatic restart, and straggler monitoring.
+
+The TorchTitan-equivalent entry point of the paper's evals, at CPU scale.
+
+Run:  PYTHONPATH=src python examples/train_titan.py [--steps 300]
+"""
+
+import argparse
+import logging
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax.numpy as jnp
+
+from repro.core.dist import DistConfig
+from repro.ft.failures import InjectedFailures
+from repro.models.common import ArchConfig, ShapeConfig
+from repro.models.registry import build_model
+from repro.optim.adamw import AdamWConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+logging.basicConfig(level=logging.INFO,
+                    format="%(asctime)s %(name)s %(message)s")
+
+# ~100M params: 8L x 512d x 8H, 32k vocab
+CFG100M = ArchConfig(
+    name="titan-100m", family="dense", n_layers=8, d_model=512,
+    n_heads=8, n_kv_heads=4, d_ff=2048, vocab=32_000, head_dim=64,
+    qk_norm=True, tie_embeddings=True, pad_to=4,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_titan")
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="inject a node failure at this step")
+    args = ap.parse_args()
+
+    import jax
+    n_dev = jax.device_count()
+    dcfg = DistConfig(
+        mesh_axes=("data", "model"), mesh_shape=(max(1, n_dev // 2), 2),
+        param_dtype=jnp.bfloat16, reduce_dtype=jnp.float32,
+        bucket_mode="block", reorder=True, microbatches=2,
+    )
+    model = build_model(CFG100M)
+    shape = ShapeConfig("train", args.seq, args.batch, "train")
+    tcfg = TrainerConfig(total_steps=args.steps, ckpt_every=100,
+                         log_every=10, warmup=20, ckpt_dir=args.ckpt_dir,
+                         async_ckpt=True)
+    fails = InjectedFailures(fail_at_steps=(args.fail_at,)) \
+        if args.fail_at else None
+    trainer = Trainer(model, dcfg, shape, AdamWConfig(lr=3e-4), tcfg,
+                      failure_source=fails)
+    _, _, hist = trainer.run()
+    print(f"\nfinal loss {hist[-1]['loss']:.4f} "
+          f"(from {hist[0]['loss']:.4f}); {trainer.restarts} restarts; "
+          f"{trainer.straggler.flags} straggler flags")
+    print(f"params: {CFG100M.n_params()/1e6:.1f}M")
+
+
+if __name__ == "__main__":
+    main()

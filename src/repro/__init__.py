@@ -1,0 +1,8 @@
+"""repro: SimpleFSDP (Zhang et al., 2024) as a production JAX framework.
+
+Compiler-based Fully Sharded Data Parallel with full-graph tracing,
+communication bucketing + reordering, manual/auto wrapping, and TP/EP/PP/SP
+composition — targeting multi-pod TPU v5e meshes. See DESIGN.md.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,18 @@
+"""internvl2-26b [vlm]: InternViT (STUB frontend: precomputed 3200-d patch
+embeddings, 1025 tokens) + InternLM2 backbone 48L d=6144 48H (GQA kv=8)
+ff=16384 v=92553 [arXiv:2404.16821; hf]. 48 q heads / tp16 = 3 per rank;
+kv (8 < 16) TP-replicated. long_500k skipped (full attention)."""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="internvl2-26b", family="vlm", n_layers=48, d_model=6144,
+    n_heads=48, n_kv_heads=8, d_ff=16384, vocab=92_560, head_dim=128,  # vocab padded 92553->92560 (tp16)
+    vit_dim=3200, n_img_tokens=1025, skip_shapes=("long_500k",),
+)
+
+SMOKE = ArchConfig(
+    name="internvl2-26b-smoke", family="vlm", n_layers=2, d_model=64,
+    n_heads=4, n_kv_heads=2, d_ff=128, vocab=256, head_dim=16,
+    vit_dim=48, n_img_tokens=8,
+    pad_to=4,
+)

@@ -1,0 +1,33 @@
+"""SimpleFSDP-JAX core: the paper's contribution as a composable library.
+
+Layers (see DESIGN.md):
+  dist        DistConfig — mesh axes, FSDP domain, dtypes, schedule flags
+  meta        ParamMeta — ZeRO-3 flat-shard storage layout
+  collectives replicate/gather_group — the differentiable parametrization
+  remat       selective-AC policies (re-gather in backward)
+  bucketing   BucketPlan — manual wrapping
+  autowrap    greedy Algorithm 1 — auto wrapping
+  stack       apply_stack — bucketed + reordered (prefetch) layer stacks
+  api         simple_fsdp() one-liner
+"""
+
+from repro.core.api import build_metas, shard_params, simple_fsdp
+from repro.core.autowrap import auto_plan, exposed_comm_time
+from repro.core.bucketing import (BucketPlan, manual_plan, per_param_plan,
+                                  whole_block_plan)
+from repro.core.collectives import gather_group, replicate, replicate_tree
+from repro.core.dist import DistConfig, make_mesh, single_device_config
+from repro.core.irgraph import BlockStats
+from repro.core.meta import (ParamMeta, abstract_storage, from_storage,
+                             storage_specs, to_storage)
+from repro.core.remat import checkpoint_policy, maybe_remat
+from repro.core.stack import apply_stack
+
+__all__ = [
+    "BlockStats", "BucketPlan", "DistConfig", "ParamMeta",
+    "abstract_storage", "apply_stack", "auto_plan", "build_metas",
+    "checkpoint_policy", "exposed_comm_time", "from_storage", "gather_group",
+    "make_mesh", "manual_plan", "maybe_remat", "per_param_plan", "replicate",
+    "replicate_tree", "shard_params", "simple_fsdp", "single_device_config",
+    "storage_specs", "to_storage", "whole_block_plan",
+]

@@ -1,0 +1,81 @@
+"""User-facing entry point — the analogue of the paper's
+
+    model = simple_fsdp(model)
+    model = torch.compile(model, fullgraph=True)
+
+`simple_fsdp` takes a pure apply function plus a (full, shaped) parameter
+pytree and returns (sharded_params, metas, wrapped_apply). `wrapped_apply`
+gathers parameters per the configured bucket plan before calling the original
+function, and its backward reduce-scatters gradients — i.e. the model now
+*is* FSDP, with no change to its code. Compile by wrapping in
+``jax.jit(shard_map(...))`` (see train/ and examples/quickstart.py).
+
+Large production models do not go through this generic wrapper — they build
+metas directly and use `core.stack.apply_stack` for scanned layer stacks
+(see models/); this entry point covers the "bring your own module" case and
+is what the paper's Fig. 1(3) loop corresponds to.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+
+from repro.core import collectives as coll
+from repro.core.bucketing import BucketPlan, plan_for
+from repro.core.dist import DistConfig
+from repro.core.meta import ParamMeta, named_leaves, to_storage
+
+
+def build_metas(params_full, cfg: DistConfig, tp_dims: dict[str, int] | None
+                = None, dtype=None):
+    """One ParamMeta per leaf; `tp_dims` maps param path -> TP-sharded dim."""
+    tp_dims = tp_dims or {}
+    named = dict(named_leaves(params_full))
+    metas = {}
+
+    def one(path, leaf):
+        return ParamMeta(
+            name=path,
+            global_shape=tuple(leaf.shape),
+            tp_dim=tp_dims.get(path),
+            dtype=dtype or leaf.dtype,
+        )
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_full)
+    metas = [one(jax.tree_util.keystr(p, simple=True, separator="/"), l)
+             for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, metas)
+
+
+def shard_params(params_full, metas, cfg: DistConfig):
+    """Full shaped params -> flat/padded/TP-indexed ZeRO-3 storage layout.
+
+    (Host-side layout transform; placement onto the mesh happens via
+    jax.device_put with `meta.storage_spec` — see train/trainer.py.)
+    """
+    return jax.tree.map(
+        lambda p, m: to_storage(p, m, cfg), params_full, metas,
+        is_leaf=lambda x: isinstance(x, ParamMeta) or hasattr(x, "shape"),
+    )
+
+
+def simple_fsdp(apply_fn: Callable, params_full, cfg: DistConfig,
+                tp_dims: dict[str, int] | None = None,
+                plan: BucketPlan | None = None):
+    """Wrap `apply_fn(params, *args)` with FSDP semantics.
+
+    Returns (sharded_params, metas, wrapped_apply) where `wrapped_apply`
+    expects the sharded storage layout and must run inside shard_map over
+    cfg's mesh.
+    """
+    metas = build_metas(params_full, cfg, tp_dims)
+    sharded = shard_params(params_full, metas, cfg)
+    resolved_plan = plan if plan is not None else plan_for(metas, cfg)
+
+    def wrapped_apply(shards, *args, **kwargs):
+        full = coll.replicate_tree(shards, metas, cfg, resolved_plan)
+        return apply_fn(full, *args, **kwargs)
+
+    return sharded, metas, wrapped_apply

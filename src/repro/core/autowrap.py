@@ -1,0 +1,112 @@
+"""Auto-wrapping: the paper's greedy Algorithm 1.
+
+Walks the per-parameter CommNodes in execution order and merges node *i* into
+the current bucket iff
+
+  forward   T_AG(bucket + i)              <= T_C(previous bucket's compute)
+  backward  T_RS(prev bucket) + T_AG(...) <= T_C(previous bucket's compute)
+  memory    M_C(next step) + M_C(i)       <= M_max
+
+(paper Alg. 1 lines 4-5 / 10-11; both directions must admit the merge since
+one plan serves forward and backward — the paper buckets "the corresponding
+reduce-scatter IR nodes of the all-gathers as well").
+
+The first bucket has no preceding compute to hide behind (it is the exposed
+prologue gather, paper Fig. 2 AG12); it is bounded by its own compute time
+and the memory cap.
+
+`auto_layer_group` additionally answers "how many *whole layers* can share one
+bucket" — the cross-layer generalization the runtime exploits for scanned
+stacks (a beyond-paper lever; logged in EXPERIMENTS.md SSPerf when used).
+"""
+
+from __future__ import annotations
+
+import math
+
+from repro.core.bucketing import BucketPlan
+from repro.core.dist import DistConfig
+from repro.core.irgraph import (BlockStats, CommNode, ag_time, build_nodes,
+                                comp_time, rs_time)
+
+
+def greedy_buckets(nodes: list[CommNode], cfg: DistConfig,
+                   mem_limit: float | None = None) -> list[list[CommNode]]:
+    if not nodes:
+        return []
+    m_max = cfg.autowrap_mem_limit if mem_limit is None else mem_limit
+    buckets: list[list[CommNode]] = []
+    cur: list[CommNode] = [nodes[0]]
+    for nd in nodes[1:]:
+        # bucket k+1's AG hides behind bucket k's compute; the FIRST bucket
+        # (exposed prologue, paper Fig. 2) is bounded by its own compute so
+        # comm-dominated graphs don't degenerate into one giant bucket.
+        prev_c = comp_time(buckets[-1]) if buckets else comp_time(cur)
+        cand = cur + [nd]
+        t_ag = ag_time(cand, cfg)
+        t_rs = rs_time(buckets[-1], cfg) if buckets else 0.0
+        time_ok = (t_ag <= prev_c) and (t_rs + t_ag <= prev_c)
+        mem_ok = (sum(c.mem_bytes for c in cand) + nd.mem_bytes) <= m_max
+        if time_ok and mem_ok:
+            cur.append(nd)
+        else:
+            buckets.append(cur)
+            cur = [nd]
+    buckets.append(cur)
+    return buckets
+
+
+def auto_plan(metas_tree, cfg: DistConfig,
+              stats: BlockStats | None = None) -> BucketPlan:
+    nodes = build_nodes(metas_tree, cfg, stats)
+    buckets = greedy_buckets(nodes, cfg)
+    return BucketPlan(tuple(tuple(n.name for n in grp) for grp in buckets))
+
+
+def exposed_comm_time(plan: BucketPlan, metas_tree, cfg: DistConfig,
+                      stats: BlockStats | None = None) -> dict:
+    """Analytic exposure of a plan: how much collective time is NOT hidden.
+
+    Used by benchmarks/fig4 to compare manual vs auto plans the way the
+    paper's Figure 4 compares their throughput.
+    """
+    nodes = {n.name: n for n in build_nodes(metas_tree, cfg, stats)}
+    groups = [[nodes[name] for name in grp] for grp in plan.groups]
+    # STEADY-STATE exposure across the scanned layer stack: bucket i of
+    # layer l prefetches behind bucket i-1's compute (cyclically — bucket 0
+    # hides behind the previous layer's last bucket). The one-time prologue
+    # gather is amortized over L layers and ignored here.
+    exposed = 0.0
+    total_comm = 0.0
+    n = len(groups)
+    for i, grp in enumerate(groups):
+        t_ag = ag_time(grp, cfg)
+        t_rs = rs_time(grp, cfg)
+        total_comm += t_ag + t_rs
+        prev = groups[(i - 1) % n]
+        hide = comp_time(prev)
+        exposed += max(0.0, t_ag + rs_time(prev, cfg) - hide)
+    return {
+        "exposed_s": exposed,
+        "total_comm_s": total_comm,
+        "compute_s": comp_time(list(nodes.values())),
+        "n_buckets": len(groups),
+    }
+
+
+def auto_layer_group(layer_nodes: list[CommNode], cfg: DistConfig,
+                     n_layers: int, mem_limit: float | None = None) -> int:
+    """Largest k (dividing n_layers) s.t. k layers' bucketed AG+RS still hides
+    behind k layers' compute and fits the memory cap."""
+    m_max = cfg.autowrap_mem_limit if mem_limit is None else mem_limit
+    best = 1
+    for k in range(2, n_layers + 1):
+        if n_layers % k:
+            continue
+        grp = layer_nodes * k
+        if ag_time(grp, cfg) + rs_time(grp, cfg) > comp_time(grp):
+            break
+        if 2 * sum(n.mem_bytes for n in grp) > m_max:
+            break
+        best = k
+    return best

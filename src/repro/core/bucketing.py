@@ -1,0 +1,112 @@
+"""Bucket plans: which parameters share one all-gather / reduce-scatter.
+
+The paper's TorchInductor pass merges communication IR nodes; here a
+`BucketPlan` is an explicit partition of a block's parameter leaves into
+ordered groups. It is produced either
+
+  * manually (`manual_plan`) from user module-name lists — the paper's
+    manual wrapping (FSDP2-style per-transformer-block in the evals), or
+  * automatically (`core/autowrap.py`) by the greedy Algorithm 1.
+
+The runtime consumers are `collectives.replicate_tree` (vanilla path) and
+`core/stack.py` (prefetch-scheduled scan), which issue ONE packed collective
+per group.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+
+import jax
+
+from repro.core.dist import DistConfig
+from repro.core.meta import ParamMeta, named_leaves
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPlan:
+    """Ordered partition of parameter names into gather groups."""
+
+    groups: tuple[tuple[str, ...], ...]
+
+    def index_groups(self, metas_tree) -> list[list[int]]:
+        """Map name groups -> leaf indices in tree-flatten order."""
+        names = [k for k, _ in named_leaves(metas_tree)]
+        pos = {n: i for i, n in enumerate(names)}
+        seen: set[str] = set()
+        out: list[list[int]] = []
+        for grp in self.groups:
+            idxs = []
+            for name in grp:
+                if name not in pos:
+                    raise KeyError(f"bucket plan names unknown param {name!r};"
+                                   f" known: {names[:8]}...")
+                idxs.append(pos[name])
+                seen.add(name)
+            out.append(sorted(idxs))
+        missing = [n for n in names if n not in seen]
+        if missing:  # unplanned params gather individually (paper default)
+            out.extend([[pos[n]] for n in missing])
+        return out
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.groups)
+
+    def bucket_bytes(self, metas_tree, cfg: DistConfig) -> list[int]:
+        """Gathered payload per bucket (param_dtype bytes) — feeds Alg. 1."""
+        import jax.numpy as jnp
+
+        metas = dict(named_leaves(metas_tree))
+        itemsize = jnp.dtype(cfg.param_dtype).itemsize
+        return [
+            sum(metas[n].padded_len(cfg) * itemsize for n in grp)
+            for grp in self.groups
+        ]
+
+
+def per_param_plan(metas_tree) -> BucketPlan:
+    """No bucketing: one collective per parameter (paper's 'vanilla')."""
+    return BucketPlan(tuple((k,) for k, _ in named_leaves(metas_tree)))
+
+
+def whole_block_plan(metas_tree) -> BucketPlan:
+    """One bucket for the whole block — the paper's per-transformer-block
+    manual wrapping used in its main evals."""
+    return BucketPlan((tuple(k for k, _ in named_leaves(metas_tree)),))
+
+
+def manual_plan(metas_tree, module_lists: list[list[str]]) -> BucketPlan:
+    """Bucket by user-provided module name (glob) lists, in order.
+
+    Mirrors the paper's manual wrapping: each inner list is one bucket; a
+    name matches if any glob in the list matches the param path.
+    """
+    names = [k for k, _ in named_leaves(metas_tree)]
+    taken: set[str] = set()
+    groups: list[tuple[str, ...]] = []
+    for globs in module_lists:
+        grp = tuple(
+            n for n in names
+            if n not in taken and any(fnmatch.fnmatch(n, g) for g in globs)
+        )
+        if grp:
+            groups.append(grp)
+            taken.update(grp)
+    return BucketPlan(tuple(groups))
+
+
+def plan_for(metas_tree, cfg: DistConfig, block_stats=None) -> BucketPlan:
+    """Resolve cfg.bucket_mode into a concrete plan for one block."""
+    if cfg.bucket_mode == "none":
+        return per_param_plan(metas_tree)
+    if cfg.bucket_mode == "block":
+        return whole_block_plan(metas_tree)
+    if cfg.bucket_mode == "auto":
+        from repro.core.autowrap import auto_plan
+
+        return auto_plan(metas_tree, cfg, block_stats)
+    if isinstance(cfg.bucket_mode, BucketPlan):
+        return cfg.bucket_mode
+    raise ValueError(f"unknown bucket_mode {cfg.bucket_mode!r}")

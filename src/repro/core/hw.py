@@ -1,0 +1,87 @@
+"""Hardware model for the TARGET platform (TPU v5e pod) and its interconnect.
+
+The container runs on CPU; every performance number derived here is an
+*analytic* roofline term computed from compiled HLO (see launch/dryrun.py and
+benchmarks/roofline.py), not a wall-clock measurement.  The constants below are
+the single source of truth for:
+
+  * the roofline denominators (peak FLOP/s, HBM bandwidth, ICI/DCN bandwidth),
+  * the alpha+beta communication model used by auto-wrapping (paper Alg. 1),
+  * the analytic compute-time estimates used in place of the paper's
+    CUDA-event profiling (DESIGN.md SS2 [changed]).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+# ---------------------------------------------------------------------------
+# TPU v5e chip (per-chip numbers), per the assignment's hardware constants.
+# ---------------------------------------------------------------------------
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s per chip, bf16 on the MXU
+HBM_BANDWIDTH = 819e9             # bytes/s per chip
+HBM_BYTES = 16 * 1024**3          # 16 GiB HBM per v5e chip
+VMEM_BYTES = 128 * 1024**2        # ~128 MiB vector memory (tiling budget)
+
+# Inter-chip interconnect (ICI): ~50 GB/s per link per direction; a v5e chip
+# has 4 ICI links in a 2D torus (16x16 pod).
+ICI_BW_PER_LINK = 50e9            # bytes/s/link
+ICI_LINKS_PER_CHIP = 4
+# Base latency for issuing one collective over ICI (the paper's alpha).
+ICI_ALPHA_S = 1e-6
+
+# Data-center network between pods (DCN). Much lower bandwidth, much higher
+# base latency -- this is the paper's "inter-node" regime where bucketing wins
+# (Table 5, 8-node column).
+DCN_BW_PER_HOST = 6.25e9          # bytes/s effective per host NIC share
+DCN_ALPHA_S = 25e-6
+
+# MXU/VPU native tiling (used by Pallas BlockSpec choices and padding rules).
+MXU_TILE = 128                    # systolic array dim; matmul dims want %128
+SUBLANE = 8                       # f32 sublane tiling (8, 128) vregs
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisBandwidth:
+    """Effective collective bandwidth of one mesh axis for one chip."""
+
+    bytes_per_s: float
+    alpha_s: float
+
+
+def axis_bandwidth(axis_name: str) -> AxisBandwidth:
+    """Bandwidth model per mesh axis.
+
+    'pod' is the cross-pod DCN axis; everything else rides the ICI torus. A
+    ring collective on one torus dimension uses 2 of the 4 links (bidirectional
+    ring), so an axis gets 2 links' worth of bandwidth.
+    """
+    if axis_name == "pod":
+        return AxisBandwidth(bytes_per_s=DCN_BW_PER_HOST, alpha_s=DCN_ALPHA_S)
+    return AxisBandwidth(
+        bytes_per_s=2 * ICI_BW_PER_LINK, alpha_s=ICI_ALPHA_S
+    )
+
+
+def collective_time_s(nbytes: float, axis_sizes: dict[str, int],
+                      axes: tuple[str, ...]) -> float:
+    """alpha + beta*n model for an all-gather/reduce-scatter over `axes`.
+
+    `nbytes` is the *full* (gathered) payload. A ring all-gather over an axis
+    of size k moves (k-1)/k of the payload through each chip's axis links.
+    Multi-axis collectives are modelled as sequential per-axis phases (how XLA
+    lowers them on a torus).
+    """
+    t = 0.0
+    for ax in axes:
+        k = axis_sizes[ax]
+        if k <= 1:
+            continue
+        bw = axis_bandwidth(ax)
+        t += bw.alpha_s + (nbytes * (k - 1) / k) / bw.bytes_per_s
+    return t
+
+
+def compute_time_s(flops: float, bytes_accessed: float) -> float:
+    """Analytic kernel-time estimate: max of compute and memory roofline."""
+    return max(flops / PEAK_FLOPS_BF16, bytes_accessed / HBM_BANDWIDTH)

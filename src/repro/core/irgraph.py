@@ -1,0 +1,87 @@
+"""Pseudo IR nodes: the unit the auto-wrapper reasons about.
+
+TorchInductor hands the paper real IR nodes with module provenance; XLA gives
+us no such hook, so we synthesize the equivalent *before lowering*: one
+`CommNode` per parameter (its all-gather + matching reduce-scatter) annotated
+with the compute that consumes it. Models supply the per-parameter FLOP/byte
+estimates via `BlockStats` (their `block_stats()` method); `core/autowrap.py`
+runs the paper's greedy Algorithm 1 over this list.
+
+This mirrors the paper's structure faithfully: profiling (SS3.3.2 "Profiling")
+is replaced by the analytic model in `core/hw.py` because the container
+cannot execute TPU kernels (DESIGN.md SS2 [changed]).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core import hw
+from repro.core.dist import DistConfig
+from repro.core.meta import ParamMeta, named_leaves
+
+
+@dataclasses.dataclass(frozen=True)
+class CommNode:
+    """One parameter's collective + the compute it feeds (paper Table 1)."""
+
+    name: str
+    ag_bytes: int          # gathered payload (param_dtype)
+    rs_bytes: int          # gradient reduce-scatter payload (reduce_dtype)
+    comp_flops: float      # T_ci numerator: FLOPs of the consuming compute
+    comp_bytes: float      # bytes accessed by the consuming compute
+    mem_bytes: float       # M_ci: peak bytes to hold param + its activations
+
+    def t_comp(self) -> float:
+        return hw.compute_time_s(self.comp_flops, self.comp_bytes)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockStats:
+    """Per-block analytic workload: {param name: (flops, bytes_accessed)}
+    for the op consuming each param, plus activation footprint."""
+
+    param_flops: dict[str, float]
+    param_bytes: dict[str, float]
+    act_bytes: float = 0.0
+
+
+def build_nodes(metas_tree, cfg: DistConfig,
+                stats: BlockStats | None) -> list[CommNode]:
+    """One CommNode per parameter, in declaration (flatten) order."""
+    p_item = jnp.dtype(cfg.param_dtype).itemsize
+    r_item = jnp.dtype(
+        jnp.bfloat16 if cfg.grad_compression else cfg.reduce_dtype).itemsize
+    nodes = []
+    for name, m in named_leaves(metas_tree):
+        assert isinstance(m, ParamMeta)
+        n = m.padded_len(cfg)
+        flops = stats.param_flops.get(name, 2.0 * n) if stats else 2.0 * n
+        bts = stats.param_bytes.get(name, 3.0 * n * p_item) if stats \
+            else 3.0 * n * p_item
+        nodes.append(CommNode(
+            name=name,
+            ag_bytes=n * p_item,
+            rs_bytes=n * r_item,
+            comp_flops=flops,
+            comp_bytes=bts,
+            mem_bytes=n * p_item + (stats.act_bytes if stats else 0.0),
+        ))
+    return nodes
+
+
+def ag_time(nodes: list[CommNode], cfg: DistConfig) -> float:
+    """alpha + beta*n for ONE bucketed all-gather of these nodes."""
+    return hw.collective_time_s(sum(n.ag_bytes for n in nodes),
+                                cfg.axis_sizes, cfg.fsdp_axes)
+
+
+def rs_time(nodes: list[CommNode], cfg: DistConfig) -> float:
+    return hw.collective_time_s(sum(n.rs_bytes for n in nodes),
+                                cfg.axis_sizes, cfg.fsdp_axes)
+
+
+def comp_time(nodes: list[CommNode]) -> float:
+    return sum(n.t_comp() for n in nodes)

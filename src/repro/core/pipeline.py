@@ -1,0 +1,69 @@
+"""Pipeline parallelism (GPipe microbatch schedule) composed with SimpleFSDP.
+
+Paper SS4 "Pipeline Parallel": each device receives its stage's submodule and
+SimpleFSDP wraps it — no extra code. Same shape here: the `pipe` mesh axis
+holds one stage per rank; stage parameters are ordinary SimpleFSDP storage
+(ZeRO-3 over the FSDP axes, bucket-gathered per use), and activations stream
+between stages with `lax.ppermute` inside the same shard_map (so the full
+computation+communication graph — FSDP gathers AND pipeline sends — is one
+jit, the paper's full-graph property).
+
+Schedule: GPipe with M microbatches over S stages: T = M + S - 1 slots; slot
+t computes microbatch (t - stage) on each stage and permutes activations
+forward. Autodiff through ppermute gives the reverse-permute backward (1F1B
+memory behaviour is a follow-up; M activations are live, as in GPipe).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.dist import DistConfig
+
+
+def pipe_rank(axis: str):
+    return lax.axis_index(axis)
+
+
+def gpipe(stage_fn: Callable, xs, n_stages: int, axis: str = "pipe"):
+    """Run `stage_fn(x) -> y` as an S-stage pipeline.
+
+    Inside shard_map: every rank along `axis` holds ITS stage's closure
+    (stage_fn usually closes over that rank's gathered params). `xs` is the
+    (M, ...) stack of microbatch activations fed to stage 0 (other ranks'
+    xs values are ignored). Returns the (M, ...) outputs of the LAST stage
+    (valid on every rank only at stage S-1; callers psum/select as needed).
+    """
+    M = xs.shape[0]
+    S = n_stages
+    T = M + S - 1
+    rank = pipe_rank(axis)
+    perm = [(i, (i + 1) % S) for i in range(S)]
+
+    buf0 = jnp.zeros_like(xs)          # per-stage output collection
+    state0 = jnp.zeros_like(xs[0])     # activation entering this stage
+
+    def slot(carry, t):
+        state, outs = carry
+        mb_idx = t - rank              # microbatch this stage works on
+        active = (mb_idx >= 0) & (mb_idx < M)
+        # stage 0 pulls its input from xs; others use the permuted state
+        x_in = jnp.where(rank == 0,
+                         xs[jnp.clip(mb_idx, 0, M - 1)], state)
+        y = stage_fn(x_in)
+        y = jnp.where(active, y, state)
+        # last stage collects; everyone else forwards
+        outs = jnp.where(
+            (rank == S - 1) & active,
+            lax.dynamic_update_index_in_dim(
+                outs, y, jnp.clip(mb_idx, 0, M - 1), 0),
+            outs)
+        state_next = lax.ppermute(y, axis, perm)
+        return (state_next, outs), None
+
+    (_, outs), _ = lax.scan(slot, (state0, buf0), jnp.arange(T))
+    return outs

@@ -1,0 +1,295 @@
+"""apply_stack: run a homogeneous layer stack under SimpleFSDP scheduling.
+
+This module is the JAX incarnation of the paper's TorchInductor *backend*
+passes (SS3.2). PyTorch reorders already-built IR nodes; XLA exposes no user
+IR pass, so we get the same schedules by *constructing* the dataflow so each
+communication is independent of the compute it must overlap (DESIGN.md SS2):
+
+  reorder=False  ("vanilla")
+      lax.scan(checkpoint(gather -> compute)); every layer's all-gather is
+      data-adjacent to its compute — fully exposed communication, exactly the
+      paper's unoptimized trace. Gathers are still bucketed per `plan`.
+      Backward collectives come from the `gather_group` custom_vjp.
+
+  reorder=True   (bucketing + reordering, paper Fig. 2)
+      A hand-scheduled double-buffered scan with a custom VJP:
+        forward  — the scan carry holds layer i's gathered bucket; the body
+                   first issues bucket i+1's all-gather (AG_{i+1} "before
+                   Wa_i"), then computes layer i. Saves ONLY per-layer block
+                   inputs (= full activation checkpointing).
+        backward — re-gathers bucket i-1 while layer i recomputes+grads
+                   (re-gather = the selective-AC MUST_RECOMPUTE semantics),
+                   and optionally delays layer i+1's packed reduce-scatter to
+                   the start of layer i's step so RS overlaps compute
+                   ("Wr12 before RS34").
+      The Table-6 ablation flags (ag_before_wait_fwd/bwd, rs_delay) flip these
+      placements; the "after" variants insert an optimization_barrier to
+      force the sequential schedule they name.
+
+The first (forward) / last (backward) iteration is peeled out of the scan so
+every carried value gets its true varying-manual-axes (vma) type from real
+computation — scan carries must type-match exactly under shard_map vma.
+
+Block contract:
+    block_fn(params_full, consts, x) -> (y, aux)
+      params_full : pytree of TP-local compute tensors (structure == metas)
+      consts      : pytree treated as constants (rope caches, masks) — zero
+                    cotangent (stop-grad)
+      x / y       : activation carry pytree (same structure both sides)
+      aux         : dict of scalars summed over layers (MoE aux loss etc.)
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import collectives as coll
+from repro.core.bucketing import BucketPlan, plan_for
+from repro.core.dist import DistConfig
+from repro.core.meta import ParamMeta, named_leaves
+from repro.core.remat import maybe_remat
+
+
+def _meta_leaves(metas_tree):
+    is_meta = lambda x: isinstance(x, ParamMeta)
+    leaves, treedef = jax.tree_util.tree_flatten(metas_tree, is_leaf=is_meta)
+    return leaves, treedef
+
+
+def _zero_cotangent(x):
+    def one(v):
+        if jnp.issubdtype(v.dtype, jnp.floating) or jnp.issubdtype(
+                v.dtype, jnp.complexfloating):
+            return jnp.zeros(v.shape, v.dtype)
+        return np.zeros(v.shape, jax.dtypes.float0)
+    return jax.tree.map(one, x)
+
+
+def apply_stack(block_fn: Callable, metas_tree, cfg: DistConfig,
+                stacked, consts, x, plan: BucketPlan | None = None,
+                block_stats=None):
+    """Run the layer stack; returns (y, aux_sums)."""
+    if plan is None:
+        plan = plan_for(metas_tree, cfg, block_stats)
+    if cfg.reorder:
+        return _prefetch_stack(block_fn, metas_tree, cfg, plan, stacked,
+                               consts, x)
+    return _vanilla_stack(block_fn, metas_tree, cfg, plan, stacked, consts, x)
+
+
+# ---------------------------------------------------------------------------
+# Vanilla: scan(remat(gather -> compute)). Exposed comm; autodiff backward.
+# ---------------------------------------------------------------------------
+def _vanilla_stack(block_fn, metas_tree, cfg, plan, stacked, consts, x):
+    metas, treedef = _meta_leaves(metas_tree)
+    leaves = treedef.flatten_up_to(stacked)
+    L = leaves[0].shape[0]
+
+    def layer(xc, layer_shards):
+        params = coll.replicate_tree(layer_shards, metas_tree, cfg, plan)
+        return block_fn(params, consts, xc)
+
+    layer = maybe_remat(layer, cfg.remat)
+
+    # peel layer 0 (gives the aux accumulator its true vma type)
+    y, aux = layer(x, jax.tree_util.tree_unflatten(
+        treedef, [l[0] for l in leaves]))
+    if L == 1:
+        return y, aux
+
+    def body(carry, layer_shards):
+        xc, aux = carry
+        y, aux_l = layer(xc, layer_shards)
+        return (y, jax.tree.map(jnp.add, aux, aux_l)), None
+
+    rest = jax.tree_util.tree_unflatten(treedef, [l[1:] for l in leaves])
+    (y, aux), _ = lax.scan(body, (y, aux), rest)
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# Prefetch: double-buffered scan with hand-written VJP.
+# ---------------------------------------------------------------------------
+def _prefetch_stack(block_fn, metas_tree, cfg, plan, stacked, consts, x):
+    metas, treedef = _meta_leaves(metas_tree)
+    groups = plan.index_groups(metas_tree)
+    stacked_leaves = treedef.flatten_up_to(stacked)
+    L = stacked_leaves[0].shape[0]
+    shard_shapes = [m.shard_shape(cfg) for m in metas]
+
+    def slice_layer(leaves, idx):
+        return [lax.dynamic_index_in_dim(s, idx, 0, keepdims=False)
+                for s in leaves]
+
+    def gather_layer(leaves, idx, barrier=None):
+        shards = slice_layer(leaves, idx)
+        if barrier is not None:
+            # Table-6 'after' placement: tie the gather's inputs to the
+            # previous compute so it cannot be scheduled ahead of it.
+            # optimization_barrier JOINS the vma of everything it ties, so a
+            # raw tie would up-vary TP-replicated shards; instead tie each
+            # shard to a zero scalar token derived from the barrier value and
+            # psum-reduced down to that shard's own vma class.
+            lf = jax.tree.leaves(barrier)[0]
+            base = (lf.ravel()[:1].sum() * 0).astype(jnp.float32)
+            tokens: dict = {}
+
+            def tok(vma):
+                key = frozenset(vma)
+                if key not in tokens:
+                    extra = tuple(a for a in jax.typeof(base).vma
+                                  if a not in key)
+                    tokens[key] = lax.psum(base, extra) if extra else base
+                return tokens[key]
+
+            shards = [
+                lax.optimization_barrier((s, tok(jax.typeof(s).vma)))[0]
+                for s in shards
+            ]
+        full: list = [None] * len(shards)
+        for grp in groups:
+            outs = coll.gather_group_fwd_raw(
+                [shards[i] for i in grp], [metas[i] for i in grp], cfg)
+            for i, o in zip(grp, outs):
+                full[i] = o
+        return full
+
+    def block_on(full_leaves, xc, cst):
+        params = jax.tree_util.tree_unflatten(treedef, full_leaves)
+        return block_fn(params, cst, xc)
+
+    # -------------------------------------------------- forward (primal) --
+    def one_fwd(leaves, g, xc, nxt_idx, cst):
+        """One layer: prefetch bucket `nxt_idx` around the compute."""
+        if cfg.ag_before_wait_fwd:
+            g_next = gather_layer(leaves, nxt_idx)            # AG before Wa
+            y, aux_l = block_on(g, xc, cst)
+        else:
+            y, aux_l = block_on(g, xc, cst)
+            g_next = gather_layer(leaves, nxt_idx, barrier=y)
+        return y, aux_l, g_next
+
+    def fwd_scan(leaves, x0, cst):
+        g0 = gather_layer(leaves, 0)
+        if L == 1:
+            y, aux = block_on(g0, x0, cst)
+            return y, aux, jax.tree.map(lambda v: v[None], x0)
+
+        y, aux, g1 = one_fwd(leaves, g0, x0, 1, cst)   # peeled layer 0
+
+        def body(carry, idx):
+            xc, aux, g = carry
+            nxt = jnp.minimum(idx + 1, L - 1)     # last prefetch is a no-op
+            yb, aux_l, g_next = one_fwd(leaves, g, xc, nxt, cst)
+            return (yb, jax.tree.map(jnp.add, aux, aux_l), g_next), xc
+
+        (y, aux, _), xs_rest = lax.scan(body, (y, aux, g1),
+                                        jnp.arange(1, L))
+        xs = jax.tree.map(lambda a, b: jnp.concatenate([a[None], b], 0),
+                          x0, xs_rest)
+        return y, aux, xs
+
+    # ----------------------------------------------------------- backward --
+    def bwd_scan(leaves, xs, dy, daux, cst):
+        x_treedef = jax.tree.structure(dy)
+        xs_leaves = jax.tree.leaves(xs)
+
+        def grads_to_buckets(dg_full_leaves):
+            return [
+                coll.pack_grad_bucket([dg_full_leaves[i] for i in grp],
+                                      [metas[i] for i in grp], cfg)
+                for grp in groups
+            ]
+
+        def finalize(pending):
+            """RS each bucket -> per-leaf local grad chunks (flatten order)."""
+            out: list = [None] * len(metas)
+            for grp, ct in zip(groups, pending):
+                parts = coll.finalize_grad_bucket(
+                    ct, [metas[i] for i in grp], cfg,
+                    [shard_shapes[i] for i in grp])
+                for i, p in zip(grp, parts):
+                    out[i] = p
+            return out
+
+        def one_bwd(g_cur, idx, dx, prv_idx, prefetch):
+            """Recompute + vjp layer idx; prefetch bucket prv_idx."""
+            g_prev = None
+            if prefetch and cfg.ag_before_wait_bwd:
+                g_prev = gather_layer(leaves, prv_idx)
+            x_l = jax.tree_util.tree_unflatten(
+                x_treedef, slice_layer(xs_leaves, idx))
+            _, vjp_fn = jax.vjp(
+                lambda fl, xc: block_on(fl, xc, cst), g_cur, x_l)
+            dg_full, dx_new = vjp_fn((dx, daux))
+            if prefetch and not cfg.ag_before_wait_bwd:
+                g_prev = gather_layer(leaves, prv_idx, barrier=dx_new)
+            return grads_to_buckets(dg_full), dx_new, g_prev
+
+        # peeled layer L-1
+        gL = gather_layer(leaves, L - 1)
+        pending, dx, g_cur = one_bwd(gL, L - 1, dy, max(L - 2, 0),
+                                     prefetch=L > 1)
+        if L == 1:
+            d_last = finalize(pending)
+            return [d[None] for d in d_last], dx
+        if not cfg.rs_delay:
+            d_top = finalize(pending)  # layer L-1, reduced immediately
+
+        def body(carry, idx):
+            dx, g_cur, pending = carry
+            if cfg.rs_delay:
+                emitted = finalize(pending)   # layer idx+1's RS, issued first
+            prv = jnp.maximum(idx - 1, 0)
+            pending_new, dx_new, g_prev = one_bwd(g_cur, idx, dx, prv,
+                                                  prefetch=True)
+            if not cfg.rs_delay:
+                emitted = finalize(pending_new)   # layer idx, immediate
+                pending_new = pending
+            return (dx_new, g_prev, pending_new), emitted
+
+        (dx, _, pending), emitted = lax.scan(
+            body, (dx, g_cur, pending), jnp.arange(L - 2, -1, -1))
+
+        # Reassemble per-layer grad stacks. Scan step j handled idx = L-2-j.
+        if cfg.rs_delay:
+            d0 = finalize(pending)   # layer 0 grads still pending
+            # emitted[j] = layer L-1-j  ->  flip = layers 1..L-1
+            dstack = [
+                jnp.concatenate([p0[None], jnp.flip(e, 0)], axis=0)
+                for p0, e in zip(d0, emitted)
+            ]
+        else:
+            # emitted[j] = layer L-2-j  ->  flip = layers 0..L-2
+            dstack = [
+                jnp.concatenate([jnp.flip(e, 0), dt[None]], axis=0)
+                for dt, e in zip(d_top, emitted)
+            ]
+        return dstack, dx
+
+    # ------------------------------------------------------- custom_vjp ----
+    @jax.custom_vjp
+    def run(stacked_, consts_, x_):
+        leaves = treedef.flatten_up_to(stacked_)
+        y, aux, _ = fwd_scan(leaves, x_, consts_)
+        return y, aux
+
+    def run_fwd(stacked_, consts_, x_):
+        leaves = treedef.flatten_up_to(stacked_)
+        y, aux, xs = fwd_scan(leaves, x_, consts_)
+        return (y, aux), (leaves, consts_, xs)
+
+    def run_bwd(res, cts):
+        leaves, consts_, xs = res
+        dy, daux = cts
+        dstack_leaves, dx = bwd_scan(leaves, xs, dy, daux, consts_)
+        dstacked = jax.tree_util.tree_unflatten(treedef, dstack_leaves)
+        return dstacked, _zero_cotangent(consts_), dx
+
+    run.defvjp(run_fwd, run_bwd)
+    return run(stacked, consts, x)

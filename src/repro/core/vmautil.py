@@ -1,0 +1,37 @@
+"""Helpers for shard_map's varying-manual-axes (vma) type tracking.
+
+Fresh zero-initialized scan carries (recurrent states, accumulators) are
+vma-invariant while the values computed from real inputs vary over mesh axes;
+lax.scan requires carry types to match exactly. `vary_like` upcasts the
+zeros to the union of the reference values' vma (a pure type cast — pcast to
+'varying' moves no data)."""
+
+from __future__ import annotations
+
+import jax
+from jax import lax
+
+
+def _vma(x) -> frozenset:
+    try:
+        return jax.typeof(x).vma
+    except AttributeError:  # outside shard_map / plain arrays
+        return frozenset()
+
+
+def vary_to(x, axes):
+    need = tuple(a for a in axes if a not in _vma(x))
+    return lax.pcast(x, need, to="varying") if need else x
+
+
+def tree_vma_union(tree) -> frozenset:
+    out: frozenset = frozenset()
+    for leaf in jax.tree.leaves(tree):
+        out |= _vma(leaf)
+    return out
+
+
+def vary_like(tree, ref_tree):
+    """Upcast every leaf of `tree` to the vma union of `ref_tree`."""
+    axes = tuple(sorted(tree_vma_union(ref_tree)))
+    return jax.tree.map(lambda v: vary_to(v, axes), tree)

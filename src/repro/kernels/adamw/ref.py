@@ -1,0 +1,17 @@
+"""AdamW update — pure-jnp oracle (bias-corrected, decoupled decay)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def adamw_update(p, g, m, v, *, lr, b1, b2, eps, wd, t):
+    pf = p.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    m = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+    v = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+    tf = t.astype(jnp.float32) if hasattr(t, "astype") else float(t)
+    mhat = m / (1 - b1 ** tf)
+    vhat = v / (1 - b2 ** tf)
+    pf = pf - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * pf)
+    return pf.astype(p.dtype), m.astype(p.dtype), v.astype(p.dtype)

@@ -1,0 +1,50 @@
+"""Fused streaming CE op with custom VJP (both directions Pallas)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.cross_entropy import kernel as K
+from repro.kernels.cross_entropy import ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def fused_xent(logits, targets, interpret: bool = False):
+    """logits (R, V), targets (R,) -> per-row loss (R,) fp32."""
+    loss, _ = _run_fwd(logits, targets, interpret)
+    return loss
+
+
+def _pad(logits, targets):
+    R, V = logits.shape
+    pr = (-R) % K.ROW_BLOCK
+    pv = (-V) % K.V_BLOCK
+    lp = jnp.pad(logits, ((0, pr), (0, pv)), constant_values=0)
+    tp = jnp.pad(targets, (0, pr))
+    return lp, tp, R, V
+
+
+def _run_fwd(logits, targets, interpret):
+    lp, tp, R, V = _pad(logits, targets)
+    loss, lse = K.xent_fwd(lp, tp, vocab=V, interpret=interpret)
+    return loss[:R], lse[:R]
+
+
+def _vjp_fwd(logits, targets, interpret):
+    loss, lse = _run_fwd(logits, targets, interpret)
+    return loss, (logits, targets, lse)
+
+
+def _vjp_bwd(interpret, res, g):
+    logits, targets, lse = res
+    lp, tp, R, V = _pad(logits, targets)
+    lsep = jnp.pad(lse, (0, lp.shape[0] - R), constant_values=1.0)
+    gp = jnp.pad(g, (0, lp.shape[0] - R))
+    dx = K.xent_bwd(lp, tp, lsep, gp, interpret=interpret)
+    return dx[:R, :V], None
+
+
+fused_xent.defvjp(_vjp_fwd, _vjp_bwd)

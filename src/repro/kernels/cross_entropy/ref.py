@@ -1,0 +1,22 @@
+"""Cross-entropy oracle: per-row loss + lse on full logits."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def xent(logits, targets):
+    """logits (R, V) fp; targets (R,) int. Returns (loss (R,), lse (R,))."""
+    lf = logits.astype(jnp.float32)
+    m = lf.max(-1)
+    lse = jnp.log(jnp.exp(lf - m[:, None]).sum(-1)) + m
+    tl = jnp.take_along_axis(lf, targets[:, None], axis=1)[:, 0]
+    return lse - tl, lse
+
+
+def dlogits(logits, targets, lse, g):
+    """Backward: d loss / d logits given upstream per-row cotangent g."""
+    p = jnp.exp(logits.astype(jnp.float32) - lse[:, None])
+    onehot = jax.nn.one_hot(targets, logits.shape[1], dtype=jnp.float32)
+    return ((p - onehot) * g[:, None]).astype(logits.dtype)

@@ -1,0 +1,72 @@
+"""Flash attention op: GQA-aware wrapper + custom VJP.
+
+Forward runs the Pallas kernel (TPU; interpret on CPU tests); backward uses
+the jnp chunked formulation (models/layers.attention_chunked) — flash
+backward kernels are a classic follow-up optimization and the chunked lax
+bwd already has the right memory behaviour.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel as K
+from repro.kernels.flash_attention import ref
+
+
+def _to_bh(x):
+    B, S, H, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+
+
+def _from_bh(x, B, H):
+    BH, S, hd = x.shape
+    return x.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention(q, k, v, causal=True, window=None, softcap=None,
+                    q_scale=None, interpret=False):
+    """q: (B,S,H,hd); k/v: (B,T,Kh,hd), H % Kh == 0. Returns (B,S,H,hd)."""
+    return _fwd_impl(q, k, v, causal, window, softcap, q_scale, interpret)
+
+
+def _fwd_impl(q, k, v, causal, window, softcap, q_scale, interpret):
+    B, S, H, hd = q.shape
+    T, Kh = k.shape[1], k.shape[2]
+    group = H // Kh
+    kr = jnp.repeat(k, group, axis=2)
+    vr = jnp.repeat(v, group, axis=2)
+    qb, kb, vb = _to_bh(q), _to_bh(kr), _to_bh(vr)
+    pad_q = (-S) % K.Q_BLOCK
+    pad_k = (-T) % K.KV_BLOCK
+    if pad_q:
+        qb = jnp.pad(qb, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kb = jnp.pad(kb, ((0, 0), (0, pad_k), (0, 0)))
+        vb = jnp.pad(vb, ((0, 0), (0, pad_k), (0, 0)))
+    out = K.flash_fwd(qb, kb, vb, causal=causal, window=window,
+                      softcap=softcap, q_scale=q_scale, interpret=interpret)
+    out = out[:, :S]
+    return _from_bh(out, B, H)
+
+
+def _vjp_fwd(q, k, v, causal, window, softcap, q_scale, interpret):
+    out = _fwd_impl(q, k, v, causal, window, softcap, q_scale, interpret)
+    return out, (q, k, v)
+
+
+def _vjp_bwd(causal, window, softcap, q_scale, interpret, res, ct):
+    from repro.models.layers import attention_chunked
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: attention_chunked(
+            q_, k_, v_, causal=causal, window=window, softcap=softcap,
+            q_scale=q_scale), q, k, v)
+    return vjp(ct)
+
+
+flash_attention.defvjp(_vjp_fwd, _vjp_bwd)

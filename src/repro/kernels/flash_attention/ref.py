@@ -1,0 +1,30 @@
+"""Quadratic attention oracle for the flash kernel. Layout (BH, S, hd)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention(q, k, v, *, causal=True, window=None, softcap=None,
+              q_scale=None):
+    BH, S, hd = q.shape
+    T = k.shape[1]
+    scale = q_scale if q_scale is not None else 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bqh,bkh->bqk", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    pos_q = jnp.arange(S)[:, None]
+    pos_k = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= pos_q >= pos_k
+    if window is not None:
+        mask &= pos_q - pos_k < window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkh->bqh", p, v.astype(jnp.float32)) \
+        .astype(q.dtype)

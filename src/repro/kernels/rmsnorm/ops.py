@@ -1,0 +1,53 @@
+"""RMSNorm op: differentiable dispatcher.
+
+`rmsnorm` — default entry used by the models: pure-jnp math (ref.py) that XLA
+fuses; fully differentiable, runs everywhere.
+
+`rmsnorm_pallas` — explicit Pallas forward with a custom VJP (backward in
+jnp), used on real TPUs and exercised by the kernel test sweep in
+interpret mode on CPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rmsnorm import kernel as K
+from repro.kernels.rmsnorm import ref
+
+
+def rmsnorm(x, w, eps: float = 1e-5, unit_offset: bool = False):
+    if jax.default_backend() == "tpu":
+        return rmsnorm_pallas(x, w, eps=eps, unit_offset=unit_offset)
+    return ref.rmsnorm(x, w, eps=eps, unit_offset=unit_offset)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def rmsnorm_pallas(x, w, eps: float = 1e-5, unit_offset: bool = False,
+                   interpret: bool = False):
+    d = x.shape[-1]
+    rows = x.size // d
+    pad = (-rows) % K.ROW_BLOCK
+    x2 = x.reshape(rows, d)
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    out = K.rmsnorm_fwd(x2, w, eps, unit_offset, interpret=interpret)
+    return out[:rows].reshape(x.shape)
+
+
+def _fwd(x, w, eps, unit_offset, interpret):
+    return rmsnorm_pallas(x, w, eps, unit_offset, interpret), (x, w)
+
+
+def _bwd(eps, unit_offset, interpret, res, ct):
+    x, w = res
+    _, vjp = jax.vjp(
+        lambda xx, ww: ref.rmsnorm(xx, ww, eps=eps, unit_offset=unit_offset),
+        x, w)
+    return vjp(ct)
+
+
+rmsnorm_pallas.defvjp(_fwd, _bwd)

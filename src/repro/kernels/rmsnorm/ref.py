@@ -1,0 +1,17 @@
+"""Pure-jnp RMSNorm oracle (also the differentiable default implementation —
+XLA fuses it into one pass; the Pallas kernel is the explicit-tiling TPU
+fast path validated against this)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rmsnorm(x, w, eps: float = 1e-5, unit_offset: bool = False):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jnp.reciprocal(jnp.sqrt(var + eps))
+    scale = (w.astype(jnp.float32) + 1.0) if unit_offset \
+        else w.astype(jnp.float32)
+    return (y * scale).astype(dt)

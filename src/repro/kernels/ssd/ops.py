@@ -1,0 +1,65 @@
+"""SSD op wrapper: reshapes the model's (B,T,H,P) layout into the kernel's
+chunked (BH, nC, Lc, *) layout; backward delegates to the jnp chunked oracle
+(ref.ssd_chunked) via custom VJP."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd import kernel as K
+from repro.kernels.ssd import ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7))
+def ssd(x, dt, A, Bm, Cm, D, chunk: int = K.CHUNK,
+        interpret: bool = False):
+    """Same contract as ref.ssd_chunked (state-less entry, y only)."""
+    return _fwd_impl(x, dt, A, Bm, Cm, D, chunk, interpret)
+
+
+def _fwd_impl(x, dt, A, Bm, Cm, D, chunk, interpret):
+    B, T, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Lc = min(chunk, T)
+    pad = (-T) % Lc
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nC = (T + pad) // Lc
+    Bh = jnp.repeat(Bm, rep, axis=2)
+    Ch = jnp.repeat(Cm, rep, axis=2)
+
+    def to_bh(a):   # (B, T, H, ...) -> (B*H, nC, Lc, ...)
+        a = a.reshape(B, nC, Lc, H, *a.shape[3:])
+        a = jnp.moveaxis(a, 3, 1)
+        return a.reshape(B * H, nC, Lc, *a.shape[4:])
+
+    y = K.ssd_fwd(jnp.tile(A, B), to_bh(x), to_bh(dt), to_bh(Bh),
+                  to_bh(Ch), interpret=interpret)
+    y = y.reshape(B, H, nC, Lc, P)
+    y = jnp.moveaxis(y, 1, 3).reshape(B, nC * Lc, H, P)[:, :T]
+    if D is not None:
+        y = y + x[:, :T] * D[None, None, :, None]
+    return y.astype(x.dtype)
+
+
+def _vjp_fwd(x, dt, A, Bm, Cm, D, chunk, interpret):
+    return _fwd_impl(x, dt, A, Bm, Cm, D, chunk, interpret), \
+        (x, dt, A, Bm, Cm, D)
+
+
+def _vjp_bwd(chunk, interpret, res, ct):
+    x, dt, A, Bm, Cm, D = res
+    _, vjp = jax.vjp(
+        lambda *args: ref.ssd_chunked(*args, chunk=chunk)[0],
+        x, dt, A, Bm, Cm, D)
+    return vjp(ct)
+
+
+ssd.defvjp(_vjp_fwd, _vjp_bwd)

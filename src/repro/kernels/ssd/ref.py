@@ -1,0 +1,94 @@
+"""Mamba-2 SSD (state-space dual) — pure-jnp chunked oracle + decode step.
+
+This is both the reference for the Pallas kernel and the lowering used by
+models/zamba2.py (chunked: O(T·(hd·ds + Lc·hd)) compute, scan over chunks).
+
+Shapes: x (B,T,H,P) [P=headdim], dt (B,T,H) positive, A (H,) negative,
+Bm/Cm (B,T,G,N) [N=d_state, G groups, H % G == 0], D (H,) skip.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.vmautil import vary_like
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, D=None, chunk: int = 128, state=None):
+    B, T, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Lc = min(chunk, T)
+    pad = (-T) % Lc
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nC = (T + pad) // Lc
+
+    def rs(a):
+        return a.reshape(B, nC, Lc, *a.shape[2:]).swapaxes(0, 1)
+
+    xc, dtc, Bc, Cc = rs(x), rs(dt), rs(Bm), rs(Cm)
+
+    if state is None:
+        S0 = jnp.zeros((B, H, P, N), jnp.float32)
+        S0 = vary_like(S0, (x, dt, Bm, Cm))
+    else:
+        S0 = state
+
+    def chunk_step(S_in, inp):
+        xb, dtb, Bb, Cb = inp
+        dtf = dtb.astype(jnp.float32)
+        dA = dtf * A[None, None, :]                    # (B,Lc,H) negative
+        cum = jnp.cumsum(dA, axis=1)                   # inclusive
+        # L[t,s] = exp(cum_t - cum_s) for s <= t (decay between s and t)
+        Ldec = jnp.exp(cum[:, :, None] - cum[:, None, :, :])
+        tri = jnp.tril(jnp.ones((Lc, Lc), bool))
+        Ldec = jnp.where(tri[None, :, :, None], Ldec, 0.0)
+        xf = xb.astype(jnp.float32) * dtf[..., None]   # dt-weighted input
+        Bf = Bb.astype(jnp.float32)
+        Cf = Cb.astype(jnp.float32)
+        # expand groups to heads
+        Bh = jnp.repeat(Bf, rep, axis=2)               # (B,Lc,H,N)
+        Ch = jnp.repeat(Cf, rep, axis=2)
+        # intra-chunk: y_t = sum_s<=t (C_t . B_s) Ldec[t,s] x_s
+        CB = jnp.einsum("blhn,bshn->blsh", Ch, Bh)
+        y_intra = jnp.einsum("blsh,bshp->blhp", CB * Ldec, xf)
+        # inter-chunk: y_t += C_t . (decay_t * S_in)
+        dec_t = jnp.exp(cum)                           # (B,Lc,H)
+        y_inter = jnp.einsum("blhn,bhpn->blhp", Ch, S_in) \
+            * dec_t[..., None]
+        y = y_intra + y_inter
+        # state: S_out = exp(cum_T) S_in + sum_s exp(cum_T - cum_s) B_s x_s
+        decT = jnp.exp(cum[:, -1])                     # (B,H)
+        w = jnp.exp(cum[:, -1][:, None] - cum)         # (B,Lc,H)
+        S_out = decT[..., None, None] * S_in + jnp.einsum(
+            "bshp,bshn->bhpn", xf * w[..., None], Bh)
+        return S_out, y
+
+    S, ys = lax.scan(chunk_step, S0, (xc, dtc, Bc, Cc))
+    y = ys.swapaxes(0, 1).reshape(B, T + pad, H, P)[:, :T]
+    if D is not None:
+        y = y + x[:, :T] * D[None, None, :, None]
+    return y.astype(x.dtype), S
+
+
+def ssd_step(S, x, dt, A, Bm, Cm, D=None):
+    """Decode: x (B,H,P); dt (B,H); Bm/Cm (B,G,N); S (B,H,P,N)."""
+    H = x.shape[1]
+    G = Bm.shape[1]
+    rep = H // G
+    dtf = dt.astype(jnp.float32)
+    dA = jnp.exp(dtf * A[None, :])                     # (B,H)
+    Bh = jnp.repeat(Bm.astype(jnp.float32), rep, axis=1)
+    Ch = jnp.repeat(Cm.astype(jnp.float32), rep, axis=1)
+    xf = x.astype(jnp.float32) * dtf[..., None]
+    S = dA[..., None, None] * S + xf[..., :, None] * Bh[..., None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", S, Ch)
+    if D is not None:
+        y = y + x * D[None, :, None]
+    return S, y.astype(x.dtype)

@@ -1,0 +1,424 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves the distribution config is coherent — the full
+SimpleFSDP computation+communication graph lowers, SPMD-partitions over the
+production mesh (16x16 single-pod / 2x16x16 multi-pod) and compiles — and
+extracts the roofline raw material:
+
+  * compiled.memory_analysis()  -> per-device bytes (fits-in-HBM check)
+  * compiled.cost_analysis()    -> per-device HLO FLOPs / bytes accessed
+  * compiled.as_text()          -> collective ops parsed into per-axis-class
+                                   payload bytes (ICI vs DCN)
+
+Results land in benchmarks/results/dryrun_<mesh>.json; EXPERIMENTS.md
+sections SSDry-run and SSRoofline are generated from them.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek_coder_33b \
+      --shape train_4k [--multi-pod]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core import hw
+from repro.core.dist import DistConfig
+from repro.launch.mesh import make_production_mesh, production_dcfg
+from repro.models import runtime as RT
+from repro.models.common import SHAPE_SUITE, ShapeConfig, get_shape
+from repro.models.registry import ARCH_IDS, get_arch
+from repro.optim.adamw import AdamWConfig
+from repro.train import serve as SV
+from repro.train.train_step import make_train_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "benchmarks", "results")
+
+# per-(arch, shape) microbatch counts where one microbatch would blow HBM
+MICROBATCH = {
+    ("gemma2_27b", "train_4k"): 4,
+    ("internvl2_26b", "train_4k"): 4,
+    ("deepseek_coder_33b", "train_4k"): 4,
+    ("phi3_medium_14b", "train_4k"): 4,
+    ("xlstm_1_3b", "train_4k"): 16,
+    ("zamba2_1_2b", "train_4k"): 4,
+}
+
+
+def _sds_with_sharding(tree_abs, tree_specs, mesh):
+    def one(a, s):
+        return jax.ShapeDtypeStruct(a.shape, a.dtype,
+                                    sharding=NamedSharding(mesh, s))
+    return jax.tree.map(one, tree_abs, tree_specs,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def _batch_specs(model, shape, dcfg, B):
+    """Shard batch over dp axes when divisible; replicate otherwise
+    (long_500k has global_batch=1)."""
+    dp = tuple(a for a in dcfg.mesh_axes if a != dcfg.tp_axis)
+    dp_total = dcfg.dp_total
+    specs = {}
+    for k, sds in model.input_specs(shape, dcfg).items():
+        lead = sds.shape[0]
+        first = dp if lead % dp_total == 0 and lead >= dp_total else None
+        specs[k] = P(first, *([None] * (len(sds.shape) - 1)))
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# collective parsing
+# ---------------------------------------------------------------------------
+_SHAPE_RE = re.compile(r"(bf16|f32|f16|s32|u32|s8|u8|pred|f64)\[([\d,]*)\]")
+_DTYPE_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "f64": 8}
+_COLL_RE = re.compile(
+    r"= \S+ (all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([\d,]+)\}")
+
+
+def _line_out_bytes(line: str) -> int:
+    m = _SHAPE_RE.search(line.split("=", 1)[1] if "=" in line else line)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def parse_collectives(hlo_text: str, dcfg: DistConfig) -> dict:
+    """Classify each collective by replica-group size -> axis class (ICI/DCN)
+    and accumulate effective per-device payload bytes."""
+    per_class = {"ici_bytes": 0.0, "dcn_bytes": 0.0}
+    ops = []
+    pod = dcfg.axis_sizes.get("pod", 1)
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        g = _GROUPS_RE.search(line)
+        gsize = len(g.group(1).split(",")) if g else 1
+        if gsize <= 1:
+            continue
+        out_b = _line_out_bytes(line)
+        k = gsize
+        frac = (k - 1) / k
+        if kind == "all-gather":
+            payload = out_b * frac
+        elif kind == "reduce-scatter":
+            payload = out_b * (k - 1)          # input = out*k; moves (k-1)/k
+        elif kind == "all-reduce":
+            payload = 2.0 * out_b * frac
+        elif kind == "all-to-all":
+            payload = out_b * frac
+        else:                                   # collective-permute
+            payload = out_b
+        # axis class: a group spanning across pods touches DCN
+        is_dcn = pod > 1 and gsize in (pod, pod * dcfg.axis_size("data"))
+        per_class["dcn_bytes" if is_dcn else "ici_bytes"] += payload
+        ops.append({"kind": kind, "group": k, "bytes": out_b})
+    per_class["n_collectives"] = len(ops)
+    kinds = {}
+    for o in ops:
+        kinds[o["kind"]] = kinds.get(o["kind"], 0) + 1
+    per_class["by_kind"] = kinds
+    return per_class
+
+
+# ---------------------------------------------------------------------------
+# per-cell lowering
+# ---------------------------------------------------------------------------
+def build_lowered(arch_id: str, shape_name: str, dcfg: DistConfig, mesh,
+                  bucket_mode="block", reorder=True):
+    cfg, model = get_arch(arch_id)
+    shape = get_shape(shape_name)
+    mb = MICROBATCH.get((arch_id, shape_name), 1)
+    b_local = max(1, shape.global_batch // dcfg.dp_total)
+    mb = min(mb, b_local)        # can't split below one sample per device
+    dcfg = dcfg.with_(microbatches=mb, bucket_mode=bucket_mode,
+                      reorder=reorder)
+
+    if shape.kind == "train":
+        step = make_train_step(model, dcfg, AdamWConfig())
+        pspecs = RT.model_storage_specs(model, dcfg)
+        opt_specs = {"m": pspecs, "v": pspecs, "step": P()}
+        bspecs = _batch_specs(model, shape, dcfg, shape.global_batch)
+        fn = shard_map(step, mesh=mesh,
+                       in_specs=(pspecs, opt_specs, bspecs),
+                       out_specs=(pspecs, opt_specs,
+                                  {"loss": P(), "grad_norm": P(),
+                                   "lr": P()}),
+                       check_vma=False)
+        params_abs = RT.model_abstract_storage(model, dcfg)
+        opt_abs = {"m": params_abs, "v": params_abs,
+                   "step": jax.ShapeDtypeStruct((), jnp.int32)}
+        batch_abs = model.input_specs(shape, dcfg)
+        args = (
+            _sds_with_sharding(params_abs, pspecs, mesh),
+            _sds_with_sharding(opt_abs, opt_specs, mesh),
+            _sds_with_sharding(batch_abs, bspecs, mesh),
+        )
+        lowered = jax.jit(fn, donate_argnums=(0, 1)).lower(*args)
+    elif shape.kind == "prefill":
+        if cfg.family in ("dense", "moe", "vlm"):
+            dcfg = dcfg.with_(kv_cache_int8=True)   # cache decode consumes
+        dp = tuple(a for a in dcfg.mesh_axes if a != dcfg.tp_axis)
+        bspecs = _batch_specs(model, shape, dcfg, shape.global_batch)
+        _, cache_specs = SV.cache_abstract(model, shape, dcfg)
+
+        def step(params, batch):
+            return model.prefill_local(params, batch, dcfg)
+
+        fn = shard_map(step, mesh=mesh,
+                       in_specs=(SV.serve_param_specs(model, dcfg), bspecs),
+                       out_specs=(P(bspecs["tokens"][0], dcfg.tp_axis),
+                                  cache_specs),
+                       check_vma=False)
+        args = (
+            _sds_with_sharding(SV.serve_abstract_params(model, dcfg),
+                               SV.serve_param_specs(model, dcfg), mesh),
+            _sds_with_sharding(model.input_specs(shape, dcfg), bspecs,
+                               mesh),
+        )
+        lowered = jax.jit(fn).lower(*args)
+    else:  # decode
+        if cfg.family in ("dense", "moe", "vlm"):
+            # int8 KV-cache quantization: halves the dominant decode buffer
+            dcfg = dcfg.with_(kv_cache_int8=True)
+        dp = tuple(a for a in dcfg.mesh_axes if a != dcfg.tp_axis)
+        B = shape.global_batch
+        lead = dp if B % dcfg.dp_total == 0 and B >= dcfg.dp_total else None
+        cache_abs, cache_specs = SV.cache_abstract(model, shape, dcfg)
+        # re-spec the cache batch dim when batch is replicated
+        if lead is None:
+            cache_specs = jax.tree.map(
+                lambda s: P(*[None if ax else ax for ax in [None]])
+                if False else _strip_dp(s, dcfg), cache_specs,
+                is_leaf=lambda x: isinstance(x, P))
+
+        def step(params, cache, tok, pos):
+            logits, cache = model.decode_local(params, cache, tok, pos[0],
+                                               dcfg)
+            return logits, cache
+
+        fn = shard_map(step, mesh=mesh,
+                       in_specs=(SV.serve_param_specs(model, dcfg),
+                                 cache_specs, P(lead), P()),
+                       out_specs=(P(lead, dcfg.tp_axis), cache_specs),
+                       check_vma=False)
+        args = (
+            _sds_with_sharding(SV.serve_abstract_params(model, dcfg),
+                               SV.serve_param_specs(model, dcfg), mesh),
+            _sds_with_sharding(cache_abs, cache_specs, mesh),
+            jax.ShapeDtypeStruct((B,), jnp.int32,
+                                 sharding=NamedSharding(mesh, P(lead))),
+            jax.ShapeDtypeStruct((1,), jnp.int32,
+                                 sharding=NamedSharding(mesh, P())),
+        )
+        # donate the cache: decode updates it in place (halves HBM)
+        lowered = jax.jit(fn, donate_argnums=(1,)).lower(*args)
+    return lowered, model, shape, dcfg
+
+
+def _strip_dp(spec: P, dcfg: DistConfig):
+    """Replace dp-axis entries with None (batch replicated)."""
+    dp = set(a for a in dcfg.mesh_axes if a != dcfg.tp_axis)
+
+    def clean(e):
+        if e is None:
+            return None
+        if isinstance(e, tuple):
+            kept = tuple(a for a in e if a not in dp)
+            return kept if kept else None
+        return None if e in dp else e
+
+    return P(*[clean(e) for e in spec])
+
+
+# ---------------------------------------------------------------------------
+# roofline terms
+# ---------------------------------------------------------------------------
+def roofline_terms(cost: dict, colls: dict, model, shape: ShapeConfig,
+                   dcfg: DistConfig) -> dict:
+    flops = float(cost.get("flops", 0.0))
+    bts = float(cost.get("bytes accessed", 0.0))
+    t_comp = flops / hw.PEAK_FLOPS_BF16
+    t_mem = bts / hw.HBM_BANDWIDTH
+    t_ici = colls["ici_bytes"] / (2 * hw.ICI_BW_PER_LINK)
+    t_dcn = colls["dcn_bytes"] / hw.DCN_BW_PER_HOST
+    t_coll = t_ici + t_dcn
+    cfg = model.cfg
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        model_flops = 6.0 * cfg.n_params_active() * tokens / dcfg.n_devices
+    elif shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        model_flops = 2.0 * cfg.n_params_active() * tokens / dcfg.n_devices
+    else:
+        tokens = shape.global_batch
+        model_flops = 2.0 * cfg.n_params_active() * tokens / dcfg.n_devices
+    dominant = max((("compute", t_comp), ("memory", t_mem),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    return {
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "t_ici_s": t_ici, "t_dcn_s": t_dcn,
+        "dominant": dominant,
+        "hlo_flops_per_dev": flops, "hlo_bytes_per_dev": bts,
+        "model_flops_per_dev": model_flops,
+        "useful_flop_frac": model_flops / flops if flops else 0.0,
+        "roofline_frac": (min(t_comp, max(t_comp, t_mem, t_coll))
+                          / max(t_comp, t_mem, t_coll, 1e-30)),
+    }
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             bucket_mode="block", reorder=True, zero3=False,
+             mesh_shape=None, microbatch=None) -> dict:
+    cfg, model = get_arch(arch_id)
+    if shape_name in cfg.skip_shapes:
+        return {"arch": arch_id, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "SKIP",
+                "reason": "quadratic attention at 500k (DESIGN.md)"}
+    if mesh_shape is not None:      # hillclimb: alternative factorization
+        import math as _m
+        assert _m.prod(mesh_shape) == (512 if multi_pod else 256)
+        axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+        mesh = jax.make_mesh(mesh_shape, axes,
+                             axis_types=(jax.sharding.AxisType.Auto,)
+                             * len(axes))
+        dcfg = production_dcfg(multi_pod=multi_pod, zero3_global=zero3) \
+            .with_(mesh_shape=mesh_shape)
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        dcfg = production_dcfg(multi_pod=multi_pod, zero3_global=zero3)
+    if microbatch is not None:
+        MICROBATCH[(arch_id, shape_name)] = microbatch
+    t0 = time.time()
+    lowered, model, shape, dcfg = build_lowered(arch_id, shape_name, dcfg,
+                                                mesh, bucket_mode, reorder)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    colls = parse_collectives(compiled.as_text(), dcfg)
+    terms = roofline_terms(cost, colls, model, shape, dcfg)
+    per_dev = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+               + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+    rec = {
+        "arch": arch_id, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "OK",
+        "fits_hbm": bool(per_dev <= hw.HBM_BYTES),
+        "mem": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "per_device_bytes": per_dev,
+        },
+        "collectives": colls,
+        "roofline": terms,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "bucket_mode": bucket_mode, "reorder": reorder,
+        "microbatches": MICROBATCH.get((arch_id, shape_name), 1),
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--zero3", action="store_true")
+    ap.add_argument("--bucket-mode", default="block")
+    ap.add_argument("--no-reorder", action="store_true")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="alternative factorization, e.g. 64,4")
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--tag", default=None, help="suffix for the result row")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in ARCH_IDS:
+            if a == "llama3_8b":
+                continue
+            for s in SHAPE_SUITE:
+                cells.append((a, s.name))
+    else:
+        cells.append((args.arch, args.shape))
+
+    results = []
+    for a, s in cells:
+        try:
+            ms = tuple(int(x) for x in args.mesh_shape.split(",")) \
+                if args.mesh_shape else None
+            rec = run_cell(a, s, args.multi_pod,
+                           bucket_mode=args.bucket_mode,
+                           reorder=not args.no_reorder,
+                           zero3=args.zero3, mesh_shape=ms,
+                           microbatch=args.microbatch)
+            if args.tag:
+                rec["tag"] = args.tag
+        except Exception as e:
+            rec = {"arch": a, "shape": s,
+                   "mesh": "2x16x16" if args.multi_pod else "16x16",
+                   "status": "FAIL", "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-2000:]}
+        results.append(rec)
+        status = rec["status"]
+        extra = ""
+        if status == "OK":
+            r = rec["roofline"]
+            extra = (f" mem={rec['mem']['per_device_bytes']/2**30:.2f}GiB"
+                     f" fits={rec['fits_hbm']}"
+                     f" dom={r['dominant']}"
+                     f" comp={r['t_compute_s']:.3f}s"
+                     f" coll={r['t_collective_s']:.3f}s")
+        elif status == "FAIL":
+            extra = " " + rec["error"][:160]
+        print(f"[{status}] {a} x {s}{extra}", flush=True)
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    tag = "multipod" if args.multi_pod else "singlepod"
+    out = args.out or os.path.join(RESULTS_DIR, f"dryrun_{tag}.json")
+    existing = []
+    if os.path.exists(out) and not args.all:
+        existing = json.load(open(out))
+        keep = {(r["arch"], r["shape"], r.get("tag")) for r in results}
+        existing = [r for r in existing
+                    if (r["arch"], r["shape"], r.get("tag")) not in keep]
+    json.dump(existing + results, open(out, "w"), indent=1)
+    print("wrote", out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Production mesh definitions (TPU v5e).
+
+Single pod: 16x16 = 256 chips, axes (data, model).
+Multi-pod:  2x16x16 = 512 chips, axes (pod, data, model); the 'pod' axis
+crosses DCN. Defined as a FUNCTION so importing this module never touches
+jax device state (the dry-run pins a fake 512-device platform first).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dist import DistConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def production_dcfg(*, multi_pod: bool = False, zero3_global: bool = False,
+                    **overrides) -> DistConfig:
+    """bf16 training config on the production mesh. Default multi-pod
+    sharding is HSDP (shard in-pod, replicate across pods — bounded DCN
+    traffic); zero3_global shards over pod x data instead."""
+    if multi_pod:
+        base = dict(
+            mesh_axes=("pod", "data", "model"), mesh_shape=(2, 16, 16),
+            fsdp_axes=("pod", "data") if zero3_global else ("data",),
+        )
+    else:
+        base = dict(mesh_axes=("data", "model"), mesh_shape=(16, 16),
+                    fsdp_axes=("data",))
+    base.update(
+        param_dtype=jnp.bfloat16, reduce_dtype=jnp.float32,
+        storage_dtype=jnp.float32,
+    )
+    base.update(overrides)
+    return DistConfig(**base)

@@ -1,0 +1,65 @@
+"""Training launcher CLI.
+
+On real hardware this runs under one process per host with
+jax.distributed.initialize(); on this container it drives the same code on
+fake CPU devices (--devices N). Selects any assigned architecture.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3_1_7b --smoke \
+      --steps 50 --devices 8 --mesh 4,2
+"""
+
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3_1_7b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--devices", type=int, default=8)
+    ap.add_argument("--mesh", default="4,2")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--bucket-mode", default="block")
+    ap.add_argument("--no-reorder", action="store_true")
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={args.devices} "
+        + os.environ.get("XLA_FLAGS", ""))
+
+    import logging
+
+    import jax.numpy as jnp
+
+    from repro.core.dist import DistConfig
+    from repro.models.common import ShapeConfig
+    from repro.models.registry import get_arch
+    from repro.optim.adamw import AdamWConfig
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    logging.basicConfig(level=logging.INFO)
+    mesh_shape = tuple(int(x) for x in args.mesh.split(","))
+    dcfg = DistConfig(
+        mesh_axes=("data", "model"), mesh_shape=mesh_shape,
+        param_dtype=jnp.bfloat16, reduce_dtype=jnp.float32,
+        bucket_mode=args.bucket_mode, reorder=not args.no_reorder,
+        microbatches=args.microbatches,
+        grad_compression=args.grad_compression)
+    cfg, model = get_arch(args.arch, smoke=args.smoke)
+    shape = ShapeConfig("train", args.seq, args.batch, "train")
+    tcfg = TrainerConfig(total_steps=args.steps, ckpt_every=args.steps,
+                         log_every=5, warmup=10, ckpt_dir=args.ckpt_dir)
+    trainer = Trainer(model, dcfg, shape, AdamWConfig(lr=args.lr), tcfg)
+    _, _, hist = trainer.run()
+    print(f"done: loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

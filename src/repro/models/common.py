@@ -1,0 +1,170 @@
+"""Architecture config schema shared by all 10 assigned model families.
+
+`ArchConfig` is a superset schema: each family reads the fields it needs.
+`ShapeConfig` describes one assigned (seq_len, global_batch, kind) cell.
+TP-divisibility padding (head counts) is resolved here and recorded on the
+config so DESIGN.md's adaptation notes match the code.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str                 # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    kind: str                 # 'train' | 'prefill' | 'decode'
+
+
+SHAPE_SUITE = (
+    ShapeConfig("train_4k", 4_096, 256, "train"),
+    ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    ShapeConfig("long_500k", 524_288, 1, "decode"),
+)
+
+
+def get_shape(name: str) -> ShapeConfig:
+    for s in SHAPE_SUITE:
+        if s.name == name:
+            return s
+    raise KeyError(name)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str               # dense | moe | xlstm | zamba | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 128
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+
+    # dense variants ---------------------------------------------------------
+    qk_norm: bool = False                 # qwen3
+    attn_softcap: float | None = None     # gemma2: 50.0
+    final_softcap: float | None = None    # gemma2: 30.0
+    sliding_window: int | None = None     # gemma2 local layers: 4096
+    local_global_alternate: bool = False  # gemma2
+    post_norms: bool = False              # gemma2 sandwich norms
+    gated_mlp: str = "swiglu"             # swiglu | geglu | gelu
+    tie_embeddings: bool = False
+
+    # moe --------------------------------------------------------------------
+    n_experts: int = 0
+    n_experts_active: int = 0             # top-k
+    n_shared_experts: int = 0
+    d_ff_expert: int = 0
+    d_ff_shared: int = 0
+    router_aux_coef: float = 1e-2
+    capacity_factor: float = 1.25
+    moe_norm_topk: bool = False           # qwen3-moe renormalizes top-k
+
+    # ssm / hybrid -----------------------------------------------------------
+    ssm_state: int = 0                    # mamba2 d_state
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_chunk: int = 128
+    shared_attn_every: int = 0            # zamba2: shared block period
+    slstm_every: int = 0                  # xlstm: 1 sLSTM per N blocks
+
+    # enc-dec ----------------------------------------------------------------
+    n_enc_layers: int = 0
+    n_dec_layers: int = 0
+    frontend_dim: int = 0                 # stub frontend embedding width
+
+    # vlm --------------------------------------------------------------------
+    vit_dim: int = 0                      # stub ViT output width
+    n_img_tokens: int = 0
+
+    # which shape cells this arch runs (long_500k only for O(1)-state decode)
+    skip_shapes: tuple[str, ...] = ()
+
+    # head/expert counts pad to a multiple of this (>= any runtime tp that
+    # divides it), keeping GLOBAL param shapes mesh-independent.
+    pad_to: int = 16
+
+    # ------------------------------------------------------------- derived --
+    def gqa_layout(self, tp: int) -> dict:
+        """TP attention layout, mesh-independent for every tp dividing
+        max(pad_to, tp).
+
+        'sharded':  kv heads split over the TP axis (no padding needed).
+        'grouped':  kv TP-replicated; q heads padded so each rank's q heads
+                    map to a CONTIGUOUS slice of kv heads (usually exactly
+                    one) — keeps decode caches at one kv head per rank
+                    instead of per-q-head duplicates.
+
+        Returns {mode, hq (padded q heads), kvp (padded kv heads),
+                 g (padded group size), g_real (logical group size)}.
+        """
+        m = max(self.pad_to, tp)
+        assert m % tp == 0, f"pad_to {self.pad_to} incompatible with tp={tp}"
+        g_real = -(-self.n_heads // self.n_kv_heads)
+        if (self.n_kv_heads % m == 0 and self.n_heads % m == 0
+                and self.n_heads % self.n_kv_heads == 0):
+            return dict(mode="sharded", hq=self.n_heads,
+                        kvp=self.n_kv_heads, g=g_real, g_real=g_real)
+        if self.n_kv_heads >= m:
+            # kv heads exceed the padding quantum but don't divide it:
+            # pad kv up to a multiple of m (ranks own kvp/tp heads each)
+            kvp = -(-self.n_kv_heads // m) * m
+            g = g_real
+        else:
+            kvp = next(d for d in range(self.n_kv_heads, m + 1)
+                       if m % d == 0)
+            step = m // kvp
+            g = -(-g_real // step) * step
+        return dict(mode="grouped", hq=kvp * g, kvp=kvp, g=g, g_real=g_real)
+
+    def q_heads_padded(self, tp: int) -> int:
+        return self.gqa_layout(tp)["hq"]
+
+    def kv_heads_padded(self, tp: int) -> int:
+        return self.gqa_layout(tp)["kvp"]
+
+    def kv_sharded(self, tp: int) -> bool:
+        return self.gqa_layout(tp)["mode"] == "sharded"
+
+    def params_dense_block(self) -> int:
+        """Per-layer parameter count (logical, unpadded)."""
+        d, f = self.d_model, self.d_ff
+        attn = d * self.n_heads * self.head_dim * 2 \
+            + d * self.n_kv_heads * self.head_dim * 2
+        mlp = 3 * d * f if self.gated_mlp in ("swiglu", "geglu") else 2 * d * f
+        return attn + mlp + 2 * d
+
+    def n_params(self) -> int:
+        emb = self.vocab * self.d_model * (1 if self.tie_embeddings else 2)
+        if self.family == "moe":
+            d = self.d_model
+            attn = d * self.n_heads * self.head_dim * 2 \
+                + d * self.n_kv_heads * self.head_dim * 2
+            experts = 3 * d * self.d_ff_expert * self.n_experts
+            shared = 3 * d * self.d_ff_shared if self.d_ff_shared else 0
+            per_layer = attn + experts + shared + d * self.n_experts + 2 * d
+            return emb + self.n_layers * per_layer
+        return emb + self.n_layers * self.params_dense_block()
+
+    def n_params_active(self) -> int:
+        """Active params per token (MoE top-k); == n_params for dense."""
+        if self.family != "moe":
+            return self.n_params()
+        d = self.d_model
+        attn = d * self.n_heads * self.head_dim * 2 \
+            + d * self.n_kv_heads * self.head_dim * 2
+        experts = 3 * d * self.d_ff_expert * self.n_experts_active
+        shared = 3 * d * self.d_ff_shared if self.d_ff_shared else 0
+        per_layer = attn + experts + shared + d * self.n_experts + 2 * d
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return emb + self.n_layers * per_layer

@@ -1,0 +1,467 @@
+"""Dense decoder-only LM family (deepseek-coder-33b, phi3-medium-14b,
+gemma2-27b, qwen3-1.7b, llama3-8b, and the InternLM2 backbone of
+internvl2-26b).
+
+Variants are driven entirely by ArchConfig flags:
+  * gemma2: alternating sliding-window/global attention (scanned as PAIRS so
+    the stack stays homogeneous), attn/final logit softcaps, GeGLU,
+    sandwich norms (pre+post), unit-offset RMSNorm, sqrt(d) embedding scale,
+    tied embeddings, query_pre_attn scaling;
+  * qwen3: qk-norm, tied embeddings;
+  * others: llama-style RoPE + SwiGLU + GQA.
+
+Three entry points (all run inside shard_map on local shards):
+  loss_local    — training forward + vocab-parallel CE (FSDP via core.stack)
+  prefill_local — serving prefill: SP forward emitting the KV cache
+  decode_local  — one-token decode against the cache (TP-only weights)
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.dist import DistConfig
+from repro.core.irgraph import BlockStats
+from repro.core.meta import ParamMeta
+from repro.core.stack import apply_stack
+from repro.core import collectives as coll
+from repro.core.remat import maybe_remat
+from repro.models import layers as LY
+from repro.models.common import ArchConfig, ShapeConfig
+
+
+class DenseLM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        # gemma2 alternates (local, global); scan over pairs keeps the
+        # stacked params homogeneous.
+        self.layers_per_step = 2 if cfg.local_global_alternate else 1
+        assert cfg.n_layers % self.layers_per_step == 0
+        self.n_steps = cfg.n_layers // self.layers_per_step
+
+    # ------------------------------------------------------------- metas --
+    def _sub_metas(self, dcfg: DistConfig, tag: str) -> dict:
+        cfg = self.cfg
+        dt = dcfg.storage_dtype
+        m = {
+            "ln1": LY.norm_meta(f"{tag}ln1", cfg.d_model, dt),
+            "attn": LY.attn_metas(cfg, dcfg, dt, prefix=f"{tag}attn."),
+            "ln2": LY.norm_meta(f"{tag}ln2", cfg.d_model, dt),
+            "mlp": self._ffn_metas(dcfg, dt, prefix=f"{tag}mlp."),
+        }
+        if cfg.post_norms:
+            m["pn1"] = LY.norm_meta(f"{tag}pn1", cfg.d_model, dt)
+            m["pn2"] = LY.norm_meta(f"{tag}pn2", cfg.d_model, dt)
+        return m
+
+    def block_metas(self, dcfg: DistConfig) -> dict:
+        if self.layers_per_step == 1:
+            return self._sub_metas(dcfg, "")
+        return {"local": self._sub_metas(dcfg, "local."),
+                "global": self._sub_metas(dcfg, "global.")}
+
+    def metas(self, dcfg: DistConfig) -> dict:
+        cfg = self.cfg
+        dt = dcfg.storage_dtype
+        m = {
+            "embed": LY.embed_meta("embed", cfg, dt),
+            "blocks": self.block_metas(dcfg),
+            "final_norm": LY.norm_meta("final_norm", cfg.d_model, dt),
+        }
+        if not cfg.tie_embeddings:
+            m["head"] = LY.head_meta("head", cfg, dt)
+        return m
+
+    # -------------------------------------------------------------- init --
+    def _sub_init(self, key, dcfg) -> dict:
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        p = {
+            "ln1": LY.norm_init(cfg.d_model, cfg.post_norms),
+            "attn": LY.attn_init(k1, cfg, dcfg),
+            "ln2": LY.norm_init(cfg.d_model, cfg.post_norms),
+            "mlp": self._ffn_init(k2, dcfg),
+        }
+        if cfg.post_norms:
+            p["pn1"] = LY.norm_init(cfg.d_model, True)
+            p["pn2"] = LY.norm_init(cfg.d_model, True)
+        return p
+
+    def init_block_full(self, key, dcfg) -> dict:
+        if self.layers_per_step == 1:
+            return self._sub_init(key, dcfg)
+        k1, k2 = jax.random.split(key)
+        return {"local": self._sub_init(k1, dcfg),
+                "global": self._sub_init(k2, dcfg)}
+
+    def init_full(self, key, dcfg: DistConfig) -> dict:
+        """Full shaped params (host-side; small/smoke configs only)."""
+        cfg = self.cfg
+        keys = jax.random.split(key, self.n_steps + 2)
+        blocks = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[self.init_block_full(keys[i], dcfg) for i in range(self.n_steps)]
+        )
+        p = {
+            "embed": LY.embed_init(keys[-1], cfg),
+            "blocks": blocks,
+            "final_norm": LY.norm_init(cfg.d_model, cfg.post_norms),
+        }
+        if not cfg.tie_embeddings:
+            p["head"] = LY.head_init(keys[-2], cfg)
+        return p
+
+    # --------------------------------------------------------- constants --
+    def consts(self, seq_len: int, dcfg: DistConfig, positions=None) -> dict:
+        cos, sin = LY.rope_cache(seq_len, self.cfg.head_dim,
+                                 self.cfg.rope_theta, positions=positions)
+        return {"rope_cos": cos, "rope_sin": sin}
+
+    # ------------------------------------------------------------- block --
+    @property
+    def _q_scale(self):
+        cfg = self.cfg
+        if cfg.name.startswith("gemma2"):
+            return 256.0 ** -0.5      # query_pre_attn_scalar
+        return 1.0 / math.sqrt(cfg.head_dim)
+
+    # FFN hooks — overridden by the MoE family --------------------------------
+    def _ffn_metas(self, dcfg, dtype, prefix=""):
+        return LY.mlp_metas(self.cfg, dcfg, dtype, prefix=prefix)
+
+    def _ffn_init(self, key, dcfg):
+        return LY.mlp_init(key, self.cfg)
+
+    def _ffn_apply(self, p, x_sp, dcfg):
+        return LY.mlp_apply(p, x_sp, self.cfg, dcfg), {}
+
+    def _ffn_decode(self, p, x, dcfg):
+        cfg = self.cfg
+        hg = jnp.einsum("bsd,df->bsf", x, p["wg"])
+        hu = jnp.einsum("bsd,df->bsf", x, p["wu"])
+        act = jax.nn.gelu(hg, approximate=True) \
+            if cfg.gated_mlp == "geglu" else jax.nn.silu(hg)
+        o = jnp.einsum("bsf,fd->bsd", act * hu, p["wd"])
+        o = lax.psum(o, dcfg.tp_axis)
+        return o
+
+    def _sub_block(self, p, consts, x, dcfg, window):
+        cfg = self.cfg
+        uo = cfg.post_norms  # gemma-style unit-offset norms
+        h = LY.rmsnorm(x, p["ln1"], cfg.norm_eps, uo)
+        h = LY.attn_apply(p["attn"], h, consts, cfg, dcfg, window=window,
+                          q_scale=self._q_scale)
+        if cfg.post_norms:
+            h = LY.rmsnorm(h, p["pn1"], cfg.norm_eps, uo)
+        x = x + h
+        h = LY.rmsnorm(x, p["ln2"], cfg.norm_eps, uo)
+        h, aux = self._ffn_apply(p["mlp"], h, dcfg)
+        if cfg.post_norms:
+            h = LY.rmsnorm(h, p["pn2"], cfg.norm_eps, uo)
+        return x + h, aux
+
+    def block_fn(self, p, consts, x, dcfg: DistConfig):
+        cfg = self.cfg
+        if self.layers_per_step == 1:
+            w = cfg.sliding_window if not cfg.local_global_alternate else None
+            y, aux = self._sub_block(p, consts, x, dcfg, w)
+            return y, aux
+        # remat each half of the pair: halves peak backward residency
+        sub = jax.checkpoint(
+            lambda pp, xx, w: self._sub_block(pp, consts, xx, dcfg, w),
+            static_argnums=(2,))
+        x, aux1 = sub(p["local"], x, cfg.sliding_window)
+        x, aux2 = sub(p["global"], x, None)
+        return x, jax.tree.map(jnp.add, aux1, aux2)
+
+    # ------------------------------------------------------------- train --
+    def _embed_in(self, storage, tokens, dcfg):
+        cfg = self.cfg
+        emb_meta = LY.embed_meta("embed", cfg, dcfg.storage_dtype)
+
+        def embed_fn(emb_shard, ids):
+            table = coll.replicate(emb_shard, emb_meta, dcfg)
+            scale = math.sqrt(cfg.d_model) if cfg.post_norms else None
+            return LY.embed_apply(table, ids, cfg, dcfg, scale=scale)
+
+        return maybe_remat(embed_fn, "fsdp_only" if dcfg.remat != "none"
+                           else "none")(storage["embed"], tokens)
+
+    def _lm_head(self, storage, x_sp, dcfg):
+        cfg = self.cfg
+        x = LY.sp_gather(x_sp, dcfg)
+        if cfg.tie_embeddings:
+            emb_meta = LY.embed_meta("embed", cfg, dcfg.storage_dtype)
+            table = coll.replicate(storage["embed"], emb_meta, dcfg)
+            logits = jnp.einsum("bsd,vd->bsv", x, table,
+                                preferred_element_type=jnp.float32)
+            logits = LY._softcap(logits, cfg.final_softcap)
+        else:
+            head_meta = LY.head_meta("head", cfg, dcfg.storage_dtype)
+            w = coll.replicate(storage["head"], head_meta, dcfg)
+            logits = LY.head_logits(w, x, cfg, dcfg)
+        return logits
+
+    def loss_local(self, storage, batch, dcfg: DistConfig):
+        """batch: tokens/targets (B,S) int32, valid (B,S) f32. Local mean."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        consts = self.consts(tokens.shape[1], dcfg)
+        x = self._embed_in(storage, tokens, dcfg)
+        blk = functools.partial(self.block_fn, dcfg=dcfg)
+        x, aux = apply_stack(blk, self.block_metas(dcfg), dcfg,
+                             storage["blocks"], consts, x,
+                             block_stats=self.block_stats(dcfg,
+                                                          tokens.shape))
+        fn_meta = LY.norm_meta("final_norm", cfg.d_model, dcfg.storage_dtype)
+        w_fn = coll.replicate(storage["final_norm"], fn_meta, dcfg)
+        x = LY.rmsnorm(x, w_fn, cfg.norm_eps, cfg.post_norms)
+        logits = self._lm_head(storage, x, dcfg)
+        loss, _ = LY.vocab_parallel_xent(
+            logits, batch["targets"], batch["valid"], cfg, dcfg)
+        return loss, aux
+
+    # ------------------------------------------------------------- serve --
+    def serve_block_metas(self, dcfg: DistConfig) -> dict:
+        return self.block_metas(dcfg)
+
+    def _serve_sub(self, p, consts, x_sp, dcfg, window):
+        """Prefill sublayer: like _sub_block but also returns (k, v)."""
+        cfg = self.cfg
+        uo = cfg.post_norms
+        h = LY.rmsnorm(x_sp, p["ln1"], cfg.norm_eps, uo)
+        xg = LY.sp_gather(h, dcfg)
+        q, k, v, head_mask = LY._local_qkv(p["attn"], xg, cfg, dcfg)
+        if cfg.qk_norm:
+            q = LY.rmsnorm(q, p["attn"]["q_norm"], cfg.norm_eps)
+            k = LY.rmsnorm(k, p["attn"]["k_norm"], cfg.norm_eps)
+        cos, sin = consts["rope_cos"], consts["rope_sin"]
+        q = LY.apply_rope(q, cos, sin)
+        k = LY.apply_rope(k, cos, sin)
+        out = LY.attention(q, k, v, causal=True, window=window,
+                           softcap=cfg.attn_softcap, q_scale=self._q_scale)
+        out = out * head_mask[None, None, :, None]
+        B, S, hl, hd = out.shape
+        o = jnp.einsum("bsh,hd->bsd", out.reshape(B, S, hl * hd),
+                       p["attn"]["wo"])
+        h = LY.sp_scatter(o, dcfg)
+        if cfg.post_norms:
+            h = LY.rmsnorm(h, p["pn1"], cfg.norm_eps, uo)
+        x = x_sp + h
+        h = LY.rmsnorm(x, p["ln2"], cfg.norm_eps, uo)
+        h, _ = self._ffn_apply(p["mlp"], h, dcfg)
+        if cfg.post_norms:
+            h = LY.rmsnorm(h, p["pn2"], cfg.norm_eps, uo)
+        if dcfg.kv_cache_int8:
+            kq, ks = LY.kv_quantize(k)
+            vq, vs = LY.kv_quantize(v)
+            return x + h, {"k": kq, "ks": ks, "v": vq, "vs": vs}
+        return x + h, (k.astype(dcfg.param_dtype), v.astype(dcfg.param_dtype))
+
+    def prefill_block(self, p, consts, x, dcfg):
+        cfg = self.cfg
+        if self.layers_per_step == 1:
+            w = cfg.sliding_window if not cfg.local_global_alternate else None
+            y, kv = self._serve_sub(p, consts, x, dcfg, w)
+            return y, kv
+        y, kv_l = self._serve_sub(p["local"], consts, x, dcfg,
+                                  cfg.sliding_window)
+        y, kv_g = self._serve_sub(p["global"], consts, y, dcfg, None)
+        return y, (kv_l, kv_g)
+
+    def prefill_local(self, params_tp, batch, dcfg: DistConfig):
+        """params_tp: TP-local FULL params stacked (n_steps, ...).
+
+        Returns (last-token logits (B, V/tp), kv cache pytree stacked)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        consts = self.consts(tokens.shape[1], dcfg)
+        scale = math.sqrt(cfg.d_model) if cfg.post_norms else None
+        x = LY.embed_apply(params_tp["embed"], tokens, cfg, dcfg, scale=scale)
+
+        def body(xc, p):
+            y, kv = self.prefill_block(p, consts, xc, dcfg)
+            return y, kv
+
+        x, cache = lax.scan(body, x, params_tp["blocks"])
+        x = LY.rmsnorm(x, params_tp["final_norm"], cfg.norm_eps,
+                       cfg.post_norms)
+        xg = LY.sp_gather(x, dcfg)[:, -1:]
+        if cfg.tie_embeddings:
+            logits = jnp.einsum("bsd,vd->bsv", xg, params_tp["embed"],
+                                preferred_element_type=jnp.float32)
+        else:
+            logits = jnp.einsum("bsd,dv->bsv", xg, params_tp["head"],
+                                preferred_element_type=jnp.float32)
+        logits = LY._softcap(logits, cfg.final_softcap)
+        return logits[:, 0], cache
+
+    # decode -----------------------------------------------------------------
+    def _decode_sub(self, p, x, kv, pos, cos, sin, dcfg, window):
+        """x: (B,1,D) replicated over model; kv: (B,T,Kl,hd) cache."""
+        cfg = self.cfg
+        uo = cfg.post_norms
+        h = LY.rmsnorm(x, p["ln1"], cfg.norm_eps, uo)
+        q, k, v, head_mask = LY._local_qkv(p["attn"], h, cfg, dcfg)
+        if cfg.qk_norm:
+            q = LY.rmsnorm(q, p["attn"]["q_norm"], cfg.norm_eps)
+            k = LY.rmsnorm(k, p["attn"]["k_norm"], cfg.norm_eps)
+        q = LY.apply_rope(q, cos, sin)
+        k = LY.apply_rope(k, cos, sin)
+        if dcfg.kv_cache_int8:
+            kq, ks = LY.kv_quantize(k)
+            vq, vs = LY.kv_quantize(v)
+            kv = {
+                "k": lax.dynamic_update_slice_in_dim(kv["k"], kq, pos, 1),
+                "ks": lax.dynamic_update_slice_in_dim(kv["ks"], ks, pos, 1),
+                "v": lax.dynamic_update_slice_in_dim(kv["v"], vq, pos, 1),
+                "vs": lax.dynamic_update_slice_in_dim(kv["vs"], vs, pos, 1),
+            }
+            ck = LY.kv_dequantize(kv["k"], kv["ks"], dcfg.param_dtype)
+            cv = LY.kv_dequantize(kv["v"], kv["vs"], dcfg.param_dtype)
+            new_kv = kv
+        else:
+            ck, cv = kv
+            ck = lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype),
+                                                 pos, 1)
+            cv = lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype),
+                                                 pos, 1)
+            new_kv = (ck, cv)
+        T = ck.shape[1]
+        kl = ck.shape[2]
+        hl = q.shape[2]
+        group = hl // kl
+        qg = q.reshape(q.shape[0], 1, kl, group, cfg.head_dim)
+        s = jnp.einsum("bqkgh,btkh->bkgqt", qg * self._q_scale, ck,
+                       preferred_element_type=jnp.float32)
+        s = LY._softcap(s, cfg.attn_softcap)
+        tpos = jnp.arange(T)
+        msk = tpos <= pos
+        if window is not None:
+            msk &= tpos > pos - window
+        s = jnp.where(msk[None, None, None, None, :], s, -1e30)
+        pr = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bkgqt,btkh->bqkgh", pr.astype(cv.dtype), cv)
+        out = out.reshape(q.shape[0], 1, hl, cfg.head_dim)
+        out = out * head_mask[None, None, :, None]
+        o = jnp.einsum("bsh,hd->bsd",
+                       out.reshape(q.shape[0], 1, hl * cfg.head_dim),
+                       p["attn"]["wo"])
+        o = lax.psum(o, dcfg.tp_axis)
+        if cfg.post_norms:
+            o = LY.rmsnorm(o, p["pn1"], cfg.norm_eps, uo)
+        x = x + o
+        h = LY.rmsnorm(x, p["ln2"], cfg.norm_eps, uo)
+        o = self._ffn_decode(p["mlp"], h, dcfg)
+        if cfg.post_norms:
+            o = LY.rmsnorm(o, p["pn2"], cfg.norm_eps, uo)
+        return x + o, new_kv
+
+    def decode_local(self, params_tp, cache, tok, pos, dcfg: DistConfig):
+        """One decode step. tok: (B,) int32; pos: scalar int32.
+        cache: pytree of (n_steps, B, T, Kl, hd) pairs."""
+        cfg = self.cfg
+        cos, sin = LY.rope_cache(1, cfg.head_dim, cfg.rope_theta,
+                                 positions=pos[None])
+        table = params_tp["embed"]
+        scale = math.sqrt(cfg.d_model) if cfg.post_norms else None
+        x = LY.embed_apply(table, tok[:, None], cfg, dcfg, scale=scale,
+                           scatter=False)
+
+        # The cache rides the scan CARRY and is updated in place at the
+        # layer index: XLA aliases in-place dynamic-update-slice on while
+        # carries, so exactly ONE cache buffer is ever live (scan xs/ys
+        # emission would double-buffer it).
+        L = self.n_steps
+
+        def slice_kv(kv, idx):
+            return jax.tree.map(
+                lambda a: lax.dynamic_index_in_dim(a, idx, 0,
+                                                   keepdims=False), kv)
+
+        def put_kv(kv, new, idx):
+            return jax.tree.map(
+                lambda a, n: lax.dynamic_update_index_in_dim(
+                    a, n.astype(a.dtype), idx, 0), kv, new)
+
+        def body(carry, inputs):
+            xc, cache_all = carry
+            p, idx = inputs
+            kv = slice_kv(cache_all, idx)
+            if self.layers_per_step == 1:
+                w = cfg.sliding_window \
+                    if not cfg.local_global_alternate else None
+                y, kv2 = self._decode_sub(p, xc, kv, pos, cos, sin, dcfg, w)
+            else:
+                y, kv_l = self._decode_sub(p["local"], xc, kv[0], pos, cos,
+                                           sin, dcfg, cfg.sliding_window)
+                y, kv_g = self._decode_sub(p["global"], y, kv[1], pos, cos,
+                                           sin, dcfg, None)
+                kv2 = (kv_l, kv_g)
+            return (y, put_kv(cache_all, kv2, idx)), None
+
+        (x, cache), _ = lax.scan(
+            body, (x, cache), (params_tp["blocks"], jnp.arange(L)))
+        x = LY.rmsnorm(x, params_tp["final_norm"], cfg.norm_eps,
+                       cfg.post_norms)
+        if cfg.tie_embeddings:
+            logits = jnp.einsum("bsd,vd->bsv", x, params_tp["embed"],
+                                preferred_element_type=jnp.float32)
+        else:
+            logits = jnp.einsum("bsd,dv->bsv", x, params_tp["head"],
+                                preferred_element_type=jnp.float32)
+        logits = LY._softcap(logits, cfg.final_softcap)
+        return logits[:, 0], cache
+
+    # ----------------------------------------------------------- costing --
+    def block_stats(self, dcfg: DistConfig, batch_shape) -> BlockStats:
+        """Per-(scan-step) analytic workload for auto-wrapping, per device."""
+        cfg = self.cfg
+        B, S = batch_shape          # per-device microbatch
+        tokens = B * S
+        d, hd = cfg.d_model, cfg.head_dim
+        hq = cfg.q_heads_padded(dcfg.tp_size)
+        pf, pb = {}, {}
+        it = jnp.dtype(dcfg.param_dtype).itemsize
+
+        def add(name, flops, nbytes):
+            pf[name] = flops
+            pb[name] = nbytes
+
+        names, metas, _ = [], [], None
+        from repro.core.meta import named_leaves
+        for nm, m in named_leaves(self.block_metas(dcfg)):
+            numel = m.numel_local(dcfg)
+            # matmul params: 2*tokens*numel flops; norms: O(tokens*d)
+            flops = 2.0 * tokens * numel if numel > 4 * d \
+                else 8.0 * tokens * d / max(1, dcfg.tp_size)
+            add(nm, flops, numel * it + flops / max(d, 1) * it)
+        # attention itself (not a param op) folds into wq's consumer cost
+        attn_flops = 4.0 * tokens * S * hd * (hq / dcfg.tp_size)
+        first = next(iter(pf))
+        pf[first] += attn_flops
+        act = tokens * d * it / dcfg.tp_size
+        return BlockStats(param_flops=pf, param_bytes=pb, act_bytes=act)
+
+    def bucket_units(self) -> list[list[str]]:
+        """Manual-wrapping module lists (paper: per-transformer-block)."""
+        if self.layers_per_step == 2:
+            return [["local/*"], ["global/*"]]
+        return [["attn/*", "ln1"], ["mlp/*", "ln2", "pn1", "pn2"]]
+
+    # ------------------------------------------------------------ inputs --
+    def input_specs(self, shape: ShapeConfig, dcfg: DistConfig) -> dict:
+        B, S = shape.global_batch, shape.seq_len
+        ids = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        if shape.kind == "train":
+            return {"tokens": ids, "targets": ids,
+                    "valid": jax.ShapeDtypeStruct((B, S), jnp.float32)}
+        if shape.kind == "prefill":
+            return {"tokens": ids}
+        # decode: one token + cache handled by launch/serve
+        return {"tok": jax.ShapeDtypeStruct((B,), jnp.int32)}

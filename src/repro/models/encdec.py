@@ -1,0 +1,403 @@
+"""Encoder-decoder backbone (seamless-m4t-large-v2, T2TT/S2TT path).
+
+The multimodal (speech) frontend is a STUB per the assignment: `input_specs`
+feeds precomputed 1024-d frame embeddings directly to the encoder; the text
+path embeds source tokens. Decoder = causal self-attention + cross-attention
+over encoder memory + plain GELU FFN (seamless uses non-gated FFNs).
+
+Sequence budget per cell: the assigned seq_len splits evenly between source
+frames and target tokens (S_src = S_tgt = seq_len/2), so the total processed
+positions per sample match the shape spec (DESIGN.md note).
+
+Cross-attention and the paper's technique: encoder memory travels in the
+decoder stack's CARRY (not consts) so its cotangent flows back to the encoder
+through the hand-scheduled prefetch backward (core/stack.py).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import collectives as coll
+from repro.core.dist import DistConfig
+from repro.core.irgraph import BlockStats
+from repro.core.meta import ParamMeta
+from repro.core.remat import maybe_remat
+from repro.core.stack import apply_stack
+from repro.models import layers as LY
+from repro.models.common import ArchConfig, ShapeConfig
+
+
+class EncDecLM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.n_enc = cfg.n_enc_layers or cfg.n_layers
+        self.n_dec = cfg.n_dec_layers or cfg.n_layers
+        self.n_steps = self.n_enc + self.n_dec
+
+    # ------------------------------------------------------------- metas --
+    def _xattn_metas(self, dcfg, dt, prefix):
+        cfg = self.cfg
+        d, hd = cfg.d_model, cfg.head_dim
+        lay = cfg.gqa_layout(dcfg.tp_size)
+        hq, kvp = lay["hq"], lay["kvp"]
+        kv_tp = 0 if lay["mode"] == "sharded" else None
+        return {
+            "wq": ParamMeta(prefix + "wq", (d, hq * hd), 1, dt),
+            "wk": ParamMeta(prefix + "wk", (kvp * hd, d), kv_tp, dt),
+            "wv": ParamMeta(prefix + "wv", (kvp * hd, d), kv_tp, dt),
+            "wo": ParamMeta(prefix + "wo", (hq * hd, d), 0, dt),
+        }
+
+    def enc_block_metas(self, dcfg: DistConfig) -> dict:
+        cfg = self.cfg
+        dt = dcfg.storage_dtype
+        return {
+            "ln1": LY.norm_meta("e.ln1", cfg.d_model, dt),
+            "attn": LY.attn_metas(cfg, dcfg, dt, prefix="e.attn."),
+            "ln2": LY.norm_meta("e.ln2", cfg.d_model, dt),
+            "mlp": LY.mlp_metas(cfg, dcfg, dt, prefix="e.mlp."),
+        }
+
+    def dec_block_metas(self, dcfg: DistConfig) -> dict:
+        cfg = self.cfg
+        dt = dcfg.storage_dtype
+        return {
+            "ln1": LY.norm_meta("d.ln1", cfg.d_model, dt),
+            "attn": LY.attn_metas(cfg, dcfg, dt, prefix="d.attn."),
+            "lnx": LY.norm_meta("d.lnx", cfg.d_model, dt),
+            "xattn": self._xattn_metas(dcfg, dt, "d.xattn."),
+            "ln2": LY.norm_meta("d.ln2", cfg.d_model, dt),
+            "mlp": LY.mlp_metas(cfg, dcfg, dt, prefix="d.mlp."),
+        }
+
+    def metas(self, dcfg: DistConfig) -> dict:
+        cfg = self.cfg
+        dt = dcfg.storage_dtype
+        return {
+            "embed": LY.embed_meta("embed", cfg, dt),
+            "front_proj": ParamMeta("front_proj",
+                                    (cfg.frontend_dim, cfg.d_model),
+                                    None, dt),
+            "enc_blocks": self.enc_block_metas(dcfg),
+            "dec_blocks": self.dec_block_metas(dcfg),
+            "enc_norm": LY.norm_meta("enc_norm", cfg.d_model, dt),
+            "final_norm": LY.norm_meta("final_norm", cfg.d_model, dt),
+            "head": LY.head_meta("head", cfg, dt),
+        }
+
+    # alias used by runtime helpers that expect 'blocks'
+    @property
+    def stacked_keys(self):
+        return {"enc_blocks": self.n_enc, "dec_blocks": self.n_dec}
+
+    # -------------------------------------------------------------- init --
+    def _enc_init(self, key, dcfg):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln1": LY.norm_init(cfg.d_model),
+            "attn": LY.attn_init(k1, cfg, dcfg),
+            "ln2": LY.norm_init(cfg.d_model),
+            "mlp": LY.mlp_init(k2, cfg),
+        }
+
+    def _dec_init(self, key, dcfg):
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(key, 3)
+        x = LY.attn_init(k3, cfg, dcfg)
+        return {
+            "ln1": LY.norm_init(cfg.d_model),
+            "attn": LY.attn_init(k1, cfg, dcfg),
+            "lnx": LY.norm_init(cfg.d_model),
+            "xattn": {k: x[k] for k in ("wq", "wk", "wv", "wo")},
+            "ln2": LY.norm_init(cfg.d_model),
+            "mlp": LY.mlp_init(k2, cfg),
+        }
+
+    def init_full(self, key, dcfg: DistConfig) -> dict:
+        cfg = self.cfg
+        keys = jax.random.split(key, self.n_enc + self.n_dec + 4)
+        enc = jax.tree.map(lambda *xs: jnp.stack(xs),
+                           *[self._enc_init(keys[i], dcfg)
+                             for i in range(self.n_enc)])
+        dec = jax.tree.map(lambda *xs: jnp.stack(xs),
+                           *[self._dec_init(keys[self.n_enc + i], dcfg)
+                             for i in range(self.n_dec)])
+        return {
+            "embed": LY.embed_init(keys[-1], cfg),
+            "front_proj": jax.random.normal(
+                keys[-2], (cfg.frontend_dim, cfg.d_model)) * 0.02,
+            "enc_blocks": enc,
+            "dec_blocks": dec,
+            "enc_norm": LY.norm_init(cfg.d_model),
+            "final_norm": LY.norm_init(cfg.d_model),
+            "head": LY.head_init(keys[-3], cfg),
+        }
+
+    # ------------------------------------------------------------- blocks --
+    def enc_block(self, p, consts, x, dcfg: DistConfig):
+        cfg = self.cfg
+        h = LY.rmsnorm(x, p["ln1"], cfg.norm_eps)
+        xg = LY.sp_gather(h, dcfg)
+        q, k, v, head_mask = LY._local_qkv(p["attn"], xg, cfg, dcfg)
+        cos, sin = consts["rope_cos"], consts["rope_sin"]
+        q, k = LY.apply_rope(q, cos, sin), LY.apply_rope(k, cos, sin)
+        out = LY.attention(q, k, v, causal=False)        # bidirectional
+        out = out * head_mask[None, None, :, None]
+        B, S, hl, hd = out.shape
+        o = jnp.einsum("bsh,hd->bsd", out.reshape(B, S, hl * hd),
+                       p["attn"]["wo"])
+        x = x + LY.sp_scatter(o, dcfg)
+        h = LY.rmsnorm(x, p["ln2"], cfg.norm_eps)
+        return x + LY.mlp_apply(p["mlp"], h, cfg, dcfg), {}
+
+    def _cross_attn(self, p, x_sp, mem_sp, dcfg):
+        """Queries from decoder SP hidden; keys/values from encoder memory."""
+        cfg = self.cfg
+        xg = LY.sp_gather(x_sp, dcfg)
+        mg = LY.sp_gather(mem_sp, dcfg)
+        q, _, _, head_mask = LY._local_qkv(
+            {"wq": p["wq"], "wk": p["wk"], "wv": p["wv"]}, xg, cfg, dcfg)
+        _, k, v, _ = LY._local_qkv(
+            {"wq": p["wq"], "wk": p["wk"], "wv": p["wv"]}, mg, cfg, dcfg)
+        out = LY.attention(q, k, v, causal=False)
+        out = out * head_mask[None, None, :, None]
+        B, S, hl, hd = out.shape
+        o = jnp.einsum("bsh,hd->bsd", out.reshape(B, S, hl * hd), p["wo"])
+        return LY.sp_scatter(o, dcfg)
+
+    def dec_block(self, p, consts, carry, dcfg: DistConfig):
+        cfg = self.cfg
+        x, mem = carry["h"], carry["mem"]
+        h = LY.rmsnorm(x, p["ln1"], cfg.norm_eps)
+        h = LY.attn_apply(p["attn"], h, consts, cfg, dcfg)
+        x = x + h
+        h = LY.rmsnorm(x, p["lnx"], cfg.norm_eps)
+        x = x + self._cross_attn(p["xattn"], h, mem, dcfg)
+        h = LY.rmsnorm(x, p["ln2"], cfg.norm_eps)
+        x = x + LY.mlp_apply(p["mlp"], h, cfg, dcfg)
+        return {"h": x, "mem": mem}, {}
+
+    # ------------------------------------------------------------- train --
+    def loss_local(self, storage, batch, dcfg: DistConfig):
+        cfg = self.cfg
+        frames = batch["frames"]                   # (B, S_src, frontend_dim)
+        tokens = batch["tokens"]                   # (B, S_tgt)
+        S_src, S_tgt = frames.shape[1], tokens.shape[1]
+        consts_e = {"rope_cos": None, "rope_sin": None}
+        cos_e, sin_e = LY.rope_cache(S_src, cfg.head_dim, cfg.rope_theta)
+        cos_d, sin_d = LY.rope_cache(S_tgt, cfg.head_dim, cfg.rope_theta)
+
+        fp_meta = ParamMeta("front_proj", (cfg.frontend_dim, cfg.d_model),
+                            None, dcfg.storage_dtype)
+        wp = coll.replicate(storage["front_proj"], fp_meta, dcfg)
+        mem = jnp.einsum("bsf,fd->bsd",
+                         frames.astype(dcfg.param_dtype), wp)
+        # identical on every TP rank -> slice (not reduce) into SP layout
+        mem = LY.sp_slice(mem, dcfg)
+
+        enc_fn = functools.partial(self.enc_block, dcfg=dcfg)
+        mem, _ = apply_stack(enc_fn, self.enc_block_metas(dcfg), dcfg,
+                             storage["enc_blocks"],
+                             {"rope_cos": cos_e, "rope_sin": sin_e}, mem)
+        en_meta = LY.norm_meta("enc_norm", cfg.d_model, dcfg.storage_dtype)
+        mem = LY.rmsnorm(mem, coll.replicate(storage["enc_norm"], en_meta,
+                                             dcfg), cfg.norm_eps)
+
+        emb_meta = LY.embed_meta("embed", cfg, dcfg.storage_dtype)
+
+        def embed_fn(shard, ids):
+            table = coll.replicate(shard, emb_meta, dcfg)
+            return LY.embed_apply(table, ids, cfg, dcfg)
+
+        x = maybe_remat(embed_fn, "fsdp_only")(storage["embed"], tokens)
+        dec_fn = functools.partial(self.dec_block, dcfg=dcfg)
+        carry, _ = apply_stack(dec_fn, self.dec_block_metas(dcfg), dcfg,
+                               storage["dec_blocks"],
+                               {"rope_cos": cos_d, "rope_sin": sin_d},
+                               {"h": x, "mem": mem})
+        fn_meta = LY.norm_meta("final_norm", cfg.d_model, dcfg.storage_dtype)
+        x = LY.rmsnorm(carry["h"], coll.replicate(storage["final_norm"],
+                                                  fn_meta, dcfg),
+                       cfg.norm_eps)
+        hd_meta = LY.head_meta("head", cfg, dcfg.storage_dtype)
+        w = coll.replicate(storage["head"], hd_meta, dcfg)
+        logits = LY.head_logits(w, LY.sp_gather(x, dcfg), cfg, dcfg)
+        loss, _ = LY.vocab_parallel_xent(logits, batch["targets"],
+                                         batch["valid"], cfg, dcfg)
+        return loss, {}
+
+    # ------------------------------------------------------------- serve --
+    def prefill_local(self, params_tp, batch, dcfg: DistConfig):
+        """Encode frames, prefill the decoder over the target prompt.
+        Returns (last logits (B, V/tp), cache {self, cross})."""
+        cfg = self.cfg
+        frames, tokens = batch["frames"], batch["tokens"]
+        S_src, S_tgt = frames.shape[1], tokens.shape[1]
+        cos_e, sin_e = LY.rope_cache(S_src, cfg.head_dim, cfg.rope_theta)
+        cos_d, sin_d = LY.rope_cache(S_tgt, cfg.head_dim, cfg.rope_theta)
+
+        mem = jnp.einsum("bsf,fd->bsd", frames.astype(dcfg.param_dtype),
+                         params_tp["front_proj"])
+        mem = LY.sp_slice(mem, dcfg)
+
+        def enc_body(xc, p):
+            y, _ = self.enc_block(p, {"rope_cos": cos_e, "rope_sin": sin_e},
+                                  xc, dcfg)
+            return y, None
+
+        mem, _ = lax.scan(enc_body, mem, params_tp["enc_blocks"])
+        mem = LY.rmsnorm(mem, params_tp["enc_norm"], cfg.norm_eps)
+        mem_g = LY.sp_gather(mem, dcfg)
+
+        x = LY.embed_apply(params_tp["embed"], tokens, cfg, dcfg)
+        consts_d = {"rope_cos": cos_d, "rope_sin": sin_d}
+
+        def dec_body(xc, p):
+            # self attention, emitting kv
+            h = LY.rmsnorm(xc, p["ln1"], cfg.norm_eps)
+            hg = LY.sp_gather(h, dcfg)
+            q, k, v, hm = LY._local_qkv(p["attn"], hg, cfg, dcfg)
+            q2 = LY.apply_rope(q, cos_d, sin_d)
+            k2 = LY.apply_rope(k, cos_d, sin_d)
+            out = LY.attention(q2, k2, v, causal=True)
+            out = out * hm[None, None, :, None]
+            B, S, hl, hd = out.shape
+            o = jnp.einsum("bsh,hd->bsd", out.reshape(B, S, hl * hd),
+                           p["attn"]["wo"])
+            xc = xc + LY.sp_scatter(o, dcfg)
+            # cross attention + cached cross kv
+            h = LY.rmsnorm(xc, p["lnx"], cfg.norm_eps)
+            _, xk, xv, _ = LY._local_qkv(
+                {"wq": p["xattn"]["wq"], "wk": p["xattn"]["wk"],
+                 "wv": p["xattn"]["wv"]}, mem_g, cfg, dcfg)
+            hgq = LY.sp_gather(h, dcfg)
+            q, _, _, hm = LY._local_qkv(
+                {"wq": p["xattn"]["wq"], "wk": p["xattn"]["wk"],
+                 "wv": p["xattn"]["wv"]}, hgq, cfg, dcfg)
+            out = LY.attention(q, xk, xv, causal=False)
+            out = out * hm[None, None, :, None]
+            o = jnp.einsum("bsh,hd->bsd",
+                           out.reshape(B, S, hl * hd), p["xattn"]["wo"])
+            xc = xc + LY.sp_scatter(o, dcfg)
+            h = LY.rmsnorm(xc, p["ln2"], cfg.norm_eps)
+            xc = xc + LY.mlp_apply(p["mlp"], h, cfg, dcfg)
+            kv_dt = dcfg.param_dtype
+            return xc, ((k2.astype(kv_dt), v.astype(kv_dt)),
+                        (xk.astype(kv_dt), xv.astype(kv_dt)))
+
+        x, (self_kv, cross_kv) = lax.scan(dec_body, x,
+                                          params_tp["dec_blocks"])
+        x = LY.rmsnorm(x, params_tp["final_norm"], cfg.norm_eps)
+        xg = LY.sp_gather(x, dcfg)[:, -1:]
+        logits = jnp.einsum("bsd,dv->bsv", xg, params_tp["head"],
+                            preferred_element_type=jnp.float32)
+        return logits[:, 0], {"self": self_kv, "cross": cross_kv}
+
+    def decode_local(self, params_tp, cache, tok, pos, dcfg: DistConfig):
+        """One decoder token against (self-KV cache, cross-KV cache).
+
+        cache = {"self": (L,B,T,Kl,hd) pairs, "cross": (L,B,S_src,Kl,hd)
+        pairs precomputed from encoder memory at prefill}."""
+        cfg = self.cfg
+        cos, sin = LY.rope_cache(1, cfg.head_dim, cfg.rope_theta,
+                                 positions=pos[None])
+        x = LY.embed_apply(params_tp["embed"], tok[:, None], cfg, dcfg,
+                           scatter=False)
+
+        def body(xc, inp):
+            p, (kv_self, kv_cross) = inp
+            # self attention (causal, cached)
+            h = LY.rmsnorm(xc, p["ln1"], cfg.norm_eps)
+            q, k, v, hm = LY._local_qkv(p["attn"], h, cfg, dcfg)
+            q, k = LY.apply_rope(q, cos, sin), LY.apply_rope(k, cos, sin)
+            ck, cv = kv_self
+            ck = lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype),
+                                                 pos, 1)
+            cv = lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype),
+                                                 pos, 1)
+            o = _cached_attn(q, ck, cv, pos, cfg, hm)
+            o = jnp.einsum("bsh,hd->bsd", o, p["attn"]["wo"])
+            o = lax.psum(o, dcfg.tp_axis)
+            xc = xc + o
+            # cross attention (static cache, no position mask)
+            h = LY.rmsnorm(xc, p["lnx"], cfg.norm_eps)
+            q, _, _, hm = LY._local_qkv(
+                {"wq": p["xattn"]["wq"], "wk": p["xattn"]["wk"],
+                 "wv": p["xattn"]["wv"]}, h, cfg, dcfg)
+            xk, xv = kv_cross
+            o = _cached_attn(q, xk, xv, None, cfg, hm)
+            o = jnp.einsum("bsh,hd->bsd", o, p["xattn"]["wo"])
+            o = lax.psum(o, dcfg.tp_axis)
+            xc = xc + o
+            # ffn
+            h = LY.rmsnorm(xc, p["ln2"], cfg.norm_eps)
+            u = jnp.einsum("bsd,df->bsf", h, p["mlp"]["wu"])
+            o = jnp.einsum("bsf,fd->bsd",
+                           jax.nn.gelu(u, approximate=True), p["mlp"]["wd"])
+            o = lax.psum(o, dcfg.tp_axis)
+            return xc + o, (ck, cv)
+
+        x, self_kv = lax.scan(body, x,
+                              (params_tp["dec_blocks"],
+                               (cache["self"], cache["cross"])))
+        x = LY.rmsnorm(x, params_tp["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x, params_tp["head"],
+                            preferred_element_type=jnp.float32)
+        return logits[:, 0], {"self": self_kv, "cross": cache["cross"]}
+
+    # ----------------------------------------------------------- costing --
+    def block_stats(self, dcfg: DistConfig, batch_shape) -> BlockStats:
+        B, S = batch_shape          # per-device microbatch
+        tokens = B * S
+        it = jnp.dtype(dcfg.param_dtype).itemsize
+        pf, pb = {}, {}
+        from repro.core.meta import named_leaves
+        for nm, m in named_leaves(self.dec_block_metas(dcfg)):
+            pf[nm] = 2.0 * tokens * m.numel_local(dcfg)
+            pb[nm] = m.numel_local(dcfg) * it
+        return BlockStats(param_flops=pf, param_bytes=pb,
+                          act_bytes=tokens * self.cfg.d_model * it / dcfg.tp_size)
+
+    def bucket_units(self) -> list[list[str]]:
+        return [["attn/*", "ln1"], ["xattn/*", "lnx"], ["mlp/*", "ln2"]]
+
+    def input_specs(self, shape: ShapeConfig, dcfg: DistConfig) -> dict:
+        cfg = self.cfg
+        B = shape.global_batch
+        S = shape.seq_len // 2            # split: S_src = S_tgt = seq/2
+        ids = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        if shape.kind == "train":
+            return {
+                "frames": jax.ShapeDtypeStruct((B, S, cfg.frontend_dim),
+                                               jnp.float32),
+                "tokens": ids, "targets": ids,
+                "valid": jax.ShapeDtypeStruct((B, S), jnp.float32),
+            }
+        if shape.kind == "prefill":
+            return {"frames": jax.ShapeDtypeStruct(
+                (B, S, cfg.frontend_dim), jnp.float32), "tokens": ids}
+        return {"tok": jax.ShapeDtypeStruct((B,), jnp.int32)}
+
+
+def _cached_attn(q, ck, cv, pos, cfg, head_mask):
+    """q: (B,1,Hl,hd); ck/cv: (B,T,Kl,hd). pos=None -> attend everything."""
+    B, _, hl, hd = q.shape
+    kl = ck.shape[2]
+    group = hl // kl
+    qg = q.reshape(B, 1, kl, group, hd)
+    s = jnp.einsum("bqkgh,btkh->bkgqt", qg / math.sqrt(hd), ck,
+                   preferred_element_type=jnp.float32)
+    if pos is not None:
+        msk = jnp.arange(ck.shape[1]) <= pos
+        s = jnp.where(msk[None, None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqt,btkh->bqkgh", p.astype(cv.dtype), cv)
+    out = out.reshape(B, 1, hl, hd) * head_mask[None, None, :, None]
+    return out.reshape(B, 1, hl * hd)

@@ -1,0 +1,186 @@
+"""Mixture-of-Experts family (qwen2-moe-a2.7b, qwen3-moe-30b-a3b).
+
+Inherits attention/embedding/CE/serving from DenseLM and replaces the FFN
+with: router (TP-replicated) + capacity-based top-k dispatch + expert-parallel
+(EP) FFN + optional shared experts (classic TP) + shared-expert gate
+(qwen2-moe).
+
+EP rides the *model* mesh axis (the same axis as attention TP): expert tensors
+are sharded on their leading expert dim (padded to a multiple of tp), tokens
+travel via two all_to_alls. Under SimpleFSDP the expert weights are
+additionally ZeRO-3 sharded over the data axis and bucket-gathered like any
+other parameter — the paper's technique composes with EP exactly as it does
+with TP (DESIGN.md SSArch-applicability).
+
+Load-balance auxiliary loss (switch-style) flows out through the aux channel
+of core.stack and is added to the CE loss in loss_local.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.dist import DistConfig
+from repro.core.meta import ParamMeta
+from repro.models import layers as LY
+from repro.models.common import ArchConfig
+from repro.models.dense import DenseLM
+
+
+def experts_padded(cfg: ArchConfig, tp: int) -> int:
+    m = max(cfg.pad_to, tp)
+    assert m % tp == 0
+    return -(-cfg.n_experts // m) * m
+
+
+class MoELM(DenseLM):
+    # ------------------------------------------------------------- params --
+    def _ffn_metas(self, dcfg, dtype, prefix=""):
+        cfg = self.cfg
+        d, fe = cfg.d_model, cfg.d_ff_expert
+        ep = experts_padded(cfg, dcfg.tp_size)
+        m = {
+            "router": ParamMeta(prefix + "router", (d, ep), None, dtype),
+            "we_g": ParamMeta(prefix + "we_g", (ep, d, fe), 0, dtype),
+            "we_u": ParamMeta(prefix + "we_u", (ep, d, fe), 0, dtype),
+            "we_d": ParamMeta(prefix + "we_d", (ep, fe, d), 0, dtype),
+        }
+        if cfg.d_ff_shared:
+            m.update(LY.mlp_metas(cfg, dcfg, dtype, prefix + "shared.",
+                                  d_ff=cfg.d_ff_shared))
+            m["shared_gate"] = ParamMeta(prefix + "shared_gate", (d, 1),
+                                         None, dtype)
+        return m
+
+    def _ffn_init(self, key, dcfg):
+        cfg = self.cfg
+        d, fe = cfg.d_model, cfg.d_ff_expert
+        ep = experts_padded(cfg, dcfg.tp_size)
+        ks = jax.random.split(key, 5)
+        sd = 0.02
+        p = {
+            "router": jax.random.normal(ks[0], (d, ep)) * sd,
+            "we_g": jax.random.normal(ks[1], (ep, d, fe)) * sd,
+            "we_u": jax.random.normal(ks[2], (ep, d, fe)) * sd,
+            "we_d": jax.random.normal(ks[3], (ep, fe, d)) * sd * 0.5,
+        }
+        if cfg.d_ff_shared:
+            p.update(LY.mlp_init(ks[4], cfg, d_ff=cfg.d_ff_shared))
+            p["shared_gate"] = jnp.zeros((d, 1))
+        return p
+
+    # ----------------------------------------------------------- dispatch --
+    def _route(self, x2d, router):
+        """x2d: (T, D) -> top-k ids/weights + aux loss terms."""
+        cfg = self.cfg
+        ep = router.shape[1]
+        logits = jnp.einsum("td,de->te", x2d, router,
+                            preferred_element_type=jnp.float32)
+        # padded experts never win: mask their logits
+        if ep > cfg.n_experts:
+            pad_mask = jnp.arange(ep) >= cfg.n_experts
+            logits = jnp.where(pad_mask[None, :], -1e30, logits)
+        probs = jax.nn.softmax(logits, axis=-1)
+        w, ids = lax.top_k(probs, cfg.n_experts_active)
+        if cfg.moe_norm_topk:
+            w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+        # switch-style load balance on the real experts
+        T = x2d.shape[0]
+        occupancy = jnp.zeros((ep,)).at[ids.reshape(-1)].add(1.0) \
+            / (T * cfg.n_experts_active)
+        mean_prob = probs.mean(0)
+        aux = cfg.n_experts * jnp.sum(occupancy * mean_prob)
+        return w.astype(x2d.dtype), ids, aux
+
+    def _moe_ffn(self, p, x2d, dcfg: DistConfig):
+        """Capacity-based EP dispatch. x2d: (T, D) local tokens."""
+        cfg = self.cfg
+        tp = dcfg.tp_size
+        ep = p["we_g"].shape[0]  # params arrive TP-local... see note below
+        # NOTE: params enter _ffn_apply already FSDP-gathered to the TP-local
+        # compute shape (ep/tp, d, fe) -- but the ROUTER covers all ep
+        # experts, so derive ep from the router's full width.
+        ep = p["router"].shape[1]
+        w, ids, aux = self._route(x2d, p["router"])
+        T, D = x2d.shape
+        k = cfg.n_experts_active
+        C = max(4, int(-(-T * k * cfg.capacity_factor // ep)))
+        C = -(-C // 4) * 4
+
+        flat_ids = ids.reshape(-1)                       # (T*k,)
+        tok_idx = jnp.repeat(jnp.arange(T), k)
+        onehot = jax.nn.one_hot(flat_ids, ep, dtype=jnp.int32)
+        pos = (jnp.cumsum(onehot, axis=0) - 1)
+        pos = jnp.take_along_axis(pos, flat_ids[:, None], axis=1)[:, 0]
+        keep = pos < C
+        slot = jnp.where(keep, flat_ids * C + pos, ep * C)  # drop -> OOB
+        buf = jnp.zeros((ep * C + 1, D), x2d.dtype)
+        buf = buf.at[slot].add(x2d[tok_idx] *
+                               keep[:, None].astype(x2d.dtype))
+        buf = buf[:-1].reshape(ep, C, D)
+
+        if tp > 1:  # EP exchange: (E, C, D) -> (E/tp, C*tp, D)
+            buf = lax.all_to_all(buf, dcfg.tp_axis, split_axis=0,
+                                 concat_axis=1, tiled=True)
+        g = jnp.einsum("ecd,edf->ecf", buf, p["we_g"])
+        u = jnp.einsum("ecd,edf->ecf", buf, p["we_u"])
+        h = jax.nn.silu(g) * u
+        out = jnp.einsum("ecf,efd->ecd", h, p["we_d"])
+        if tp > 1:   # return exchange
+            out = lax.all_to_all(out, dcfg.tp_axis, split_axis=1,
+                                 concat_axis=0, tiled=True)
+        out = out.reshape(ep * C, D)
+        gathered = jnp.take(out, jnp.minimum(slot, ep * C - 1), axis=0)
+        gathered = gathered * (keep & (slot < ep * C))[:, None] \
+            .astype(out.dtype)
+        combined = jnp.zeros((T, D), out.dtype).at[tok_idx].add(
+            gathered * w.reshape(-1)[:, None])
+        return combined, aux
+
+    def _ffn_apply(self, p, x_sp, dcfg):
+        cfg = self.cfg
+        B, Ssp, D = x_sp.shape
+        x2d = x_sp.reshape(B * Ssp, D)
+        out, aux = self._moe_ffn(p, x2d, dcfg)
+        out = out.reshape(B, Ssp, D)
+        if cfg.d_ff_shared:
+            sh = LY.mlp_apply({k: p[k] for k in ("wg", "wu", "wd")},
+                              x_sp, cfg, dcfg)
+            gate = jax.nn.sigmoid(
+                jnp.einsum("bsd,dg->bsg", x_sp, p["shared_gate"]))
+            out = out + sh * gate
+        # /tp: same sum-over-TP-ranks gradient convention as the CE head
+        return out, {"moe_aux": aux * self.cfg.router_aux_coef
+                     / dcfg.tp_size}
+
+    def _ffn_decode(self, p, x, dcfg):
+        B = x.shape[0]
+        out, _ = self._moe_ffn(p, x.reshape(B, -1), dcfg)
+        out = out.reshape(B, 1, -1)
+        # dispatch output is already full (tokens replicated over model
+        # ranks in decode); only the TP-partial shared expert needs a psum
+        if self.cfg.d_ff_shared:
+            cfg = self.cfg
+            hg = jnp.einsum("bsd,df->bsf", x, p["wg"])
+            hu = jnp.einsum("bsd,df->bsf", x, p["wu"])
+            sh = jnp.einsum("bsf,fd->bsd", jax.nn.silu(hg) * hu, p["wd"])
+            sh = lax.psum(sh, dcfg.tp_axis)
+            gate = jax.nn.sigmoid(
+                jnp.einsum("bsd,dg->bsg", x, p["shared_gate"]))
+            out = out + sh * gate
+        return out
+
+    # ------------------------------------------------------------- train --
+    def loss_local(self, storage, batch, dcfg: DistConfig):
+        loss, aux = super().loss_local(storage, batch, dcfg)
+        if "moe_aux" in aux:
+            loss = loss + aux["moe_aux"]
+        return loss, aux
+
+    def bucket_units(self) -> list[list[str]]:
+        return [["attn/*", "ln1"],
+                ["mlp/router", "mlp/shared*", "mlp/wg", "mlp/wu", "mlp/wd",
+                 "ln2"],
+                ["mlp/we_*"]]

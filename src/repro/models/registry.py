@@ -1,0 +1,49 @@
+"""Model registry: arch id -> (ArchConfig, model instance)."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.models.common import ArchConfig
+
+ARCH_IDS = (
+    "deepseek_coder_33b", "phi3_medium_14b", "gemma2_27b", "qwen3_1_7b",
+    "qwen2_moe_a2_7b", "qwen3_moe_30b_a3b", "xlstm_1_3b",
+    "seamless_m4t_large_v2", "zamba2_1_2b", "internvl2_26b",
+    # the paper's own eval family (Table 2), used by benchmarks
+    "llama3_8b",
+)
+
+_ALIASES = {i.replace("_", "-"): i for i in ARCH_IDS}
+
+
+def build_model(cfg: ArchConfig):
+    if cfg.family == "dense":
+        from repro.models.dense import DenseLM
+        return DenseLM(cfg)
+    if cfg.family == "moe":
+        from repro.models.moe import MoELM
+        return MoELM(cfg)
+    if cfg.family == "xlstm":
+        from repro.models.xlstm import XLSTMLM
+        return XLSTMLM(cfg)
+    if cfg.family == "zamba":
+        from repro.models.zamba2 import Zamba2LM
+        return Zamba2LM(cfg)
+    if cfg.family == "encdec":
+        from repro.models.encdec import EncDecLM
+        return EncDecLM(cfg)
+    if cfg.family == "vlm":
+        from repro.models.vlm import VLM
+        return VLM(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def get_arch(arch_id: str, smoke: bool = False):
+    """Returns (ArchConfig, model). `smoke` selects the reduced config."""
+    arch_id = _ALIASES.get(arch_id, arch_id)
+    if arch_id not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{arch_id}")
+    cfg = mod.SMOKE if smoke else mod.CONFIG
+    return cfg, build_model(cfg)

@@ -1,0 +1,107 @@
+"""Glue between model definitions and the mesh: storage conversion,
+spec building, and shard_map-wrapped step construction.
+
+Used by train/, launch/dryrun, tests and examples so they all build steps
+the same way.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax, shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core.dist import DistConfig, make_mesh
+from repro.core.meta import (ParamMeta, abstract_storage, from_storage,
+                             storage_specs, to_storage)
+
+
+def _is_meta(x):
+    return isinstance(x, ParamMeta)
+
+
+def tree_to_storage(full_tree, metas_tree, dcfg: DistConfig):
+    """Full shaped params -> storage layout; leaves with an extra leading dim
+    relative to their meta are treated as layer-stacked."""
+    def one(p, m):
+        if p.ndim == len(m.global_shape) + 1:
+            return jnp.stack(
+                [to_storage(p[i], m, dcfg) for i in range(p.shape[0])])
+        return to_storage(p, m, dcfg)
+    return jax.tree.map(one, full_tree, metas_tree, is_leaf=_is_meta)
+
+
+def tree_from_storage(storage_tree, metas_tree, dcfg: DistConfig):
+    """Inverse of tree_to_storage (stacked-aware)."""
+    def one(p, m):
+        if p.ndim == len(m.storage_shape(dcfg)) + 1:
+            return jnp.stack(
+                [from_storage(p[i], m, dcfg) for i in range(p.shape[0])])
+        return from_storage(p, m, dcfg)
+    return jax.tree.map(one, storage_tree, metas_tree, is_leaf=_is_meta)
+
+
+def stacked_keys(model) -> dict:
+    """Which top-level param groups carry a leading layer-stack dim."""
+    return getattr(model, "stacked_keys", {"blocks": model.n_steps})
+
+
+def model_storage_specs(model, dcfg: DistConfig):
+    metas = model.metas(dcfg)
+    sk = stacked_keys(model)
+    return {
+        k: storage_specs(metas[k], dcfg, stacked=(k in sk))
+        for k in metas
+    }
+
+
+def model_abstract_storage(model, dcfg: DistConfig):
+    metas = model.metas(dcfg)
+    sk = stacked_keys(model)
+    return {
+        k: abstract_storage(metas[k], dcfg, n_layers=sk.get(k))
+        for k in metas
+    }
+
+
+def init_storage(model, key, dcfg: DistConfig):
+    full = model.init_full(key, dcfg)
+    metas = model.metas(dcfg)
+    return {k: tree_to_storage(full[k], metas[k], dcfg) for k in full}
+
+
+def batch_specs(model, shape, dcfg: DistConfig):
+    dp_axes = tuple(a for a in dcfg.mesh_axes if a != dcfg.tp_axis)
+    specs = {}
+    for k, sds in model.input_specs(shape, dcfg).items():
+        specs[k] = P(dp_axes, *([None] * (len(sds.shape) - 1)))
+    return specs
+
+
+def dp_axes(dcfg: DistConfig) -> tuple[str, ...]:
+    return tuple(a for a in dcfg.mesh_axes if a != dcfg.tp_axis)
+
+
+def make_loss_step(model, dcfg: DistConfig, with_grads: bool = True):
+    """Returns step(storage, batch) -> (loss, grads?) for shard_map."""
+    def step(storage, batch):
+        if with_grads:
+            loss, grads = jax.value_and_grad(
+                lambda s: model.loss_local(s, batch, dcfg)[0])(storage)
+        else:
+            loss = model.loss_local(storage, batch, dcfg)[0]
+            grads = None
+        # undo the 1/tp gradient-convention scaling for the LOGGED value
+        loss = lax.pmean(loss, dcfg.mesh_axes) * dcfg.tp_size
+        return (loss, grads) if with_grads else loss
+    return step
+
+
+def wrap_step(model, dcfg: DistConfig, shape, step_fn, out_specs,
+              mesh=None):
+    mesh = mesh or make_mesh(dcfg)
+    in_specs = (model_storage_specs(model, dcfg),
+                batch_specs(model, shape, dcfg))
+    return jax.jit(shard_map(step_fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs)), mesh

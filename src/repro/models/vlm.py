@@ -1,0 +1,153 @@
+"""VLM family (internvl2-26b): InternViT frontend STUB + InternLM2 backbone.
+
+Per the assignment, the modality frontend is a stub: `input_specs` feeds
+precomputed ViT patch embeddings (B, n_img_tokens, vit_dim). The trainable
+pieces here are the 2-layer MLP projector (vit_dim -> d_model) and the full
+LM backbone (plain DenseLM, llama-style GQA). Image embeddings occupy the
+first n_img_tokens positions; loss is masked to text positions.
+
+Serving: prefill consumes (image embeddings + text prompt); decode is the
+backbone's decode (image prefix lives in the KV cache) — delegated wholesale
+to DenseLM.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import collectives as coll
+from repro.core.dist import DistConfig
+from repro.core.meta import ParamMeta
+from repro.core.remat import maybe_remat
+from repro.core.stack import apply_stack
+from repro.models import layers as LY
+from repro.models.common import ArchConfig, ShapeConfig
+from repro.models.dense import DenseLM
+
+
+class VLM(DenseLM):
+    def __init__(self, cfg: ArchConfig):
+        super().__init__(cfg)
+        assert cfg.vit_dim and cfg.n_img_tokens
+
+    # projector params ride alongside the backbone tree ----------------------
+    def metas(self, dcfg: DistConfig) -> dict:
+        m = super().metas(dcfg)
+        cfg = self.cfg
+        dt = dcfg.storage_dtype
+        m["proj_w1"] = ParamMeta("proj_w1", (cfg.vit_dim, cfg.d_model),
+                                 1, dt)
+        m["proj_w2"] = ParamMeta("proj_w2", (cfg.d_model, cfg.d_model),
+                                 None, dt)
+        return m
+
+    def init_full(self, key, dcfg: DistConfig) -> dict:
+        p = super().init_full(key, dcfg)
+        cfg = self.cfg
+        k1, k2 = jax.random.split(jax.random.fold_in(key, 999))
+        p["proj_w1"] = jax.random.normal(k1, (cfg.vit_dim, cfg.d_model)) \
+            * 0.02
+        p["proj_w2"] = jax.random.normal(k2, (cfg.d_model, cfg.d_model)) \
+            * 0.02
+        return p
+
+    def _project_images(self, storage, img, dcfg):
+        cfg = self.cfg
+        m1 = ParamMeta("proj_w1", (cfg.vit_dim, cfg.d_model), 1,
+                       dcfg.storage_dtype)
+        m2 = ParamMeta("proj_w2", (cfg.d_model, cfg.d_model), None,
+                       dcfg.storage_dtype)
+        w1 = coll.replicate(storage["proj_w1"], m1, dcfg)
+        w2 = coll.replicate(storage["proj_w2"], m2, dcfg)
+        h = jnp.einsum("bnf,fd->bnd", img.astype(dcfg.param_dtype), w1)
+        h = jax.nn.gelu(h, approximate=True)
+        # w1 is TP-col-sharded -> h covers d/tp cols; w2 consumes the full d,
+        # so gather the hidden over the model axis first.
+        h = jax.lax.all_gather(h, dcfg.tp_axis, axis=2, tiled=True)
+        return jnp.einsum("bnd,de->bne", h, w2)
+
+    # ------------------------------------------------------------- train --
+    def loss_local(self, storage, batch, dcfg: DistConfig):
+        cfg = self.cfg
+        tokens = batch["tokens"]                     # (B, S_text)
+        img = batch["img_embeds"]                    # (B, n_img, vit_dim)
+        n_img = img.shape[1]
+        S = n_img + tokens.shape[1]
+        consts = self.consts(S, dcfg)
+
+        img_x = self._project_images(storage, img, dcfg)
+        emb_meta = LY.embed_meta("embed", cfg, dcfg.storage_dtype)
+
+        def embed_fn(shard, ids):
+            table = coll.replicate(shard, emb_meta, dcfg)
+            return LY.embed_apply(table, ids, cfg, dcfg, scatter=False)
+
+        txt_x = maybe_remat(embed_fn, "fsdp_only")(storage["embed"], tokens)
+        x = jnp.concatenate([img_x.astype(txt_x.dtype), txt_x], axis=1)
+        x = LY.sp_slice(x, dcfg)                     # full -> SP layout
+
+        blk = functools.partial(self.block_fn, dcfg=dcfg)
+        x, aux = apply_stack(blk, self.block_metas(dcfg), dcfg,
+                             storage["blocks"], consts, x)
+        fn_meta = LY.norm_meta("final_norm", cfg.d_model, dcfg.storage_dtype)
+        w_fn = coll.replicate(storage["final_norm"], fn_meta, dcfg)
+        x = LY.rmsnorm(x, w_fn, cfg.norm_eps)
+        logits = self._lm_head(storage, x, dcfg)     # (B, S, V/tp)
+        # mask image positions out of the loss
+        pad_t = jnp.zeros((tokens.shape[0], n_img), tokens.dtype)
+        targets = jnp.concatenate([pad_t, batch["targets"]], axis=1)
+        valid = jnp.concatenate(
+            [jnp.zeros((tokens.shape[0], n_img), jnp.float32),
+             batch["valid"]], axis=1)
+        loss, _ = LY.vocab_parallel_xent(logits, targets, valid, cfg, dcfg)
+        return loss, aux
+
+    # ------------------------------------------------------------- serve --
+    def prefill_local(self, params_tp, batch, dcfg: DistConfig):
+        """Image embeddings prepend the text prompt; then the backbone's
+        prefill. params_tp carries proj_w1/proj_w2 TP-local."""
+        cfg = self.cfg
+        img = batch["img_embeds"]
+        h = jnp.einsum("bnf,fd->bnd", img.astype(dcfg.param_dtype),
+                       params_tp["proj_w1"])
+        h = jax.nn.gelu(h, approximate=True)
+        h = jax.lax.all_gather(h, dcfg.tp_axis, axis=2, tiled=True)
+        img_x = jnp.einsum("bnd,de->bne", h, params_tp["proj_w2"])
+        txt_x = LY.embed_apply(params_tp["embed"], batch["tokens"], cfg,
+                               dcfg, scatter=False)
+        x = jnp.concatenate([img_x.astype(txt_x.dtype), txt_x], axis=1)
+        x = LY.sp_slice(x, dcfg)
+        S = img_x.shape[1] + batch["tokens"].shape[1]
+        consts = self.consts(S, dcfg)
+
+        def body(xc, p):
+            y, kv = self.prefill_block(p, consts, xc, dcfg)
+            return y, kv
+
+        from jax import lax as _lax
+        x, cache = _lax.scan(body, x, params_tp["blocks"])
+        x = LY.rmsnorm(x, params_tp["final_norm"], cfg.norm_eps,
+                       cfg.post_norms)
+        xg = LY.sp_gather(x, dcfg)[:, -1:]
+        logits = jnp.einsum("bsd,dv->bsv", xg, params_tp["head"],
+                            preferred_element_type=jnp.float32)
+        return logits[:, 0], cache
+
+    # ------------------------------------------------------------ inputs --
+    def input_specs(self, shape: ShapeConfig, dcfg: DistConfig) -> dict:
+        cfg = self.cfg
+        B = shape.global_batch
+        S_text = shape.seq_len - cfg.n_img_tokens
+        ids = jax.ShapeDtypeStruct((B, S_text), jnp.int32)
+        img = jax.ShapeDtypeStruct((B, cfg.n_img_tokens, cfg.vit_dim),
+                                   jnp.float32)
+        if shape.kind == "train":
+            return {"tokens": ids, "targets": ids, "img_embeds": img,
+                    "valid": jax.ShapeDtypeStruct((B, S_text), jnp.float32)}
+        if shape.kind == "prefill":
+            return {"tokens": ids, "img_embeds": img}
+        return {"tok": jax.ShapeDtypeStruct((B,), jnp.int32)}

@@ -1,0 +1,560 @@
+"""xLSTM family (xlstm-1.3b): 7:1 mLSTM:sLSTM blocks (arXiv:2405.04517).
+
+mLSTM — matrix-memory cell with stabilized exponential gating, implemented
+in the CHUNKWISE parallel form (intra-chunk quadratic + inter-chunk state
+carry, the same dual structure as Mamba-2's SSD): O(T·d²) compute, O(T/Lc)
+scan steps, AD-friendly memory. The per-step recurrent form is used for
+decode (O(1) state -> this arch runs the long_500k cell).
+
+sLSTM — scalar-memory cell with recurrent per-head mixing (R matrices),
+strictly sequential lax.scan over time.
+
+TP strategy (DESIGN.md): only the *value* path TP-shards cleanly (the C
+matrix memory is outer(k) x v — shard the v/output dim); q/k/gate/conv
+projections are TP-replicated (vma keeps their grads exact), the output
+projection is row-parallel back into sequence-parallel layout. sLSTM blocks
+are fully TP-replicated (they are 1/8 of the stack and small).
+
+Simplifications vs. the reference implementation (documented per DESIGN.md):
+full-matrix q/k/v projections instead of block-diagonal-4, no learnable
+skip-scales; block counts/dims/param budget match the paper's 1.3B config.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import collectives as coll
+from repro.core.dist import DistConfig
+from repro.core.vmautil import vary_like
+from repro.core.irgraph import BlockStats
+from repro.core.meta import ParamMeta
+from repro.core.stack import apply_stack
+from repro.core.remat import maybe_remat
+from repro.models import layers as LY
+from repro.models.common import ArchConfig, ShapeConfig
+
+
+def _logsig(x):
+    return -jax.nn.softplus(-x)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell: chunkwise parallel form (training/prefill)
+# ---------------------------------------------------------------------------
+def mlstm_chunked(q, k, v, i_pre, f_pre, chunk: int = 64, state=None):
+    """q,k: (B,T,H,dk); v: (B,T,H,dv); i_pre,f_pre: (B,T,H) pre-activations.
+    Returns y: (B,T,H,dv) and final state (C, n, m)."""
+    B, T, H, dk = q.shape
+    dv = v.shape[-1]
+    Lc = min(chunk, T)
+    pad = (-T) % Lc
+    if pad:
+        z4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        z3 = ((0, 0), (0, pad), (0, 0))
+        q, k, v = (jnp.pad(a, z4) for a in (q, k, v))
+        i_pre = jnp.pad(i_pre, z3)
+        f_pre = jnp.pad(f_pre, z3, constant_values=30.0)  # decay ~1 on pad
+    nC = (T + pad) // Lc
+    scale = dk ** -0.5
+
+    def reshape_c(a):
+        return a.reshape(B, nC, Lc, *a.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc = reshape_c(q), reshape_c(k), reshape_c(v)   # (nC,B,Lc,H,*)
+    ic, fc = reshape_c(i_pre), reshape_c(f_pre)             # (nC,B,Lc,H)
+
+    if state is None:
+        C0 = jnp.zeros((B, H, dk, dv), jnp.float32)
+        n0 = jnp.zeros((B, H, dk), jnp.float32)
+        m0 = jnp.full((B, H), -1e30)
+        C0, n0, m0 = vary_like((C0, n0, m0), (q, k, v, i_pre, f_pre))
+    else:
+        C0, n0, m0 = state
+
+    def chunk_step(carry, inp):
+        C_in, n_in, m_in = carry
+        qb, kb, vb, ib, fb = inp
+        lf = _logsig(fb.astype(jnp.float32))       # (B,Lc,H)
+        li = ib.astype(jnp.float32)
+        F = jnp.cumsum(lf, axis=1)                 # inclusive
+        Ftot = F[:, -1]                            # (B,H)
+        # D[t,s] = F_t - F_s + li_s  (s <= t)
+        D = F[:, :, None] - F[:, None, :, :] + li[:, None, :, :]
+        tri = jnp.tril(jnp.ones((Lc, Lc), bool))
+        D = jnp.where(tri[None, :, :, None], D, -jnp.inf)
+        m_local = D.max(axis=2)                    # (B,Lc,H)
+        m_cross = F + m_in[:, None]                # (B,Lc,H)
+        m_t = jnp.maximum(m_local, m_cross)
+        m_t = jnp.maximum(m_t, -1e30)
+        # intra-chunk
+        qf = qb.astype(jnp.float32) * scale
+        kf = kb.astype(jnp.float32)
+        vf = vb.astype(jnp.float32)
+        S = jnp.einsum("blhd,bshd->blsh", qf, kf)
+        W = jnp.exp(D - m_t[:, :, None])           # (B,Lc,Lc,H)
+        W = jnp.where(tri[None, :, :, None], W, 0.0)
+        y_intra = jnp.einsum("blsh,bshv->blhv", S * W, vf)
+        n_intra = jnp.einsum("blsh,bshd->blhd", W, kf)
+        # inter-chunk (incoming state)
+        g_cross = jnp.exp(m_cross - m_t)           # (B,Lc,H)
+        y_inter = jnp.einsum("blhd,bhdv->blhv", qf, C_in) \
+            * g_cross[..., None]
+        n_inter = n_in[:, None] * g_cross[..., None]
+        n_t = n_intra + n_inter
+        denom = jnp.maximum(jnp.abs(jnp.einsum("blhd,blhd->blh", qf, n_t)),
+                            jnp.exp(-m_t))
+        y = (y_intra + y_inter) / denom[..., None]
+        # outgoing state
+        g_out = Ftot[:, None] - F + li             # (B,Lc,H) decay to end
+        m_out = jnp.maximum(Ftot + m_in, g_out.max(axis=1))
+        W_out = jnp.exp(g_out - m_out[:, None])
+        C_out = jnp.exp(Ftot + m_in - m_out)[..., None, None] * C_in \
+            + jnp.einsum("bshd,bshv->bhdv", kf * W_out[..., None], vf)
+        n_out = jnp.exp(Ftot + m_in - m_out)[..., None] * n_in \
+            + jnp.einsum("bshd->bhd", kf * W_out[..., None])
+        return (C_out, n_out, m_out), y
+
+    (C, n, m), ys = lax.scan(chunk_step, (C0, n0, m0), (qc, kc, vc, ic, fc))
+    y = ys.swapaxes(0, 1).reshape(B, T + pad, H, dv)[:, :T]
+    return y.astype(v.dtype), (C, n, m)
+
+
+def mlstm_step(state, q, k, v, i_pre, f_pre):
+    """Recurrent decode step. q,k: (B,H,dk); v: (B,H,dv); gates (B,H)."""
+    C, n, m = state
+    scale = q.shape[-1] ** -0.5
+    lf = _logsig(f_pre.astype(jnp.float32))
+    li = i_pre.astype(jnp.float32)
+    m_new = jnp.maximum(lf + m, li)
+    fg = jnp.exp(lf + m - m_new)[..., None, None]
+    ig = jnp.exp(li - m_new)[..., None, None]
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    C = fg * C + ig * (kf[..., :, None] * vf[..., None, :])
+    n = fg[..., 0] * n + ig[..., 0] * kf
+    qf = q.astype(jnp.float32) * scale
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n)),
+                        jnp.exp(-m_new))
+    y = jnp.einsum("bhd,bhdv->bhv", qf, C) / denom[..., None]
+    return (C, n, m_new), y.astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM cell (sequential scan; fully replicated under TP)
+# ---------------------------------------------------------------------------
+def slstm_seq(xg, R, state=None):
+    """xg: (B,T,4,H,hd) gate pre-acts [i,f,z,o]; R: (4,H,hd,hd)."""
+    B, T, _, H, hd = xg.shape
+    if state is None:
+        h0 = jnp.zeros((B, H, hd), jnp.float32)
+        c0 = jnp.zeros((B, H, hd), jnp.float32)
+        n0 = jnp.ones((B, H, hd), jnp.float32)
+        m0 = jnp.zeros((B, H, hd), jnp.float32)
+        state = vary_like((h0, c0, n0, m0), (xg, R))
+
+    def step(carry, x_t):
+        h, c, n, m = carry
+        rec = jnp.einsum("bhd,ghde->gbhe", h, R)      # (4,B,H,hd)
+        it = x_t[:, 0].astype(jnp.float32) + rec[0]
+        ft = x_t[:, 1].astype(jnp.float32) + rec[1]
+        zt = x_t[:, 2].astype(jnp.float32) + rec[2]
+        ot = x_t[:, 3].astype(jnp.float32) + rec[3]
+        lf = _logsig(ft)
+        m_new = jnp.maximum(lf + m, it)
+        i_ = jnp.exp(it - m_new)
+        f_ = jnp.exp(lf + m - m_new)
+        c_new = f_ * c + i_ * jnp.tanh(zt)
+        n_new = f_ * n + i_
+        h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1e-6)
+        return (h_new, c_new, n_new, m_new), h_new
+
+    state, hs = lax.scan(step, state, xg.swapaxes(0, 1))
+    return hs.swapaxes(0, 1), state  # (B,T,H,hd)
+
+
+def causal_conv1d(x, w, state=None):
+    """x: (B,T,C); w: (K,C) depthwise causal conv. state: (B,K-1,C)."""
+    K = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else None
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+class XLSTMLM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.per = cfg.slstm_every or 8          # 7 mLSTM + 1 sLSTM
+        assert cfg.n_layers % self.per == 0
+        self.n_steps = cfg.n_layers // self.per
+        self.d_inner = cfg.ssm_expand * cfg.d_model
+        self.n_heads = cfg.n_heads
+        self.dk = self.d_inner // cfg.n_heads
+
+    # ---------------------------------------------------------- sub-metas --
+    def _mlstm_metas(self, dcfg, dt, tag):
+        d, di, H = self.cfg.d_model, self.d_inner, self.n_heads
+        dk = self.dk
+        K = self.cfg.ssm_conv
+        return {
+            "ln": LY.norm_meta(tag + "ln", d, dt),
+            "w_x": ParamMeta(tag + "w_x", (d, di), None, dt),
+            # value-path tensors shard the PER-HEAD value dim (tp_dim on the
+            # explicit head-split layout) so every rank holds dv/tp dims of
+            # every head -- a contiguous tp-slice of the flat di dim would
+            # straddle head boundaries.
+            "w_z": ParamMeta(tag + "w_z", (d, H, dk), 2, dt),
+            "conv": ParamMeta(tag + "conv", (K, di), None, dt),
+            "wq": ParamMeta(tag + "wq", (di, di), None, dt),
+            "wk": ParamMeta(tag + "wk", (di, di), None, dt),
+            "wv": ParamMeta(tag + "wv", (di, H, dk), 2, dt),
+            "w_if": ParamMeta(tag + "w_if", (di, 2 * H), None, dt),
+            "w_out": ParamMeta(tag + "w_out", (H, dk, d), 1, dt),
+        }
+
+    def _slstm_metas(self, dcfg, dt, tag):
+        d, H = self.cfg.d_model, self.n_heads
+        hd = d // H
+        return {
+            "ln": LY.norm_meta(tag + "ln", d, dt),
+            "w_g": ParamMeta(tag + "w_g", (d, 4 * d), None, dt),
+            "R": ParamMeta(tag + "R", (4, H, hd, hd), None, dt),
+            "w_out": ParamMeta(tag + "w_out", (d, d), None, dt),
+        }
+
+    def block_metas(self, dcfg: DistConfig) -> dict:
+        dt = dcfg.storage_dtype
+        m = {f"m{i}": self._mlstm_metas(dcfg, dt, f"m{i}.")
+             for i in range(self.per - 1)}
+        m["s"] = self._slstm_metas(dcfg, dt, "s.")
+        return m
+
+    def metas(self, dcfg: DistConfig) -> dict:
+        dt = dcfg.storage_dtype
+        return {
+            "embed": LY.embed_meta("embed", self.cfg, dt),
+            "blocks": self.block_metas(dcfg),
+            "final_norm": LY.norm_meta("final_norm", self.cfg.d_model, dt),
+            "head": LY.head_meta("head", self.cfg, dt),
+        }
+
+    # --------------------------------------------------------------- init --
+    def _mlstm_init(self, key):
+        d, di, H = self.cfg.d_model, self.d_inner, self.n_heads
+        K = self.cfg.ssm_conv
+        ks = jax.random.split(key, 8)
+        sd = 0.02
+        wif = jnp.concatenate([
+            jnp.zeros((di, H)),                      # input gate pre ~ 0
+            jnp.zeros((di, H)),                      # forget handled by bias
+        ], axis=1) + jax.random.normal(ks[6], (di, 2 * H)) * 0.005
+        dk = self.dk
+        return {
+            "ln": LY.norm_init(d),
+            "w_x": jax.random.normal(ks[0], (d, di)) * sd,
+            "w_z": jax.random.normal(ks[1], (d, H, dk)) * sd,
+            "conv": jax.random.normal(ks[2], (K, di)) * (1 / math.sqrt(K)),
+            "wq": jax.random.normal(ks[3], (di, di)) * sd,
+            "wk": jax.random.normal(ks[4], (di, di)) * sd,
+            "wv": jax.random.normal(ks[5], (di, H, dk)) * sd,
+            "w_if": wif,
+            "w_out": jax.random.normal(ks[7], (H, dk, d))
+            * (sd / math.sqrt(2 * self.cfg.n_layers)),
+        }
+
+    def _slstm_init(self, key):
+        d, H = self.cfg.d_model, self.n_heads
+        hd = d // H
+        ks = jax.random.split(key, 3)
+        return {
+            "ln": LY.norm_init(d),
+            "w_g": jax.random.normal(ks[0], (d, 4 * d)) * 0.02,
+            "R": jax.random.normal(ks[1], (4, H, hd, hd)) / math.sqrt(hd),
+            "w_out": jax.random.normal(ks[2], (d, d))
+            * (0.02 / math.sqrt(2 * self.cfg.n_layers)),
+        }
+
+    def init_block_full(self, key, dcfg) -> dict:
+        ks = jax.random.split(key, self.per)
+        p = {f"m{i}": self._mlstm_init(ks[i]) for i in range(self.per - 1)}
+        p["s"] = self._slstm_init(ks[-1])
+        return p
+
+    def init_full(self, key, dcfg: DistConfig) -> dict:
+        keys = jax.random.split(key, self.n_steps + 2)
+        blocks = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[self.init_block_full(keys[i], dcfg)
+              for i in range(self.n_steps)])
+        return {
+            "embed": LY.embed_init(keys[-1], self.cfg),
+            "blocks": blocks,
+            "final_norm": LY.norm_init(self.cfg.d_model),
+            "head": LY.head_init(keys[-2], self.cfg),
+        }
+
+    def consts(self, seq_len: int, dcfg: DistConfig) -> dict:
+        return {}
+
+    # -------------------------------------------------------------- apply --
+    def _mlstm_parts(self, p, xg, dcfg, tp_slice=True):
+        """Shared projection math. xg: (B,T,D) full-seq."""
+        B, T, _ = xg.shape
+        H, dk = self.n_heads, self.dk
+        x_in = jnp.einsum("btd,de->bte", xg, p["w_x"])
+        xc, _ = causal_conv1d(x_in, p["conv"])
+        xc = jax.nn.silu(xc)
+        q = jnp.einsum("bte,ef->btf", xc, p["wq"]).reshape(B, T, H, dk)
+        k = jnp.einsum("bte,ef->btf", xc, p["wk"]).reshape(B, T, H, dk)
+        v = jnp.einsum("bte,ehv->bthv", x_in, p["wv"])        # (B,T,H,dv/tp)
+        gates = jnp.einsum("bte,eg->btg", xc, p["w_if"])
+        i_pre = gates[..., :H]
+        f_pre = gates[..., H:] + 3.0                          # forget bias
+        z = jnp.einsum("btd,dhv->bthv", xg, p["w_z"])         # (B,T,H,dv/tp)
+        return q, k, v, i_pre, f_pre, z
+
+    def _mlstm_block(self, p, x_sp, dcfg):
+        cfg = self.cfg
+        h = LY.rmsnorm(x_sp, p["ln"], cfg.norm_eps)
+        xg = LY.sp_gather(h, dcfg)
+        q, k, v, i_pre, f_pre, z = self._mlstm_parts(p, xg, dcfg)
+        y, _ = mlstm_chunked(q, k, v, i_pre, f_pre, chunk=cfg.ssm_chunk)
+        y = y * jax.nn.silu(z)                                # (B,T,H,dv/tp)
+        o = jnp.einsum("bthv,hvd->btd", y, p["w_out"])
+        return x_sp + LY.sp_scatter(o, dcfg)
+
+    def _slstm_block(self, p, x_sp, dcfg):
+        cfg = self.cfg
+        d, H = cfg.d_model, self.n_heads
+        hd = d // H
+        h = LY.rmsnorm(x_sp, p["ln"], cfg.norm_eps)
+        xg = LY.sp_gather(h, dcfg)
+        B, T, _ = xg.shape
+        g = jnp.einsum("btd,dg->btg", xg, p["w_g"]).reshape(B, T, 4, H, hd)
+        hs, _ = slstm_seq(g, p["R"])
+        o = jnp.einsum("btd,de->bte", hs.reshape(B, T, d).astype(xg.dtype),
+                       p["w_out"])
+        # sLSTM is TP-replicated; divide before the SP reduce-scatter sums
+        # tp identical copies back together.
+        o = o / dcfg.tp_size
+        return x_sp + LY.sp_scatter(o, dcfg)
+
+    def block_fn(self, p, consts, x, dcfg: DistConfig):
+        # remat each sub-block: the superblock's backward re-derives one
+        # cell's internals at a time (q/k projections at full d_inner are
+        # the peak residency otherwise)
+        mblk = jax.checkpoint(lambda pp, xx: self._mlstm_block(pp, xx, dcfg))
+        sblk = jax.checkpoint(lambda pp, xx: self._slstm_block(pp, xx, dcfg))
+        for i in range(self.per - 1):
+            x = mblk(p[f"m{i}"], x)
+        x = sblk(p["s"], x)
+        return x, {}
+
+    # -------------------------------------------------------------- train --
+    def loss_local(self, storage, batch, dcfg: DistConfig):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        emb_meta = LY.embed_meta("embed", cfg, dcfg.storage_dtype)
+
+        def embed_fn(shard, ids):
+            table = coll.replicate(shard, emb_meta, dcfg)
+            return LY.embed_apply(table, ids, cfg, dcfg)
+
+        x = maybe_remat(embed_fn, "fsdp_only")(storage["embed"], tokens)
+        blk = functools.partial(self.block_fn, dcfg=dcfg)
+        x, aux = apply_stack(blk, self.block_metas(dcfg), dcfg,
+                             storage["blocks"], self.consts(0, dcfg), x)
+        fn_meta = LY.norm_meta("final_norm", cfg.d_model, dcfg.storage_dtype)
+        w_fn = coll.replicate(storage["final_norm"], fn_meta, dcfg)
+        x = LY.rmsnorm(x, w_fn, cfg.norm_eps)
+        hd_meta = LY.head_meta("head", cfg, dcfg.storage_dtype)
+        w = coll.replicate(storage["head"], hd_meta, dcfg)
+        logits = LY.head_logits(w, LY.sp_gather(x, dcfg), cfg, dcfg)
+        loss, _ = LY.vocab_parallel_xent(logits, batch["targets"],
+                                         batch["valid"], cfg, dcfg)
+        return loss, aux
+
+    # -------------------------------------------------------------- serve --
+    def init_state(self, batch_local: int, dcfg: DistConfig):
+        """Recurrent state per scan step (stacked over n_steps outside)."""
+        H, dk = self.n_heads, self.dk
+        dv_l = self.d_inner // dcfg.tp_size // H
+        d = self.cfg.d_model
+        hd = d // H
+        K = self.cfg.ssm_conv
+        B = batch_local
+        one = {
+            f"m{i}": {
+                "C": jnp.zeros((B, H, dk, dv_l), jnp.float32),
+                "n": jnp.zeros((B, H, dk), jnp.float32),
+                "m": jnp.full((B, H), -1e30),
+                "conv": jnp.zeros((B, K - 1, self.d_inner),
+                                  jnp.float32),
+            } for i in range(self.per - 1)
+        }
+        one["s"] = {
+            "h": jnp.zeros((B, H, hd), jnp.float32),
+            "c": jnp.zeros((B, H, hd), jnp.float32),
+            "n": jnp.ones((B, H, hd), jnp.float32),
+            "m": jnp.zeros((B, H, hd), jnp.float32),
+        }
+        return one
+
+    def _mlstm_decode(self, p, st, x, dcfg):
+        """x: (B,1,D) replicated over model."""
+        cfg = self.cfg
+        B = x.shape[0]
+        H, dk = self.n_heads, self.dk
+        h = LY.rmsnorm(x, p["ln"], cfg.norm_eps)
+        x_in = jnp.einsum("btd,de->bte", h, p["w_x"])
+        xc, conv_state = causal_conv1d(x_in, p["conv"],
+                                       state=st["conv"].astype(x_in.dtype))
+        xc = jax.nn.silu(xc)
+        q = jnp.einsum("bte,ef->btf", xc, p["wq"]).reshape(B, H, dk)
+        k = jnp.einsum("bte,ef->btf", xc, p["wk"]).reshape(B, H, dk)
+        v = jnp.einsum("bte,ehv->bthv", x_in, p["wv"])[:, 0]  # (B,H,dv/tp)
+        gates = jnp.einsum("bte,eg->btg", xc, p["w_if"])[:, 0]
+        (C, n, m), y = mlstm_step((st["C"], st["n"], st["m"]),
+                                  q, k, v, gates[..., :H],
+                                  gates[..., H:] + 3.0)
+        z = jnp.einsum("btd,dhv->bthv", h, p["w_z"])          # (B,1,H,dv/tp)
+        y = y[:, None] * jax.nn.silu(z)
+        o = jnp.einsum("bthv,hvd->btd", y, p["w_out"])
+        o = lax.psum(o, dcfg.tp_axis)
+        st_new = {"C": C, "n": n, "m": m,
+                  "conv": conv_state.astype(jnp.float32)}
+        return x + o, st_new
+
+    def _slstm_decode(self, p, st, x, dcfg):
+        cfg = self.cfg
+        d, H = cfg.d_model, self.n_heads
+        hd = d // H
+        B = x.shape[0]
+        h = LY.rmsnorm(x, p["ln"], cfg.norm_eps)
+        g = jnp.einsum("btd,dg->btg", h, p["w_g"]).reshape(B, 1, 4, H, hd)
+        hs, state = slstm_seq(g, p["R"],
+                              state=(st["h"], st["c"], st["n"], st["m"]))
+        o = jnp.einsum("btd,de->bte",
+                       hs.reshape(B, 1, d).astype(x.dtype), p["w_out"])
+        st_new = dict(zip(("h", "c", "n", "m"), state))
+        return x + o, st_new
+
+    def decode_local(self, params_tp, state, tok, pos, dcfg: DistConfig):
+        cfg = self.cfg
+        x = LY.embed_apply(params_tp["embed"], tok[:, None], cfg, dcfg,
+                           scatter=False)
+
+        def body(xc, inputs):
+            p, st = inputs
+            st_new = dict(st)
+            for i in range(self.per - 1):
+                xc, st_new[f"m{i}"] = self._mlstm_decode(
+                    p[f"m{i}"], st[f"m{i}"], xc, dcfg)
+            xc, st_new["s"] = self._slstm_decode(p["s"], st["s"], xc, dcfg)
+            return xc, st_new
+
+        x, state = lax.scan(body, x, (params_tp["blocks"], state))
+        x = LY.rmsnorm(x, params_tp["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x, params_tp["head"],
+                            preferred_element_type=jnp.float32)
+        return logits[:, 0], state
+
+    def _mlstm_prefill(self, p, x_sp, dcfg):
+        """Like _mlstm_block but also returns the final (C, n, m) state and
+        trailing conv state."""
+        cfg = self.cfg
+        h = LY.rmsnorm(x_sp, p["ln"], cfg.norm_eps)
+        xg = LY.sp_gather(h, dcfg)
+        x_in = jnp.einsum("btd,de->bte", xg, p["w_x"])
+        xc_full, conv_state = causal_conv1d(x_in, p["conv"])
+        xc = jax.nn.silu(xc_full)
+        B, T, _ = xg.shape
+        H, dk = self.n_heads, self.dk
+        q = jnp.einsum("bte,ef->btf", xc, p["wq"]).reshape(B, T, H, dk)
+        k = jnp.einsum("bte,ef->btf", xc, p["wk"]).reshape(B, T, H, dk)
+        v = jnp.einsum("bte,ehv->bthv", x_in, p["wv"])
+        gates = jnp.einsum("bte,eg->btg", xc, p["w_if"])
+        z = jnp.einsum("btd,dhv->bthv", xg, p["w_z"])
+        y, (C, n, m) = mlstm_chunked(q, k, v, gates[..., :H],
+                                     gates[..., H:] + 3.0,
+                                     chunk=cfg.ssm_chunk)
+        y = y * jax.nn.silu(z)
+        o = jnp.einsum("bthv,hvd->btd", y, p["w_out"])
+        st = {"C": C, "n": n, "m": m,
+              "conv": x_in[:, -(cfg.ssm_conv - 1):].astype(jnp.float32)}
+        return x_sp + LY.sp_scatter(o, dcfg), st
+
+    def _slstm_prefill(self, p, x_sp, dcfg):
+        cfg = self.cfg
+        d, H = cfg.d_model, self.n_heads
+        hd = d // H
+        h = LY.rmsnorm(x_sp, p["ln"], cfg.norm_eps)
+        xg = LY.sp_gather(h, dcfg)
+        B, T, _ = xg.shape
+        g = jnp.einsum("btd,dg->btg", xg, p["w_g"]).reshape(B, T, 4, H, hd)
+        hs, state = slstm_seq(g, p["R"])
+        o = jnp.einsum("btd,de->bte", hs.reshape(B, T, d).astype(xg.dtype),
+                       p["w_out"]) / dcfg.tp_size
+        st = dict(zip(("h", "c", "n", "m"), state))
+        return x_sp + LY.sp_scatter(o, dcfg), st
+
+    def prefill_local(self, params_tp, batch, dcfg: DistConfig):
+        """Run the full-sequence forward in chunked form, returning last
+        logits + the recurrent state for decode continuation."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = LY.embed_apply(params_tp["embed"], tokens, cfg, dcfg)
+
+        def body(xc, p):
+            st = {}
+            for i in range(self.per - 1):
+                xc, st[f"m{i}"] = self._mlstm_prefill(p[f"m{i}"], xc, dcfg)
+            xc, st["s"] = self._slstm_prefill(p["s"], xc, dcfg)
+            return xc, st
+
+        x, state = lax.scan(body, x, params_tp["blocks"])
+        x = LY.rmsnorm(x, params_tp["final_norm"], cfg.norm_eps)
+        xg = LY.sp_gather(x, dcfg)[:, -1:]
+        logits = jnp.einsum("bsd,dv->bsv", xg, params_tp["head"],
+                            preferred_element_type=jnp.float32)
+        return logits[:, 0], state
+
+    # ------------------------------------------------------------ costing --
+    def block_stats(self, dcfg: DistConfig, batch_shape) -> BlockStats:
+        B, S = batch_shape          # per-device microbatch
+        tokens = B * S
+        it = jnp.dtype(dcfg.param_dtype).itemsize
+        pf, pb = {}, {}
+        from repro.core.meta import named_leaves
+        for nm, m in named_leaves(self.block_metas(dcfg)):
+            numel = m.numel_local(dcfg)
+            flops = 2.0 * tokens * numel
+            pf[nm] = flops
+            pb[nm] = numel * it
+        return BlockStats(param_flops=pf, param_bytes=pb,
+                          act_bytes=tokens * self.cfg.d_model * it / dcfg.tp_size)
+
+    def bucket_units(self) -> list[list[str]]:
+        return [[f"m{i}/*"] for i in range(self.per - 1)] + [["s/*"]]
+
+    def input_specs(self, shape: ShapeConfig, dcfg: DistConfig) -> dict:
+        B, S = shape.global_batch, shape.seq_len
+        ids = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        if shape.kind == "train":
+            return {"tokens": ids, "targets": ids,
+                    "valid": jax.ShapeDtypeStruct((B, S), jnp.float32)}
+        if shape.kind == "prefill":
+            return {"tokens": ids}
+        return {"tok": jax.ShapeDtypeStruct((B,), jnp.int32)}

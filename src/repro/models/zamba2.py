@@ -1,0 +1,571 @@
+"""Zamba2 hybrid family (zamba2-1.2b): Mamba-2 backbone + ONE weight-tied
+("shared") attention block invoked every `shared_attn_every` layers
+(arXiv:2411.15242).
+
+Structure here: 38 mamba layers = 6 superblocks of 6 (each scanned via
+core.stack, so the paper's bucketing/prefetch applies) + 2 trailing layers;
+after each superblock the shared attention block runs on concat(hidden,
+initial_embedding) (2d wide, 32 heads x 128) and projects back to d. The
+shared block's params are FSDP-gathered per invocation (6 gathers/step) and
+its gradients accumulate across invocations through ordinary autodiff.
+
+Mamba-2 TP: heads sharded over the model axis via explicit (head, dim)
+param layouts; B/C (ngroups=1) and conv are TP-replicated; per-head gated
+RMSNorm; out-proj row-parallel back into sequence-parallel layout.
+O(1)-state decode -> runs the long_500k cell.
+
+Simplifications (DESIGN.md): shared-block LoRA adapters omitted (weight-tied
+plain block); per-head RMSNorm instead of full-d_inner groupnorm.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import collectives as coll
+from repro.core.dist import DistConfig
+from repro.core.irgraph import BlockStats
+from repro.core.meta import ParamMeta
+from repro.core.remat import maybe_remat
+from repro.core.stack import apply_stack
+from repro.kernels.ssd.ref import ssd_chunked, ssd_step
+from repro.models import layers as LY
+from repro.models.common import ArchConfig, ShapeConfig
+from repro.models.xlstm import causal_conv1d
+
+
+class Zamba2LM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.d_inner = cfg.ssm_expand * cfg.d_model
+        self.hd = cfg.ssm_head_dim
+        self.nh = self.d_inner // self.hd            # mamba heads
+        self.ds = cfg.ssm_state
+        self.per = cfg.shared_attn_every or 6
+        self.n_super = cfg.n_layers // self.per      # full superblocks
+        self.n_tail = cfg.n_layers - self.n_super * self.per
+        self.n_steps = cfg.n_layers                  # logical layer count
+
+    # ------------------------------------------------------------- metas --
+    def mamba_metas(self, dcfg: DistConfig, dt=None) -> dict:
+        cfg = self.cfg
+        d, di, nh, hd, ds = (cfg.d_model, self.d_inner, self.nh, self.hd,
+                             self.ds)
+        dt = dt or dcfg.storage_dtype
+        K = cfg.ssm_conv
+        return {
+            "ln": LY.norm_meta("ln", d, dt),
+            "w_x": ParamMeta("w_x", (d, nh, hd), 1, dt),
+            "w_z": ParamMeta("w_z", (d, nh, hd), 1, dt),
+            "w_bc": ParamMeta("w_bc", (d, 2 * ds), None, dt),
+            "w_dt": ParamMeta("w_dt", (d, nh), 1, dt),
+            "dt_bias": ParamMeta("dt_bias", (nh,), 0, dt),
+            "A_log": ParamMeta("A_log", (nh,), 0, dt),
+            "Dskip": ParamMeta("Dskip", (nh,), 0, dt),
+            "conv_x": ParamMeta("conv_x", (K, nh, hd), 1, dt),
+            "conv_bc": ParamMeta("conv_bc", (K, 2 * ds), None, dt),
+            "gn": ParamMeta("gn", (nh, hd), 0, dt),
+            "w_out": ParamMeta("w_out", (nh, hd, d), 0, dt),
+        }
+
+    def shared_metas(self, dcfg: DistConfig) -> dict:
+        cfg = self.cfg
+        dt = dcfg.storage_dtype
+        d2 = 2 * cfg.d_model
+        lay = cfg.gqa_layout(dcfg.tp_size)
+        hq, kvp = lay["hq"], lay["kvp"]
+        hd = cfg.head_dim
+        kv_tp = 0 if lay["mode"] == "sharded" else None
+        return {
+            "ln1": LY.norm_meta("sh.ln1", d2, dt),
+            "wq": ParamMeta("sh.wq", (d2, hq * hd), 1, dt),
+            "wk": ParamMeta("sh.wk", (kvp * hd, d2), kv_tp, dt),
+            "wv": ParamMeta("sh.wv", (kvp * hd, d2), kv_tp, dt),
+            "wo": ParamMeta("sh.wo", (hq * hd, cfg.d_model), 0, dt),
+            "ln2": LY.norm_meta("sh.ln2", d2, dt),
+            "wg": ParamMeta("sh.wg", (d2, cfg.d_ff), 1, dt),
+            "wu": ParamMeta("sh.wu", (d2, cfg.d_ff), 1, dt),
+            "wd": ParamMeta("sh.wd", (cfg.d_ff, cfg.d_model), 0, dt),
+        }
+
+    def block_metas(self, dcfg: DistConfig) -> dict:
+        return self.mamba_metas(dcfg)
+
+    def metas(self, dcfg: DistConfig) -> dict:
+        cfg = self.cfg
+        dt = dcfg.storage_dtype
+        return {
+            "embed": LY.embed_meta("embed", cfg, dt),
+            "blocks": self.block_metas(dcfg),      # stacked over n_layers
+            "shared": self.shared_metas(dcfg),
+            "final_norm": LY.norm_meta("final_norm", cfg.d_model, dt),
+            "head": LY.head_meta("head", cfg, dt),
+        }
+
+    # -------------------------------------------------------------- init --
+    def mamba_init(self, key) -> dict:
+        cfg = self.cfg
+        d, di, nh, hd, ds = (cfg.d_model, self.d_inner, self.nh, self.hd,
+                             self.ds)
+        K = cfg.ssm_conv
+        ks = jax.random.split(key, 8)
+        sd = 0.02
+        dt_bias = jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[6], (nh,),
+                                       minval=math.log(1e-3),
+                                       maxval=math.log(1e-1)))))
+        return {
+            "ln": LY.norm_init(d),
+            "w_x": jax.random.normal(ks[0], (d, nh, hd)) * sd,
+            "w_z": jax.random.normal(ks[1], (d, nh, hd)) * sd,
+            "w_bc": jax.random.normal(ks[2], (d, 2 * ds)) * sd,
+            "w_dt": jax.random.normal(ks[3], (d, nh)) * sd,
+            "dt_bias": dt_bias,
+            "A_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+            "Dskip": jnp.ones((nh,)),
+            "conv_x": jax.random.normal(ks[4], (K, nh, hd))
+            / math.sqrt(K),
+            "conv_bc": jax.random.normal(ks[5], (K, 2 * ds))
+            / math.sqrt(K),
+            "gn": jnp.ones((nh, hd)),
+            "w_out": jax.random.normal(ks[7], (nh, hd, d))
+            * (sd / math.sqrt(2 * cfg.n_layers)),
+        }
+
+    def shared_init(self, key, dcfg) -> dict:
+        cfg = self.cfg
+        d2 = 2 * cfg.d_model
+        lay = cfg.gqa_layout(dcfg.tp_size)
+        hq, kvp = lay["hq"], lay["kvp"]
+        ks = jax.random.split(key, 7)
+        sd = 0.02
+        hd = cfg.head_dim
+        return {
+            "ln1": LY.norm_init(d2),
+            "wq": jax.random.normal(ks[0], (d2, hq * hd)) * sd,
+            "wk": jax.random.normal(ks[1], (kvp * hd, d2)) * sd,
+            "wv": jax.random.normal(ks[2], (kvp * hd, d2)) * sd,
+            "wo": jax.random.normal(ks[3], (hq * hd, cfg.d_model))
+            * sd * 0.5,
+            "ln2": LY.norm_init(d2),
+            "wg": jax.random.normal(ks[4], (d2, cfg.d_ff)) * sd,
+            "wu": jax.random.normal(ks[5], (d2, cfg.d_ff)) * sd,
+            "wd": jax.random.normal(ks[6], (cfg.d_ff, cfg.d_model))
+            * sd * 0.5,
+        }
+
+    def init_full(self, key, dcfg: DistConfig) -> dict:
+        cfg = self.cfg
+        keys = jax.random.split(key, cfg.n_layers + 3)
+        blocks = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[self.mamba_init(keys[i]) for i in range(cfg.n_layers)])
+        sh = self.shared_init(keys[-3], dcfg)
+        return {
+            "embed": LY.embed_init(keys[-1], cfg),
+            "blocks": blocks,
+            "shared": sh,
+            "final_norm": LY.norm_init(cfg.d_model),
+            "head": LY.head_init(keys[-2], cfg),
+        }
+
+    # ------------------------------------------------------------- mamba --
+    def mamba_block(self, p, consts, x_sp, dcfg: DistConfig):
+        cfg = self.cfg
+        nh_l = p["w_x"].shape[1]                  # heads local (nh/tp)
+        hd, ds = self.hd, self.ds
+        h = LY.rmsnorm(x_sp, p["ln"], cfg.norm_eps)
+        xg = LY.sp_gather(h, dcfg)
+        B, T, _ = xg.shape
+        xh = jnp.einsum("btd,dhp->bthp", xg, p["w_x"])      # (B,T,nh_l,hd)
+        z = jnp.einsum("btd,dhp->bthp", xg, p["w_z"])
+        bc = jnp.einsum("btd,dn->btn", xg, p["w_bc"])       # (B,T,2ds)
+        dt_pre = jnp.einsum("btd,dh->bth", xg, p["w_dt"])
+        # causal convs (x per-head-channel, bc replicated)
+        xh2, _ = causal_conv1d(xh.reshape(B, T, nh_l * hd),
+                               p["conv_x"].reshape(-1, nh_l * hd))
+        xh = jax.nn.silu(xh2).reshape(B, T, nh_l, hd)
+        bc2, _ = causal_conv1d(bc, p["conv_bc"])
+        bc = jax.nn.silu(bc2)
+        Bm = bc[..., :ds][:, :, None, :]                    # (B,T,1,ds)
+        Cm = bc[..., ds:][:, :, None, :]
+        dt = jax.nn.softplus(dt_pre.astype(jnp.float32)
+                             + p["dt_bias"].astype(jnp.float32))
+        A = -jnp.exp(p["A_log"].astype(jnp.float32))
+        # heads local -> groups: ngroups=1 shared across all heads
+        Bh = jnp.broadcast_to(Bm, (B, T, 1, ds))
+        y, _ = ssd_chunked(xh, dt, A, Bh, Cm, D=p["Dskip"],
+                           chunk=cfg.ssm_chunk)
+        # gated per-head RMSNorm
+        y = y * jax.nn.silu(z)
+        yf = y.astype(jnp.float32)
+        var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+        y = (yf * jax.lax.rsqrt(var + cfg.norm_eps)
+             * p["gn"][None, None].astype(jnp.float32)).astype(xg.dtype)
+        o = jnp.einsum("bthp,hpd->btd", y, p["w_out"])
+        return x_sp + LY.sp_scatter(o, dcfg)
+
+    def _mamba_stack_fn(self, p, consts, x, dcfg):
+        blk = jax.checkpoint(
+            lambda pp, xx: self.mamba_block(pp, consts, xx, dcfg))
+        return blk(p, x), {}
+
+    # ------------------------------------------------------ shared block --
+    def shared_block(self, p, x_sp, emb_sp, consts, dcfg: DistConfig):
+        """concat(hidden, embedding) -> attn -> +x ; -> mlp -> +x."""
+        cfg = self.cfg
+        u = jnp.concatenate([x_sp, emb_sp], axis=-1)        # (B,S/tp,2d)
+        h = LY.rmsnorm(u, p["ln1"], cfg.norm_eps)
+        hg = LY.sp_gather(h, dcfg)
+        fake = ArchConfig(
+            name="zshared", family="dense", n_layers=cfg.n_layers,
+            d_model=2 * cfg.d_model, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, d_ff=cfg.d_ff, vocab=cfg.vocab,
+            head_dim=cfg.head_dim, pad_to=cfg.pad_to)
+        q, k, v, head_mask = LY._local_qkv(
+            {"wq": p["wq"], "wk": p["wk"], "wv": p["wv"]}, hg, fake, dcfg)
+        cos, sin = consts["rope_cos"], consts["rope_sin"]
+        q = LY.apply_rope(q, cos, sin)
+        k = LY.apply_rope(k, cos, sin)
+        out = LY.attention(q, k, v, causal=True)
+        out = out * head_mask[None, None, :, None]
+        Bq, S, hl, hd = out.shape
+        o = jnp.einsum("bsh,hd->bsd", out.reshape(Bq, S, hl * hd), p["wo"])
+        x_sp = x_sp + LY.sp_scatter(o, dcfg)
+        u = jnp.concatenate([x_sp, emb_sp], axis=-1)
+        h = LY.rmsnorm(u, p["ln2"], cfg.norm_eps)
+        hg = LY.sp_gather(h, dcfg)
+        g = jnp.einsum("bsd,df->bsf", hg, p["wg"])
+        w = jnp.einsum("bsd,df->bsf", hg, p["wu"])
+        o = jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * w, p["wd"])
+        return x_sp + LY.sp_scatter(o, dcfg)
+
+    # ------------------------------------------------------------- train --
+    def loss_local(self, storage, batch, dcfg: DistConfig):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        emb_meta = LY.embed_meta("embed", cfg, dcfg.storage_dtype)
+
+        def embed_fn(shard, ids):
+            table = coll.replicate(shard, emb_meta, dcfg)
+            return LY.embed_apply(table, ids, cfg, dcfg)
+
+        x = maybe_remat(embed_fn, "fsdp_only")(storage["embed"], tokens)
+        emb0 = x
+        cos, sin = LY.rope_cache(tokens.shape[1], cfg.head_dim,
+                                 cfg.rope_theta)
+        consts = {"rope_cos": cos, "rope_sin": sin}
+        blk = functools.partial(self._mamba_stack_fn, dcfg=dcfg)
+        bmetas = self.block_metas(dcfg)
+        sh_metas = self.shared_metas(dcfg)
+
+        def shared_fn(sh_storage, xc, embc):
+            sh = coll.replicate_tree(sh_storage, sh_metas, dcfg)
+            return self.shared_block(sh, xc, embc, consts, dcfg)
+
+        # 'full' remat: the shared block touches gathered full-seq
+        # activations (concat 2d wide); saving its internals per invocation
+        # costs ~2-3 GiB x n_super — recompute instead.
+        shared_fn = maybe_remat(shared_fn, "full"
+                                if dcfg.remat != "none" else "none")
+
+        pos = 0
+        for _ in range(self.n_super):
+            seg = jax.tree.map(lambda s: s[pos:pos + self.per],
+                               storage["blocks"])
+            x, _ = apply_stack(blk, bmetas, dcfg, seg, consts, x)
+            x = shared_fn(storage["shared"], x, emb0)
+            pos += self.per
+        if self.n_tail:
+            seg = jax.tree.map(lambda s: s[pos:pos + self.n_tail],
+                               storage["blocks"])
+            x, _ = apply_stack(blk, bmetas, dcfg, seg, consts, x)
+
+        fn_meta = LY.norm_meta("final_norm", cfg.d_model, dcfg.storage_dtype)
+        w_fn = coll.replicate(storage["final_norm"], fn_meta, dcfg)
+        x = LY.rmsnorm(x, w_fn, cfg.norm_eps)
+        hd_meta = LY.head_meta("head", cfg, dcfg.storage_dtype)
+        w = coll.replicate(storage["head"], hd_meta, dcfg)
+        logits = LY.head_logits(w, LY.sp_gather(x, dcfg), cfg, dcfg)
+        loss, _ = LY.vocab_parallel_xent(logits, batch["targets"],
+                                         batch["valid"], cfg, dcfg)
+        return loss, {}
+
+    # ------------------------------------------------------------- serve --
+    def init_state(self, batch_local: int, dcfg: DistConfig,
+                   seq_len: int = 0):
+        cfg = self.cfg
+        nh_l = self.nh // dcfg.tp_size if self.nh % dcfg.tp_size == 0 \
+            else self.nh
+        K = cfg.ssm_conv
+        B = batch_local
+        tp = dcfg.tp_size
+        lay = cfg.gqa_layout(tp)
+        kl = lay["kvp"] // tp if lay["mode"] == "sharded" \
+            else max(1, lay["kvp"] // tp)
+        kv = tuple(
+            (jnp.zeros((B, seq_len, kl, cfg.head_dim), dcfg.param_dtype),
+             jnp.zeros((B, seq_len, kl, cfg.head_dim), dcfg.param_dtype))
+            for _ in range(self.n_super)
+        )
+        return {
+            "S": jnp.zeros((cfg.n_layers, B, nh_l, self.hd, self.ds),
+                           jnp.float32),
+            "conv_x": jnp.zeros((cfg.n_layers, B, K - 1, nh_l * self.hd),
+                                jnp.float32),
+            "conv_bc": jnp.zeros((cfg.n_layers, B, K - 1, 2 * self.ds),
+                                 jnp.float32),
+            "sh_kv": kv,
+        }
+
+    def _mamba_prefill(self, p, consts, x_sp, dcfg):
+        """mamba_block variant returning the final SSD + conv states."""
+        cfg = self.cfg
+        nh_l = p["w_x"].shape[1]
+        hd, ds = self.hd, self.ds
+        h = LY.rmsnorm(x_sp, p["ln"], cfg.norm_eps)
+        xg = LY.sp_gather(h, dcfg)
+        B, T, _ = xg.shape
+        xh = jnp.einsum("btd,dhp->bthp", xg, p["w_x"])
+        z = jnp.einsum("btd,dhp->bthp", xg, p["w_z"])
+        bc = jnp.einsum("btd,dn->btn", xg, p["w_bc"])
+        dt_pre = jnp.einsum("btd,dh->bth", xg, p["w_dt"])
+        xh_flat = xh.reshape(B, T, nh_l * hd)
+        xh2, _ = causal_conv1d(xh_flat, p["conv_x"].reshape(-1, nh_l * hd))
+        xh_c = jax.nn.silu(xh2).reshape(B, T, nh_l, hd)
+        bc2, _ = causal_conv1d(bc, p["conv_bc"])
+        bc_c = jax.nn.silu(bc2)
+        Bm = bc_c[..., :ds][:, :, None, :]
+        Cm = bc_c[..., ds:][:, :, None, :]
+        dt = jax.nn.softplus(dt_pre.astype(jnp.float32)
+                             + p["dt_bias"].astype(jnp.float32))
+        A = -jnp.exp(p["A_log"].astype(jnp.float32))
+        y, S = ssd_chunked(xh_c, dt, A, Bm, Cm, D=p["Dskip"],
+                           chunk=cfg.ssm_chunk)
+        y = y * jax.nn.silu(z)
+        yf = y.astype(jnp.float32)
+        var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+        y = (yf * jax.lax.rsqrt(var + cfg.norm_eps)
+             * p["gn"][None, None].astype(jnp.float32)).astype(xg.dtype)
+        o = jnp.einsum("bthp,hpd->btd", y, p["w_out"])
+        K = cfg.ssm_conv
+        st = {"S": S,
+              "conv_x": xh_flat[:, -(K - 1):].astype(jnp.float32),
+              "conv_bc": bc[:, -(K - 1):].astype(jnp.float32)}
+        return x_sp + LY.sp_scatter(o, dcfg), st
+
+    def _shared_prefill(self, p, x_sp, emb_sp, consts, dcfg):
+        """shared_block variant emitting its kv cache (full-seq)."""
+        cfg = self.cfg
+        u = jnp.concatenate([x_sp, emb_sp], axis=-1)
+        h = LY.rmsnorm(u, p["ln1"], cfg.norm_eps)
+        hg = LY.sp_gather(h, dcfg)
+        fake = ArchConfig(
+            name="zshared", family="dense", n_layers=cfg.n_layers,
+            d_model=2 * cfg.d_model, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, d_ff=cfg.d_ff, vocab=cfg.vocab,
+            head_dim=cfg.head_dim, pad_to=cfg.pad_to)
+        q, k, v, head_mask = LY._local_qkv(
+            {"wq": p["wq"], "wk": p["wk"], "wv": p["wv"]}, hg, fake, dcfg)
+        cos, sin = consts["rope_cos"], consts["rope_sin"]
+        q2 = LY.apply_rope(q, cos, sin)
+        k2 = LY.apply_rope(k, cos, sin)
+        out = LY.attention(q2, k2, v, causal=True)
+        out = out * head_mask[None, None, :, None]
+        Bq, S, hl, hd = out.shape
+        o = jnp.einsum("bsh,hd->bsd", out.reshape(Bq, S, hl * hd), p["wo"])
+        x_sp = x_sp + LY.sp_scatter(o, dcfg)
+        u = jnp.concatenate([x_sp, emb_sp], axis=-1)
+        h = LY.rmsnorm(u, p["ln2"], cfg.norm_eps)
+        hg = LY.sp_gather(h, dcfg)
+        g = jnp.einsum("bsd,df->bsf", hg, p["wg"])
+        w = jnp.einsum("bsd,df->bsf", hg, p["wu"])
+        o = jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * w, p["wd"])
+        kv_dt = dcfg.param_dtype
+        return x_sp + LY.sp_scatter(o, dcfg), (k2.astype(kv_dt),
+                                               v.astype(kv_dt))
+
+    def prefill_local(self, params_tp, batch, dcfg: DistConfig):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = LY.embed_apply(params_tp["embed"], tokens, cfg, dcfg)
+        emb0 = x
+        cos, sin = LY.rope_cache(tokens.shape[1], cfg.head_dim,
+                                 cfg.rope_theta)
+        consts = {"rope_cos": cos, "rope_sin": sin}
+
+        def seg_body(xc, p):
+            y, st = self._mamba_prefill(p, consts, xc, dcfg)
+            return y, st
+
+        sts, kvs = [], []
+        pos = 0
+        for si in range(self.n_super):
+            seg = jax.tree.map(lambda a: a[pos:pos + self.per],
+                               params_tp["blocks"])
+            x, st = lax.scan(seg_body, x, seg)
+            sts.append(st)
+            x, kv = self._shared_prefill(params_tp["shared"], x, emb0,
+                                         consts, dcfg)
+            kvs.append(kv)
+            pos += self.per
+        if self.n_tail:
+            seg = jax.tree.map(lambda a: a[pos:pos + self.n_tail],
+                               params_tp["blocks"])
+            x, st = lax.scan(seg_body, x, seg)
+            sts.append(st)
+        state = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *sts)
+        state["sh_kv"] = tuple(kvs)
+        x = LY.rmsnorm(x, params_tp["final_norm"], cfg.norm_eps)
+        xg = LY.sp_gather(x, dcfg)[:, -1:]
+        logits = jnp.einsum("bsd,dv->bsv", xg, params_tp["head"],
+                            preferred_element_type=jnp.float32)
+        return logits[:, 0], state
+
+    def mamba_decode(self, p, st, x, dcfg: DistConfig):
+        cfg = self.cfg
+        B = x.shape[0]
+        nh_l, hd, ds = p["w_x"].shape[1], self.hd, self.ds
+        h = LY.rmsnorm(x, p["ln"], cfg.norm_eps)
+        xh = jnp.einsum("btd,dhp->bthp", h, p["w_x"])
+        z = jnp.einsum("btd,dhp->bthp", h, p["w_z"])
+        bc = jnp.einsum("btd,dn->btn", h, p["w_bc"])
+        dt_pre = jnp.einsum("btd,dh->bth", h, p["w_dt"])
+        xh2, cx = causal_conv1d(xh.reshape(B, 1, nh_l * hd),
+                                p["conv_x"].reshape(-1, nh_l * hd),
+                                state=st["conv_x"].astype(xh.dtype))
+        xh = jax.nn.silu(xh2).reshape(B, nh_l, hd)
+        bc2, cbc = causal_conv1d(bc, p["conv_bc"],
+                                 state=st["conv_bc"].astype(bc.dtype))
+        bc = jax.nn.silu(bc2)[:, 0]
+        dt = jax.nn.softplus(dt_pre[:, 0].astype(jnp.float32)
+                             + p["dt_bias"].astype(jnp.float32))
+        A = -jnp.exp(p["A_log"].astype(jnp.float32))
+        S, y = ssd_step(st["S"], xh, dt, A, bc[:, None, :ds],
+                        bc[:, None, ds:], D=p["Dskip"])
+        y = y[:, None] * jax.nn.silu(z)
+        yf = y.astype(jnp.float32)
+        var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+        y = (yf * jax.lax.rsqrt(var + cfg.norm_eps)
+             * p["gn"][None, None].astype(jnp.float32)).astype(x.dtype)
+        o = jnp.einsum("bthp,hpd->btd", y, p["w_out"])
+        o = lax.psum(o, dcfg.tp_axis)
+        return x + o, {"S": S, "conv_x": cx.astype(jnp.float32),
+                       "conv_bc": cbc.astype(jnp.float32)}
+
+    def decode_local(self, params_tp, state, tok, pos, dcfg: DistConfig):
+        """Shared attention during decode attends over its own KV cache held
+        in `state['sh_kv']` (B, T, Kl, hd) per invocation point."""
+        cfg = self.cfg
+        x = LY.embed_apply(params_tp["embed"], tok[:, None], cfg, dcfg,
+                           scatter=False)
+        emb0 = x
+        cos, sin = LY.rope_cache(1, cfg.head_dim, cfg.rope_theta,
+                                 positions=pos[None])
+        new_state = dict(state)
+        # scan over mamba layers in python segments mirroring training
+        S, cx, cbc = state["S"], state["conv_x"], state["conv_bc"]
+        outs_S, outs_cx, outs_cbc = [], [], []
+        li = 0
+        for seg_idx in range(self.n_super + (1 if self.n_tail else 0)):
+            n = self.per if seg_idx < self.n_super else self.n_tail
+            for j in range(n):
+                p = jax.tree.map(lambda a: a[li], params_tp["blocks"])
+                st = {"S": S[li], "conv_x": cx[li], "conv_bc": cbc[li]}
+                x, st2 = self.mamba_decode(p, st, x, dcfg)
+                outs_S.append(st2["S"])
+                outs_cx.append(st2["conv_x"])
+                outs_cbc.append(st2["conv_bc"])
+                li += 1
+            if seg_idx < self.n_super:
+                x, new_state = self._shared_decode(
+                    params_tp["shared"], new_state, seg_idx, x, emb0, pos,
+                    cos, sin, dcfg)
+        new_state["S"] = jnp.stack(outs_S)
+        new_state["conv_x"] = jnp.stack(outs_cx)
+        new_state["conv_bc"] = jnp.stack(outs_cbc)
+        x = LY.rmsnorm(x, params_tp["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x, params_tp["head"],
+                            preferred_element_type=jnp.float32)
+        return logits[:, 0], new_state
+
+    def _shared_decode(self, p, state, idx, x, emb0, pos, cos, sin, dcfg):
+        cfg = self.cfg
+        u = jnp.concatenate([x, emb0], axis=-1)
+        h = LY.rmsnorm(u, p["ln1"], cfg.norm_eps)
+        fake = ArchConfig(
+            name="zshared", family="dense", n_layers=cfg.n_layers,
+            d_model=2 * cfg.d_model, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, d_ff=cfg.d_ff, vocab=cfg.vocab,
+            head_dim=cfg.head_dim, pad_to=cfg.pad_to)
+        q, k, v, head_mask = LY._local_qkv(
+            {"wq": p["wq"], "wk": p["wk"], "wv": p["wv"]}, h, fake, dcfg)
+        q = LY.apply_rope(q, cos, sin)
+        k = LY.apply_rope(k, cos, sin)
+        ck, cv = state["sh_kv"][idx]
+        ck = lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), pos, 1)
+        cv = lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), pos, 1)
+        kl = ck.shape[2]
+        hl = q.shape[2]
+        group = hl // kl
+        qg = q.reshape(q.shape[0], 1, kl, group, cfg.head_dim)
+        s = jnp.einsum("bqkgh,btkh->bkgqt",
+                       qg / math.sqrt(cfg.head_dim), ck,
+                       preferred_element_type=jnp.float32)
+        msk = jnp.arange(ck.shape[1]) <= pos
+        s = jnp.where(msk[None, None, None, None, :], s, -1e30)
+        pr = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bkgqt,btkh->bqkgh", pr.astype(cv.dtype), cv)
+        out = out.reshape(q.shape[0], 1, hl, cfg.head_dim)
+        out = out * head_mask[None, None, :, None]
+        o = jnp.einsum("bsh,hd->bsd",
+                       out.reshape(q.shape[0], 1, hl * cfg.head_dim),
+                       p["wo"])
+        o = lax.psum(o, dcfg.tp_axis)
+        x = x + o
+        u = jnp.concatenate([x, emb0], axis=-1)
+        h = LY.rmsnorm(u, p["ln2"], cfg.norm_eps)
+        g = jnp.einsum("bsd,df->bsf", h, p["wg"])
+        w = jnp.einsum("bsd,df->bsf", h, p["wu"])
+        o = jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * w, p["wd"])
+        o = lax.psum(o, dcfg.tp_axis)
+        x = x + o
+        kvs = list(state["sh_kv"])
+        kvs[idx] = (ck, cv)
+        state = dict(state)
+        state["sh_kv"] = tuple(kvs)
+        return x, state
+
+    # ----------------------------------------------------------- costing --
+    def block_stats(self, dcfg: DistConfig, batch_shape) -> BlockStats:
+        B, S = batch_shape          # per-device microbatch
+        tokens = B * S
+        it = jnp.dtype(dcfg.param_dtype).itemsize
+        pf, pb = {}, {}
+        from repro.core.meta import named_leaves
+        for nm, m in named_leaves(self.block_metas(dcfg)):
+            numel = m.numel_local(dcfg)
+            pf[nm] = 2.0 * tokens * numel
+            pb[nm] = numel * it
+        return BlockStats(param_flops=pf, param_bytes=pb,
+                          act_bytes=tokens * self.cfg.d_model * it / dcfg.tp_size)
+
+    def bucket_units(self) -> list[list[str]]:
+        return [["w_x", "w_z", "conv_*", "ln"],
+                ["w_bc", "w_dt", "dt_bias", "A_log", "Dskip", "gn",
+                 "w_out"]]
+
+    def input_specs(self, shape: ShapeConfig, dcfg: DistConfig) -> dict:
+        B, S = shape.global_batch, shape.seq_len
+        ids = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        if shape.kind == "train":
+            return {"tokens": ids, "targets": ids,
+                    "valid": jax.ShapeDtypeStruct((B, S), jnp.float32)}
+        if shape.kind == "prefill":
+            return {"tokens": ids}
+        return {"tok": jax.ShapeDtypeStruct((B,), jnp.int32)}

@@ -1,0 +1,97 @@
+"""ZeRO-sharded AdamW.
+
+Because parameters live as flat local shards (core/meta.py), the optimizer is
+trivially ZeRO-3: moments are allocated per-shard and the update is purely
+elementwise on local data — no optimizer-state collectives, ever. Global-norm
+clipping needs one scalar psum per vma class (TP-sharded leaves are summed
+over the model axis; TP-replicated leaves are counted once).
+
+The elementwise update dispatches to the fused Pallas kernel on TPU
+(kernels/adamw) and to the jnp reference elsewhere.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.dist import DistConfig
+from repro.core.meta import ParamMeta
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def init_opt_state(storage_tree):
+    zeros = lambda p: jnp.zeros_like(p)
+    return {
+        "m": jax.tree.map(zeros, storage_tree),
+        "v": jax.tree.map(zeros, storage_tree),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _leaf_metas(metas_tree):
+    return jax.tree_util.tree_flatten(
+        metas_tree, is_leaf=lambda x: isinstance(x, ParamMeta))[0]
+
+
+def global_grad_norm(grads_tree, metas_tree, cfg: DistConfig):
+    """sqrt(sum of squares over every distinct gradient element)."""
+    leaves = jax.tree.leaves(grads_tree)
+    metas = []
+    for k in sorted(grads_tree):   # match jax dict-key flatten order
+        metas.extend(_leaf_metas(metas_tree[k]))
+    tp_sq = jnp.zeros((), jnp.float32)
+    rep_sq = jnp.zeros((), jnp.float32)
+    for g, m in zip(leaves, metas):
+        s = jnp.sum(g.astype(jnp.float32) ** 2)
+        if m.tp_dim is not None:
+            tp_sq = tp_sq + s
+        else:
+            rep_sq = rep_sq + s
+    # shards are distinct across fsdp axes -> always psum there;
+    # tp-sharded leaves are also distinct across the model axis.
+    total = lax.psum(rep_sq, cfg.fsdp_axes) \
+        + lax.psum(tp_sq, (*cfg.fsdp_axes, cfg.tp_axis))
+    return jnp.sqrt(total)
+
+
+def _update_leaf(p, g, m, v, lr, ocfg: AdamWConfig, t):
+    from repro.kernels.adamw import ops as adamw_ops
+    return adamw_ops.adamw_update(p, g, m, v, lr=lr, b1=ocfg.b1, b2=ocfg.b2,
+                                  eps=ocfg.eps, wd=ocfg.weight_decay, t=t)
+
+
+def apply_adamw(storage, grads, opt_state, metas_tree, cfg: DistConfig,
+                ocfg: AdamWConfig, lr):
+    """One AdamW step on the sharded storage. Returns (params, opt_state,
+    grad_norm)."""
+    t = opt_state["step"] + 1
+    gnorm = global_grad_norm(grads, metas_tree, cfg)
+    scale = jnp.minimum(1.0, ocfg.grad_clip / jnp.maximum(gnorm, 1e-12)) \
+        if ocfg.grad_clip else 1.0
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        return _update_leaf(p, g, m, v, lr, ocfg, t)
+
+    out = jax.tree.map(upd, storage, grads, opt_state["m"], opt_state["v"])
+    new_p = jax.tree.map(lambda o: o[0], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, {"m": new_m, "v": new_v, "step": t}, gnorm

@@ -1,0 +1,16 @@
+"""LR schedules (warmup + cosine, the TorchTitan default used by the paper's
+evals)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak_lr: float, warmup: int, total: int,
+                  floor_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * jnp.minimum(1.0, step / jnp.maximum(warmup, 1))
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+    cos = peak_lr * (floor_frac + (1 - floor_frac)
+                     * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup, warm, cos)

@@ -1,0 +1,100 @@
+"""Training step assembly: SimpleFSDP forward/backward + gradient
+accumulation (microbatches) + clipping + AdamW + LR schedule, all inside one
+shard_map'd jit — the "full computation-communication graph" the paper traces.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax, shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core.dist import DistConfig, make_mesh
+from repro.models import runtime as RT
+from repro.optim.adamw import AdamWConfig, apply_adamw, init_opt_state
+from repro.optim.schedule import warmup_cosine
+
+
+def make_train_step(model, dcfg: DistConfig, ocfg: AdamWConfig,
+                    schedule: Callable | None = None):
+    """Returns step_local(storage, opt_state, batch) -> (storage, opt_state,
+    metrics); run it inside shard_map via `wrap_train_step`."""
+    metas = model.metas(dcfg)
+    sched = schedule or (lambda t: ocfg.lr)
+
+    def loss_of(storage, mb):
+        return model.loss_local(storage, mb, dcfg)[0]
+
+    def step_local(storage, opt_state, batch):
+        k = dcfg.microbatches
+        if k > 1:
+            split = jax.tree.map(
+                lambda x: x.reshape(k, x.shape[0] // k, *x.shape[1:]), batch)
+            mb0 = jax.tree.map(lambda x: x[0], split)
+            # peel microbatch 0 so the accumulator carry has real vma types
+            loss, grads = jax.value_and_grad(loss_of)(storage, mb0)
+
+            def body(carry, mb):
+                acc_l, acc_g = carry
+                l, g = jax.value_and_grad(loss_of)(storage, mb)
+                return (acc_l + l, jax.tree.map(jnp.add, acc_g, g)), None
+
+            rest = jax.tree.map(lambda x: x[1:], split)
+            (loss, grads), _ = lax.scan(body, (loss, grads), rest)
+            inv = 1.0 / k
+            loss = loss * inv
+            grads = jax.tree.map(lambda g: g * inv, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_of)(storage, batch)
+
+        lr = sched(opt_state["step"])
+        new_p, new_opt, gnorm = apply_adamw(storage, grads, opt_state,
+                                            metas, dcfg, ocfg, lr)
+        metrics = {
+            "loss": lax.pmean(loss, dcfg.mesh_axes) * dcfg.tp_size,
+            "grad_norm": gnorm,
+            "lr": jnp.asarray(lr, jnp.float32),
+        }
+        return new_p, new_opt, metrics
+
+    return step_local
+
+
+def wrap_train_step(model, dcfg: DistConfig, shape, ocfg: AdamWConfig,
+                    schedule=None, mesh=None, donate: bool = True):
+    """jit(shard_map(train_step)) with the full in/out sharding specs."""
+    mesh = mesh or make_mesh(dcfg)
+    step_local = make_train_step(model, dcfg, ocfg, schedule)
+    pspecs = RT.model_storage_specs(model, dcfg)
+    opt_specs = {"m": pspecs, "v": pspecs, "step": P()}
+    in_specs = (pspecs, opt_specs, RT.batch_specs(model, shape, dcfg))
+    out_specs = (pspecs, opt_specs,
+                 {"loss": P(), "grad_norm": P(), "lr": P()})
+    fn = shard_map(step_local, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs)
+    return jax.jit(fn, donate_argnums=(0, 1) if donate else ()), mesh
+
+
+def make_eval_step(model, dcfg: DistConfig, shape, mesh=None):
+    mesh = mesh or make_mesh(dcfg)
+    step = RT.make_loss_step(model, dcfg, with_grads=False)
+    pspecs = RT.model_storage_specs(model, dcfg)
+    fn = shard_map(step, mesh=mesh,
+                   in_specs=(pspecs, RT.batch_specs(model, shape, dcfg)),
+                   out_specs=P())
+    return jax.jit(fn), mesh
+
+
+def default_schedule(ocfg: AdamWConfig, total_steps: int, warmup: int = 100):
+    return functools.partial(warmup_cosine, peak_lr=ocfg.lr, warmup=warmup,
+                             total=total_steps)
+
+
+def init_train_state(model, dcfg: DistConfig, key=None):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    storage = RT.init_storage(model, key, dcfg)
+    return storage, init_opt_state(storage)

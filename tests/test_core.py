@@ -1,0 +1,201 @@
+"""Unit + property tests for the SimpleFSDP core (single device)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hw
+from repro.core.autowrap import auto_plan, exposed_comm_time, greedy_buckets
+from repro.core.bucketing import (BucketPlan, manual_plan, per_param_plan,
+                                  whole_block_plan)
+from repro.core.dist import DistConfig, single_device_config
+from repro.core.irgraph import BlockStats, CommNode, build_nodes
+from repro.core.meta import ParamMeta, from_storage, to_storage
+from repro.optim.schedule import warmup_cosine
+
+CFG2D = DistConfig(mesh_axes=("data", "model"), mesh_shape=(4, 2))
+
+
+# ---------------------------------------------------------------------------
+# ParamMeta storage layout
+# ---------------------------------------------------------------------------
+@hypothesis.given(
+    shape=st.lists(st.integers(1, 12), min_size=1, max_size=3),
+    tp_choice=st.integers(0, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+@hypothesis.settings(max_examples=40, deadline=None)
+def test_storage_roundtrip_property(shape, tp_choice, seed):
+    """to_storage / from_storage are exact inverses for any shape and any
+    (valid) TP dim — the paper's DTensor Shard(0) analogue is lossless."""
+    shape = tuple(shape)
+    tp = CFG2D.tp_size
+    tp_dim = None
+    if tp_choice < len(shape) and shape[tp_choice] % tp == 0:
+        tp_dim = tp_choice
+    m = ParamMeta("p", shape, tp_dim=tp_dim)
+    x = jax.random.normal(jax.random.PRNGKey(seed), shape)
+    rt = from_storage(to_storage(x, m, CFG2D), m, CFG2D)
+    np.testing.assert_array_equal(np.asarray(rt), np.asarray(x))
+
+
+def test_storage_shapes_lane_aligned():
+    m = ParamMeta("p", (7, 13))
+    assert m.padded_len(CFG2D) % (CFG2D.fsdp_size * 128) == 0
+    assert m.chunk_len(CFG2D) % 128 == 0
+
+
+def test_storage_spec_layout():
+    m_tp = ParamMeta("w", (8, 16), tp_dim=1)
+    m_rep = ParamMeta("s", (8,), tp_dim=None)
+    assert m_tp.storage_shape(CFG2D)[0] == CFG2D.tp_size
+    assert len(m_rep.storage_shape(CFG2D)) == 1
+
+
+# ---------------------------------------------------------------------------
+# Bucket plans
+# ---------------------------------------------------------------------------
+def _metas():
+    return {
+        "attn": {"wq": ParamMeta("attn.wq", (8, 8), 1),
+                 "wo": ParamMeta("attn.wo", (8, 8), 0)},
+        "mlp": {"wu": ParamMeta("mlp.wu", (8, 16), 1)},
+        "ln": ParamMeta("ln", (8,)),
+    }
+
+
+def test_manual_plan_globs():
+    plan = manual_plan(_metas(), [["attn/*"], ["mlp/*", "ln"]])
+    assert plan.groups == (("attn/wo", "attn/wq"), ("ln", "mlp/wu"))
+
+
+def test_plan_covers_all_params():
+    metas = _metas()
+    plan = manual_plan(metas, [["attn/*"]])
+    idx_groups = plan.index_groups(metas)
+    covered = sorted(i for g in idx_groups for i in g)
+    assert covered == list(range(4))  # unplanned params auto-appended
+
+
+def test_whole_block_single_bucket():
+    assert whole_block_plan(_metas()).n_buckets == 1
+    assert per_param_plan(_metas()).n_buckets == 4
+
+
+# ---------------------------------------------------------------------------
+# Auto-wrapping (paper Algorithm 1)
+# ---------------------------------------------------------------------------
+def _nodes(n, flops=1e9, nbytes=1 << 20):
+    return [CommNode(f"p{i}", ag_bytes=nbytes, rs_bytes=2 * nbytes,
+                     comp_flops=flops, comp_bytes=nbytes,
+                     mem_bytes=nbytes) for i in range(n)]
+
+
+def test_greedy_merges_when_compute_hides_comm():
+    # huge compute per node -> everything after the first node can merge
+    buckets = greedy_buckets(_nodes(8, flops=1e12), CFG2D)
+    assert len(buckets) <= 2
+
+
+def test_greedy_splits_when_comm_dominates():
+    # compute ~0 -> nothing can hide; every node its own bucket
+    buckets = greedy_buckets(_nodes(8, flops=1.0), CFG2D)
+    assert len(buckets) == 8
+
+
+@hypothesis.given(
+    n=st.integers(1, 24),
+    flops=st.floats(1e3, 1e13),
+    nbytes=st.integers(1 << 10, 1 << 24),
+    mem_limit=st.floats(1e4, 1e10),
+)
+@hypothesis.settings(max_examples=40, deadline=None)
+def test_greedy_invariants(n, flops, nbytes, mem_limit):
+    """Partition invariants: order-preserving, complete, memory-capped."""
+    nodes = _nodes(n, flops=flops, nbytes=nbytes)
+    buckets = greedy_buckets(nodes, CFG2D, mem_limit=mem_limit)
+    flat = [nd.name for b in buckets for nd in b]
+    assert flat == [nd.name for nd in nodes]          # order + completeness
+    for b in buckets[1:]:                             # memory constraint
+        if len(b) > 1:
+            assert sum(nd.mem_bytes for nd in b) \
+                <= mem_limit + nodes[0].mem_bytes
+
+
+def test_exposed_time_decreases_with_compute():
+    metas = _metas()
+    stats_slow = BlockStats({k: 1e6 for k, _ in _flat(metas)},
+                            {k: 1.0 for k, _ in _flat(metas)})
+    stats_fast = BlockStats({k: 1e13 for k, _ in _flat(metas)},
+                            {k: 1.0 for k, _ in _flat(metas)})
+    plan = whole_block_plan(metas)
+    slow = exposed_comm_time(plan, metas, CFG2D, stats_slow)
+    fast = exposed_comm_time(plan, metas, CFG2D, stats_fast)
+    assert fast["exposed_s"] <= slow["exposed_s"] + 1e-12
+
+
+def _flat(tree):
+    from repro.core.meta import named_leaves
+    return named_leaves(tree)
+
+
+# ---------------------------------------------------------------------------
+# Comm model (alpha + beta n)
+# ---------------------------------------------------------------------------
+def test_collective_time_monotone_in_bytes():
+    sizes = {"data": 16, "model": 16}
+    t1 = hw.collective_time_s(1 << 20, sizes, ("data",))
+    t2 = hw.collective_time_s(1 << 24, sizes, ("data",))
+    assert t2 > t1
+
+
+def test_bucketing_amortizes_alpha():
+    """One bucketed collective of N bytes beats N separate 1-byte-ish ones
+    — the paper's base-latency argument (SS3.2.1)."""
+    sizes = {"data": 16, "model": 16}
+    many = sum(hw.collective_time_s(1 << 12, sizes, ("data",))
+               for _ in range(64))
+    one = hw.collective_time_s(64 << 12, sizes, ("data",))
+    assert one < many
+
+
+def test_dcn_slower_than_ici():
+    assert hw.axis_bandwidth("pod").bytes_per_s \
+        < hw.axis_bandwidth("data").bytes_per_s
+
+
+# ---------------------------------------------------------------------------
+# Schedule
+# ---------------------------------------------------------------------------
+def test_warmup_cosine_shape():
+    lr = [float(warmup_cosine(s, peak_lr=1.0, warmup=10, total=100))
+          for s in range(100)]
+    assert lr[0] < lr[9] <= 1.0
+    assert abs(lr[10] - 1.0) < 0.01
+    assert lr[99] < lr[50] < lr[11]
+
+
+# ---------------------------------------------------------------------------
+# GQA layout (mesh-independent padding)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", [
+    "deepseek_coder_33b", "phi3_medium_14b", "gemma2_27b", "qwen3_1_7b",
+    "qwen2_moe_a2_7b", "qwen3_moe_30b_a3b", "seamless_m4t_large_v2",
+    "zamba2_1_2b", "internvl2_26b",
+])
+def test_gqa_layout_consistency(arch):
+    from repro.models.registry import get_arch
+    cfg, _ = get_arch(arch)
+    layouts = [cfg.gqa_layout(tp) for tp in (1, 2, 4, 8, 16)]
+    # global shapes identical across meshes
+    assert len({(l["hq"], l["kvp"], l["g"]) for l in layouts}) == 1
+    lay = layouts[0]
+    assert lay["hq"] >= cfg.n_heads
+    assert lay["kvp"] >= cfg.n_kv_heads
+    for tp in (1, 2, 4, 8, 16):
+        hl = lay["hq"] // tp
+        kl = max(1, lay["kvp"] // tp)
+        assert hl % kl == 0          # per-rank GQA grouping stays integral

@@ -1,0 +1,137 @@
+"""Integration: end-to-end training, checkpoint/restart (bit-exact), failure
+recovery, straggler monitor, data determinism."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.core import DistConfig
+from repro.core.meta import named_leaves
+from repro.data.pipeline import DataConfig, Prefetcher, SyntheticC4
+from repro.ft.failures import InjectedFailures, StragglerMonitor
+from repro.models.common import ShapeConfig
+from repro.models.registry import get_arch
+from repro.optim.adamw import AdamWConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+DCFG = DistConfig(mesh_axes=("data", "model"), mesh_shape=(1, 1),
+                  param_dtype=jnp.float32, reduce_dtype=jnp.float32)
+SHAPE = ShapeConfig("t", 32, 4, "train")
+
+
+def _trainer(tmp, total=6, fails=(), **kw):
+    cfg, model = get_arch("qwen3_1_7b", smoke=True)
+    tcfg = TrainerConfig(total_steps=total, ckpt_every=2, log_every=1,
+                         warmup=2, ckpt_dir=str(tmp), **kw)
+    return Trainer(model, DCFG, SHAPE, AdamWConfig(lr=1e-3), tcfg,
+                   failure_source=InjectedFailures(fail_at_steps=fails))
+
+
+def test_loss_decreases(tmp_path):
+    tr = _trainer(tmp_path / "a", total=8)
+    _, _, hist = tr.run()
+    losses = [h["loss"] for h in hist]
+    assert losses[-1] < losses[0]
+
+
+def test_checkpoint_restart_bit_exact(tmp_path):
+    """Train 6 straight vs train 4 + restart from ckpt at 4 + train 2 —
+    identical final parameters (the FT restart path)."""
+    tr_a = _trainer(tmp_path / "a", total=6)
+    storage_a, _, _ = tr_a.run()
+
+    tr_b = _trainer(tmp_path / "b", total=6, stop_after=4)
+    tr_b.run()
+    tr_b2 = _trainer(tmp_path / "b", total=6)   # resumes from step 4
+    storage_b, _, _ = tr_b2.run()
+
+    for (ka, a), (kb, b) in zip(named_leaves(storage_a),
+                                named_leaves(storage_b)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"{ka} diverged after restart")
+
+
+def test_failure_injection_recovers(tmp_path):
+    """A failure mid-run triggers restore-from-checkpoint and the job still
+    reaches total_steps with the same result as an uninterrupted run."""
+    tr_ref = _trainer(tmp_path / "ref", total=6)
+    storage_ref, _, _ = tr_ref.run()
+
+    tr = _trainer(tmp_path / "f", total=6, fails=(5,))
+    storage, _, _ = tr.run()
+    assert tr.restarts == 1
+    for (ka, a), (_, b) in zip(named_leaves(storage),
+                               named_leaves(storage_ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"{ka} diverged after failure")
+
+
+def test_async_checkpoint(tmp_path):
+    tr = _trainer(tmp_path / "a", total=4, async_ckpt=True)
+    tr.run()
+    assert tr.ckpt.latest_step() == 4
+
+
+def test_checkpoint_elastic_layout_independent(tmp_path):
+    """Checkpoints restore onto a different DistConfig (here: different
+    fsdp padding via different mesh axes count) with identical logical
+    values — the elastic-rescale path."""
+    from repro.models import runtime as RT
+    cfg, model = get_arch("qwen3_1_7b", smoke=True)
+    dcfg_b = DistConfig(mesh_axes=("pod", "data", "model"),
+                        mesh_shape=(1, 1, 1),
+                        param_dtype=jnp.float32, reduce_dtype=jnp.float32)
+    tr = _trainer(tmp_path / "a", total=2)
+    storage_a, opt_a, _ = tr.run()
+    ck = Checkpointer(str(tmp_path / "a"))
+    storage_b, opt_b, _ = ck.restore(2, model, dcfg_b)
+    metas_a = model.metas(DCFG)
+    metas_b = model.metas(dcfg_b)
+    la = {k: RT.tree_from_storage(storage_a[k], metas_a[k], DCFG)
+          for k in storage_a}
+    lb = {k: RT.tree_from_storage(storage_b[k], metas_b[k], dcfg_b)
+          for k in storage_b}
+    for (ka, a), (_, b) in zip(named_leaves(la), named_leaves(lb)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=ka)
+
+
+def test_straggler_monitor():
+    mon = StragglerMonitor(threshold=2.0, escalate_after=2)
+    for _ in range(8):
+        assert mon.observe(0.1) == "ok"
+    assert mon.observe(0.5) == "straggler"
+    assert mon.observe(0.5) == "escalate"
+    assert mon.flags == 2
+
+
+def test_data_deterministic_and_prefetch():
+    ds = SyntheticC4(DataConfig(vocab=1000, seq_len=64, global_batch=4,
+                                seed=3))
+    b1, b2 = ds.batch(7), ds.batch(7)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert (ds.batch(8)["tokens"] != b1["tokens"]).any()
+    # targets are next-token shifted
+    full = ds.batch(7)
+    pf = Prefetcher(ds, start_step=0)
+    s0, batch0 = pf.next()
+    s1, _ = pf.next()
+    pf.close()
+    assert (s0, s1) == (0, 1)
+    np.testing.assert_array_equal(batch0["tokens"], ds.batch(0)["tokens"])
+
+
+def test_grad_compression_trains(tmp_path):
+    """bf16 reduce-scatter w/ fp32 master still converges on the smoke
+    model (the distributed-optimization trick toggles cleanly)."""
+    cfg, model = get_arch("qwen3_1_7b", smoke=True)
+    dcfg = DCFG.with_(grad_compression=True)
+    tcfg = TrainerConfig(total_steps=6, ckpt_every=100, log_every=1,
+                         warmup=2, ckpt_dir=str(tmp_path / "gc"))
+    tr = Trainer(model, dcfg, SHAPE, AdamWConfig(lr=1e-3), tcfg)
+    _, _, hist = tr.run()
+    assert hist[-1]["loss"] < hist[0]["loss"]
