@@ -83,7 +83,7 @@ def table3_debuggability():
     step = RT.make_loss_step(model, dcfg)
     specs = RT.model_storage_specs(model, dcfg)
     jit_fn, mesh = RT.wrap_step(model, dcfg, shape, step, (P(), specs))
-    from jax import shard_map
+    from repro.core.compat import shard_map
     eager_fn = shard_map(step, mesh=mesh,
                          in_specs=(specs, RT.batch_specs(model, shape, dcfg)),
                          out_specs=(P(), specs))
@@ -163,7 +163,7 @@ def fig3_vs_gspmd():
     sys.path.insert(0, "examples")
     from quickstart import apply_fn, init_params, VOCAB
 
-    from jax import shard_map
+    from repro.core.compat import shard_map
     from repro.core import simple_fsdp
     from repro.core.dist import make_mesh as _mk
 
@@ -236,6 +236,56 @@ def fig4_autowrap():
                  f"buckets={r['n_buckets']};"
                  f"comm_us={r['total_comm_s']*1e6:.0f};"
                  f"compute_us={r['compute_s']*1e6:.0f}")
+
+
+# ---------------------------------------------------------------------------
+# Pipeline — paper SS4 composability as a bench row: stage-stacked MLP on a
+# (pipe, data, model) mesh, GPipe vs 1F1B trainable steps with FSDP bucket
+# gathers per use inside each stage. 1F1B's claim is the activation bound
+# (S live microbatches instead of M) — visible in temp_mib at M >> S.
+# ---------------------------------------------------------------------------
+def pipeline_bench():
+    from jax import lax
+
+    from repro.core.meta import ParamMeta
+    from repro.optim.adamw import AdamWConfig
+    from repro.train.train_step import (init_pipeline_state,
+                                        wrap_pipeline_train_step)
+
+    S, M, B, Dm, H = 2, 8, 16, 64, 128
+    tokens = M * B
+    dcfg = DistConfig(
+        mesh_axes=("pipe", "data", "model"), mesh_shape=(S, 2, 2),
+        fsdp_axes=("data",), pp_axis="pipe",
+        param_dtype=jnp.float32, reduce_dtype=jnp.float32)
+    metas = {"w1": ParamMeta("w1", (Dm, H), tp_dim=1),
+             "b": ParamMeta("b", (H,), tp_dim=0),
+             "w2": ParamMeta("w2", (H, Dm), tp_dim=0)}
+
+    def stage_fn(p, x):
+        xg = lax.all_gather(x, dcfg.tp_axis, axis=0, tiled=True)
+        h = jnp.tanh(xg @ p["w1"]) + p["b"]
+        return x + lax.psum_scatter(h @ p["w2"], dcfg.tp_axis,
+                                    scatter_dimension=0, tiled=True)
+
+    def init_stage(key, _s):
+        ks = jax.random.split(key, 3)
+        return {"w1": jax.random.normal(ks[0], (Dm, H)) * 0.1,
+                "b": jnp.zeros((H,)),
+                "w2": jax.random.normal(ks[1], (H, Dm)) * 0.1}
+
+    xs = jax.random.normal(jax.random.PRNGKey(3), (M, B, Dm))
+    for schedule in ("gpipe", "1f1b"):
+        fn, _ = wrap_pipeline_train_step(
+            stage_fn, metas, dcfg.with_(pp_schedule=schedule),
+            AdamWConfig(lr=1e-3), lambda y: jnp.mean(y ** 2) / M,
+            xs_ndim=3, donate=False)
+        storage, opt = init_pipeline_state(init_stage, metas, dcfg)
+        us = _timed(fn, storage, opt, xs)
+        mem = _temp_bytes(fn, (storage, opt, xs))
+        emit(f"pipeline/{schedule}", us,
+             f"tps={tokens/(us/1e6):.0f};temp_mib={mem/2**20:.2f};"
+             f"stages={S};micro={M}")
 
 
 # ---------------------------------------------------------------------------

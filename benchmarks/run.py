@@ -32,6 +32,7 @@ def main() -> None:
         "fig3": T.fig3_vs_gspmd,
         "fig4": T.fig4_autowrap,
         "fig5": T.fig5_convergence,
+        "pipeline": T.pipeline_bench,
         "roofline": lambda: roofline.emit_csv(T.emit),
     }
     names = sys.argv[1:] or list(benches)

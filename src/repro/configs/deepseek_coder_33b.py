@@ -7,6 +7,9 @@ CONFIG = ArchConfig(
     name="deepseek-coder-33b", family="dense", n_layers=62, d_model=7168,
     n_heads=56, n_kv_heads=8, d_ff=19200, vocab=32256, head_dim=128,
     rope_theta=100_000.0, skip_shapes=("long_500k",),
+    # 62 layers only split evenly 2 ways; (pipe, data, model) = (2, 8, 16)
+    # with 31 layers per stage, 1F1B (launch.mesh.production_dcfg).
+    pp_stages=2,
 )
 
 SMOKE = ArchConfig(

@@ -6,6 +6,9 @@ CONFIG = ArchConfig(
     name="llama3-8b", family="dense", n_layers=32, d_model=4096,
     n_heads=32, n_kv_heads=8, d_ff=14336, vocab=128_256, head_dim=128,
     rope_theta=500_000.0, skip_shapes=("long_500k",),
+    # 4 pipeline stages x 8 layers on the production mesh: (pipe, data,
+    # model) = (4, 4, 16), 1F1B (launch.mesh.production_dcfg).
+    pp_stages=4,
 )
 
 SMOKE = ArchConfig(

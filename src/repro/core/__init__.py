@@ -8,7 +8,9 @@ Layers (see DESIGN.md):
   bucketing   BucketPlan — manual wrapping
   autowrap    greedy Algorithm 1 — auto wrapping
   stack       apply_stack — bucketed + reordered (prefetch) layer stacks
+  pipeline    gpipe / 1F1B schedules over a 'pipe' mesh axis (paper SS4)
   api         simple_fsdp() one-liner
+  compat      jax version shims (shard_map / make_mesh / keystr)
 """
 
 from repro.core.api import build_metas, shard_params, simple_fsdp
@@ -16,18 +18,23 @@ from repro.core.autowrap import auto_plan, exposed_comm_time
 from repro.core.bucketing import (BucketPlan, manual_plan, per_param_plan,
                                   whole_block_plan)
 from repro.core.collectives import gather_group, replicate, replicate_tree
+from repro.core.compat import shard_map
 from repro.core.dist import DistConfig, make_mesh, single_device_config
 from repro.core.irgraph import BlockStats
 from repro.core.meta import (ParamMeta, abstract_storage, from_storage,
                              storage_specs, to_storage)
+from repro.core.pipeline import (fsdp_stage_fn, gpipe, gpipe_grads,
+                                 one_f_one_b, pipe_shift, pipeline_grads)
 from repro.core.remat import checkpoint_policy, maybe_remat
 from repro.core.stack import apply_stack
 
 __all__ = [
     "BlockStats", "BucketPlan", "DistConfig", "ParamMeta",
     "abstract_storage", "apply_stack", "auto_plan", "build_metas",
-    "checkpoint_policy", "exposed_comm_time", "from_storage", "gather_group",
-    "make_mesh", "manual_plan", "maybe_remat", "per_param_plan", "replicate",
-    "replicate_tree", "shard_params", "simple_fsdp", "single_device_config",
-    "storage_specs", "to_storage", "whole_block_plan",
+    "checkpoint_policy", "exposed_comm_time", "from_storage", "fsdp_stage_fn",
+    "gather_group", "gpipe", "gpipe_grads", "make_mesh", "manual_plan",
+    "maybe_remat", "one_f_one_b", "per_param_plan", "pipe_shift",
+    "pipeline_grads", "replicate", "replicate_tree", "shard_map",
+    "shard_params", "simple_fsdp", "single_device_config", "storage_specs",
+    "to_storage", "whole_block_plan",
 ]

@@ -46,7 +46,10 @@ def greedy_buckets(nodes: list[CommNode], cfg: DistConfig,
         t_ag = ag_time(cand, cfg)
         t_rs = rs_time(buckets[-1], cfg) if buckets else 0.0
         time_ok = (t_ag <= prev_c) and (t_rs + t_ag <= prev_c)
-        mem_ok = (sum(c.mem_bytes for c in cand) + nd.mem_bytes) <= m_max
+        # `cand` already includes nd; counting nd.mem_bytes again would halve
+        # the effective cap for the incoming node (regression-tested in
+        # tests/test_core.py::test_greedy_mem_cap_not_double_counted).
+        mem_ok = sum(c.mem_bytes for c in cand) <= m_max
         if time_ok and mem_ok:
             cur.append(nd)
         else:

@@ -1,0 +1,93 @@
+"""JAX version compatibility shims.
+
+The repo targets the jax>=0.6 API surface (``jax.shard_map`` with
+``check_vma``, ``jax.make_mesh(..., axis_types=...)``,
+``keystr(..., simple=True)``).  The container may pin an older jax (0.4.x)
+where those live under different names/signatures; this module backfills
+them so every call site imports from here and runs on both.
+
+On old jax, ``check_vma``/``check_rep`` is force-disabled: the 0.4.x
+``check_rep`` rule set predates the vma type system and rejects valid
+programs (custom_vjp whose backward issues ``psum_scatter``, ppermute in
+scan carries).  Correctness is asserted numerically by the parity suite
+(tests/dist_harness.py) instead of by the static checker.
+"""
+
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.6: top-level export, vma-typed
+    from jax import shard_map as _shard_map
+
+    _NEW_SHARD_MAP = True
+except ImportError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _NEW_SHARD_MAP = False
+
+# The vma (varying-manual-axes) type system ships with the new shard_map.
+# Without it, autodiff inside shard_map does not auto-psum cotangents of
+# TP-replicated values consumed by TP-varying compute (see ROADMAP "Old-jax
+# vma parity gap") — version-gated tests key off this flag.
+HAS_VMA = _NEW_SHARD_MAP
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` with the new keyword signature on any jax."""
+    if _NEW_SHARD_MAP:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=check_vma)
+    return _shard_map(f, mesh, in_specs, out_specs, check_rep=False)
+
+
+def make_mesh(shape, axes, devices=None) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with Auto axis_types where supported."""
+    if devices is not None:
+        import numpy as np
+
+        return jax.sharding.Mesh(np.asarray(devices).reshape(shape), axes)
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def pallas_tpu_compiler_params():
+    """The pallas TPU compiler-params class: ``pltpu.CompilerParams`` on
+    new pallas, ``TPUCompilerParams`` before the rename."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams",
+                  getattr(pltpu, "TPUCompilerParams", None))
+    if cls is None:
+        raise ImportError("pallas TPU backend has no CompilerParams class")
+    return cls
+
+
+def vma_of(x) -> frozenset:
+    """`jax.typeof(x).vma` where the vma type system exists; empty set on
+    old jax (no vma tracking — shard_map runs with checking disabled)."""
+    try:
+        return jax.typeof(x).vma
+    except AttributeError:
+        return frozenset()
+
+
+def keystr(path, simple: bool = False, separator: str = "") -> str:
+    """``jax.tree_util.keystr(path, simple=, separator=)`` on any jax."""
+    try:
+        return jax.tree_util.keystr(path, simple=simple, separator=separator)
+    except TypeError:
+        if not simple:
+            return jax.tree_util.keystr(path)
+        parts = []
+        for k in path:
+            for attr in ("key", "idx", "name"):
+                if hasattr(k, attr):
+                    parts.append(str(getattr(k, attr)))
+                    break
+            else:
+                parts.append(str(k))
+        return separator.join(parts)

@@ -30,6 +30,22 @@ class DistConfig:
     fsdp_axes: tuple[str, ...] = ("data",)
     tp_axis: str | None = "model"
 
+    # Pipeline parallelism (paper SS4 "Pipeline Parallel") --------------------
+    # When set, the named mesh axis holds one pipeline stage per rank: stage
+    # parameters are ordinary SimpleFSDP storage sharded over `fsdp_axes`
+    # WITHIN each pipe rank, and activations stream between stages with
+    # ppermute inside the same shard_map (core/pipeline.py).  Convention:
+    # 'pipe' is the OUTERMOST mesh axis — per-slot activation traffic is tiny
+    # point-to-point, so it tolerates the slowest interconnect, while the fat
+    # FSDP gathers stay on the inner (ICI) axes.
+    pp_axis: str | None = None
+    pp_schedule: str = "gpipe"           # 'gpipe' | '1f1b'
+    # Expected microbatch count M per pipelined step; 0 accepts any M.
+    # When set, pipeline_grads rejects an xs stack whose leading dim
+    # disagrees (M is otherwise inferred from xs).  GPipe keeps M live
+    # activations per stage; 1F1B bounds that to S (see core/pipeline.py).
+    pp_microbatches: int = 0
+
     # Mixed precision (paper SS4) --------------------------------------------
     param_dtype: Dtype = jnp.bfloat16    # forward/backward compute dtype
     reduce_dtype: Dtype = jnp.float32    # gradient reduce-scatter dtype
@@ -82,10 +98,21 @@ class DistConfig:
         return self.axis_size(self.tp_axis) if self.tp_axis else 1
 
     @property
+    def pp_size(self) -> int:
+        """Number of pipeline stages (1 when no pipe axis is configured)."""
+        return self.axis_size(self.pp_axis) if self.pp_axis else 1
+
+    @property
     def dp_total(self) -> int:
-        """Total data-parallel ways = every axis that is not TP."""
+        """Total data-parallel ways = every axis that is not TP or PP.
+
+        Pipe ranks hold DIFFERENT stage parameters and see the same
+        microbatch stream, so the pipe axis is neither a data- nor a
+        tensor-parallel domain.
+        """
         return math.prod(
-            s for a, s in self.axis_sizes.items() if a != self.tp_axis
+            s for a, s in self.axis_sizes.items()
+            if a != self.tp_axis and a != self.pp_axis
         )
 
     @property
@@ -93,11 +120,13 @@ class DistConfig:
         """Axes over which params are replicated (grads need all-reduce).
 
         Under HSDP the 'pod' axis replicates parameters, so gradients are
-        psum'ed over it after the in-pod reduce-scatter.
+        psum'ed over it after the in-pod reduce-scatter.  The pipe axis is
+        excluded: each pipe rank owns a distinct stage, nothing to sync.
         """
         return tuple(
             a for a in self.mesh_axes
             if a not in self.fsdp_axes and a != self.tp_axis
+            and a != self.pp_axis
         )
 
     @property
@@ -109,17 +138,9 @@ class DistConfig:
 
 
 def make_mesh(cfg: DistConfig, devices=None) -> jax.sharding.Mesh:
-    if devices is None:
-        return jax.make_mesh(
-            cfg.mesh_shape,
-            cfg.mesh_axes,
-            axis_types=(jax.sharding.AxisType.Auto,) * len(cfg.mesh_axes),
-        )
-    import numpy as np
+    from repro.core import compat
 
-    return jax.sharding.Mesh(
-        np.asarray(devices).reshape(cfg.mesh_shape), cfg.mesh_axes
-    )
+    return compat.make_mesh(cfg.mesh_shape, cfg.mesh_axes, devices=devices)
 
 
 def single_device_config(**kw) -> DistConfig:

@@ -83,6 +83,14 @@ class ParamMeta:
     def stacked_storage_spec(self, cfg: DistConfig) -> P:
         return P(None, *self.storage_spec(cfg))
 
+    def pipe_stacked_storage_spec(self, cfg: DistConfig) -> P:
+        """Spec for an (S, storage...) stage stack: the leading stage dim is
+        sharded over the pipe axis (each pipe rank holds ITS stage's ZeRO-3
+        shard), inner dims keep the plain storage layout."""
+        if cfg.pp_axis is None:
+            raise ValueError("pipe_stacked_storage_spec needs cfg.pp_axis")
+        return P(cfg.pp_axis, *self.storage_spec(cfg))
+
     def shard_shape(self, cfg: DistConfig) -> tuple[int, ...]:
         """Per-device shape inside shard_map."""
         if self.tp_dim is None:
@@ -144,11 +152,12 @@ def flatten_local(x: jax.Array, meta: ParamMeta, cfg: DistConfig) -> jax.Array:
 # Pytree helpers: params and metas travel as parallel pytrees keyed by path.
 # --------------------------------------------------------------------------
 def named_leaves(tree) -> list[tuple[str, Any]]:
+    from repro.core.compat import keystr
+
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     out = []
     for path, leaf in flat:
-        out.append((jax.tree_util.keystr(path, simple=True, separator="/"),
-                    leaf))
+        out.append((keystr(path, simple=True, separator="/"), leaf))
     return out
 
 

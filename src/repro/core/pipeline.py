@@ -1,25 +1,49 @@
-"""Pipeline parallelism (GPipe microbatch schedule) composed with SimpleFSDP.
+"""Pipeline parallelism (GPipe and 1F1B schedules) composed with SimpleFSDP.
 
 Paper SS4 "Pipeline Parallel": each device receives its stage's submodule and
 SimpleFSDP wraps it — no extra code. Same shape here: the `pipe` mesh axis
 holds one stage per rank; stage parameters are ordinary SimpleFSDP storage
-(ZeRO-3 over the FSDP axes, bucket-gathered per use), and activations stream
-between stages with `lax.ppermute` inside the same shard_map (so the full
-computation+communication graph — FSDP gathers AND pipeline sends — is one
-jit, the paper's full-graph property).
+(ZeRO-3 over the FSDP axes, bucket-gathered per use via `fsdp_stage_fn`), and
+activations stream between stages with `pipe_shift` — a `ppermute` whose
+custom backward is the reverse permute of the cotangent — inside the same
+shard_map (so the full computation+communication graph — FSDP gathers AND
+pipeline sends — is one jit, the paper's full-graph property).
 
-Schedule: GPipe with M microbatches over S stages: T = M + S - 1 slots; slot
-t computes microbatch (t - stage) on each stage and permutes activations
-forward. Autodiff through ppermute gives the reverse-permute backward (1F1B
-memory behaviour is a follow-up; M activations are live, as in GPipe).
+Mesh layout convention (pp x dp x tp): axes are ordered
+``('pipe', <fsdp/data axes...>, 'model')`` with **pipe outermost**.  Per-slot
+pipeline traffic is one small point-to-point activation send, so it tolerates
+the slowest interconnect (DCN), while the fat FSDP all-gathers and TP psums
+stay on the inner ICI axes.  `DistConfig.pp_axis` names the pipe axis;
+`dp_total` and `grad_sync_axes` exclude it (pipe ranks own DISTINCT stage
+parameters — nothing to sync, nothing data-parallel).
+
+Schedules and their memory models (M microbatches, S stages):
+
+  * GPipe (`gpipe`, `gpipe_grads`): T = M + S - 1 forward slots; slot t
+    computes microbatch (t - stage) on each stage.  Backward is ordinary
+    autodiff through the scan, so every stage keeps **M** live microbatch
+    activations (all forwards finish before any backward starts).
+  * 1F1B (`one_f_one_b`): T = 2(M + S - 1) slots; stage s runs forward of
+    microbatch m at slot s + 2m and backward of m at slot 2(S-1) - s + 2m + 1
+    (opposite parities, so each stage does one unit of work per slot, one
+    forward per backward in steady state).  Stage inputs are kept in a ring
+    buffer of depth **S** and the backward recomputes the stage via
+    `jax.vjp` from the saved input, so live activation storage is bounded by
+    S (in fact S - s at stage s) **independent of M** — the
+    PipeDream-flush/1F1B memory bound, vs GPipe's M.
+
+Both schedules return identical losses/gradients (exact-parity tested against
+a single-device dense reference in tests/dist_harness.py case `pipeline`).
 """
 
 from __future__ import annotations
 
+import functools
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.core.dist import DistConfig
@@ -29,6 +53,86 @@ def pipe_rank(axis: str):
     return lax.axis_index(axis)
 
 
+def _fwd_perm(n: int):
+    return [(i, (i + 1) % n) for i in range(n)]
+
+
+def _bwd_perm(n: int):
+    return [(i, (i - 1) % n) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# The differentiable pipeline send: forward permute, reverse-permute backward.
+# ---------------------------------------------------------------------------
+def _shift_raw(x, axis: str, n_stages: int):
+    return lax.ppermute(x, axis, _fwd_perm(n_stages))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def pipe_shift(x, axis: str, n_stages: int):
+    """Send `x` to the next pipe rank (cyclically). The cotangent travels the
+    opposite direction: d(stage s+1 input) arrives back at stage s."""
+    return _shift_raw(x, axis, n_stages)
+
+
+def _pipe_shift_fwd(x, axis, n_stages):
+    return _shift_raw(x, axis, n_stages), None
+
+
+def _pipe_shift_bwd(axis, n_stages, _res, ct):
+    return (lax.ppermute(ct, axis, _bwd_perm(n_stages)),)
+
+
+pipe_shift.defvjp(_pipe_shift_fwd, _pipe_shift_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Schedule tables (pure host-side helpers; used by tests and docs).
+# ---------------------------------------------------------------------------
+def gpipe_schedule(n_micro: int, n_stages: int) -> np.ndarray:
+    """(T, S) table: microbatch id stage s computes at slot t, -1 when idle.
+
+    T = M + S - 1; stage s is active exactly on slots [s, s + M)."""
+    T = n_micro + n_stages - 1
+    sched = np.full((T, n_stages), -1, dtype=np.int64)
+    for t in range(T):
+        for s in range(n_stages):
+            mb = t - s
+            if 0 <= mb < n_micro:
+                sched[t, s] = mb
+    return sched
+
+
+def one_f_one_b_schedule(n_micro: int, n_stages: int) \
+        -> tuple[np.ndarray, np.ndarray]:
+    """Two (T, S) tables (fwd_mb, bwd_mb): microbatch whose forward /
+    backward stage s runs at slot t, -1 when idle.  T = 2(M + S - 1);
+    forward of m at stage s lands on slot s + 2m, backward on
+    2(S-1) - s + 2m + 1 — opposite parities, so a stage never does both in
+    one slot, and at most S - s microbatches are in flight at stage s."""
+    M, S = n_micro, n_stages
+    T = 2 * (M + S - 1)
+    fwd = np.full((T, S), -1, dtype=np.int64)
+    bwd = np.full((T, S), -1, dtype=np.int64)
+    for s in range(S):
+        for m in range(M):
+            fwd[s + 2 * m, s] = m
+            bwd[2 * (S - 1) - s + 2 * m + 1, s] = m
+    return fwd, bwd
+
+
+def schedule_slots(n_micro: int, n_stages: int, schedule: str) -> int:
+    """Total scan length of a schedule (analytic)."""
+    if schedule == "gpipe":
+        return n_micro + n_stages - 1
+    if schedule == "1f1b":
+        return 2 * (n_micro + n_stages - 1)
+    raise ValueError(f"unknown pipeline schedule {schedule!r}")
+
+
+# ---------------------------------------------------------------------------
+# GPipe: forward-only schedule, differentiable end-to-end by autodiff.
+# ---------------------------------------------------------------------------
 def gpipe(stage_fn: Callable, xs, n_stages: int, axis: str = "pipe"):
     """Run `stage_fn(x) -> y` as an S-stage pipeline.
 
@@ -37,12 +141,16 @@ def gpipe(stage_fn: Callable, xs, n_stages: int, axis: str = "pipe"):
     (M, ...) stack of microbatch activations fed to stage 0 (other ranks'
     xs values are ignored). Returns the (M, ...) outputs of the LAST stage
     (valid on every rank only at stage S-1; callers psum/select as needed).
+
+    Differentiable: activation sends use `pipe_shift`, whose backward
+    reverse-permutes the cotangents, so plain `jax.grad` through this
+    function yields the pipelined backward schedule (at the cost of M live
+    activations per stage — use `one_f_one_b` for the S-bounded variant).
     """
     M = xs.shape[0]
     S = n_stages
     T = M + S - 1
     rank = pipe_rank(axis)
-    perm = [(i, (i + 1) % S) for i in range(S)]
 
     buf0 = jnp.zeros_like(xs)          # per-stage output collection
     state0 = jnp.zeros_like(xs[0])     # activation entering this stage
@@ -62,8 +170,164 @@ def gpipe(stage_fn: Callable, xs, n_stages: int, axis: str = "pipe"):
             lax.dynamic_update_index_in_dim(
                 outs, y, jnp.clip(mb_idx, 0, M - 1), 0),
             outs)
-        state_next = lax.ppermute(y, axis, perm)
+        state_next = pipe_shift(y, axis, S)
         return (state_next, outs), None
 
     (_, outs), _ = lax.scan(slot, (state0, buf0), jnp.arange(T))
     return outs
+
+
+def gpipe_grads(stage_fn: Callable, params, xs, loss_fn: Callable,
+                n_stages: int, axis: str = "pipe"):
+    """(loss, dparams, dxs) for the GPipe schedule via autodiff.
+
+    `stage_fn(params, x) -> y` runs this rank's stage on its own `params`;
+    `loss_fn(y) -> scalar` is one microbatch's contribution to the total
+    loss (include any 1/M normalization there). SPMD grad convention: every
+    pipe rank seeds a backward and the cross-rank `pipe_shift` transposes
+    SUM them, so the loss is masked to the last stage (sum_r L_r == L);
+    the returned loss is psum'ed over `axis` for logging. `dparams` is each
+    rank's own stage gradient; `dxs` is d(loss)/d(xs), meaningful on rank 0.
+    """
+    S = n_stages
+
+    def total_loss(params, xs):
+        outs = gpipe(lambda x: stage_fn(params, x), xs, S, axis)
+        per_mb = jax.vmap(loss_fn)(outs)
+        on_last = pipe_rank(axis) == S - 1
+        return jnp.where(on_last, jnp.sum(per_mb), 0.0)
+
+    loss, (dparams, dxs) = jax.value_and_grad(total_loss, argnums=(0, 1))(
+        params, xs)
+    return lax.psum(loss, axis), dparams, dxs
+
+
+# ---------------------------------------------------------------------------
+# 1F1B: interleaved forward/backward, live activations bounded by S.
+# ---------------------------------------------------------------------------
+def one_f_one_b(stage_fn: Callable, params, xs, loss_fn: Callable,
+                n_stages: int, axis: str = "pipe"):
+    """(loss, dparams, dxs) under the 1F1B schedule — same contract as
+    `gpipe_grads`, but the backward is hand-interleaved with the forward.
+
+    Per slot each stage does (at most) one forward and one backward, on
+    opposite parities (see `one_f_one_b_schedule`). Stage INPUTS are saved
+    in a ring buffer of depth S and the backward re-runs the stage via
+    `jax.vjp` from the saved input (recompute-based, like the FSDP
+    selective-AC re-gather), so live activation memory is O(S), not O(M).
+    Cotangents are zeroed on inactive slots, which makes the vjp's
+    parameter/input gradients vanish by linearity — no masking of the
+    accumulators is needed.
+    """
+    M = xs.shape[0]
+    S = n_stages
+    T = schedule_slots(M, S, "1f1b")
+    rank = pipe_rank(axis)
+
+    def fwd_and_loss(p, x):
+        y = stage_fn(p, x)
+        return y, loss_fn(y)
+
+    carry0 = (
+        jnp.zeros_like(xs[0]),                     # activation from the left
+        jnp.zeros_like(xs[0]),                     # cotangent from the right
+        jnp.zeros((S,) + xs.shape[1:], xs.dtype),  # ring of saved inputs
+        jax.tree.map(jnp.zeros_like, params),      # grad accumulator
+        jnp.zeros_like(xs),                        # dxs (rank 0)
+        jnp.zeros((), jnp.float32),                # loss accumulator
+    )
+
+    def slot(carry, t):
+        fwd_state, bwd_state, ring, acc_g, dxs, loss_acc = carry
+        on_last = rank == S - 1
+
+        # forward half: microbatch mf at slot rank + 2*mf --------------------
+        tf = t - rank
+        mf = tf // 2
+        fwd_active = (tf >= 0) & (tf % 2 == 0) & (mf < M)
+        mfc = jnp.clip(mf, 0, M - 1)
+        x_in = jnp.where(rank == 0, xs[mfc], fwd_state)
+        y = stage_fn(params, x_in)
+        y = jnp.where(fwd_active, y, fwd_state)
+        ring = jnp.where(
+            fwd_active,
+            lax.dynamic_update_index_in_dim(ring, x_in, mfc % S, 0),
+            ring)
+
+        # backward half: microbatch mb at slot 2(S-1) - rank + 2*mb + 1 ------
+        tb = t - (2 * (S - 1) - rank + 1)
+        mb = tb // 2
+        bwd_active = (tb >= 0) & (tb % 2 == 0) & (mb < M)
+        mbc = jnp.clip(mb, 0, M - 1)
+        x_saved = lax.dynamic_index_in_dim(ring, mbc % S, 0, keepdims=False)
+        (_, l_mb), vjp = jax.vjp(fwd_and_loss, params, x_saved)
+        ct_y = jnp.where(bwd_active & ~on_last, bwd_state,
+                         jnp.zeros_like(bwd_state))
+        ct_l = jnp.where(bwd_active & on_last, jnp.ones_like(l_mb),
+                         jnp.zeros_like(l_mb))
+        dp, dx = vjp((ct_y, ct_l))
+        acc_g = jax.tree.map(jnp.add, acc_g, dp)
+        loss_acc = loss_acc + jnp.where(
+            bwd_active & on_last, l_mb, 0.0).astype(jnp.float32)
+        dxs = jnp.where(
+            (rank == 0) & bwd_active,
+            lax.dynamic_update_index_in_dim(dxs, dx, mbc, 0),
+            dxs)
+
+        # communicate: activations right, cotangents left --------------------
+        fwd_next = _shift_raw(y, axis, S)
+        bwd_next = lax.ppermute(dx, axis, _bwd_perm(S))
+        return (fwd_next, bwd_next, ring, acc_g, dxs, loss_acc), None
+
+    carry, _ = lax.scan(slot, carry0, jnp.arange(T))
+    _, _, _, grads, dxs, loss = carry
+    return lax.psum(loss, axis), grads, dxs
+
+
+# ---------------------------------------------------------------------------
+# SimpleFSDP composition + schedule dispatch.
+# ---------------------------------------------------------------------------
+def fsdp_stage_fn(stage_fn: Callable, metas_tree, cfg: DistConfig, plan=None):
+    """Wrap `stage_fn(full_params, x)` so it takes ZeRO-3 storage shards and
+    bucket-gathers them PER USE inside the pipelined stage (paper SS4: the
+    stage submodule is SimpleFSDP-wrapped with no extra code).
+
+    The gather is the differentiable `gather_group` custom_vjp, so each
+    backward slot issues the matching reduce-scatter; under a non-'none'
+    remat policy the gathered params are dropped after forward use and
+    re-gathered in backward (selective-AC), keeping the per-slot footprint
+    at one bucket.
+    """
+    from repro.core.collectives import replicate_tree
+    from repro.core.remat import maybe_remat
+
+    def wrapped(storage, x):
+        def inner(storage, x):
+            full = replicate_tree(storage, metas_tree, cfg, plan)
+            return stage_fn(full, x)
+        return maybe_remat(inner, cfg.remat)(storage, x)
+
+    return wrapped
+
+
+def pipeline_grads(stage_fn: Callable, params, xs, loss_fn: Callable,
+                   cfg: DistConfig, schedule: str | None = None):
+    """Dispatch to the configured schedule: (loss, dparams, dxs).
+
+    `cfg.pp_axis` names the pipe mesh axis; `cfg.pp_size` is the stage
+    count; `schedule` overrides `cfg.pp_schedule`.
+    """
+    if cfg.pp_axis is None:
+        raise ValueError("pipeline_grads needs cfg.pp_axis (the pipe axis)")
+    if cfg.pp_microbatches and xs.shape[0] != cfg.pp_microbatches:
+        raise ValueError(
+            f"xs carries {xs.shape[0]} microbatches but cfg.pp_microbatches="
+            f"{cfg.pp_microbatches}; stack the batch to match (or leave "
+            "pp_microbatches=0 to accept any M)")
+    schedule = schedule or cfg.pp_schedule
+    args = (stage_fn, params, xs, loss_fn, cfg.pp_size, cfg.pp_axis)
+    if schedule == "gpipe":
+        return gpipe_grads(*args)
+    if schedule == "1f1b":
+        return one_f_one_b(*args)
+    raise ValueError(f"unknown pipeline schedule {schedule!r}")

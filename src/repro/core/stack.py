@@ -49,6 +49,7 @@ import numpy as np
 from jax import lax
 
 from repro.core import collectives as coll
+from repro.core import compat
 from repro.core.bucketing import BucketPlan, plan_for
 from repro.core.dist import DistConfig
 from repro.core.meta import ParamMeta, named_leaves
@@ -142,13 +143,13 @@ def _prefetch_stack(block_fn, metas_tree, cfg, plan, stacked, consts, x):
             def tok(vma):
                 key = frozenset(vma)
                 if key not in tokens:
-                    extra = tuple(a for a in jax.typeof(base).vma
+                    extra = tuple(a for a in compat.vma_of(base)
                                   if a not in key)
                     tokens[key] = lax.psum(base, extra) if extra else base
                 return tokens[key]
 
             shards = [
-                lax.optimization_barrier((s, tok(jax.typeof(s).vma)))[0]
+                lax.optimization_barrier((s, tok(compat.vma_of(s))))[0]
                 for s in shards
             ]
         full: list = [None] * len(shards)

@@ -13,10 +13,9 @@ from jax import lax
 
 
 def _vma(x) -> frozenset:
-    try:
-        return jax.typeof(x).vma
-    except AttributeError:  # outside shard_map / plain arrays
-        return frozenset()
+    from repro.core.compat import vma_of
+
+    return vma_of(x)
 
 
 def vary_to(x, axes):

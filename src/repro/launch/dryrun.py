@@ -34,7 +34,7 @@ import traceback
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from repro.core.compat import shard_map
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
@@ -306,9 +306,8 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
         import math as _m
         assert _m.prod(mesh_shape) == (512 if multi_pod else 256)
         axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-        mesh = jax.make_mesh(mesh_shape, axes,
-                             axis_types=(jax.sharding.AxisType.Auto,)
-                             * len(axes))
+        from repro.core import compat
+        mesh = compat.make_mesh(mesh_shape, axes)
         dcfg = production_dcfg(multi_pod=multi_pod, zero3_global=zero3) \
             .with_(mesh_shape=mesh_shape)
     else:

@@ -2,41 +2,74 @@
 
 Single pod: 16x16 = 256 chips, axes (data, model).
 Multi-pod:  2x16x16 = 512 chips, axes (pod, data, model); the 'pod' axis
-crosses DCN. Defined as a FUNCTION so importing this module never touches
-jax device state (the dry-run pins a fake 512-device platform first).
+crosses DCN. With pipeline parallelism the 'pipe' axis is carved out of the
+data axis and placed OUTERMOST (per-slot pipeline traffic is one small
+point-to-point activation send, so it tolerates the slowest interconnect,
+while FSDP gathers and TP psums stay on the inner ICI axes — see
+core/pipeline.py for the layout convention). Defined as FUNCTIONS so
+importing this module never touches jax device state (the dry-run pins a
+fake 512-device platform first).
 """
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
+from repro.core import compat
 from repro.core.dist import DistConfig
 
 
-def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+def _production_layout(multi_pod: bool, pipeline_stages: int):
+    if pipeline_stages > 1:
+        if 16 % pipeline_stages:
+            raise ValueError(
+                f"pipeline_stages={pipeline_stages} must divide the 16-chip "
+                "data axis")
+        data = 16 // pipeline_stages
+        if multi_pod:
+            return (pipeline_stages, 2, data, 16), \
+                ("pipe", "pod", "data", "model")
+        return (pipeline_stages, data, 16), ("pipe", "data", "model")
+    if multi_pod:
+        return (2, 16, 16), ("pod", "data", "model")
+    return (16, 16), ("data", "model")
+
+
+def make_production_mesh(*, multi_pod: bool = False,
+                         pipeline_stages: int = 1):
+    shape, axes = _production_layout(multi_pod, pipeline_stages)
+    return compat.make_mesh(shape, axes)
 
 
 def production_dcfg(*, multi_pod: bool = False, zero3_global: bool = False,
+                    pipeline_stages: int = 1, pp_schedule: str = "1f1b",
                     **overrides) -> DistConfig:
     """bf16 training config on the production mesh. Default multi-pod
     sharding is HSDP (shard in-pod, replicate across pods — bounded DCN
-    traffic); zero3_global shards over pod x data instead."""
-    if multi_pod:
-        base = dict(
-            mesh_axes=("pod", "data", "model"), mesh_shape=(2, 16, 16),
-            fsdp_axes=("pod", "data") if zero3_global else ("data",),
-        )
-    else:
-        base = dict(mesh_axes=("data", "model"), mesh_shape=(16, 16),
-                    fsdp_axes=("data",))
-    base.update(
+    traffic); zero3_global shards over pod x data instead.
+    pipeline_stages > 1 adds an outermost 'pipe' axis (1F1B by default —
+    live activations bounded by the stage count, see core/pipeline.py)."""
+    shape, axes = _production_layout(multi_pod, pipeline_stages)
+    base = dict(
+        mesh_axes=axes, mesh_shape=shape,
+        fsdp_axes=("pod", "data") if (multi_pod and zero3_global)
+        else ("data",),
         param_dtype=jnp.bfloat16, reduce_dtype=jnp.float32,
         storage_dtype=jnp.float32,
     )
+    if pipeline_stages > 1:
+        base.update(pp_axis="pipe", pp_schedule=pp_schedule)
     base.update(overrides)
     return DistConfig(**base)
+
+
+def production_dcfg_for(arch_cfg, **kw) -> DistConfig:
+    """Production DistConfig honouring the arch's recommended pipeline
+    degree (`ArchConfig.pp_stages`): validates that stages split the layer
+    stack evenly before carving the pipe axis out of the data axis."""
+    stages = arch_cfg.pp_stages
+    if stages > 1 and arch_cfg.n_layers % stages:
+        raise ValueError(
+            f"{arch_cfg.name}: pp_stages={stages} does not divide "
+            f"n_layers={arch_cfg.n_layers}")
+    return production_dcfg(pipeline_stages=stages, **kw)

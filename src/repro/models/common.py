@@ -90,6 +90,12 @@ class ArchConfig:
     # which shape cells this arch runs (long_500k only for O(1)-state decode)
     skip_shapes: tuple[str, ...] = ()
 
+    # recommended pipeline-parallel degree on the production mesh: stages
+    # carved out of the data axis (must divide n_layers so stages are equal
+    # layer slices and divide the 16-chip data axis). 1 = no pipelining.
+    # Consumed (and validated) by launch.mesh.production_dcfg_for(cfg).
+    pp_stages: int = 1
+
     # head/expert counts pad to a multiple of this (>= any runtime tp that
     # divides it), keeping GLOBAL param shapes mesh-independent.
     pad_to: int = 16

@@ -9,7 +9,9 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax import lax, shard_map
+from jax import lax
+
+from repro.core.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core.dist import DistConfig, make_mesh
@@ -72,15 +74,18 @@ def init_storage(model, key, dcfg: DistConfig):
 
 
 def batch_specs(model, shape, dcfg: DistConfig):
-    dp_axes = tuple(a for a in dcfg.mesh_axes if a != dcfg.tp_axis)
+    axes = dp_axes(dcfg)
     specs = {}
     for k, sds in model.input_specs(shape, dcfg).items():
-        specs[k] = P(dp_axes, *([None] * (len(sds.shape) - 1)))
+        specs[k] = P(axes, *([None] * (len(sds.shape) - 1)))
     return specs
 
 
 def dp_axes(dcfg: DistConfig) -> tuple[str, ...]:
-    return tuple(a for a in dcfg.mesh_axes if a != dcfg.tp_axis)
+    """Batch-sharding axes: everything that is not TP and not the pipe axis
+    (every pipe rank sees the same microbatch stream)."""
+    return tuple(a for a in dcfg.mesh_axes
+                 if a != dcfg.tp_axis and a != dcfg.pp_axis)
 
 
 def make_loss_step(model, dcfg: DistConfig, with_grads: bool = True):

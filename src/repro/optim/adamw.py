@@ -65,6 +65,10 @@ def global_grad_norm(grads_tree, metas_tree, cfg: DistConfig):
     # tp-sharded leaves are also distinct across the model axis.
     total = lax.psum(rep_sq, cfg.fsdp_axes) \
         + lax.psum(tp_sq, (*cfg.fsdp_axes, cfg.tp_axis))
+    if cfg.pp_axis is not None:
+        # each pipe rank holds a distinct stage: the global norm (and hence
+        # the clip scale, which must agree across stages) spans all of them
+        total = lax.psum(total, cfg.pp_axis)
     return jnp.sqrt(total)
 
 

@@ -10,7 +10,9 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax import lax, shard_map
+from jax import lax
+
+from repro.core.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core.dist import DistConfig, make_mesh
@@ -77,6 +79,109 @@ def wrap_train_step(model, dcfg: DistConfig, shape, ocfg: AdamWConfig,
     fn = shard_map(step_local, mesh=mesh, in_specs=in_specs,
                    out_specs=out_specs)
     return jax.jit(fn, donate_argnums=(0, 1) if donate else ()), mesh
+
+
+# ---------------------------------------------------------------------------
+# Pipeline-parallel training (paper SS4): stage stacks under pp x dp x tp.
+# ---------------------------------------------------------------------------
+def make_pipeline_train_step(stage_fn, stage_metas, dcfg: DistConfig,
+                             ocfg: AdamWConfig, loss_fn,
+                             schedule: str | None = None, plan=None,
+                             lr_schedule: Callable | None = None):
+    """Pipelined analogue of `make_train_step` for an explicitly staged
+    module: `stage_fn(full_params, x) -> y` is ONE stage's compute (TP-local;
+    psum over `dcfg.tp_axis` yourself where needed), `loss_fn(y) -> scalar`
+    is one microbatch's contribution to the total loss.
+
+    Storage/opt-state leaves carry a leading stage dim sharded over
+    `dcfg.pp_axis` (spec `ParamMeta.pipe_stacked_storage_spec`); inside the
+    step each rank trains its own stage with SimpleFSDP bucket gathers per
+    use (ZeRO-3 over `fsdp_axes`), activations streaming between stages per
+    `dcfg.pp_schedule` — all inside one shard_map'd jit, the paper's
+    full-graph property.
+    """
+    from repro.core.pipeline import fsdp_stage_fn, pipeline_grads
+
+    sched = lr_schedule or (lambda t: ocfg.lr)
+    stage = fsdp_stage_fn(stage_fn, stage_metas, dcfg, plan)
+    dp_axes = RT.dp_axes(dcfg)
+
+    def _local(tree):
+        return jax.tree.map(lambda a: a[0], tree)
+
+    def _restack(tree):
+        return jax.tree.map(lambda a: a[None], tree)
+
+    def step_local(storage, opt_state, xs):
+        local = _local(storage)               # this rank's stage shards
+        opt_local = {"m": _local(opt_state["m"]), "v": _local(opt_state["v"]),
+                     "step": opt_state["step"]}
+        loss, grads, _ = pipeline_grads(stage, local, xs, loss_fn, dcfg,
+                                        schedule)
+        lr = sched(opt_local["step"])
+        new_p, new_opt, gnorm = apply_adamw(local, grads, opt_local,
+                                            stage_metas, dcfg, ocfg, lr)
+        metrics = {
+            "loss": lax.pmean(loss, dp_axes) if dp_axes else loss,
+            "grad_norm": gnorm,
+            "lr": jnp.asarray(lr, jnp.float32),
+        }
+        return _restack(new_p), {"m": _restack(new_opt["m"]),
+                                 "v": _restack(new_opt["v"]),
+                                 "step": new_opt["step"]}, metrics
+
+    return step_local
+
+
+def pipeline_storage_specs(stage_metas, dcfg: DistConfig):
+    from repro.core.meta import ParamMeta
+
+    return jax.tree.map(lambda m: m.pipe_stacked_storage_spec(dcfg),
+                        stage_metas,
+                        is_leaf=lambda x: isinstance(x, ParamMeta))
+
+
+def wrap_pipeline_train_step(stage_fn, stage_metas, dcfg: DistConfig,
+                             ocfg: AdamWConfig, loss_fn, xs_ndim: int,
+                             schedule: str | None = None, plan=None,
+                             lr_schedule=None, mesh=None,
+                             donate: bool = True):
+    """jit(shard_map(pipeline_train_step)). `xs_ndim` is the rank of the
+    (M, batch, ...) microbatch activation stack fed to stage 0 (dim 0 is the
+    microbatch schedule dim — replicated; dim 1 is sharded over the data
+    axes)."""
+    mesh = mesh or make_mesh(dcfg)
+    step_local = make_pipeline_train_step(stage_fn, stage_metas, dcfg, ocfg,
+                                          loss_fn, schedule, plan,
+                                          lr_schedule)
+    pspecs = pipeline_storage_specs(stage_metas, dcfg)
+    opt_specs = {"m": pspecs, "v": pspecs, "step": P()}
+    xs_spec = P(None, RT.dp_axes(dcfg), *([None] * (xs_ndim - 2)))
+    in_specs = (pspecs, opt_specs, xs_spec)
+    out_specs = (pspecs, opt_specs,
+                 {"loss": P(), "grad_norm": P(), "lr": P()})
+    fn = shard_map(step_local, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs, check_vma=False)
+    return jax.jit(fn, donate_argnums=(0, 1) if donate else ()), mesh
+
+
+def init_pipeline_state(stage_params_fn, stage_metas, dcfg: DistConfig,
+                        key=None):
+    """Build the (S, storage...) stage-stacked params + fresh opt state.
+
+    `stage_params_fn(key, stage_idx) -> full param tree` initializes one
+    stage; stage s's tree is converted to ZeRO-3 storage and stacked along
+    the leading pipe dim.
+    """
+    from repro.core.meta import ParamMeta, to_storage
+
+    key = key if key is not None else jax.random.PRNGKey(0)
+    fulls = [stage_params_fn(jax.random.fold_in(key, s), s)
+             for s in range(dcfg.pp_size)]
+    storage = jax.tree.map(
+        lambda m, *ps: jnp.stack([to_storage(p, m, dcfg) for p in ps]),
+        stage_metas, *fulls, is_leaf=lambda x: isinstance(x, ParamMeta))
+    return storage, init_opt_state(storage)
 
 
 def make_eval_step(model, dcfg: DistConfig, shape, mesh=None):

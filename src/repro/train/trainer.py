@@ -47,6 +47,11 @@ class Trainer:
                  ocfg: AdamWConfig, tcfg: TrainerConfig,
                  failure_source: FailureSource | None = None,
                  seed: int = 0):
+        if dcfg.pp_axis is not None:
+            raise ValueError(
+                "Trainer drives whole-model loss_local steps; a pipe mesh "
+                "axis needs an explicitly staged module — use "
+                "PipelineTrainer (same file) with stage_fn/stage_metas.")
         self.model, self.dcfg, self.shape = model, dcfg, shape
         self.ocfg, self.tcfg = ocfg, tcfg
         self.failures = failure_source or FailureSource()
@@ -109,3 +114,60 @@ class Trainer:
                                self.dcfg)
         self.ckpt.wait()
         return storage, opt_state, self.history
+
+
+class PipelineTrainer:
+    """Training loop for an explicitly staged module under pp x dp x tp.
+
+    Drives `wrap_pipeline_train_step` (GPipe or 1F1B per
+    `dcfg.pp_schedule`): each pipe rank owns one stage's ZeRO-3 storage,
+    bucket-gathers it per use, and streams activations to the next stage —
+    paper SS4's composition, one shard_map'd jit per step.  Batches are
+    synthetic (M, microbatch, ...) activation stacks fed to stage 0; the
+    full-LM partition (embedding on stage 0, head+loss on the last stage)
+    is tracked in ROADMAP's open items.
+    """
+
+    def __init__(self, stage_fn, stage_metas, stage_params_fn,
+                 dcfg: DistConfig, ocfg: AdamWConfig, loss_fn,
+                 xs_shape: tuple[int, ...], total_steps: int = 100,
+                 log_every: int = 10, schedule: str | None = None,
+                 plan=None, seed: int = 0):
+        if dcfg.pp_axis is None:
+            raise ValueError("PipelineTrainer needs dcfg.pp_axis")
+        from repro.train.train_step import (init_pipeline_state,
+                                            wrap_pipeline_train_step)
+
+        self.dcfg, self.ocfg = dcfg, ocfg
+        self.xs_shape, self.seed = tuple(xs_shape), seed
+        self.total_steps, self.log_every = total_steps, log_every
+        self.straggler = StragglerMonitor()
+        sched = default_schedule(ocfg, total_steps, warmup=min(
+            10, total_steps))
+        self.step_fn, self.mesh = wrap_pipeline_train_step(
+            stage_fn, stage_metas, dcfg, ocfg, loss_fn,
+            xs_ndim=len(self.xs_shape), schedule=schedule, plan=plan,
+            lr_schedule=sched)
+        self.storage, self.opt_state = init_pipeline_state(
+            stage_params_fn, stage_metas, dcfg, jax.random.PRNGKey(seed))
+        self.history: list[dict] = []
+
+    def _batch(self, step: int):
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed + 1), step)
+        return jax.random.normal(key, self.xs_shape)
+
+    def run(self):
+        for step in range(1, self.total_steps + 1):
+            with StepTimer() as t:
+                self.storage, self.opt_state, metrics = self.step_fn(
+                    self.storage, self.opt_state, self._batch(step))
+                metrics = jax.tree.map(np.asarray, metrics)
+            if self.straggler.observe(t.dt) == "escalate":
+                log.warning("straggler escalation at step %d", step)
+            if step % self.log_every == 0 or step == 1:
+                self.history.append(
+                    {"step": step, "dt": t.dt,
+                     **{k: float(v) for k, v in metrics.items()}})
+                log.info("pipe step %d loss %.4f gnorm %.3f %.0fms", step,
+                         metrics["loss"], metrics["grad_norm"], t.dt * 1e3)
+        return self.storage, self.opt_state, self.history

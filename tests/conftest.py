@@ -1,0 +1,30 @@
+"""Pytest wiring: marker registration + default marking.
+
+Two selection tiers (both recorded in ROADMAP's tier-1 line):
+
+  python -m pytest -x -q                 # everything
+  python -m pytest -q -m unit            # fast single-process tests only
+  python -m pytest -q -m distributed     # 8-device subprocess harness only
+
+Every test without an explicit ``distributed`` marker is auto-marked
+``unit``, so ``-m unit`` deselects the slow subprocess parity suite.
+"""
+
+import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "unit: fast single-process tests (auto-applied)")
+    config.addinivalue_line(
+        "markers",
+        "distributed: multi-device semantics via the subprocess harness "
+        "(tests/dist_harness.py on 8 fake CPU devices)")
+    config.addinivalue_line(
+        "markers", "slow: long-running cases (full schedule sweeps)")
+
+
+def pytest_collection_modifyitems(config, items):
+    for item in items:
+        if "distributed" not in item.keywords:
+            item.add_marker(pytest.mark.unit)

@@ -15,6 +15,11 @@ outputs match a single-device dense reference EXACTLY (fp32 end to end):
 
 across mesh layouts: 2D (data,model), 3D HSDP (pod,data,model; shard in-pod)
 and 3D global ZeRO-3 (shard over pod+data).
+
+The `pipeline` case covers paper SS4's pipeline-parallel composition: GPipe
+and 1F1B schedules under (pipe, data, model) meshes with FSDP bucket gathers
+active INSIDE each pipelined stage, asserted exactly against the sequential
+dense reference (losses, parameter grads, and d/d(xs)) across bucket modes.
 """
 
 from __future__ import annotations
@@ -33,7 +38,9 @@ import functools
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import lax, shard_map
+from jax import lax
+
+from repro.core.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core import (BucketPlan, DistConfig, ParamMeta, apply_stack,
@@ -403,130 +410,192 @@ def case_hlo_structure():
 CASES["hlo_structure"] = case_hlo_structure
 
 
-def case_hlo_structure():
-    """Paper SS3.2.1 visible in the lowering: per-block bucketing MERGES
-    per-parameter all-gathers/reduce-scatters (counted in stablehlo, which
-    preserves program structure; scan bodies count once)."""
-    import re
-    from repro.models import runtime as RT
-    from repro.models.common import ShapeConfig
-    from repro.models.registry import get_arch
 
-    def lower_text(bucket_mode, reorder):
-        cfg, model = get_arch("qwen3_1_7b", smoke=True)
-        dcfg = fp32_cfg(("data", "model"), (4, 2), ("data",),
-                        bucket_mode=bucket_mode, reorder=reorder)
-        storage = RT.init_storage(model, jax.random.PRNGKey(0), dcfg)
-        batch = {"tokens": jnp.zeros((8, 32), jnp.int32),
-                 "targets": jnp.zeros((8, 32), jnp.int32),
-                 "valid": jnp.ones((8, 32))}
-        step = RT.make_loss_step(model, dcfg)
-        specs = RT.model_storage_specs(model, dcfg)
-        fn, _ = RT.wrap_step(model, dcfg, ShapeConfig("t", 32, 8, "train"),
-                             step, (P(), specs))
-        return fn.lower(storage, batch).as_text()
-
-    def count(txt, op):
-        return len(re.findall(rf"stablehlo\.{op}\b", txt))
-
-    none = lower_text("none", False)
-    block = lower_text("block", False)
-    n_ag, b_ag = count(none, "all_gather"), count(block, "all_gather")
-    n_rs, b_rs = count(none, "reduce_scatter"), count(block, "reduce_scatter")
-    assert b_ag < n_ag, (n_ag, b_ag)
-    assert b_rs <= n_rs, (n_rs, b_rs)
-    auto = lower_text("auto", True)
-    assert count(auto, "all_gather") > 0
-    print(f"PASS hlo_structure (AG {n_ag}->{b_ag}, RS {n_rs}->{b_rs})")
+# --------------------------------------------------------------------------
+# Pipeline parallelism: GPipe / 1F1B x SimpleFSDP x TP under a
+# (pipe, data, model) mesh — paper SS4's composability, exact fp32 parity.
+# --------------------------------------------------------------------------
+PD, PH = 8, 16    # pipeline-stage model dim / hidden dim
 
 
-CASES["hlo_structure"] = case_hlo_structure
+def tp_stage_metas():
+    """Every param TP-sharded: all cross-rank gradient flow goes through
+    explicit collectives with exact transposes (all_gather <-> psum_scatter,
+    ppermute <-> reverse ppermute), so pp x dp x tp parity is exact on any
+    jax version (no reliance on vma replication-transpose psums)."""
+    return {
+        "w1": ParamMeta("w1", (PD, PH), tp_dim=1),
+        "b": ParamMeta("b", (PH,), tp_dim=0),
+        "w2": ParamMeta("w2", (PH, PD), tp_dim=0),
+    }
 
 
+def init_tp_stage(key):
+    ks = jax.random.split(key, 3)
+    return {
+        "w1": jax.random.normal(ks[0], (PD, PH)) * 0.3,
+        "b": jax.random.normal(ks[1], (PH,)) * 0.1,
+        "w2": jax.random.normal(ks[2], (PH, PD)) * 0.3,
+    }
 
 
+def tp_stage_dense(p, x):
+    h = jnp.tanh(x @ p["w1"]) + p["b"]
+    return x + h @ p["w2"]
 
-def case_pipeline():
-    """GPipe over a 'pipe' axis composed WITH SimpleFSDP param sharding on
-    the 'data' axis: 4-stage pipeline == sequential dense reference (values
-    AND gradients), the paper's SS4 Pipeline-Parallel composability."""
-    from repro.core.pipeline import gpipe
-    from repro.core import replicate_tree
-    from repro.core.bucketing import whole_block_plan
 
-    S, M, B, Dm = 4, 4, 8, 16          # stages, microbatches, batch, dim
-    cfg = fp32_cfg(("data", "pipe"), (2, 4), ("data",), tp_axis="pipe")
+def tp_stage_local(p, x, cfg: DistConfig):
+    """SP-style TP stage: x arrives batch-sharded over (data, model); the
+    microbatch is all-gathered over TP for the sharded-H matmuls and the
+    partial output is reduce-scattered back to the batch shard."""
+    if cfg.tp_size > 1:
+        xg = lax.all_gather(x, cfg.tp_axis, axis=0, tiled=True)
+    else:
+        xg = x
+    h = jnp.tanh(xg @ p["w1"]) + p["b"]
+    o = h @ p["w2"]
+    if cfg.tp_size > 1:
+        o = lax.psum_scatter(o, cfg.tp_axis, scatter_dimension=0, tiled=True)
+    return x + o
+
+
+def rep_stage_metas():
+    """Mixed TP-sharded + replicated params (two vma bucket classes); run
+    on tp=1 meshes where replicated-param grads are exact everywhere."""
+    return {
+        "w1": ParamMeta("w1", (PD, PH), tp_dim=1),
+        "b": ParamMeta("b", (PH,), tp_dim=0),
+        "g": ParamMeta("g", (1,), tp_dim=None),
+        "w2": ParamMeta("w2", (PH, PD), tp_dim=0),
+        "scale": ParamMeta("scale", (PD,), tp_dim=None),
+    }
+
+
+def init_rep_stage(key):
+    ks = jax.random.split(key, 5)
+    return {
+        "w1": jax.random.normal(ks[0], (PD, PH)) * 0.3,
+        "b": jax.random.normal(ks[1], (PH,)) * 0.1,
+        "g": jnp.ones((1,)) * 0.7,
+        "w2": jax.random.normal(ks[2], (PH, PD)) * 0.3,
+        "scale": 1.0 + jax.random.normal(ks[3], (PD,)) * 0.1,
+    }
+
+
+def rep_stage_dense(p, x):
+    h = jnp.tanh(x @ p["w1"]) * p["g"][0] + p["b"]
+    return x + (h @ p["w2"]) * p["scale"]
+
+
+def run_pipeline_case(cfg: DistConfig, plan, schedule: str, metas, init_fn,
+                      dense_fn, local_fn, tag: str):
+    """One pp x dp x tp configuration vs the single-device dense reference.
+
+    Batch sharding spans (data, model) [SP]; grads come back under the
+    repo's per-device-mean convention: param grads are tp x dense, dxs is
+    (dp*tp) x dense (cf. run_stack_case's dp scaling).
+    """
+    from repro.core.pipeline import fsdp_stage_fn, pipeline_grads
+
     mesh = make_mesh(cfg)
-
-    metas = {"w": ParamMeta("w", (Dm, Dm), tp_dim=None),
-             "b": ParamMeta("b", (Dm,), tp_dim=None)}
-    keys = [jax.random.PRNGKey(i) for i in range(S)]
-    stage_params = [
-        {"w": jax.random.normal(k, (Dm, Dm)) * 0.4, "b": jnp.zeros((Dm,))}
-        for k in keys
-    ]
-    x = jax.random.normal(jax.random.PRNGKey(9), (M, B, Dm))
+    S, M, B = cfg.pp_size, 4, 8
+    tp, dp = cfg.tp_size, cfg.dp_total
+    stage_params = [init_fn(jax.random.PRNGKey(100 + s)) for s in range(S)]
+    xs = jax.random.normal(jax.random.PRNGKey(9), (M, B, PD))
 
     # dense reference ------------------------------------------------------
-    def dense(ps, xs):
+    def dense_loss(ps, xs):
         y = xs
         for p in ps:
-            y = jnp.tanh(y @ p["w"] + p["b"])
-        return y
+            y = dense_fn(p, y)
+        return jnp.mean(y ** 2)
 
-    ref = dense(stage_params, x)
-    ref_loss = jnp.mean(ref ** 2)
-    ref_grads = jax.grad(
-        lambda ps: jnp.mean(dense(ps, x) ** 2))(stage_params)
+    ref_loss = dense_loss(stage_params, xs)
+    ref_grads, ref_dxs = jax.grad(dense_loss, argnums=(0, 1))(
+        stage_params, xs)
 
-    # pipelined + FSDP -----------------------------------------------------
-    # stage s's params live on pipe rank s, ZeRO-3 sharded over 'data':
-    # storage (S, padded) with spec P('pipe', 'data') per leaf.
+    # pipelined + FSDP + TP ------------------------------------------------
+    # stage s's params live on pipe rank s, each ZeRO-3 sharded over 'data'
+    # (and TP-indexed): storage (S, storage...) per leaf.
     storage = {
         k: jnp.stack([to_storage(stage_params[s][k], metas[k], cfg)
                       for s in range(S)])
         for k in metas
     }
-    specs = {k: P("pipe", "data") for k in metas}
+    specs = {k: metas[k].pipe_stacked_storage_spec(cfg) for k in metas}
+    batch_axes = ("data", "model") if tp > 1 else ("data",)
+    xs_spec = P(None, batch_axes)
+    nonpipe = tuple(a for a in cfg.mesh_axes if a != cfg.pp_axis)
+
+    def loss_fn(y):
+        return jnp.mean(y ** 2) / M
+
+    stage = fsdp_stage_fn(lambda p, x: local_fn(p, x, cfg), metas, cfg, plan)
 
     def step(storage, xs):
         local = jax.tree.map(lambda a: a[0], storage)  # this rank's stage
-
-        def loss_fn(local):
-            full = replicate_tree(local, metas, cfg,
-                                  whole_block_plan(metas))
-
-            def stage_fn(h):
-                return jnp.tanh(h @ full["w"] + full["b"])
-
-            outs = gpipe(stage_fn, xs, n_stages=S, axis="pipe")
-            # SPMD grad convention: every pipe rank seeds a backward and
-            # cross-rank ppermute transposes SUM them — mask the loss to the
-            # last stage only so sum_r L_r == L (cf. the SP 1/tp scaling).
-            on_last = (lax.axis_index("pipe") == S - 1)
-            return jnp.where(on_last, jnp.mean(outs ** 2), 0.0)
-
-        loss, grads = jax.value_and_grad(loss_fn)(local)
-        loss = lax.psum(loss, "pipe")            # logging value
+        loss, grads, dxs = pipeline_grads(stage, local, xs, loss_fn, cfg,
+                                          schedule)
+        loss = lax.pmean(loss, nonpipe)
         grads = jax.tree.map(lambda g: g[None], grads)
-        return lax.pmean(loss, ("data",)), grads
+        return loss, grads, dxs
 
     fn = jax.jit(shard_map(
         step, mesh=mesh,
-        in_specs=(specs, P(None, "data")),
-        out_specs=(P(), specs), check_vma=False))
-    loss, grads = fn(storage, x)
+        in_specs=(specs, xs_spec),
+        out_specs=(P(), specs, xs_spec), check_vma=False))
+    loss, grads, dxs = fn(storage, xs)
 
     np.testing.assert_allclose(float(loss), float(ref_loss), rtol=1e-5,
-                               err_msg="pipeline loss mismatch")
+                               err_msg=f"{tag}: loss mismatch")
+    np.testing.assert_allclose(
+        np.asarray(dxs) / (dp * tp), np.asarray(ref_dxs),
+        rtol=2e-4, atol=2e-6, err_msg=f"{tag}: dxs mismatch")
     for k in metas:
         got = jnp.stack([from_storage(grads[k][s], metas[k], cfg)
-                         for s in range(S)])
+                         for s in range(S)]) / tp
         want = jnp.stack([ref_grads[s][k] for s in range(S)])
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    rtol=2e-4, atol=1e-6,
-                                   err_msg=f"pipeline grad mismatch {k}")
-    print("PASS pipeline (GPipe x FSDP, exact grads)")
+                                   err_msg=f"{tag}: grad mismatch {k}")
+    print(f"PASS {tag}")
+
+
+PIPE_MESHES = {
+    # pipe OUTERMOST (core/pipeline.py layout convention)
+    "pp2_dp2_tp2": (("pipe", "data", "model"), (2, 2, 2)),
+    "pp4_dp2": (("pipe", "data", "model"), (4, 2, 1)),
+}
+
+
+def case_pipeline():
+    """GPipe and 1F1B over a (pipe, data, model) mesh with FSDP bucket
+    gathers active inside each pipelined stage: losses and gradients match
+    the single-device dense reference exactly in fp32 across bucket modes."""
+    for mesh_name, (axes, shape) in PIPE_MESHES.items():
+        tp = shape[axes.index("model")]
+        if tp > 1:
+            metas_fn, init_fn, dense_fn, local_fn = (
+                tp_stage_metas, init_tp_stage, tp_stage_dense,
+                tp_stage_local)
+        else:
+            metas_fn, init_fn, dense_fn, local_fn = (
+                rep_stage_metas, init_rep_stage, rep_stage_dense,
+                lambda p, x, cfg: rep_stage_dense(p, x))
+        metas = metas_fn()
+        plans = {"block": whole_block_plan(metas),
+                 "none": per_param_plan(metas)}
+        if tp == 1:
+            plans["custom2"] = BucketPlan((("w1", "b", "g"),
+                                           ("w2", "scale")))
+        for schedule in ("gpipe", "1f1b"):
+            for plan_name, plan in plans.items():
+                cfg = fp32_cfg(axes, shape, ("data",), pp_axis="pipe",
+                               pp_schedule=schedule)
+                run_pipeline_case(
+                    cfg, plan, schedule, metas, init_fn, dense_fn, local_fn,
+                    f"pipeline/{mesh_name}/{schedule}/bucket={plan_name}")
+    print("PASS pipeline (GPipe+1F1B x FSDP x TP, exact grads)")
 
 
 CASES["pipeline"] = case_pipeline

@@ -1,7 +1,18 @@
-"""Unit + property tests for the SimpleFSDP core (single device)."""
+"""Unit + property tests for the SimpleFSDP core (single device).
 
-import hypothesis
-import hypothesis.strategies as st
+Property tests use `hypothesis` when available and fall back to a fixed
+parametrized sample on bare environments (the module is optional so tier-1
+collection never fails on a missing dev dependency).
+"""
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -22,13 +33,7 @@ CFG2D = DistConfig(mesh_axes=("data", "model"), mesh_shape=(4, 2))
 # ---------------------------------------------------------------------------
 # ParamMeta storage layout
 # ---------------------------------------------------------------------------
-@hypothesis.given(
-    shape=st.lists(st.integers(1, 12), min_size=1, max_size=3),
-    tp_choice=st.integers(0, 3),
-    seed=st.integers(0, 2**31 - 1),
-)
-@hypothesis.settings(max_examples=40, deadline=None)
-def test_storage_roundtrip_property(shape, tp_choice, seed):
+def _check_storage_roundtrip(shape, tp_choice, seed):
     """to_storage / from_storage are exact inverses for any shape and any
     (valid) TP dim — the paper's DTensor Shard(0) analogue is lossless."""
     shape = tuple(shape)
@@ -40,6 +45,26 @@ def test_storage_roundtrip_property(shape, tp_choice, seed):
     x = jax.random.normal(jax.random.PRNGKey(seed), shape)
     rt = from_storage(to_storage(x, m, CFG2D), m, CFG2D)
     np.testing.assert_array_equal(np.asarray(rt), np.asarray(x))
+
+
+if HAVE_HYPOTHESIS:
+    @hypothesis.given(
+        shape=st.lists(st.integers(1, 12), min_size=1, max_size=3),
+        tp_choice=st.integers(0, 3),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @hypothesis.settings(max_examples=40, deadline=None)
+    def test_storage_roundtrip_property(shape, tp_choice, seed):
+        _check_storage_roundtrip(shape, tp_choice, seed)
+else:
+    @pytest.mark.parametrize("shape,tp_choice,seed", [
+        ((1,), 0, 0), ((4,), 0, 1), ((7,), 1, 2), ((8,), 0, 3),
+        ((3, 5), 0, 4), ((4, 6), 1, 5), ((12, 2), 0, 6), ((2, 8), 1, 7),
+        ((2, 3, 4), 2, 8), ((6, 1, 5), 0, 9), ((12, 12, 12), 1, 10),
+        ((5, 9, 2), 3, 11),
+    ])
+    def test_storage_roundtrip_property(shape, tp_choice, seed):
+        _check_storage_roundtrip(shape, tp_choice, seed)
 
 
 def test_storage_shapes_lane_aligned():
@@ -106,23 +131,59 @@ def test_greedy_splits_when_comm_dominates():
     assert len(buckets) == 8
 
 
-@hypothesis.given(
-    n=st.integers(1, 24),
-    flops=st.floats(1e3, 1e13),
-    nbytes=st.integers(1 << 10, 1 << 24),
-    mem_limit=st.floats(1e4, 1e10),
-)
-@hypothesis.settings(max_examples=40, deadline=None)
-def test_greedy_invariants(n, flops, nbytes, mem_limit):
+def _check_greedy_invariants(n, flops, nbytes, mem_limit):
     """Partition invariants: order-preserving, complete, memory-capped."""
     nodes = _nodes(n, flops=flops, nbytes=nbytes)
     buckets = greedy_buckets(nodes, CFG2D, mem_limit=mem_limit)
     flat = [nd.name for b in buckets for nd in b]
     assert flat == [nd.name for nd in nodes]          # order + completeness
-    for b in buckets[1:]:                             # memory constraint
+    for b in buckets:                                 # memory constraint
         if len(b) > 1:
-            assert sum(nd.mem_bytes for nd in b) \
-                <= mem_limit + nodes[0].mem_bytes
+            assert sum(nd.mem_bytes for nd in b) <= mem_limit
+
+
+GREEDY_SAMPLE = [
+    (1, 1e3, 1 << 10, 1e4), (3, 1e13, 1 << 20, 1e10),
+    (8, 1e12, 1 << 20, 1e10), (8, 1.0, 1 << 20, 1e10),
+    (24, 1e9, 1 << 14, 1e5), (24, 1e13, 1 << 24, 1e8),
+    (16, 1e7, 1 << 12, 1e4), (12, 1e11, 1 << 16, 1e6),
+]
+
+if HAVE_HYPOTHESIS:
+    @hypothesis.given(
+        n=st.integers(1, 24),
+        flops=st.floats(1e3, 1e13),
+        nbytes=st.integers(1 << 10, 1 << 24),
+        mem_limit=st.floats(1e4, 1e10),
+    )
+    @hypothesis.settings(max_examples=40, deadline=None)
+    def test_greedy_invariants(n, flops, nbytes, mem_limit):
+        _check_greedy_invariants(n, flops, nbytes, mem_limit)
+else:
+    @pytest.mark.parametrize("n,flops,nbytes,mem_limit", GREEDY_SAMPLE)
+    def test_greedy_invariants(n, flops, nbytes, mem_limit):
+        _check_greedy_invariants(n, flops, nbytes, mem_limit)
+
+
+def test_greedy_mem_cap_not_double_counted():
+    """Regression (paper Alg. 1 line 5): `cand` already contains the
+    incoming node — adding nd.mem_bytes AGAIN halved the effective cap for
+    the node being merged. With cap = 3 node-sizes and compute large enough
+    to hide everything, buckets must close at exactly 3 nodes (the buggy
+    double count closed them at 2)."""
+    nbytes = 1 << 20
+    buckets = greedy_buckets(_nodes(6, flops=1e13, nbytes=nbytes), CFG2D,
+                             mem_limit=3 * nbytes)
+    assert [len(b) for b in buckets] == [3, 3]
+
+
+def test_greedy_comm_dominated_stays_per_param():
+    """A comm-dominated graph (no compute to hide behind) must not collapse
+    into one giant bucket even with an unbounded memory cap — the first
+    bucket is bounded by its OWN compute (exposed prologue, paper Fig. 2)."""
+    buckets = greedy_buckets(_nodes(12, flops=1.0), CFG2D, mem_limit=1e18)
+    assert len(buckets) == 12
+    assert all(len(b) == 1 for b in buckets)
 
 
 def test_exposed_time_decreases_with_compute():
