@@ -215,27 +215,76 @@ def fig3_vs_gspmd():
 
 
 # ---------------------------------------------------------------------------
-# Fig 4 — manual vs auto wrapping: analytic exposure on REAL arch workloads
+# Fig 4 — manual vs auto wrapping: modeled exposure on REAL arch workloads,
+# per planner (greedy Alg. 1 vs the exposure-minimizing DP). --json writes
+# benchmarks/results/BENCH_overlap.json so the perf trajectory (exposure per
+# mode per arch) is tracked across PRs.
 # ---------------------------------------------------------------------------
-def fig4_autowrap():
-    from repro.core.autowrap import auto_plan, exposed_comm_time
+OVERLAP_ARCHS = ("llama3_8b", "deepseek_coder_33b", "qwen3_moe_30b_a3b")
+OVERLAP_SCHEMA = "bench_overlap_v1"
+
+
+def _overlap_modes(metas, dcfg, stats, segments):
+    """Plans scored as EXECUTED: auto planners plan the segmented schedule
+    directly, and exposed_comm_time rewrites manual plans to the partition
+    the runtime runs (split + segment-major + pooled hiding windows), so
+    every exposure number describes the schedule core/stack actually runs."""
+    from repro.core.autowrap import auto_dp_plan, auto_plan
     from repro.core.bucketing import per_param_plan, whole_block_plan
+
+    return [
+        ("none", per_param_plan(metas)),
+        ("block", whole_block_plan(metas)),
+        ("greedy", auto_plan(metas, dcfg, stats, segments=segments)),
+        ("auto_dp", auto_dp_plan(metas, dcfg, stats, segments=segments)),
+    ]
+
+
+def fig4_autowrap(json_path: str | None = None):
+    import json as _json
+    import os as _os
+
+    from repro.core.autowrap import exposed_comm_time
     from repro.launch.mesh import production_dcfg
     dcfg = production_dcfg()
-    for arch in ("llama3_8b", "deepseek_coder_33b", "qwen3_moe_30b_a3b"):
+    doc = {"schema": OVERLAP_SCHEMA, "mesh": "16x16", "archs": {}}
+    for arch in OVERLAP_ARCHS:
         cfg, model = get_arch(arch)
         metas = model.block_metas(dcfg)
         stats = model.block_stats(dcfg, (1, 4096))
-        for name, plan in [
-            ("vanilla", per_param_plan(metas)),
-            ("manual", whole_block_plan(metas)),
-            ("auto", auto_plan(metas, dcfg, stats)),
-        ]:
-            r = exposed_comm_time(plan, metas, dcfg, stats)
+        segments = model.block_segments(dcfg) \
+            if hasattr(model, "block_segments") else None
+        # block_stats/exposure describe ONE scan step, which covers
+        # layers_per_step layers (2 for local/global pairs) — scale by scan
+        # steps, not raw layer count
+        n_steps = getattr(model, "n_steps", cfg.n_layers)
+        arch_rec = {"n_layers": cfg.n_layers, "n_scan_steps": n_steps,
+                    "stats_source": stats.source, "modes": {}}
+        for name, plan in _overlap_modes(metas, dcfg, stats, segments):
+            r = exposed_comm_time(plan, metas, dcfg, stats,
+                                  segments=segments)
+            # modeled per-step time (tracking metric, not absolute): steps x
+            # (fwd compute + ~2x bwd compute + steady-state exposed comm)
+            modeled = n_steps * (3.0 * r["compute_s"] + r["exposed_s"])
+            arch_rec["modes"][name] = {
+                "exposed_s": r["exposed_s"],
+                "total_comm_s": r["total_comm_s"],
+                "compute_s": r["compute_s"],
+                "n_buckets": r["n_buckets"],
+                "modeled_step_s": modeled,
+            }
             emit(f"fig4/{arch}/{name}", r["exposed_s"] * 1e6,
                  f"buckets={r['n_buckets']};"
                  f"comm_us={r['total_comm_s']*1e6:.0f};"
-                 f"compute_us={r['compute_s']*1e6:.0f}")
+                 f"compute_us={r['compute_s']*1e6:.0f};"
+                 f"step_ms={modeled*1e3:.2f}")
+        doc["archs"][arch] = arch_rec
+    if json_path:
+        _os.makedirs(_os.path.dirname(json_path), exist_ok=True)
+        with open(json_path, "w") as f:
+            _json.dump(doc, f, indent=1)
+        print(f"wrote {json_path}", flush=True)
+    return doc
 
 
 # ---------------------------------------------------------------------------

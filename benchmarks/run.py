@@ -4,7 +4,12 @@ Prints ``name,us_per_call,derived`` CSV. Distributed behaviour benches run
 on 8 fake CPU devices (set here, in this entry point only — tests and the
 dry-run manage their own device counts).
 
-Run:  PYTHONPATH=src python -m benchmarks.run [table3 table5 ...]
+Run:  PYTHONPATH=src python -m benchmarks.run [table3 table5 ...] [--json]
+
+``--json`` additionally writes machine-readable results for the benches that
+support it (fig4 -> benchmarks/results/BENCH_overlap.json: per-arch exposure
++ modeled step time for the none/block/greedy/auto_dp plans) so the perf
+trajectory is tracked across PRs.
 """
 
 import os
@@ -19,10 +24,22 @@ sys.path.insert(0, os.path.join(os.path.dirname(
     os.path.dirname(os.path.abspath(__file__))), "src"))
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
+RESULTS_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "results")
+OVERLAP_JSON = os.path.join(RESULTS_DIR, "BENCH_overlap.json")
+
 
 def main() -> None:
     from benchmarks import paper_tables as T
     from benchmarks import roofline
+
+    args = sys.argv[1:]
+    flags = [a for a in args if a.startswith("--")]
+    unknown = [f for f in flags if f != "--json"]
+    if unknown:
+        sys.exit(f"unknown flag(s): {unknown}; supported: --json")
+    emit_json = "--json" in flags
+    names = [a for a in args if not a.startswith("--")]
 
     benches = {
         "table3": T.table3_debuggability,
@@ -30,12 +47,13 @@ def main() -> None:
         "table5": T.table5_reorder_bucket,
         "table6": T.table6_ag_placement,
         "fig3": T.fig3_vs_gspmd,
-        "fig4": T.fig4_autowrap,
+        "fig4": lambda: T.fig4_autowrap(
+            json_path=OVERLAP_JSON if emit_json else None),
         "fig5": T.fig5_convergence,
         "pipeline": T.pipeline_bench,
         "roofline": lambda: roofline.emit_csv(T.emit),
     }
-    names = sys.argv[1:] or list(benches)
+    names = names or list(benches)
     print("name,us_per_call,derived")
     for n in names:
         benches[n]()

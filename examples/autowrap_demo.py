@@ -1,13 +1,14 @@
-"""Auto-wrapping demo (paper SS3.3.2): run the greedy Algorithm 1 over a real
-architecture's per-parameter comm nodes and print the chosen buckets plus
-their analytic exposure, next to the manual per-block plan.
+"""Auto-wrapping demo (paper SS3.3.2): run the greedy Algorithm 1 AND the
+exposure-minimizing DP over a real architecture's per-parameter comm nodes
+and print the chosen buckets plus their modeled exposure, next to the manual
+per-block plan.
 
 Run:  PYTHONPATH=src python examples/autowrap_demo.py [--arch deepseek_coder_33b]
 """
 
 import argparse
 
-from repro.core.autowrap import auto_plan, exposed_comm_time
+from repro.core.autowrap import auto_dp_plan, auto_plan, exposed_comm_time
 from repro.core.bucketing import per_param_plan, whole_block_plan
 from repro.launch.mesh import production_dcfg
 from repro.models.registry import get_arch
@@ -27,6 +28,7 @@ def main():
         "per-param (vanilla)": per_param_plan(metas),
         "per-block (manual, paper eval setting)": whole_block_plan(metas),
         "auto (greedy Alg. 1)": auto_plan(metas, dcfg, stats),
+        "auto_dp (exposure-minimizing DP)": auto_dp_plan(metas, dcfg, stats),
     }
     print(f"{args.arch} on 16x16 v5e, one transformer block:\n")
     for name, plan in plans.items():
@@ -35,8 +37,8 @@ def main():
               f"exposed={r['exposed_s']*1e6:9.1f}us "
               f"total_comm={r['total_comm_s']*1e6:9.1f}us "
               f"compute={r['compute_s']*1e6:9.1f}us")
-    auto = plans["auto (greedy Alg. 1)"]
-    print("\nauto buckets:")
+    auto = plans["auto_dp (exposure-minimizing DP)"]
+    print("\nauto_dp buckets:")
     for i, grp in enumerate(auto.groups):
         print(f"  bucket {i}: {list(grp)}")
 

@@ -5,16 +5,18 @@ Layers (see DESIGN.md):
   meta        ParamMeta — ZeRO-3 flat-shard storage layout
   collectives replicate/gather_group — the differentiable parametrization
   remat       selective-AC policies (re-gather in backward)
-  bucketing   BucketPlan — manual wrapping
-  autowrap    greedy Algorithm 1 — auto wrapping
-  stack       apply_stack — bucketed + reordered (prefetch) layer stacks
+  bucketing   BucketPlan — manual wrapping; plan_for memoizes auto plans
+  autowrap    greedy Algorithm 1 + exposure-minimizing DP — auto wrapping
+  stack       apply_stack — bucketed + reordered (prefetch) layer stacks,
+              pipelined at bucket granularity for segmented blocks
   pipeline    gpipe / 1F1B schedules over a 'pipe' mesh axis (paper SS4)
   api         simple_fsdp() one-liner
   compat      jax version shims (shard_map / make_mesh / keystr)
 """
 
 from repro.core.api import build_metas, shard_params, simple_fsdp
-from repro.core.autowrap import auto_plan, exposed_comm_time
+from repro.core.autowrap import (auto_dp_plan, auto_plan, exposed_comm_time,
+                                 partition_exposure)
 from repro.core.bucketing import (BucketPlan, manual_plan, per_param_plan,
                                   whole_block_plan)
 from repro.core.collectives import gather_group, replicate, replicate_tree
@@ -30,11 +32,12 @@ from repro.core.stack import apply_stack
 
 __all__ = [
     "BlockStats", "BucketPlan", "DistConfig", "ParamMeta",
-    "abstract_storage", "apply_stack", "auto_plan", "build_metas",
-    "checkpoint_policy", "exposed_comm_time", "from_storage", "fsdp_stage_fn",
-    "gather_group", "gpipe", "gpipe_grads", "make_mesh", "manual_plan",
-    "maybe_remat", "one_f_one_b", "per_param_plan", "pipe_shift",
-    "pipeline_grads", "replicate", "replicate_tree", "shard_map",
-    "shard_params", "simple_fsdp", "single_device_config", "storage_specs",
-    "to_storage", "whole_block_plan",
+    "abstract_storage", "apply_stack", "auto_dp_plan", "auto_plan",
+    "build_metas", "checkpoint_policy", "exposed_comm_time", "from_storage",
+    "fsdp_stage_fn", "gather_group", "gpipe", "gpipe_grads", "make_mesh",
+    "manual_plan", "maybe_remat", "one_f_one_b", "partition_exposure",
+    "per_param_plan", "pipe_shift", "pipeline_grads", "replicate",
+    "replicate_tree", "shard_map", "shard_params", "simple_fsdp",
+    "single_device_config", "storage_specs", "to_storage",
+    "whole_block_plan",
 ]

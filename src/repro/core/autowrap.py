@@ -1,19 +1,41 @@
-"""Auto-wrapping: the paper's greedy Algorithm 1.
+"""Auto-wrapping: greedy Algorithm 1 plus the exposure-minimizing DP planner.
 
-Walks the per-parameter CommNodes in execution order and merges node *i* into
-the current bucket iff
+Two planners over the per-parameter `CommNode` list (execution order):
+
+`greedy_buckets` — the paper's Algorithm 1. Walks nodes and merges node *i*
+into the current bucket iff
 
   forward   T_AG(bucket + i)              <= T_C(previous bucket's compute)
   backward  T_RS(prev bucket) + T_AG(...) <= T_C(previous bucket's compute)
-  memory    M_C(next step) + M_C(i)       <= M_max
+  memory    M_C(bucket + i)               <= M_max
 
 (paper Alg. 1 lines 4-5 / 10-11; both directions must admit the merge since
 one plan serves forward and backward — the paper buckets "the corresponding
-reduce-scatter IR nodes of the all-gathers as well").
+reduce-scatter IR nodes of the all-gathers as well"). The first bucket has no
+preceding compute to hide behind (the exposed prologue gather, paper Fig. 2
+AG12); it is bounded by its own compute time and the memory cap.
 
-The first bucket has no preceding compute to hide behind (it is the exposed
-prologue gather, paper Fig. 2 AG12); it is bounded by its own compute time
-and the memory cap.
+`dp_buckets` — interval-partition dynamic program that minimizes the modeled
+STEADY-STATE exposed communication directly (the objective `greedy_buckets`
+only approximates through its local merge test).  The objective is the cyclic
+exposure of `partition_exposure`: bucket b's all-gather plus bucket b-1's
+delayed reduce-scatter hide behind bucket b-1's compute, with wraparound —
+bucket 0 of layer l hides behind the last bucket of layer l-1 (exactly the
+schedule `core/stack.py` realizes at bucket granularity).  States are
+(previous-bucket start, current boundary) pairs, transitions extend the last
+bucket, and the cyclic term is closed by enumerating the first bucket's
+boundary; the feasible set is every contiguous partition whose multi-node
+buckets fit the memory cap (singletons are exempt, matching greedy — a single
+parameter over the cap must still gather).  Because the search is exhaustive
+over that set and greedy's output lies inside it, the invariant
+
+    exposure(dp) <= exposure(greedy) <= exposure(per-param)
+
+holds by construction (the greedy result used in plans is itself guarded by
+`greedy_partition`, which falls back to per-param when a merge hurt the
+cyclic objective).  DeepCompile (arXiv 2504.09983) motivates optimizing the
+measured/modeled schedule directly over fixed heuristics for exactly this
+AG/RS-placement problem.
 
 `auto_layer_group` additionally answers "how many *whole layers* can share one
 bucket" — the cross-layer generalization the runtime exploits for scanned
@@ -24,6 +46,7 @@ from __future__ import annotations
 
 import math
 
+from repro.core import hw
 from repro.core.bucketing import BucketPlan
 from repro.core.dist import DistConfig
 from repro.core.irgraph import (BlockStats, CommNode, ag_time, build_nodes,
@@ -31,13 +54,18 @@ from repro.core.irgraph import (BlockStats, CommNode, ag_time, build_nodes,
 
 
 def greedy_buckets(nodes: list[CommNode], cfg: DistConfig,
-                   mem_limit: float | None = None) -> list[list[CommNode]]:
+                   mem_limit: float | None = None,
+                   cuts: frozenset[int] = frozenset()
+                   ) -> list[list[CommNode]]:
+    """`cuts`: node indices where a bucket MUST close (segment boundaries —
+    the runtime gathers per segment, so planning across one would describe
+    a schedule the stack cannot execute)."""
     if not nodes:
         return []
     m_max = cfg.autowrap_mem_limit if mem_limit is None else mem_limit
     buckets: list[list[CommNode]] = []
     cur: list[CommNode] = [nodes[0]]
-    for nd in nodes[1:]:
+    for k, nd in enumerate(nodes[1:], start=1):
         # bucket k+1's AG hides behind bucket k's compute; the FIRST bucket
         # (exposed prologue, paper Fig. 2) is bounded by its own compute so
         # comm-dominated graphs don't degenerate into one giant bucket.
@@ -50,7 +78,7 @@ def greedy_buckets(nodes: list[CommNode], cfg: DistConfig,
         # the effective cap for the incoming node (regression-tested in
         # tests/test_core.py::test_greedy_mem_cap_not_double_counted).
         mem_ok = sum(c.mem_bytes for c in cand) <= m_max
-        if time_ok and mem_ok:
+        if time_ok and mem_ok and k not in cuts:
             cur.append(nd)
         else:
             buckets.append(cur)
@@ -59,38 +87,307 @@ def greedy_buckets(nodes: list[CommNode], cfg: DistConfig,
     return buckets
 
 
+# ---------------------------------------------------------------------------
+# The modeled objective both planners are scored on.
+# ---------------------------------------------------------------------------
+def partition_exposure(buckets: list[list[CommNode]], cfg: DistConfig,
+                       pools: list[int] | None = None) -> float:
+    """Cyclic steady-state exposed collective time of a node partition.
+
+    Without `pools` (one pool per bucket): bucket i's all-gather and bucket
+    i-1's (rs_delay'ed) reduce-scatter hide behind bucket i-1's compute,
+    bucket 0 wrapping to the last bucket — Algorithm 1's idealized premise,
+    which matches the unsegmented runtime at LAYER granularity (one
+    whole-layer gather point per layer).
+
+    With `pools` (one id per bucket, consecutive buckets sharing an id form
+    one pool): buckets in a pool are all gathered at ONE program point —
+    `core/stack.gather_seg` issues every bucket of segment s+1 around
+    segment s's compute — so their AG (and the previous pool's RS) hide
+    behind the previous POOL's compute collectively; each bucket still pays
+    its own collective alpha. This is the executed schedule's exposure for
+    segmented blocks: intra-pool bucket boundaries only trade alpha against
+    the memory cap, they create no extra hiding windows.
+
+    The one-time prologue gather is amortized over the layer count and
+    ignored in both forms.
+    """
+    if not buckets:
+        return 0.0
+    if pools is None:
+        pools = list(range(len(buckets)))
+    # merge consecutive same-pool buckets into pooled AG/RS/compute terms
+    pooled: list[tuple[float, float, float]] = []   # (ag, rs, comp)
+    cur_id = None
+    for pid, grp in zip(pools, buckets):
+        if pid != cur_id:
+            pooled.append((0.0, 0.0, 0.0))
+            cur_id = pid
+        ag, rs, cp = pooled[-1]
+        pooled[-1] = (ag + ag_time(grp, cfg), rs + rs_time(grp, cfg),
+                      cp + comp_time(grp))
+    exposed = 0.0
+    k = len(pooled)
+    for i, (ag, _, _) in enumerate(pooled):
+        _, rs_prev, comp_prev = pooled[(i - 1) % k]
+        exposed += max(0.0, ag + rs_prev - comp_prev)
+    return exposed
+
+
+def per_param_partition(nodes: list[CommNode]) -> list[list[CommNode]]:
+    return [[nd] for nd in nodes]
+
+
+def greedy_partition(nodes: list[CommNode], cfg: DistConfig,
+                     mem_limit: float | None = None,
+                     cuts: frozenset[int] = frozenset()
+                     ) -> list[list[CommNode]]:
+    """Greedy buckets, guarded on the cyclic objective: Algorithm 1's local
+    merge test is acyclic, so on some workloads a merge it admits *worsens*
+    the steady-state exposure — never return a plan worse than no bucketing
+    under the planner's own model."""
+    if not nodes:
+        return []
+    buckets = greedy_buckets(nodes, cfg, mem_limit, cuts)
+    solo = per_param_partition(nodes)
+    if partition_exposure(buckets, cfg) > partition_exposure(solo, cfg):
+        return solo
+    return buckets
+
+
+# ---------------------------------------------------------------------------
+# Exposure-minimizing dynamic program.
+# ---------------------------------------------------------------------------
+def _linear_coll(cfg: DistConfig) -> tuple[float, float]:
+    """hw.collective_time_s over the FSDP axes is affine in the payload:
+    t(n) = alpha + beta*n. Derive (alpha, beta) from the model itself so the
+    DP's O(1) interval costs can never drift from the source of truth."""
+    alpha = hw.collective_time_s(0.0, cfg.axis_sizes, cfg.fsdp_axes)
+    beta = hw.collective_time_s(1.0, cfg.axis_sizes, cfg.fsdp_axes) - alpha
+    return alpha, beta
+
+
+def dp_buckets(nodes: list[CommNode], cfg: DistConfig,
+               mem_limit: float | None = None,
+               cuts: frozenset[int] = frozenset()) -> list[list[CommNode]]:
+    """Exact minimum-exposure contiguous partition (cyclic objective).
+
+    DP over (last-bucket start j, boundary i) states with O(1) interval
+    costs from prefix sums; the cyclic wraparound term is closed by
+    enumerating the first bucket's end. Feasibility matches greedy: buckets
+    of >1 node must fit the memory cap and may not span a forced cut
+    (segment boundary). Exhaustive over that set, so the result is <=
+    greedy's exposure by construction (asserted in tests and a
+    belt-and-braces min at the end).
+    """
+    n = len(nodes)
+    if n == 0:
+        return []
+    if n == 1:
+        return [list(nodes)]
+    m_max = cfg.autowrap_mem_limit if mem_limit is None else mem_limit
+    alpha, beta = _linear_coll(cfg)
+
+    agb = [0.0] * (n + 1)
+    rsb = [0.0] * (n + 1)
+    cpt = [0.0] * (n + 1)
+    memb = [0.0] * (n + 1)
+    for i, nd in enumerate(nodes):
+        agb[i + 1] = agb[i] + nd.ag_bytes
+        rsb[i + 1] = rsb[i] + nd.rs_bytes
+        cpt[i + 1] = cpt[i] + nd.t_comp()
+        memb[i + 1] = memb[i] + nd.mem_bytes
+
+    def feasible(i: int, j: int) -> bool:          # bucket = nodes[i:j]
+        if any(i < c < j for c in cuts):
+            return False
+        return j - i == 1 or memb[j] - memb[i] <= m_max
+
+    def cost(h: int, i: int, j: int) -> float:     # prev nodes[h:i], cur [i:j]
+        t_ag = alpha + beta * (agb[j] - agb[i])
+        t_rs = alpha + beta * (rsb[i] - rsb[h])
+        return max(0.0, t_ag + t_rs - (cpt[i] - cpt[h]))
+
+    def wrap_cost(j: int, f: int) -> float:        # first [0:f] after last [j:n]
+        t_ag = alpha + beta * agb[f]
+        t_rs = alpha + beta * (rsb[n] - rsb[j])
+        return max(0.0, t_ag + t_rs - (cpt[n] - cpt[j]))
+
+    best_total = math.inf
+    best_cut: list[int] | None = None
+
+    if feasible(0, n):   # the single-bucket partition wraps onto itself
+        e = max(0.0, (alpha + beta * agb[n]) + (alpha + beta * rsb[n])
+                - cpt[n])
+        best_total, best_cut = e, [0, n]
+
+    for f in range(1, n):                          # first bucket = nodes[0:f]
+        if not feasible(0, f):
+            continue
+        # dp[i][j]: min exposure of nodes[0:i] whose last bucket is
+        # nodes[j:i], counting each non-first bucket's term (the first
+        # bucket's own cyclic term is added by wrap_cost at closure).
+        dp: list[dict[int, float]] = [dict() for _ in range(n + 1)]
+        parent: list[dict[int, int]] = [dict() for _ in range(n + 1)]
+        dp[f][0] = 0.0
+        for i in range(f, n):
+            for j, base in dp[i].items():
+                for t in range(i + 1, n + 1):
+                    if not feasible(i, t):
+                        continue
+                    cand = base + cost(j, i, t)
+                    if cand < dp[t].get(i, math.inf):
+                        dp[t][i] = cand
+                        parent[t][i] = j
+        for j, val in dp[n].items():
+            total = val + wrap_cost(j, f)
+            if total < best_total:
+                bounds, end, start = [n], n, j
+                while start > 0:
+                    bounds.append(start)
+                    end, start = start, parent[end][start]
+                bounds.append(0)
+                best_total, best_cut = total, bounds[::-1]
+
+    assert best_cut is not None   # per-param partition is always feasible
+    buckets = [list(nodes[a:b]) for a, b in zip(best_cut, best_cut[1:])]
+
+    # Belt and braces: the invariant exposure(dp) <= exposure(greedy) must
+    # survive any future drift between cost() and partition_exposure().
+    greedy = greedy_partition(nodes, cfg, mem_limit, cuts)
+    if partition_exposure(greedy, cfg) < partition_exposure(buckets, cfg):
+        return greedy
+    return buckets
+
+
+# ---------------------------------------------------------------------------
+# Plan-level entry points (consumed by bucketing.plan_for).
+# ---------------------------------------------------------------------------
+def _segment_order(metas_tree, segments):
+    """Execution-order view of a segmented block: node permutation
+    (segment-major, flatten order within a segment), the forced cuts at
+    segment starts (in permuted index space), and the segment id of each
+    permuted node. The stack executes gathers in exactly this order."""
+    from repro.core.bucketing import assign_segments
+    from repro.core.meta import named_leaves
+
+    names = [k for k, _ in named_leaves(metas_tree)]
+    seg_of = assign_segments(names, segments.param_globs, segments.names)
+    perm = sorted(range(len(names)), key=lambda i: (seg_of[i], i))
+    seg_x = [seg_of[i] for i in perm]
+    cuts = frozenset(i for i in range(1, len(perm))
+                     if seg_x[i] != seg_x[i - 1])
+    return perm, cuts, seg_x
+
+
+def _min_count_packing(nodes: list[CommNode], m_max: float,
+                       cuts: frozenset[int]) -> list[list[CommNode]]:
+    """Fewest contiguous buckets under the memory cap, closing at forced
+    cuts (singletons exempt from the cap, as everywhere). Under the POOLED
+    exposure objective this is exact: intra-segment bucket boundaries only
+    add collective alpha, so fewer buckets strictly dominate."""
+    buckets: list[list[CommNode]] = []
+    cur: list[CommNode] = []
+    for k, nd in enumerate(nodes):
+        if cur and (k in cuts
+                    or sum(c.mem_bytes for c in cur) + nd.mem_bytes > m_max):
+            buckets.append(cur)
+            cur = []
+        cur.append(nd)
+    if cur:
+        buckets.append(cur)
+    return buckets
+
+
+def _active(segments) -> bool:
+    return segments is not None and len(segments.fns) > 1
+
+
 def auto_plan(metas_tree, cfg: DistConfig,
-              stats: BlockStats | None = None) -> BucketPlan:
+              stats: BlockStats | None = None,
+              segments=None) -> BucketPlan:
+    """Paper Algorithm 1 (guarded greedy) -> BucketPlan.
+
+    With `segments` (models/common.BlockSegments) the walk runs in
+    execution order with forced cuts at segment boundaries and the guard
+    scores the POOLED exposure — i.e. the schedule the segmented runtime
+    executes, not the flatten-order fiction."""
     nodes = build_nodes(metas_tree, cfg, stats)
-    buckets = greedy_buckets(nodes, cfg)
+    if not _active(segments):
+        buckets = greedy_partition(nodes, cfg)
+    else:
+        perm, cuts, seg_x = _segment_order(metas_tree, segments)
+        nodes_x = [nodes[i] for i in perm]
+        buckets = greedy_buckets(nodes_x, cfg, cuts=cuts)
+        pools = _bucket_pools(buckets, seg_x)
+        solo = per_param_partition(nodes_x)
+        if partition_exposure(buckets, cfg, pools) \
+                > partition_exposure(solo, cfg, seg_x):
+            buckets = solo
     return BucketPlan(tuple(tuple(n.name for n in grp) for grp in buckets))
 
 
-def exposed_comm_time(plan: BucketPlan, metas_tree, cfg: DistConfig,
-                      stats: BlockStats | None = None) -> dict:
-    """Analytic exposure of a plan: how much collective time is NOT hidden.
+def auto_dp_plan(metas_tree, cfg: DistConfig,
+                 stats: BlockStats | None = None,
+                 segments=None) -> BucketPlan:
+    """Exposure-minimizing planner -> BucketPlan (bucket_mode='auto_dp').
 
-    Used by benchmarks/fig4 to compare manual vs auto plans the way the
-    paper's Figure 4 compares their throughput.
+    Unsegmented blocks: the exact interval DP over the cyclic per-bucket
+    objective. Segmented blocks: the executed schedule pools each segment's
+    gathers at one program point, so the exact minimizer of the pooled
+    objective is minimum-bucket-count packing per segment under the memory
+    cap (fewer collectives = less alpha; hiding windows are fixed by the
+    segment chain)."""
+    nodes = build_nodes(metas_tree, cfg, stats)
+    if not _active(segments):
+        buckets = dp_buckets(nodes, cfg)
+    else:
+        m_max = cfg.autowrap_mem_limit
+        perm, cuts, _ = _segment_order(metas_tree, segments)
+        buckets = _min_count_packing([nodes[i] for i in perm], m_max, cuts)
+    return BucketPlan(tuple(tuple(n.name for n in grp) for grp in buckets))
+
+
+def _bucket_pools(buckets: list[list[CommNode]],
+                  seg_of_node: list[int]) -> list[int]:
+    """Segment id per bucket, from the segment of each bucket's first node
+    (buckets never span segments once cuts are enforced)."""
+    pos = 0
+    pools = []
+    for b in buckets:
+        pools.append(seg_of_node[pos])
+        pos += len(b)
+    return pools
+
+
+def exposed_comm_time(plan: BucketPlan, metas_tree, cfg: DistConfig,
+                      stats: BlockStats | None = None,
+                      segments=None) -> dict:
+    """Modeled exposure of a plan: how much collective time is NOT hidden.
+
+    With `segments`, the plan is first rewritten to the partition the
+    segmented runtime executes (split at segment boundaries, segment-major
+    order) and scored with pooled hiding windows — so fig4 /
+    BENCH_overlap.json / the dryrun rows all describe the schedule
+    core/stack actually runs. Without segments, the per-bucket cyclic model
+    (Alg. 1's premise) applies.
     """
     nodes = {n.name: n for n in build_nodes(metas_tree, cfg, stats)}
+    pools = None
+    if _active(segments):
+        from repro.core.bucketing import (assign_segments,
+                                          split_plan_at_segments)
+        from repro.core.meta import named_leaves
+
+        plan = split_plan_at_segments(plan, metas_tree, segments)
+        names = [k for k, _ in named_leaves(metas_tree)]
+        seg_of = assign_segments(names, segments.param_globs, segments.names)
+        name_seg = dict(zip(names, seg_of))
+        pools = [name_seg[grp[0]] for grp in plan.groups]
     groups = [[nodes[name] for name in grp] for grp in plan.groups]
-    # STEADY-STATE exposure across the scanned layer stack: bucket i of
-    # layer l prefetches behind bucket i-1's compute (cyclically — bucket 0
-    # hides behind the previous layer's last bucket). The one-time prologue
-    # gather is amortized over L layers and ignored here.
-    exposed = 0.0
-    total_comm = 0.0
-    n = len(groups)
-    for i, grp in enumerate(groups):
-        t_ag = ag_time(grp, cfg)
-        t_rs = rs_time(grp, cfg)
-        total_comm += t_ag + t_rs
-        prev = groups[(i - 1) % n]
-        hide = comp_time(prev)
-        exposed += max(0.0, t_ag + rs_time(prev, cfg) - hide)
+    total_comm = sum(ag_time(g, cfg) + rs_time(g, cfg) for g in groups)
     return {
-        "exposed_s": exposed,
+        "exposed_s": partition_exposure(groups, cfg, pools),
         "total_comm_s": total_comm,
         "compute_s": comp_time(list(nodes.values())),
         "n_buckets": len(groups),
@@ -109,7 +406,11 @@ def auto_layer_group(layer_nodes: list[CommNode], cfg: DistConfig,
         grp = layer_nodes * k
         if ag_time(grp, cfg) + rs_time(grp, cfg) > comp_time(grp):
             break
-        if 2 * sum(n.mem_bytes for n in grp) > m_max:
+        # Single-count cap, same accounting as greedy_buckets: the candidate
+        # bucket's bytes are counted once (an ad-hoc 2x multiplier here
+        # halved the effective cap relative to greedy — regression-tested in
+        # tests/test_autowrap.py::test_auto_layer_group_mem_single_counted).
+        if sum(n.mem_bytes for n in grp) > m_max:
             break
         best = k
     return best

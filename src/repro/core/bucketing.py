@@ -6,7 +6,9 @@ ordered groups. It is produced either
 
   * manually (`manual_plan`) from user module-name lists — the paper's
     manual wrapping (FSDP2-style per-transformer-block in the evals), or
-  * automatically (`core/autowrap.py`) by the greedy Algorithm 1.
+  * automatically (`core/autowrap.py`) by the greedy Algorithm 1
+    (``bucket_mode="auto"``) or by the exposure-minimizing interval DP
+    (``bucket_mode="auto_dp"``).
 
 The runtime consumers are `collectives.replicate_tree` (vanilla path) and
 `core/stack.py` (prefetch-scheduled scan), which issue ONE packed collective
@@ -17,11 +19,14 @@ from __future__ import annotations
 
 import dataclasses
 import fnmatch
+import logging
 
 import jax
 
 from repro.core.dist import DistConfig
 from repro.core.meta import ParamMeta, named_leaves
+
+log = logging.getLogger("repro.bucketing")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,6 +71,48 @@ class BucketPlan:
         ]
 
 
+def assign_segments(names: list[str], param_globs, seg_names) -> list[int]:
+    """Map each block-param name to the first segment whose globs match it
+    (models/common.BlockSegments contract; consumed by core/stack and the
+    segment-aware planners). Raises on unassigned params."""
+    seg_of: list = [None] * len(names)
+    for s, globs in enumerate(param_globs):
+        for i, n in enumerate(names):
+            if seg_of[i] is None and any(fnmatch.fnmatch(n, g)
+                                         for g in globs):
+                seg_of[i] = s
+    missing = [n for n, s in zip(names, seg_of) if s is None]
+    if missing:
+        raise ValueError(
+            f"block segments {tuple(seg_names)} leave params unassigned: "
+            f"{missing}; every param must match one segment's globs")
+    return seg_of
+
+
+def split_plan_at_segments(plan: BucketPlan, metas_tree,
+                           segments) -> BucketPlan:
+    """The partition the runtime executes for `plan` under a segmented
+    block: groups split at segment boundaries (a bucket must be gathered no
+    later than the first segment consuming any of its params), segment-major
+    order. THE single implementation of this rewrite — core/stack applies it
+    before scheduling and exposed_comm_time before scoring, so 'scored' and
+    'executed' cannot drift."""
+    if segments is None:
+        return plan
+    names = [k for k, _ in named_leaves(metas_tree)]
+    seg_of = assign_segments(names, segments.param_globs, segments.names)
+    pos = {n: i for i, n in enumerate(names)}
+    n_seg = len(segments.names)
+    out: list[list[tuple[str, ...]]] = [[] for _ in range(n_seg)]
+    for grp in plan.index_groups(metas_tree):
+        by_seg: dict[int, list[int]] = {}
+        for i in grp:
+            by_seg.setdefault(seg_of[i], []).append(i)
+        for s in sorted(by_seg):
+            out[s].append(tuple(names[i] for i in sorted(by_seg[s])))
+    return BucketPlan(tuple(g for s in range(n_seg) for g in out[s]))
+
+
 def per_param_plan(metas_tree) -> BucketPlan:
     """No bucketing: one collective per parameter (paper's 'vanilla')."""
     return BucketPlan(tuple((k,) for k, _ in named_leaves(metas_tree)))
@@ -97,16 +144,85 @@ def manual_plan(metas_tree, module_lists: list[list[str]]) -> BucketPlan:
     return BucketPlan(tuple(groups))
 
 
-def plan_for(metas_tree, cfg: DistConfig, block_stats=None) -> BucketPlan:
-    """Resolve cfg.bucket_mode into a concrete plan for one block."""
+# ---------------------------------------------------------------------------
+# Plan resolution + memoization.
+#
+# plan_for runs at TRACE time, once per layer-stack trace — and jit retraces
+# (new shapes, donated buffers, microbatch variants) would re-run the auto
+# planners (the DP one is exhaustive) on identical inputs. Plans depend only
+# on (named metas, cfg, stats), all value-like, so they are memoized on that
+# key; the chosen auto plan and its modeled exposure are logged once per key
+# (the dryrun path records the same numbers into its result rows).
+# ---------------------------------------------------------------------------
+_PLAN_CACHE: dict[tuple, BucketPlan] = {}
+
+
+def clear_plan_cache() -> None:
+    _PLAN_CACHE.clear()
+
+
+def _plan_cache_key(metas_tree, cfg: DistConfig, block_stats,
+                    seg_key) -> tuple:
+    import jax.numpy as jnp
+
+    metas_key = tuple(
+        (k, m.global_shape, m.tp_dim, str(jnp.dtype(m.dtype)))
+        for k, m in named_leaves(metas_tree)
+    )
+    stats_key = block_stats.cache_key() if block_stats is not None else None
+    return (metas_key, cfg, stats_key, seg_key)
+
+
+def _resolve_plan(metas_tree, cfg: DistConfig, block_stats,
+                  segments) -> BucketPlan:
     if cfg.bucket_mode == "none":
         return per_param_plan(metas_tree)
     if cfg.bucket_mode == "block":
         return whole_block_plan(metas_tree)
-    if cfg.bucket_mode == "auto":
-        from repro.core.autowrap import auto_plan
+    if cfg.bucket_mode in ("auto", "auto_dp"):
+        from repro.core.autowrap import (auto_dp_plan, auto_plan,
+                                         exposed_comm_time)
 
-        return auto_plan(metas_tree, cfg, block_stats)
+        planner = auto_plan if cfg.bucket_mode == "auto" else auto_dp_plan
+        plan = planner(metas_tree, cfg, block_stats, segments=segments)
+        r = exposed_comm_time(plan, metas_tree, cfg, block_stats,
+                              segments=segments)
+        log.info(
+            "bucket_mode=%s (stats=%s): %d buckets, exposed=%.1fus "
+            "comm=%.1fus compute=%.1fus, plan=%s",
+            cfg.bucket_mode,
+            getattr(block_stats, "source", "default"),
+            r["n_buckets"], r["exposed_s"] * 1e6, r["total_comm_s"] * 1e6,
+            r["compute_s"] * 1e6, [list(g) for g in plan.groups])
+        return plan
     if isinstance(cfg.bucket_mode, BucketPlan):
         return cfg.bucket_mode
     raise ValueError(f"unknown bucket_mode {cfg.bucket_mode!r}")
+
+
+def _active_segments(metas_tree, cfg: DistConfig, segments):
+    """Segments the runtime will actually execute (reorder +
+    segment_prefetch + >1 segment) — only then do the auto planners plan in
+    execution order with pooled hiding windows, so planned exposure ==
+    executed exposure. Returns (segments-or-None, hashable cache key)."""
+    if (segments is None or not cfg.reorder or not cfg.segment_prefetch
+            or len(segments.fns) <= 1):
+        return None, None
+    names = [k for k, _ in named_leaves(metas_tree)]
+    seg_of = assign_segments(names, segments.param_globs, segments.names)
+    return segments, tuple(seg_of)
+
+
+def plan_for(metas_tree, cfg: DistConfig, block_stats=None,
+             segments=None) -> BucketPlan:
+    """Resolve cfg.bucket_mode into a concrete plan for one block (memoized
+    per (metas, cfg, stats, segment assignment) so retraces don't re-run
+    the planners). `segments` (models/common.BlockSegments) makes the auto
+    planners plan the segmented schedule the stack executes."""
+    active, seg_key = _active_segments(metas_tree, cfg, segments)
+    key = _plan_cache_key(metas_tree, cfg, block_stats, seg_key)
+    plan = _PLAN_CACHE.get(key)
+    if plan is None:
+        plan = _PLAN_CACHE[key] = _resolve_plan(metas_tree, cfg,
+                                                block_stats, active)
+    return plan

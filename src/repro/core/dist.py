@@ -57,8 +57,16 @@ class DistConfig:
     gather_in_param_dtype: bool = True
 
     # SimpleFSDP schedule knobs (paper SS3.2, Tables 5/6) ----------------------
-    bucket_mode: str = "block"           # 'none' | 'block' | 'auto'
+    # 'none' | 'block' | 'auto' (greedy Alg. 1) | 'auto_dp' (exposure-
+    # minimizing DP, core/autowrap.py) | an explicit BucketPlan.
+    bucket_mode: str = "block"
     reorder: bool = True                 # prefetch next bucket (reordering)
+    # Pipeline the prefetch at BUCKET granularity when the model declares
+    # block segments (models/common.BlockSegments): segment b's compute
+    # overlaps bucket b+1's all-gather within the layer, and the last bucket
+    # prefetches layer i+1's first bucket across the boundary. Off = one
+    # whole-layer gather point per layer (the pre-v2 schedule).
+    segment_prefetch: bool = True
     # Table 6 ablation: issue the prefetch AG before (True) or after (False)
     # the current block's compute, in forward and backward respectively.
     ag_before_wait_fwd: bool = True

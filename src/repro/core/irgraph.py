@@ -40,12 +40,29 @@ class CommNode:
 
 @dataclasses.dataclass(frozen=True)
 class BlockStats:
-    """Per-block analytic workload: {param name: (flops, bytes_accessed)}
-    for the op consuming each param, plus activation footprint."""
+    """Per-block workload: {param name: (flops, bytes_accessed)} for the op
+    consuming each param, plus activation footprint.
+
+    ``source`` records where the numbers came from:
+      * ``"analytic"``  — the hw.py roofline model (models' `block_stats()`),
+      * ``"measured"``  — harvested from XLA's ``compiled.cost_analysis()``
+        by `launch/dryrun.harvest_block_stats` (totals measured, distributed
+        across params in proportion to the analytic shares).
+    The planners treat both identically; the dryrun records which one fed a
+    plan so perf numbers are attributable.
+    """
 
     param_flops: dict[str, float]
     param_bytes: dict[str, float]
     act_bytes: float = 0.0
+    source: str = "analytic"
+
+    def cache_key(self) -> tuple:
+        """Hashable identity for plan memoization (dict fields break the
+        generated __hash__)."""
+        return (self.source, self.act_bytes,
+                tuple(sorted(self.param_flops.items())),
+                tuple(sorted(self.param_bytes.items())))
 
 
 def build_nodes(metas_tree, cfg: DistConfig,

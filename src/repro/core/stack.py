@@ -12,31 +12,53 @@ communication is independent of the compute it must overlap (DESIGN.md SS2):
       Backward collectives come from the `gather_group` custom_vjp.
 
   reorder=True   (bucketing + reordering, paper Fig. 2)
-      A hand-scheduled double-buffered scan with a custom VJP:
-        forward  — the scan carry holds layer i's gathered bucket; the body
-                   first issues bucket i+1's all-gather (AG_{i+1} "before
-                   Wa_i"), then computes layer i. Saves ONLY per-layer block
-                   inputs (= full activation checkpointing).
-        backward — re-gathers bucket i-1 while layer i recomputes+grads
-                   (re-gather = the selective-AC MUST_RECOMPUTE semantics),
-                   and optionally delays layer i+1's packed reduce-scatter to
-                   the start of layer i's step so RS overlaps compute
-                   ("Wr12 before RS34").
-      The Table-6 ablation flags (ag_before_wait_fwd/bwd, rs_delay) flip these
-      placements; the "after" variants insert an optimization_barrier to
-      force the sequential schedule they name.
+      A hand-scheduled double-buffered scan with a custom VJP, pipelined at
+      BUCKET granularity.  The layer is an ordered chain of *segments*
+      (models/common.BlockSegments — e.g. attn / mlp); the bucket plan is
+      split at segment boundaries so every bucket belongs to exactly one
+      segment, and the schedule realizes Algorithm 1's premise inside the
+      layer, not just across layers:
+
+        forward  — the scan carry holds the gathered FIRST bucket group of
+                   layer i; segment s's compute overlaps segment s+1's
+                   all-gather (AG_{s+1} "before Wa_s"), and the last segment
+                   prefetches layer i+1's first bucket across the layer
+                   boundary. Saves ONLY per-layer block inputs (= full
+                   activation checkpointing) — the carry now holds one
+                   bucket group instead of a whole gathered layer.
+        backward — re-gathers bucket by bucket while the layer recomputes
+                   segment by segment (re-gather = the selective-AC
+                   MUST_RECOMPUTE semantics): segment s's recompute overlaps
+                   segment s+1's gather, the last segment prefetches layer
+                   i-1's first bucket, and under rs_delay the previous
+                   layer's per-bucket reduce-scatters are interleaved with
+                   this layer's backward segment sweep ("Wr12 before RS34",
+                   one RS issue point per bucket).
+
+      Models that declare no segments (or cfg.segment_prefetch=False) run
+      the same machinery with a single whole-layer segment, which is exactly
+      the pre-v2 schedule. The Table-6 ablation flags (ag_before_wait_fwd/
+      bwd, rs_delay) keep their meanings at segment granularity; the "after"
+      variants insert an optimization_barrier to force the sequential
+      schedule they name.
 
 The first (forward) / last (backward) iteration is peeled out of the scan so
 every carried value gets its true varying-manual-axes (vma) type from real
 computation — scan carries must type-match exactly under shard_map vma.
 
-Block contract:
+Block contract (unsegmented):
     block_fn(params_full, consts, x) -> (y, aux)
       params_full : pytree of TP-local compute tensors (structure == metas)
       consts      : pytree treated as constants (rope caches, masks) — zero
                     cotangent (stop-grad)
       x / y       : activation carry pytree (same structure both sides)
       aux         : dict of scalars summed over layers (MoE aux loss etc.)
+
+Segmented contract (models/common.BlockSegments): fns[s](params, consts,
+state) -> state, where `params` is the full metas-shaped pytree with ONLY
+segment s's leaves populated (others None — touching a foreign leaf fails at
+trace time, which is what keeps the bucket pipelining honest), state_0 is the
+block input x and the last segment returns (y, aux).
 """
 
 from __future__ import annotations
@@ -50,7 +72,8 @@ from jax import lax
 
 from repro.core import collectives as coll
 from repro.core import compat
-from repro.core.bucketing import BucketPlan, plan_for
+from repro.core.bucketing import (BucketPlan, assign_segments, plan_for,
+                                  split_plan_at_segments)
 from repro.core.dist import DistConfig
 from repro.core.meta import ParamMeta, named_leaves
 from repro.core.remat import maybe_remat
@@ -73,13 +96,20 @@ def _zero_cotangent(x):
 
 def apply_stack(block_fn: Callable, metas_tree, cfg: DistConfig,
                 stacked, consts, x, plan: BucketPlan | None = None,
-                block_stats=None):
-    """Run the layer stack; returns (y, aux_sums)."""
+                block_stats=None, segments=None):
+    """Run the layer stack; returns (y, aux_sums).
+
+    `segments` is an optional models/common.BlockSegments declaring the
+    ordered segment chain of one block; with cfg.segment_prefetch it enables
+    bucket-granular pipelining on the reorder path (ignored by vanilla) and
+    makes the auto planners respect segment boundaries, so the planned
+    partition is the one the schedule executes.
+    """
     if plan is None:
-        plan = plan_for(metas_tree, cfg, block_stats)
+        plan = plan_for(metas_tree, cfg, block_stats, segments=segments)
     if cfg.reorder:
         return _prefetch_stack(block_fn, metas_tree, cfg, plan, stacked,
-                               consts, x)
+                               consts, x, segments)
     return _vanilla_stack(block_fn, metas_tree, cfg, plan, stacked, consts, x)
 
 
@@ -114,21 +144,47 @@ def _vanilla_stack(block_fn, metas_tree, cfg, plan, stacked, consts, x):
 
 
 # ---------------------------------------------------------------------------
-# Prefetch: double-buffered scan with hand-written VJP.
+# Prefetch: bucket-granular double-buffered scan with hand-written VJP.
 # ---------------------------------------------------------------------------
-def _prefetch_stack(block_fn, metas_tree, cfg, plan, stacked, consts, x):
+def _prefetch_stack(block_fn, metas_tree, cfg, plan, stacked, consts, x,
+                    segments=None):
     metas, treedef = _meta_leaves(metas_tree)
-    groups = plan.index_groups(metas_tree)
+    names = [k for k, _ in named_leaves(metas_tree)]
     stacked_leaves = treedef.flatten_up_to(stacked)
     L = stacked_leaves[0].shape[0]
     shard_shapes = [m.shard_shape(cfg) for m in metas]
 
-    def slice_layer(leaves, idx):
-        return [lax.dynamic_index_in_dim(s, idx, 0, keepdims=False)
-                for s in leaves]
+    if (segments is not None and cfg.segment_prefetch
+            and len(segments.fns) > 1):
+        seg_fns = tuple(segments.fns)
+        seg_of = assign_segments(names, segments.param_globs, segments.names)
+        # the executed partition: split at segment boundaries, segment-major
+        # (the SAME rewrite exposed_comm_time scores — one implementation)
+        plan = split_plan_at_segments(plan, metas_tree, segments)
+    else:
+        # single whole-layer segment == the pre-segmentation schedule
+        seg_fns = (lambda params, cst, state: block_fn(params, cst, state),)
+        seg_of = [0] * len(names)
+    S = len(seg_fns)
 
-    def gather_layer(leaves, idx, barrier=None):
-        shards = slice_layer(leaves, idx)
+    seg_groups: list[list[list[int]]] = [[] for _ in range(S)]
+    for grp in plan.index_groups(metas_tree):
+        seg_groups[seg_of[grp[0]]].append(grp)
+    # flat group order is segment-major — the RS finalization order
+    flat_groups = [g for s in range(S) for g in seg_groups[s]]
+    seg_base = [sum(len(seg_groups[t]) for t in range(s)) for s in range(S)]
+    seg_idxs = [sorted(i for g in seg_groups[s] for i in g)
+                for s in range(S)]
+    pos_in = [{i: p for p, i in enumerate(idxs)} for idxs in seg_idxs]
+
+    def slice_seg(leaves, idx, s):
+        return [lax.dynamic_index_in_dim(leaves[i], idx, 0, keepdims=False)
+                for i in seg_idxs[s]]
+
+    def gather_seg(leaves, idx, s, barrier=None):
+        """Gather segment s's bucket groups of layer `idx` (one packed AG
+        per vma class per group); returns tensors ordered as seg_idxs[s]."""
+        shards = slice_seg(leaves, idx, s)
         if barrier is not None:
             # Table-6 'after' placement: tie the gather's inputs to the
             # previous compute so it cannot be scheduled ahead of it.
@@ -149,44 +205,58 @@ def _prefetch_stack(block_fn, metas_tree, cfg, plan, stacked, consts, x):
                 return tokens[key]
 
             shards = [
-                lax.optimization_barrier((s, tok(compat.vma_of(s))))[0]
-                for s in shards
+                lax.optimization_barrier((sh, tok(compat.vma_of(sh))))[0]
+                for sh in shards
             ]
         full: list = [None] * len(shards)
-        for grp in groups:
+        for grp in seg_groups[s]:
             outs = coll.gather_group_fwd_raw(
-                [shards[i] for i in grp], [metas[i] for i in grp], cfg)
+                [shards[pos_in[s][i]] for i in grp],
+                [metas[i] for i in grp], cfg)
             for i, o in zip(grp, outs):
-                full[i] = o
+                full[pos_in[s][i]] = o
         return full
 
-    def block_on(full_leaves, xc, cst):
-        params = jax.tree_util.tree_unflatten(treedef, full_leaves)
-        return block_fn(params, cst, xc)
+    def seg_apply(s, g_seg, cst, state):
+        """Run segment s on its gathered tensors (masked full-tree view)."""
+        full: list = [None] * len(metas)
+        for i, t in zip(seg_idxs[s], g_seg):
+            full[i] = t
+        params = jax.tree_util.tree_unflatten(treedef, full)
+        return seg_fns[s](params, cst, state)
 
     # -------------------------------------------------- forward (primal) --
-    def one_fwd(leaves, g, xc, nxt_idx, cst):
-        """One layer: prefetch bucket `nxt_idx` around the compute."""
-        if cfg.ag_before_wait_fwd:
-            g_next = gather_layer(leaves, nxt_idx)            # AG before Wa
-            y, aux_l = block_on(g, xc, cst)
-        else:
-            y, aux_l = block_on(g, xc, cst)
-            g_next = gather_layer(leaves, nxt_idx, barrier=y)
-        return y, aux_l, g_next
+    def one_fwd(leaves, g, xc, idx, nxt_idx, cst, prefetch_last=True):
+        """Layer idx's segment chain; bucket s+1 gathers around segment s's
+        compute; the last segment prefetches layer nxt_idx's first bucket."""
+        state = xc
+        for s in range(S):
+            last = s == S - 1
+            t_idx, t_seg = (nxt_idx, 0) if last else (idx, s + 1)
+            do = (not last) or prefetch_last
+            g_next = None
+            if do and cfg.ag_before_wait_fwd:
+                g_next = gather_seg(leaves, t_idx, t_seg)   # AG before Wa
+            state = seg_apply(s, g, cst, state)
+            if do and not cfg.ag_before_wait_fwd:
+                g_next = gather_seg(leaves, t_idx, t_seg, barrier=state)
+            g = g_next
+        y, aux = state
+        return y, aux, g   # g = gathered first bucket of layer nxt_idx
 
     def fwd_scan(leaves, x0, cst):
-        g0 = gather_layer(leaves, 0)
+        g0 = gather_seg(leaves, 0, 0)   # exposed prologue gather (Fig. 2)
         if L == 1:
-            y, aux = block_on(g0, x0, cst)
+            y, aux, _ = one_fwd(leaves, g0, x0, 0, 0, cst,
+                                prefetch_last=False)
             return y, aux, jax.tree.map(lambda v: v[None], x0)
 
-        y, aux, g1 = one_fwd(leaves, g0, x0, 1, cst)   # peeled layer 0
+        y, aux, g1 = one_fwd(leaves, g0, x0, 0, 1, cst)   # peeled layer 0
 
         def body(carry, idx):
             xc, aux, g = carry
             nxt = jnp.minimum(idx + 1, L - 1)     # last prefetch is a no-op
-            yb, aux_l, g_next = one_fwd(leaves, g, xc, nxt, cst)
+            yb, aux_l, g_next = one_fwd(leaves, g, xc, idx, nxt, cst)
             return (yb, jax.tree.map(jnp.add, aux, aux_l), g_next), xc
 
         (y, aux, _), xs_rest = lax.scan(body, (y, aux, g1),
@@ -199,43 +269,87 @@ def _prefetch_stack(block_fn, metas_tree, cfg, plan, stacked, consts, x):
     def bwd_scan(leaves, xs, dy, daux, cst):
         x_treedef = jax.tree.structure(dy)
         xs_leaves = jax.tree.leaves(xs)
+        G = len(flat_groups)
 
-        def grads_to_buckets(dg_full_leaves):
+        def slice_x(idx):
+            sliced = [lax.dynamic_index_in_dim(v, idx, 0, keepdims=False)
+                      for v in xs_leaves]
+            return jax.tree_util.tree_unflatten(x_treedef, sliced)
+
+        def pack_seg(s, dg_seg):
+            """Segment s's param cotangents -> packed ct per bucket group."""
             return [
-                coll.pack_grad_bucket([dg_full_leaves[i] for i in grp],
+                coll.pack_grad_bucket([dg_seg[pos_in[s][i]] for i in grp],
                                       [metas[i] for i in grp], cfg)
-                for grp in groups
+                for grp in seg_groups[s]
             ]
 
+        def finalize_group(gi, ct, out):
+            """One bucket's RS -> per-leaf local grad chunks into `out`."""
+            grp = flat_groups[gi]
+            parts = coll.finalize_grad_bucket(
+                ct, [metas[i] for i in grp], cfg,
+                [shard_shapes[i] for i in grp])
+            for i, p in zip(grp, parts):
+                out[i] = p
+
         def finalize(pending):
-            """RS each bucket -> per-leaf local grad chunks (flatten order)."""
             out: list = [None] * len(metas)
-            for grp, ct in zip(groups, pending):
-                parts = coll.finalize_grad_bucket(
-                    ct, [metas[i] for i in grp], cfg,
-                    [shard_shapes[i] for i in grp])
-                for i, p in zip(grp, parts):
-                    out[i] = p
+            for gi, ct in enumerate(pending):
+                finalize_group(gi, ct, out)
             return out
 
-        def one_bwd(g_cur, idx, dx, prv_idx, prefetch):
-            """Recompute + vjp layer idx; prefetch bucket prv_idx."""
+        def one_bwd(g_first, idx, dx, prv_idx, prefetch, emit=None):
+            """Recompute + vjp layer idx, segment-pipelined.
+
+            g_first: gathered first bucket group of layer idx. The forward
+            recompute gathers bucket s+1 around segment s (re-gather =
+            selective-AC); the backward segment sweep interleaves the
+            delayed per-bucket RS of `emit` (the previous layer's pending
+            grads, rs_delay) and the cross-layer prefetch of layer
+            prv_idx's first bucket rides the schedule flag.
+            """
+            x_l = slice_x(idx)
+            # ---- forward recompute, bucket-pipelined gathers ----
+            vjps: list = [None] * S
+            state = x_l
+            g = g_first
             g_prev = None
-            if prefetch and cfg.ag_before_wait_bwd:
-                g_prev = gather_layer(leaves, prv_idx)
-            x_l = jax.tree_util.tree_unflatten(
-                x_treedef, slice_layer(xs_leaves, idx))
-            _, vjp_fn = jax.vjp(
-                lambda fl, xc: block_on(fl, xc, cst), g_cur, x_l)
-            dg_full, dx_new = vjp_fn((dx, daux))
+            for s in range(S):
+                last = s == S - 1
+                if cfg.ag_before_wait_bwd:
+                    if not last:
+                        g_next = gather_seg(leaves, idx, s + 1)
+                    elif prefetch:
+                        g_prev = gather_seg(leaves, prv_idx, 0)
+                state, vjps[s] = jax.vjp(
+                    lambda gl, st, s=s: seg_apply(s, gl, cst, st), g, state)
+                if not cfg.ag_before_wait_bwd and not last:
+                    g_next = gather_seg(leaves, idx, s + 1, barrier=state)
+                if not last:
+                    g = g_next
+            # ---- backward segment sweep, delayed RS interleaved ----
+            emitted = [None] * len(metas) if emit is not None else None
+            cts: list = [None] * G
+            ct = (dx, daux)
+            for s in reversed(range(S)):
+                if emit is not None:
+                    lo = (S - 1 - s) * G // S
+                    hi = (S - s) * G // S
+                    for gi in range(lo, hi):   # one RS issue point per bucket
+                        finalize_group(gi, emit[gi], emitted)
+                dg_seg, ct = vjps[s](ct)
+                for k, packed in enumerate(pack_seg(s, dg_seg)):
+                    cts[seg_base[s] + k] = packed
+            dx_new = ct
             if prefetch and not cfg.ag_before_wait_bwd:
-                g_prev = gather_layer(leaves, prv_idx, barrier=dx_new)
-            return grads_to_buckets(dg_full), dx_new, g_prev
+                g_prev = gather_seg(leaves, prv_idx, 0, barrier=dx_new)
+            return cts, dx_new, g_prev, emitted
 
         # peeled layer L-1
-        gL = gather_layer(leaves, L - 1)
-        pending, dx, g_cur = one_bwd(gL, L - 1, dy, max(L - 2, 0),
-                                     prefetch=L > 1)
+        gL = gather_seg(leaves, L - 1, 0)
+        pending, dx, g_cur, _ = one_bwd(gL, L - 1, dy, max(L - 2, 0),
+                                        prefetch=L > 1)
         if L == 1:
             d_last = finalize(pending)
             return [d[None] for d in d_last], dx
@@ -244,12 +358,13 @@ def _prefetch_stack(block_fn, metas_tree, cfg, plan, stacked, consts, x):
 
         def body(carry, idx):
             dx, g_cur, pending = carry
-            if cfg.rs_delay:
-                emitted = finalize(pending)   # layer idx+1's RS, issued first
             prv = jnp.maximum(idx - 1, 0)
-            pending_new, dx_new, g_prev = one_bwd(g_cur, idx, dx, prv,
-                                                  prefetch=True)
-            if not cfg.rs_delay:
+            if cfg.rs_delay:
+                pending_new, dx_new, g_prev, emitted = one_bwd(
+                    g_cur, idx, dx, prv, prefetch=True, emit=pending)
+            else:
+                pending_new, dx_new, g_prev, _ = one_bwd(
+                    g_cur, idx, dx, prv, prefetch=True)
                 emitted = finalize(pending_new)   # layer idx, immediate
                 pending_new = pending
             return (dx_new, g_prev, pending_new), emitted

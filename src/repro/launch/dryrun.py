@@ -16,6 +16,14 @@ extracts the roofline raw material:
   * compiled.as_text()          -> collective ops parsed into per-axis-class
                                    payload bytes (ICI vs DCN)
 
+It is also where measured planner inputs come from: `harvest_block_stats`
+compiles ONE block and turns its XLA cost/memory analysis into a measured
+`BlockStats` that replaces the analytic roofline defaults for the auto
+planners (`plan_for` with bucket_mode='auto'/'auto_dp'); the chosen plan and
+its modeled exposure are recorded on each auto-mode result row under
+"autowrap". Analytic stats remain the fallback when the local backend cannot
+cost the block (CPU-only containers with no cost model).
+
 Results land in benchmarks/results/dryrun_<mesh>.json; EXPERIMENTS.md
 sections SSDry-run and SSRoofline are generated from them.
 
@@ -38,8 +46,10 @@ from repro.core.compat import shard_map
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from repro.core import hw
+from repro.core import compat, hw
 from repro.core.dist import DistConfig
+from repro.core.irgraph import BlockStats
+from repro.core.meta import ParamMeta
 from repro.launch.mesh import make_production_mesh, production_dcfg
 from repro.models import runtime as RT
 from repro.models.common import SHAPE_SUITE, ShapeConfig, get_shape
@@ -148,11 +158,130 @@ def parse_collectives(hlo_text: str, dcfg: DistConfig) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# compiled-cost harvesting: measured BlockStats for the auto planners
+# ---------------------------------------------------------------------------
+def harvest_block_stats(model, dcfg: DistConfig,
+                        batch_shape) -> BlockStats | None:
+    """Measured per-block costs from XLA, as a `BlockStats` the planners use
+    in place of the analytic roofline model.
+
+    ONE block is compiled on the local backend over a degenerate 1x1 mesh
+    (so the model's TP collectives lower as no-ops) and its aggregate
+    HLO FLOPs / bytes-accessed are pulled from ``compiled.cost_analysis()``
+    and the activation footprint from ``memory_analysis().temp_size``.  XLA
+    reports per-executable totals, not per-op provenance, so the totals are
+    attributed to parameters in proportion to the analytic per-param shares:
+    the measured numbers calibrate the magnitudes (fusion wins, padding,
+    non-matmul ops the 2n default ignores) while the analytic model supplies
+    the within-block distribution.  Harvest at the same per-device
+    microbatch shape the cell runs.
+
+    Returns None whenever compilation or costing is unavailable (e.g. a
+    backend whose cost model reports no FLOPs) — callers fall back to the
+    analytic stats.
+    """
+    try:
+        saved = getattr(model, "measured_stats", None)
+        if hasattr(model, "measured_stats"):
+            model.measured_stats = None
+        try:
+            an_tgt = model.block_stats(dcfg, batch_shape)
+            dcfg1 = dcfg.with_(mesh_axes=("data", "model"),
+                               mesh_shape=(1, 1), fsdp_axes=("data",),
+                               tp_axis="model", pp_axis=None,
+                               microbatches=1)
+            an_ref = model.block_stats(dcfg1, batch_shape)
+        finally:
+            if hasattr(model, "measured_stats"):
+                model.measured_stats = saved
+
+        mesh1 = compat.make_mesh((1, 1), ("data", "model"),
+                                 devices=jax.devices()[:1])
+        metas = model.block_metas(dcfg1)
+        B, S = batch_shape
+        consts = model.consts(S, dcfg1)
+        x_abs = jax.ShapeDtypeStruct((B, S, model.cfg.d_model),
+                                     dcfg1.param_dtype)
+        params_abs = jax.tree.map(
+            lambda m: jax.ShapeDtypeStruct(m.local_shape(dcfg1),
+                                           dcfg1.param_dtype),
+            metas, is_leaf=lambda v: isinstance(v, ParamMeta))
+
+        def blk(params, x):
+            return model.block_fn(params, consts, x, dcfg1)
+
+        fn = shard_map(blk, mesh=mesh1, in_specs=(P(), P()),
+                       out_specs=P(), check_vma=False)
+        compiled = jax.jit(fn).lower(params_abs, x_abs).compile()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
+        flops = float(cost.get("flops", 0.0))
+        bts = float(cost.get("bytes accessed", 0.0))
+        act = float(compiled.memory_analysis().temp_size_in_bytes)
+        if flops <= 0.0:
+            return None
+
+        f_ref = sum(an_ref.param_flops.values())
+        b_ref = sum(an_ref.param_bytes.values())
+        f_scale = flops / f_ref if f_ref > 0 else 1.0
+        b_scale = bts / b_ref if b_ref > 0 and bts > 0 else 1.0
+        a_scale = act / an_ref.act_bytes if an_ref.act_bytes > 0 and act > 0 \
+            else 1.0
+        return BlockStats(
+            param_flops={k: v * f_scale
+                         for k, v in an_tgt.param_flops.items()},
+            param_bytes={k: v * b_scale
+                         for k, v in an_tgt.param_bytes.items()},
+            act_bytes=an_tgt.act_bytes * a_scale,
+            source="measured",
+        )
+    except Exception as e:
+        # Analytic fallback is legitimate on backends without a cost model,
+        # but the reason must be visible or a harvest regression silently
+        # reverts every auto plan to analytic stats.
+        print(f"[harvest] measured BlockStats unavailable "
+              f"({type(e).__name__}: {e}); falling back to analytic",
+              flush=True)
+        return None
+
+
+def _autowrap_record(model, dcfg: DistConfig, batch_shape, stats) -> dict:
+    """The partition the cell will EXECUTE + its modeled exposure (logged
+    into the dryrun row so perf numbers are attributable to a concrete
+    plan). exposed_comm_time rewrites the plan to the executed segmented
+    partition (split + segment-major + pooled hiding), matching fig4."""
+    from repro.core.autowrap import exposed_comm_time
+    from repro.core.bucketing import (_active_segments, plan_for,
+                                      split_plan_at_segments)
+
+    metas = model.block_metas(dcfg)
+    segments = model.block_segments(dcfg) \
+        if hasattr(model, "block_segments") else None
+    segments, _ = _active_segments(metas, dcfg, segments)
+    plan = plan_for(metas, dcfg, stats, segments=segments)
+    r = exposed_comm_time(plan, metas, dcfg, stats, segments=segments)
+    if segments is not None:
+        plan = split_plan_at_segments(plan, metas, segments)   # as executed
+    return {
+        "bucket_mode": str(dcfg.bucket_mode),
+        "stats_source": getattr(stats, "source", None) or "default",
+        "n_buckets": r["n_buckets"],
+        "exposed_us": r["exposed_s"] * 1e6,
+        "total_comm_us": r["total_comm_s"] * 1e6,
+        "compute_us": r["compute_s"] * 1e6,
+        "plan": [list(g) for g in plan.groups],
+    }
+
+
+# ---------------------------------------------------------------------------
 # per-cell lowering
 # ---------------------------------------------------------------------------
 def build_lowered(arch_id: str, shape_name: str, dcfg: DistConfig, mesh,
-                  bucket_mode="block", reorder=True):
+                  bucket_mode="block", reorder=True, measured_stats=None):
     cfg, model = get_arch(arch_id)
+    if measured_stats is not None and hasattr(model, "measured_stats"):
+        model.measured_stats = measured_stats
     shape = get_shape(shape_name)
     mb = MICROBATCH.get((arch_id, shape_name), 1)
     b_local = max(1, shape.global_batch // dcfg.dp_total)
@@ -295,7 +424,14 @@ def roofline_terms(cost: dict, colls: dict, model, shape: ShapeConfig,
 
 def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
              bucket_mode="block", reorder=True, zero3=False,
-             mesh_shape=None, microbatch=None) -> dict:
+             mesh_shape=None, microbatch=None, harvest=None) -> dict:
+    """Lower+compile one (arch, shape, mesh) cell.
+
+    `harvest`: None = harvest measured BlockStats iff an auto planner will
+    consume them; True/False force it. Harvested stats are plumbed into the
+    cell's model so `plan_for` plans over measured costs; on failure the
+    analytic model is the fallback and the row records which one fed the
+    plan."""
     cfg, model = get_arch(arch_id)
     if shape_name in cfg.skip_shapes:
         return {"arch": arch_id, "shape": shape_name,
@@ -315,9 +451,38 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
         dcfg = production_dcfg(multi_pod=multi_pod, zero3_global=zero3)
     if microbatch is not None:
         MICROBATCH[(arch_id, shape_name)] = microbatch
+
+    # ---- measured-cost harvest + plan record (auto planners) ----
+    if harvest is None:
+        harvest = bucket_mode in ("auto", "auto_dp")
+    measured = None
+    autowrap_rec = None
+    # bucket plans (and thus harvest/plan records) only exist on the
+    # training stack — serving paths run prefill/decode without apply_stack
+    if (harvest or bucket_mode in ("auto", "auto_dp")) \
+            and get_shape(shape_name).kind == "train":
+        _, model0 = get_arch(arch_id)
+        if hasattr(model0, "block_stats"):
+            shape0 = get_shape(shape_name)
+            mb0 = min(MICROBATCH.get((arch_id, shape_name), 1),
+                      max(1, shape0.global_batch // dcfg.dp_total))
+            b_local = max(1, shape0.global_batch // dcfg.dp_total // mb0)
+            bshape = (b_local, shape0.seq_len)
+            dcfg_plan = dcfg.with_(microbatches=mb0, bucket_mode=bucket_mode,
+                                   reorder=reorder)
+            if harvest:
+                measured = harvest_block_stats(model0, dcfg_plan, bshape)
+                if measured is not None:
+                    model0.measured_stats = measured
+            if bucket_mode in ("auto", "auto_dp"):
+                stats = model0.block_stats(dcfg_plan, bshape)
+                autowrap_rec = _autowrap_record(model0, dcfg_plan, bshape,
+                                                stats)
+
     t0 = time.time()
     lowered, model, shape, dcfg = build_lowered(arch_id, shape_name, dcfg,
-                                                mesh, bucket_mode, reorder)
+                                                mesh, bucket_mode, reorder,
+                                                measured_stats=measured)
     t_lower = time.time() - t0
     t0 = time.time()
     compiled = lowered.compile()
@@ -346,6 +511,8 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
         "bucket_mode": bucket_mode, "reorder": reorder,
         "microbatches": MICROBATCH.get((arch_id, shape_name), 1),
     }
+    if autowrap_rec is not None:
+        rec["autowrap"] = autowrap_rec
     return rec
 
 
@@ -361,6 +528,12 @@ def main():
     ap.add_argument("--mesh-shape", default=None,
                     help="alternative factorization, e.g. 64,4")
     ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--harvest-stats", dest="harvest", action="store_true",
+                    default=None,
+                    help="force measured BlockStats harvesting (default: "
+                         "only for auto bucket modes)")
+    ap.add_argument("--no-harvest-stats", dest="harvest",
+                    action="store_false")
     ap.add_argument("--tag", default=None, help="suffix for the result row")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
@@ -384,7 +557,8 @@ def main():
                            bucket_mode=args.bucket_mode,
                            reorder=not args.no_reorder,
                            zero3=args.zero3, mesh_shape=ms,
-                           microbatch=args.microbatch)
+                           microbatch=args.microbatch,
+                           harvest=args.harvest)
             if args.tag:
                 rec["tag"] = args.tag
         except Exception as e:

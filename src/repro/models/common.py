@@ -4,12 +4,19 @@
 `ShapeConfig` describes one assigned (seq_len, global_batch, kind) cell.
 TP-divisibility padding (head counts) is resolved here and recorded on the
 config so DESIGN.md's adaptation notes match the code.
+
+`BlockSegments` is the segmented block contract consumed by
+`core/stack._prefetch_stack`: it splits one block into an ordered chain of
+segments mapped to bucket groups, which is what lets the runtime pipeline
+all-gathers at BUCKET granularity (segment s's compute hides segment s+1's
+gather) instead of gathering the whole layer at one program point.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
+from typing import Callable
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,6 +40,43 @@ def get_shape(name: str) -> ShapeConfig:
         if s.name == name:
             return s
     raise KeyError(name)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSegments:
+    """Ordered segment chain of ONE block (the segmented block contract).
+
+    A block `block_fn(params, consts, x) -> (y, aux)` is re-expressed as a
+    chain  state_0 = x  ->  fns[0]  ->  ...  ->  fns[S-1]  ->  (y, aux):
+
+      * ``names``       — segment labels, execution order (e.g. attn, mlp);
+      * ``param_globs``  — per-segment fnmatch globs over the block's param
+        names (ParamMeta paths). Every param must match exactly one segment
+        — the FIRST whose globs match — and the segment that owns a param
+        must be the first that consumes it: segment s's gathered tensors
+        are the only ones populated when fns[s] runs (core/stack passes the
+        metas-shaped tree with foreign leaves set to None, so touching a
+        param owned by a later segment fails at trace time);
+      * ``fns``         — fns[s](params_masked, consts, state) -> state.
+        Intermediate state is any pytree; the last segment returns the
+        block's (y, aux).
+
+    Bucket plans are split at segment boundaries by the stack, so each
+    bucket belongs to one segment and the prefetch schedule (forward and
+    hand-written VJP) pipelines gather/compute per bucket. Declaring no
+    segments (or cfg.segment_prefetch=False) keeps the whole-layer gather
+    schedule.
+    """
+
+    names: tuple[str, ...]
+    param_globs: tuple[tuple[str, ...], ...]
+    fns: tuple[Callable, ...]
+
+    def __post_init__(self):
+        if not (len(self.names) == len(self.param_globs) == len(self.fns)):
+            raise ValueError("BlockSegments fields must be parallel, got "
+                             f"{len(self.names)}/{len(self.param_globs)}/"
+                             f"{len(self.fns)}")
 
 
 @dataclasses.dataclass(frozen=True)

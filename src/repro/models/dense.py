@@ -32,7 +32,7 @@ from repro.core.stack import apply_stack
 from repro.core import collectives as coll
 from repro.core.remat import maybe_remat
 from repro.models import layers as LY
-from repro.models.common import ArchConfig, ShapeConfig
+from repro.models.common import ArchConfig, BlockSegments, ShapeConfig
 
 
 class DenseLM:
@@ -43,6 +43,9 @@ class DenseLM:
         self.layers_per_step = 2 if cfg.local_global_alternate else 1
         assert cfg.n_layers % self.layers_per_step == 0
         self.n_steps = cfg.n_layers // self.layers_per_step
+        # measured BlockStats override (launch/dryrun.harvest_block_stats):
+        # when set, block_stats() returns it instead of the analytic model.
+        self.measured_stats: BlockStats | None = None
 
     # ------------------------------------------------------------- metas --
     def _sub_metas(self, dcfg: DistConfig, tag: str) -> dict:
@@ -150,7 +153,8 @@ class DenseLM:
         o = lax.psum(o, dcfg.tp_axis)
         return o
 
-    def _sub_block(self, p, consts, x, dcfg, window):
+    def _attn_half(self, p, consts, x, dcfg, window):
+        """Attention residual branch: consumes ln1 + attn.* (+pn1)."""
         cfg = self.cfg
         uo = cfg.post_norms  # gemma-style unit-offset norms
         h = LY.rmsnorm(x, p["ln1"], cfg.norm_eps, uo)
@@ -158,12 +162,21 @@ class DenseLM:
                           q_scale=self._q_scale)
         if cfg.post_norms:
             h = LY.rmsnorm(h, p["pn1"], cfg.norm_eps, uo)
-        x = x + h
+        return x + h
+
+    def _mlp_half(self, p, consts, x, dcfg):
+        """FFN residual branch: consumes ln2 + mlp.* (+pn2); returns aux."""
+        cfg = self.cfg
+        uo = cfg.post_norms
         h = LY.rmsnorm(x, p["ln2"], cfg.norm_eps, uo)
         h, aux = self._ffn_apply(p["mlp"], h, dcfg)
         if cfg.post_norms:
             h = LY.rmsnorm(h, p["pn2"], cfg.norm_eps, uo)
         return x + h, aux
+
+    def _sub_block(self, p, consts, x, dcfg, window):
+        x = self._attn_half(p, consts, x, dcfg, window)
+        return self._mlp_half(p, consts, x, dcfg)
 
     def block_fn(self, p, consts, x, dcfg: DistConfig):
         cfg = self.cfg
@@ -178,6 +191,60 @@ class DenseLM:
         x, aux1 = sub(p["local"], x, cfg.sliding_window)
         x, aux2 = sub(p["global"], x, None)
         return x, jax.tree.map(jnp.add, aux1, aux2)
+
+    def block_segments(self, dcfg: DistConfig) -> BlockSegments:
+        """Segmented block contract (attn / mlp residual branches).
+
+        Each segment consumes exactly the params its globs name, so the
+        prefetch stack can overlap the mlp bucket's all-gather with the attn
+        segment's compute (and layer i+1's attn bucket with the mlp
+        segment). The gemma2 local/global pair yields four segments; aux
+        from the local mlp rides the inter-segment state.
+        """
+        cfg = self.cfg
+        if self.layers_per_step == 1:
+            w = cfg.sliding_window if not cfg.local_global_alternate else None
+
+            def seg_attn(p, consts, x):
+                return self._attn_half(p, consts, x, dcfg, w)
+
+            def seg_mlp(p, consts, x):
+                return self._mlp_half(p, consts, x, dcfg)
+
+            return BlockSegments(
+                names=("attn", "mlp"),
+                param_globs=(("ln1", "attn/*", "pn1"),
+                             ("ln2", "mlp/*", "pn2")),
+                fns=(seg_attn, seg_mlp))
+
+        def l_attn(p, consts, x):
+            return self._attn_half(p["local"], consts, x, dcfg,
+                                   cfg.sliding_window)
+
+        def l_mlp(p, consts, x):
+            return self._mlp_half(p["local"], consts, x, dcfg)
+
+        def g_attn(p, consts, st):
+            x, aux = st
+            return self._attn_half(p["global"], consts, x, dcfg, None), aux
+
+        def g_mlp(p, consts, st):
+            x, aux = st
+            y, aux2 = self._mlp_half(p["global"], consts, x, dcfg)
+            return y, jax.tree.map(jnp.add, aux, aux2)
+
+        # checkpoint each pair segment: block_fn remats each half to halve
+        # peak backward residency, and the segmented path must not hold all
+        # four segments' un-rematted vjp residuals at once — with checkpoint
+        # the per-segment residuals are just the inter-segment states.
+        return BlockSegments(
+            names=("local.attn", "local.mlp", "global.attn", "global.mlp"),
+            param_globs=(("local/ln1", "local/attn/*", "local/pn1"),
+                         ("local/ln2", "local/mlp/*", "local/pn2"),
+                         ("global/ln1", "global/attn/*", "global/pn1"),
+                         ("global/ln2", "global/mlp/*", "global/pn2")),
+            fns=tuple(jax.checkpoint(f)
+                      for f in (l_attn, l_mlp, g_attn, g_mlp)))
 
     # ------------------------------------------------------------- train --
     def _embed_in(self, storage, tokens, dcfg):
@@ -217,7 +284,8 @@ class DenseLM:
         x, aux = apply_stack(blk, self.block_metas(dcfg), dcfg,
                              storage["blocks"], consts, x,
                              block_stats=self.block_stats(dcfg,
-                                                          tokens.shape))
+                                                          tokens.shape),
+                             segments=self.block_segments(dcfg))
         fn_meta = LY.norm_meta("final_norm", cfg.d_model, dcfg.storage_dtype)
         w_fn = coll.replicate(storage["final_norm"], fn_meta, dcfg)
         x = LY.rmsnorm(x, w_fn, cfg.norm_eps, cfg.post_norms)
@@ -420,7 +488,14 @@ class DenseLM:
 
     # ----------------------------------------------------------- costing --
     def block_stats(self, dcfg: DistConfig, batch_shape) -> BlockStats:
-        """Per-(scan-step) analytic workload for auto-wrapping, per device."""
+        """Per-(scan-step) workload for auto-wrapping, per device.
+
+        Analytic (hw.py roofline) by default; when the dryrun harvested
+        measured costs for this model instance (`measured_stats`, keyed by
+        the same param names and shaped at the cell's own microbatch) those
+        replace the analytic numbers."""
+        if self.measured_stats is not None:
+            return self.measured_stats
         cfg = self.cfg
         B, S = batch_shape          # per-device microbatch
         tokens = B * S

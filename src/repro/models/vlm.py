@@ -92,7 +92,10 @@ class VLM(DenseLM):
 
         blk = functools.partial(self.block_fn, dcfg=dcfg)
         x, aux = apply_stack(blk, self.block_metas(dcfg), dcfg,
-                             storage["blocks"], consts, x)
+                             storage["blocks"], consts, x,
+                             block_stats=self.block_stats(
+                                 dcfg, (tokens.shape[0], S)),
+                             segments=self.block_segments(dcfg))
         fn_meta = LY.norm_meta("final_norm", cfg.d_model, dcfg.storage_dtype)
         w_fn = coll.replicate(storage["final_norm"], fn_meta, dcfg)
         x = LY.rmsnorm(x, w_fn, cfg.norm_eps)

@@ -22,6 +22,10 @@ def pytest_configure(config):
         "(tests/dist_harness.py on 8 fake CPU devices)")
     config.addinivalue_line(
         "markers", "slow: long-running cases (full schedule sweeps)")
+    config.addinivalue_line(
+        "markers",
+        "autowrap: bucket planners + segmented prefetch scheduler "
+        "(tests/test_autowrap.py; run `-m autowrap` after planner changes)")
 
 
 def pytest_collection_modifyitems(config, items):
