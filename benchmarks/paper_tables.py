@@ -293,7 +293,89 @@ def fig4_autowrap(json_path: str | None = None):
 # gathers per use inside each stage. 1F1B's claim is the activation bound
 # (S live microbatches instead of M) — visible in temp_mib at M >> S.
 # ---------------------------------------------------------------------------
-def pipeline_bench():
+PIPELINE_SCHEMA = "bench_pipeline_v1"
+
+
+def staged_archs() -> tuple[str, ...]:
+    """Archs whose production config recommends a pipeline degree > 1."""
+    from repro.models.registry import ARCH_IDS
+
+    out = []
+    for arch in ARCH_IDS:
+        cfg, _ = get_arch(arch)
+        if cfg.pp_stages > 1:
+            out.append(arch)
+    return tuple(out)
+
+
+def pipeline_table(json_path: str | None = None, microbatches=(0, 8, 32)):
+    """Modeled pipeline table over the staged archs: bubble fraction and
+    per-stage exposed comm per schedule on the production mesh (device-free
+    analytics off the resolved ParallelPlan — the cross-PR tracking artifact
+    BENCH_pipeline.json, schema-smoke-tested in tier-1 like
+    BENCH_overlap.json).  `microbatches` entries of 0 mean the plan's own
+    resolved M."""
+    import json as _json
+    import os as _os
+
+    from repro.core.api import plan_parallel
+    from repro.core.autowrap import exposed_comm_time
+    from repro.core.pipeline import bubble_fraction, schedule_slots
+    from repro.launch.mesh import production_dcfg_for
+
+    doc = {"schema": PIPELINE_SCHEMA, "archs": {}}
+    for arch in staged_archs():
+        cfg, model = get_arch(arch)
+        dcfg = production_dcfg_for(cfg)
+        plan = plan_parallel(model, dcfg)
+        S = plan.stage.n_stages
+        metas = model.block_metas(dcfg)
+        stats = model.block_stats(dcfg, (1, 4096))
+        segments = model.block_segments(dcfg) \
+            if hasattr(model, "block_segments") else None
+        r = exposed_comm_time(plan.bucket_plans["blocks"], metas, dcfg,
+                              stats, segments=segments)
+        Lp = plan.stage.layers_per_stage
+        # per-microbatch stage workload: fwd + ~2x bwd compute + the
+        # steady-state exposed comm of this stage's layer slice
+        stage_mb_s = Lp * (3.0 * r["compute_s"] + r["exposed_s"])
+        rec = {
+            "pp_stages": S, "n_scan_steps": plan.stage.layers_per_stage * S,
+            "layers_per_stage": Lp, "stats_source": stats.source,
+            "stage_exposed_s": Lp * r["exposed_s"],
+            "stage_compute_s": Lp * r["compute_s"],
+            "schedules": {},
+        }
+        for schedule in ("gpipe", "1f1b"):
+            rows = {}
+            for m in microbatches:
+                M = m or plan.microbatches or S
+                bub = bubble_fraction(M, S, schedule)
+                slots = schedule_slots(M, S, schedule)
+                rows[str(M)] = {
+                    "microbatches": M,
+                    "slots": slots,
+                    "bubble_frac": bub,
+                    # M units of work per stage stretched by the bubble
+                    "modeled_step_s": M * stage_mb_s / (1.0 - bub),
+                    "peak_live_microbatches":
+                        M if schedule == "gpipe" else min(M, S),
+                }
+                emit(f"pipeline_table/{arch}/{schedule}/M={M}",
+                     rows[str(M)]["modeled_step_s"] * 1e6,
+                     f"bubble={bub:.3f};slots={slots};"
+                     f"live={rows[str(M)]['peak_live_microbatches']}")
+            rec["schedules"][schedule] = rows
+        doc["archs"][arch] = rec
+    if json_path:
+        _os.makedirs(_os.path.dirname(json_path), exist_ok=True)
+        with open(json_path, "w") as f:
+            _json.dump(doc, f, indent=1)
+        print(f"wrote {json_path}", flush=True)
+    return doc
+
+
+def pipeline_bench(json_path: str | None = None):
     from jax import lax
 
     from repro.core.meta import ParamMeta
@@ -335,6 +417,7 @@ def pipeline_bench():
         emit(f"pipeline/{schedule}", us,
              f"tps={tokens/(us/1e6):.0f};temp_mib={mem/2**20:.2f};"
              f"stages={S};micro={M}")
+    pipeline_table(json_path=json_path)
 
 
 # ---------------------------------------------------------------------------

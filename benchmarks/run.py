@@ -8,8 +8,10 @@ Run:  PYTHONPATH=src python -m benchmarks.run [table3 table5 ...] [--json]
 
 ``--json`` additionally writes machine-readable results for the benches that
 support it (fig4 -> benchmarks/results/BENCH_overlap.json: per-arch exposure
-+ modeled step time for the none/block/greedy/auto_dp plans) so the perf
-trajectory is tracked across PRs.
++ modeled step time for the none/block/greedy/auto_dp plans; pipeline ->
+benchmarks/results/BENCH_pipeline.json: modeled bubble fraction + per-stage
+exposure per schedule over the staged archs) so the perf trajectory is
+tracked across PRs.
 """
 
 import os
@@ -27,6 +29,7 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 RESULTS_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                            "results")
 OVERLAP_JSON = os.path.join(RESULTS_DIR, "BENCH_overlap.json")
+PIPELINE_JSON = os.path.join(RESULTS_DIR, "BENCH_pipeline.json")
 
 
 def main() -> None:
@@ -50,7 +53,8 @@ def main() -> None:
         "fig4": lambda: T.fig4_autowrap(
             json_path=OVERLAP_JSON if emit_json else None),
         "fig5": T.fig5_convergence,
-        "pipeline": T.pipeline_bench,
+        "pipeline": lambda: T.pipeline_bench(
+            json_path=PIPELINE_JSON if emit_json else None),
         "roofline": lambda: roofline.emit_csv(T.emit),
     }
     names = names or list(benches)

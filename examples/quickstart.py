@@ -1,13 +1,19 @@
 """Quickstart: the paper's two-line user experience, in JAX.
 
     model = simple_fsdp(model);  model = torch.compile(model)
-becomes
-    sharded, metas, fsdp_apply = simple_fsdp(apply_fn, params, dcfg)
-    step = jax.jit(shard_map(...))
+becomes ONE entry point:
 
-Wraps a tiny hand-written MLP language model (NOT from the model zoo — the
-point is bring-your-own-module), trains a few steps under SimpleFSDP
-semantics with per-parameter sharding + bucketed gathers, and prints losses.
+    par = parallelize(model, dcfg, shape)       # resolves a ParallelPlan
+    step = par.train_step(ocfg)                 # jit(shard_map(...))
+
+`parallelize` works for every registered architecture and every mesh —
+FSDP x TP, and with ``pp_axis`` set the SAME call returns a pipelined
+(GPipe/1F1B) step over per-stage SimpleFSDP storage: pp x dp x tp is a
+config flip, not different code.
+
+The original bring-your-own-module wrapper `simple_fsdp(apply_fn, params,
+dcfg)` still exists as a DEPRECATED shim (second half of this file) for raw
+apply functions with no model contract.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -20,11 +26,44 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import DistConfig, make_mesh, parallelize, simple_fsdp
 from repro.core.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
-from repro.core import DistConfig, make_mesh, simple_fsdp
-from repro.core.meta import named_leaves
+
+def main():
+    # --- the parallelize() one-liner -------------------------------------
+    from repro.data.pipeline import DataConfig, SyntheticC4, adapt_batch
+    from repro.models.common import ShapeConfig
+    from repro.models.registry import get_arch
+    from repro.optim.adamw import AdamWConfig
+
+    cfg, model = get_arch("qwen3_1_7b", smoke=True)
+    dcfg = DistConfig(mesh_axes=("data", "model"), mesh_shape=(4, 2),
+                      param_dtype=jnp.float32, storage_dtype=jnp.float32)
+    # pipelining is the same call with a pipe axis, e.g.:
+    #   dcfg = DistConfig(mesh_axes=("pipe", "data", "model"),
+    #                     mesh_shape=(2, 2, 2), pp_axis="pipe")
+    shape = ShapeConfig("train", 64, 8, "train")
+
+    par = parallelize(model, dcfg, shape)           # frozen ParallelPlan
+    print("plan:", par.plan.describe())
+    step = par.train_step(AdamWConfig(lr=1e-3))
+    storage = par.init_storage(jax.random.PRNGKey(0))
+
+    from repro.optim.adamw import init_opt_state
+    opt = init_opt_state(storage)
+    data = SyntheticC4(DataConfig(vocab=cfg.vocab, seq_len=shape.seq_len,
+                                  global_batch=shape.global_batch))
+    specs = model.input_specs(shape, dcfg)
+    for i in range(5):
+        batch = adapt_batch(data.batch(i), specs, step=i)
+        storage, opt, metrics = step(storage, opt, batch)
+        print(f"step {i} loss {float(metrics['loss']):.4f}")
+
+    # --- DEPRECATED: bring-your-own-module simple_fsdp shim --------------
+    byo_quickstart()
+
 
 VOCAB, D, H, SEQ, BATCH = 512, 64, 128, 32, 16
 
@@ -53,14 +92,15 @@ def init_params(key):
     }
 
 
-def main():
+def byo_quickstart():
+    """The pre-ParallelPlan API, kept as a deprecation shim: raw apply_fn +
+    shaped params in, (sharded, metas, fsdp_apply) out."""
     dcfg = DistConfig(mesh_axes=("data", "model"),
                       mesh_shape=(jax.device_count(), 1),
                       param_dtype=jnp.float32, reduce_dtype=jnp.float32,
                       bucket_mode="block")
     mesh = make_mesh(dcfg)
 
-    # --- the simple_fsdp() one-liner -------------------------------------
     params = init_params(jax.random.PRNGKey(0))
     sharded, metas, fsdp_apply = simple_fsdp(apply_fn, params, dcfg)
 
@@ -74,7 +114,6 @@ def main():
         new = jax.tree.map(lambda p, g: p - 0.5 * g, sharded, grads)
         return lax.pmean(loss, ("data",)) * dcfg.tp_size, new
 
-    from repro.core.meta import storage_specs
     pspecs = jax.tree.map(lambda m: m.storage_spec(dcfg), metas,
                           is_leaf=lambda x: hasattr(x, "storage_spec"))
     fn = jax.jit(shard_map(
@@ -83,14 +122,11 @@ def main():
         out_specs=(P(), pspecs)))
 
     key = jax.random.PRNGKey(1)
-    for i in range(10):
+    for i in range(5):
         key, k1 = jax.random.split(key)
         toks = jax.random.randint(k1, (BATCH, SEQ + 1), 0, VOCAB)
         loss, sharded = fn(sharded, toks[:, :-1], toks[:, 1:])
-        print(f"step {i} loss {float(loss):.4f}")
-    n = sum(v.size for _, v in named_leaves(params))
-    print(f"trained {n/1e3:.0f}K params FSDP-sharded over "
-          f"{jax.device_count()} devices")
+        print(f"byo step {i} loss {float(loss):.4f}")
 
 
 if __name__ == "__main__":

@@ -10,11 +10,15 @@ Layers (see DESIGN.md):
   stack       apply_stack — bucketed + reordered (prefetch) layer stacks,
               pipelined at bucket granularity for segmented blocks
   pipeline    gpipe / 1F1B schedules over a 'pipe' mesh axis (paper SS4)
-  api         simple_fsdp() one-liner
+  api         parallelize() + ParallelPlan — the single entry point
+              (simple_fsdp kept as the deprecated bring-your-own-module
+              shim)
   compat      jax version shims (shard_map / make_mesh / keystr)
 """
 
-from repro.core.api import build_metas, shard_params, simple_fsdp
+from repro.core.api import (ParallelPlan, Parallelized, build_metas,
+                            parallelize, plan_parallel, shard_params,
+                            simple_fsdp, unshard_params)
 from repro.core.autowrap import (auto_dp_plan, auto_plan, exposed_comm_time,
                                  partition_exposure)
 from repro.core.bucketing import (BucketPlan, manual_plan, per_param_plan,
@@ -26,18 +30,20 @@ from repro.core.irgraph import BlockStats
 from repro.core.meta import (ParamMeta, abstract_storage, from_storage,
                              storage_specs, to_storage)
 from repro.core.pipeline import (fsdp_stage_fn, gpipe, gpipe_grads,
-                                 one_f_one_b, pipe_shift, pipeline_grads)
+                                 one_f_one_b, pipe_shift, pipeline_grads,
+                                 pipeline_loss_grads)
 from repro.core.remat import checkpoint_policy, maybe_remat
 from repro.core.stack import apply_stack
 
 __all__ = [
-    "BlockStats", "BucketPlan", "DistConfig", "ParamMeta",
-    "abstract_storage", "apply_stack", "auto_dp_plan", "auto_plan",
-    "build_metas", "checkpoint_policy", "exposed_comm_time", "from_storage",
-    "fsdp_stage_fn", "gather_group", "gpipe", "gpipe_grads", "make_mesh",
-    "manual_plan", "maybe_remat", "one_f_one_b", "partition_exposure",
-    "per_param_plan", "pipe_shift", "pipeline_grads", "replicate",
-    "replicate_tree", "shard_map", "shard_params", "simple_fsdp",
-    "single_device_config", "storage_specs", "to_storage",
-    "whole_block_plan",
+    "BlockStats", "BucketPlan", "DistConfig", "ParallelPlan",
+    "Parallelized", "ParamMeta", "abstract_storage", "apply_stack",
+    "auto_dp_plan", "auto_plan", "build_metas", "checkpoint_policy",
+    "exposed_comm_time", "from_storage", "fsdp_stage_fn", "gather_group",
+    "gpipe", "gpipe_grads", "make_mesh", "manual_plan", "maybe_remat",
+    "one_f_one_b", "parallelize", "partition_exposure", "per_param_plan",
+    "pipe_shift", "pipeline_grads", "pipeline_loss_grads", "plan_parallel",
+    "replicate", "replicate_tree", "shard_map", "shard_params",
+    "simple_fsdp", "single_device_config", "storage_specs", "to_storage",
+    "unshard_params", "whole_block_plan",
 ]

@@ -1,39 +1,298 @@
-"""User-facing entry point — the analogue of the paper's
+"""The single user-facing entry point — the analogue of the paper's
 
     model = simple_fsdp(model)
     model = torch.compile(model, fullgraph=True)
 
-`simple_fsdp` takes a pure apply function plus a (full, shaped) parameter
-pytree and returns (sharded_params, metas, wrapped_apply). `wrapped_apply`
-gathers parameters per the configured bucket plan before calling the original
-function, and its backward reduce-scatters gradients — i.e. the model now
-*is* FSDP, with no change to its code. Compile by wrapping in
-``jax.jit(shard_map(...))`` (see train/ and examples/quickstart.py).
+Two objects carry the whole story:
 
-Large production models do not go through this generic wrapper — they build
-metas directly and use `core.stack.apply_stack` for scanned layer stacks
-(see models/); this entry point covers the "bring your own module" case and
-is what the paper's Fig. 1(3) loop corresponds to.
+  * **`ParallelPlan`** — a frozen, fully RESOLVED description of how one
+    model runs on one mesh: the stacked param groups, the bucket plan per
+    group (the paper's wrapping decision, manual or auto), the remat
+    policy, and — when ``dcfg.pp_axis`` is set — the pipeline stage
+    partition (models/common.StageSpec) plus the microbatch count.  Built
+    once by `plan_parallel(model, dcfg, shape)` and validated there
+    (stage partitions cover every top-level param group exactly once,
+    layer slices divide evenly); every downstream consumer — `Trainer`,
+    the dry-run, benches, tests — reads the same plan instead of
+    re-deriving flags.
+  * **`parallelize(model, dcfg, shape)`** — returns a `Parallelized`
+    bundle: the plan, the mesh, the (stage-aware) storage specs, storage
+    init, and the shard_map-wrapped loss/train steps.  Under
+    ``dcfg.pp_axis`` the steps route through `core/pipeline`'s GPipe/1F1B
+    schedules with per-stage SimpleFSDP storage; otherwise they are the
+    familiar whole-model SimpleFSDP steps.  pp x dp x tp is a config flip,
+    not a different trainer.
+
+Any model implementing the model contract (``metas`` / ``init_full`` /
+``loss_local`` / ``input_specs`` / ``stacked_keys`` + the stage-partition
+methods, see models/common.py) goes through this path — all registered
+architectures do.
+
+The original bring-your-own-module wrapper `simple_fsdp(apply_fn, params,
+cfg)` is kept as a thin DEPRECATED shim for raw apply functions that have no
+model contract (examples/quickstart.py shows both). `shard_params` /
+`unshard_params` are the one canonical full<->storage layout transform
+(models/runtime.tree_to_storage delegates here).
 """
 
 from __future__ import annotations
 
-from typing import Callable
+import dataclasses
+from typing import Any, Callable, Mapping
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import collectives as coll
 from repro.core.bucketing import BucketPlan, plan_for
-from repro.core.dist import DistConfig
-from repro.core.meta import ParamMeta, named_leaves, to_storage
+from repro.core.dist import DistConfig, make_mesh
+from repro.core.meta import ParamMeta, from_storage, to_storage
+
+# ---------------------------------------------------------------------------
+# The canonical full <-> storage layout transforms (stacked-aware).
+# ---------------------------------------------------------------------------
 
 
+def _is_meta(x):
+    return isinstance(x, ParamMeta)
+
+
+def shard_params(params_full, metas, cfg: DistConfig):
+    """Full shaped params -> flat/padded/TP-indexed ZeRO-3 storage layout.
+
+    Leaves with one extra leading dim relative to their meta are treated as
+    layer-stacked (the `lax.scan` stacks). Host-side layout transform;
+    placement onto the mesh happens via jax.device_put with
+    `meta.storage_spec` — see train/trainer.py.  The ONE implementation:
+    models/runtime.tree_to_storage is an alias.
+    """
+    def one(p, m):
+        if p.ndim == len(m.global_shape) + 1:
+            return jnp.stack(
+                [to_storage(p[i], m, cfg) for i in range(p.shape[0])])
+        return to_storage(p, m, cfg)
+    return jax.tree.map(one, params_full, metas,
+                        is_leaf=lambda x: _is_meta(x) or hasattr(x, "shape"))
+
+
+def unshard_params(storage, metas, cfg: DistConfig):
+    """Inverse of `shard_params` (stacked-aware)."""
+    def one(p, m):
+        if p.ndim == len(m.storage_shape(cfg)) + 1:
+            return jnp.stack(
+                [from_storage(p[i], m, cfg) for i in range(p.shape[0])])
+        return from_storage(p, m, cfg)
+    return jax.tree.map(one, storage, metas, is_leaf=_is_meta)
+
+
+# ---------------------------------------------------------------------------
+# ParallelPlan: one resolved, frozen description of the parallelism.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ParallelPlan:
+    """Resolved mesh/bucketing/remat/pipeline decisions for (model, dcfg).
+
+    `bucket_plans[k]` is the BucketPlan of stacked group `k` (the paper's
+    wrapping decision — what gathers together); `stage` is the pipeline
+    partition (None when ``dcfg.pp_axis`` is unset) and `microbatches` the
+    pipeline M (0 without pipelining). Frozen: later passes consume one
+    schedule instead of scattered flags.
+    """
+
+    dcfg: DistConfig
+    stacked_keys: Mapping[str, int]
+    bucket_plans: Mapping[str, BucketPlan]
+    remat: str
+    stage: Any = None                   # models/common.StageSpec | None
+    microbatches: int = 0
+
+    @property
+    def pipelined(self) -> bool:
+        return self.stage is not None
+
+    def bucket_plan(self, key: str) -> BucketPlan | None:
+        return self.bucket_plans.get(key)
+
+    def describe(self) -> str:
+        d = self.dcfg
+        mesh = "x".join(f"{a}={s}" for a, s in
+                        zip(d.mesh_axes, d.mesh_shape))
+        pp = (f" pp={self.stage.n_stages}({d.pp_schedule},M="
+              f"{self.microbatches})" if self.pipelined else "")
+        buckets = ",".join(f"{k}:{p.n_buckets}"
+                           for k, p in self.bucket_plans.items())
+        return (f"mesh[{mesh}] fsdp={d.fsdp_axes} tp={d.tp_size}"
+                f"{pp} remat={self.remat} buckets[{buckets}]")
+
+
+def plan_parallel(model, dcfg: DistConfig, shape=None) -> ParallelPlan:
+    """Build + validate the frozen `ParallelPlan` for one (model, dcfg).
+
+    `shape` (models/common.ShapeConfig) feeds the auto bucket planners'
+    workload model (per-device batch); without it the planners fall back to
+    their distribution prior.  Raises with a pointed message when the
+    requested pipeline degree cannot partition this model.
+    """
+    from repro.models.runtime import stacked_keys as model_stacked_keys
+
+    metas = model.metas(dcfg)
+    sk = model_stacked_keys(model)     # pointed error for non-contract models
+    for k, n in sk.items():
+        if k not in metas:
+            raise ValueError(
+                f"{type(model).__name__}.stacked_keys names {k!r} which is "
+                f"not a param group ({sorted(metas)})")
+
+    stats = None
+    if shape is not None and hasattr(model, "block_stats") \
+            and "blocks" in metas:
+        b_local = max(1, shape.global_batch // max(1, dcfg.dp_total))
+        stats = model.block_stats(dcfg, (b_local, shape.seq_len))
+
+    bucket_plans = {}
+    for k in sk:
+        segments = model.block_segments(dcfg) \
+            if k == "blocks" and hasattr(model, "block_segments") else None
+        bucket_plans[k] = plan_for(metas[k], dcfg,
+                                   stats if k == "blocks" else None,
+                                   segments=segments)
+
+    stage, microbatches = None, 0
+    if dcfg.pp_axis is not None:
+        if not hasattr(model, "stage_spec"):
+            raise ValueError(
+                f"{type(model).__name__} does not implement the "
+                "stage-partition contract (stage_spec/stage_pre/"
+                "stage_blocks/stage_loss) — cannot pipeline it")
+        if dcfg.microbatches > 1:
+            raise ValueError(
+                "dcfg.microbatches (gradient accumulation) is not "
+                "implemented for the staged pipeline step; use "
+                "dcfg.pp_microbatches — pipeline microbatches ARE the "
+                "accumulation under pp")
+        stage = model.stage_spec(dcfg.pp_size)
+        stage.validate(metas.keys(), sk)
+        microbatches = dcfg.pp_microbatches or dcfg.pp_size
+
+    return ParallelPlan(dcfg=dcfg, stacked_keys=sk,
+                        bucket_plans=bucket_plans, remat=dcfg.remat,
+                        stage=stage, microbatches=microbatches)
+
+
+# ---------------------------------------------------------------------------
+# parallelize(): the one entry point.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class Parallelized:
+    """What `parallelize` returns: the plan plus everything a training or
+    eval loop needs — storage specs/init and jit(shard_map(...)) steps, all
+    stage-aware.  Step builders import train/ lazily (core stays importable
+    without the training stack)."""
+
+    model: Any
+    plan: ParallelPlan
+    mesh: Any
+    shape: Any = None
+
+    # ------------------------------------------------------------ layout --
+    @property
+    def dcfg(self) -> DistConfig:
+        return self.plan.dcfg
+
+    @property
+    def storage_specs(self):
+        if self.plan.pipelined:
+            from repro.models import staging
+            return staging.stage_storage_specs(self.model, self.dcfg)
+        from repro.models import runtime as RT
+        return RT.model_storage_specs(self.model, self.dcfg)
+
+    @property
+    def abstract_storage(self):
+        if self.plan.pipelined:
+            from repro.models import staging
+            return staging.stage_abstract_storage(self.model, self.dcfg,
+                                                  self.plan.stage)
+        from repro.models import runtime as RT
+        return RT.model_abstract_storage(self.model, self.dcfg)
+
+    def _resolve_shape(self, shape, what: str):
+        shape = shape or self.shape
+        if shape is None:
+            raise ValueError(
+                f"{what} needs a ShapeConfig for the batch specs; pass "
+                "shape= to parallelize() or to this call")
+        return shape
+
+    def batch_specs(self, shape=None):
+        from repro.models import runtime as RT
+        shape = self._resolve_shape(shape, "batch_specs")
+        return RT.batch_specs(self.model, shape, self.dcfg)
+
+    def init_storage(self, key=None):
+        """Init full params host-side and lay them out (staged under pp)."""
+        key = key if key is not None else jax.random.PRNGKey(0)
+        from repro.models import runtime as RT
+        storage = RT.init_storage(self.model, key, self.dcfg)
+        return self.stage_storage(storage)
+
+    # ------------------------------------------- staged layout round-trip --
+    def stage_storage(self, storage):
+        """Plain storage -> the layout this plan trains on (no-op at pp=1).
+
+        Checkpoints always store the PLAIN layout (topology-independent);
+        Trainer stages on restore and unstages on save."""
+        if not self.plan.pipelined:
+            return storage
+        from repro.models import staging
+        return staging.stage_tree(storage, self.plan.stage)
+
+    def unstage_storage(self, storage):
+        if not self.plan.pipelined:
+            return storage
+        from repro.models import staging
+        return staging.unstage_tree(storage, self.plan.stage)
+
+    # ------------------------------------------------------------- steps --
+    def loss_step(self, with_grads: bool = True, shape=None):
+        """jit(shard_map(step)): (storage, batch) -> loss | (loss, grads)."""
+        from repro.train import train_step as TS
+        return TS.wrap_loss_step(self.model, self.plan, self.dcfg,
+                                 self._resolve_shape(shape, "loss_step"),
+                                 with_grads=with_grads, mesh=self.mesh)
+
+    def train_step(self, ocfg, lr_schedule=None, donate: bool = True,
+                   shape=None):
+        """jit(shard_map(step)): (storage, opt_state, batch) ->
+        (storage, opt_state, metrics)."""
+        from repro.train import train_step as TS
+        return TS.wrap_any_train_step(
+            self.model, self.plan, self.dcfg,
+            self._resolve_shape(shape, "train_step"), ocfg, lr_schedule,
+            mesh=self.mesh, donate=donate)
+
+
+def parallelize(model, dcfg: DistConfig, shape=None,
+                plan: ParallelPlan | None = None) -> Parallelized:
+    """The paper's one-line wrap, resolved for (model, dcfg[, shape]).
+
+    Returns a `Parallelized` bundle (plan + specs + steps).  Pass a
+    pre-built `plan` to skip re-resolution (it must describe the same
+    dcfg)."""
+    plan = plan if plan is not None else plan_parallel(model, dcfg, shape)
+    if plan.dcfg is not dcfg and plan.dcfg != dcfg:
+        raise ValueError("plan was resolved for a different DistConfig")
+    return Parallelized(model=model, plan=plan, mesh=make_mesh(dcfg),
+                        shape=shape)
+
+
+# ---------------------------------------------------------------------------
+# DEPRECATED bring-your-own-module shim (pre-ParallelPlan API).
+# ---------------------------------------------------------------------------
 def build_metas(params_full, cfg: DistConfig, tp_dims: dict[str, int] | None
                 = None, dtype=None):
     """One ParamMeta per leaf; `tp_dims` maps param path -> TP-sharded dim."""
     tp_dims = tp_dims or {}
-    named = dict(named_leaves(params_full))
-    metas = {}
 
     def one(path, leaf):
         return ParamMeta(
@@ -50,26 +309,16 @@ def build_metas(params_full, cfg: DistConfig, tp_dims: dict[str, int] | None
     return jax.tree_util.tree_unflatten(treedef, metas)
 
 
-def shard_params(params_full, metas, cfg: DistConfig):
-    """Full shaped params -> flat/padded/TP-indexed ZeRO-3 storage layout.
-
-    (Host-side layout transform; placement onto the mesh happens via
-    jax.device_put with `meta.storage_spec` — see train/trainer.py.)
-    """
-    return jax.tree.map(
-        lambda p, m: to_storage(p, m, cfg), params_full, metas,
-        is_leaf=lambda x: isinstance(x, ParamMeta) or hasattr(x, "shape"),
-    )
-
-
 def simple_fsdp(apply_fn: Callable, params_full, cfg: DistConfig,
                 tp_dims: dict[str, int] | None = None,
                 plan: BucketPlan | None = None):
-    """Wrap `apply_fn(params, *args)` with FSDP semantics.
+    """DEPRECATED: wrap a raw `apply_fn(params, *args)` with FSDP semantics.
 
-    Returns (sharded_params, metas, wrapped_apply) where `wrapped_apply`
-    expects the sharded storage layout and must run inside shard_map over
-    cfg's mesh.
+    Kept as a thin shim for modules with no model contract (the paper's
+    Fig. 1(3) bring-your-own-module loop); registered architectures should
+    go through `parallelize()` instead.  Returns (sharded_params, metas,
+    wrapped_apply) where `wrapped_apply` expects the sharded storage layout
+    and must run inside shard_map over cfg's mesh.
     """
     metas = build_metas(params_full, cfg, tp_dims)
     sharded = shard_params(params_full, metas, cfg)

@@ -17,23 +17,46 @@ stay on the inner ICI axes.  `DistConfig.pp_axis` names the pipe axis;
 `dp_total` and `grad_sync_axes` exclude it (pipe ranks own DISTINCT stage
 parameters — nothing to sync, nothing data-parallel).
 
+Two stage contracts share the same schedule cores:
+
+  * **Raw-stream contract** (`gpipe_grads` / `one_f_one_b` /
+    `pipeline_grads`): ``stage_fn(params, x) -> y`` with an (M, ...)
+    activation stack ``xs`` injected at stage 0 and ``loss_fn(y) -> scalar``
+    per microbatch.  This is the bring-your-own-stage path (dist_harness
+    `pipeline`, benchmarks).
+  * **Model contract** (`gpipe_loss_grads` / `one_f_one_b_loss_grads` /
+    `pipeline_loss_grads`): ``stage_step(params, state, mb) -> state`` where
+    `state` is ANY pytree (the homogeneous inter-stage activation state) and
+    ``mb`` is a raw per-microbatch batch pytree from the M-leading stream
+    ``mbs`` (the same stream on every pipe rank; never differentiated unless
+    ``with_dxs``).  `stage_step` performs its own stage-0 injection (derive
+    the state from `mb` and `jnp.where(rank == 0, ...)` it in), which is how
+    a full LM enters tokens at the bottom; ``loss_fn(params, y, mb)`` runs
+    the head+loss of the LAST stage (masked there by the schedule, traced on
+    every rank — SPMD-uniform collectives).  `ParallelPlan.stage`
+    (core/api.py) + the models' stage contract (models/common.StageSpec)
+    drive this path via train/train_step.make_staged_train_step.
+
 Schedules and their memory models (M microbatches, S stages):
 
-  * GPipe (`gpipe`, `gpipe_grads`): T = M + S - 1 forward slots; slot t
-    computes microbatch (t - stage) on each stage.  Backward is ordinary
-    autodiff through the scan, so every stage keeps **M** live microbatch
-    activations (all forwards finish before any backward starts).
-  * 1F1B (`one_f_one_b`): T = 2(M + S - 1) slots; stage s runs forward of
-    microbatch m at slot s + 2m and backward of m at slot 2(S-1) - s + 2m + 1
-    (opposite parities, so each stage does one unit of work per slot, one
-    forward per backward in steady state).  Stage inputs are kept in a ring
-    buffer of depth **S** and the backward recomputes the stage via
-    `jax.vjp` from the saved input, so live activation storage is bounded by
-    S (in fact S - s at stage s) **independent of M** — the
-    PipeDream-flush/1F1B memory bound, vs GPipe's M.
+  * GPipe (`gpipe`, `gpipe_grads`, `gpipe_loss_grads`): T = M + S - 1
+    forward slots; slot t computes microbatch (t - stage) on each stage.
+    Backward is ordinary autodiff through the scan, so every stage keeps
+    **M** live microbatch activations (all forwards finish before any
+    backward starts).
+  * 1F1B (`one_f_one_b`, `one_f_one_b_loss_grads`): T = 2(M + S - 1) slots;
+    stage s runs forward of microbatch m at slot s + 2m and backward of m at
+    slot 2(S-1) - s + 2m + 1 (opposite parities, so each stage does one unit
+    of work per slot, one forward per backward in steady state).  Stage
+    inputs are kept in a ring buffer of depth **S** and the backward
+    recomputes the stage via `jax.vjp` from the saved input, so live
+    activation storage is bounded by S (in fact S - s at stage s)
+    **independent of M** — the PipeDream-flush/1F1B memory bound, vs
+    GPipe's M.
 
 Both schedules return identical losses/gradients (exact-parity tested against
-a single-device dense reference in tests/dist_harness.py case `pipeline`).
+a single-device dense reference in tests/dist_harness.py cases `pipeline` and
+`trainer_pipeline`).
 """
 
 from __future__ import annotations
@@ -87,7 +110,39 @@ pipe_shift.defvjp(_pipe_shift_fwd, _pipe_shift_bwd)
 
 
 # ---------------------------------------------------------------------------
-# Schedule tables (pure host-side helpers; used by tests and docs).
+# Pytree helpers: the inter-stage state (and microbatch stream) are pytrees.
+# ---------------------------------------------------------------------------
+def _tree_where(pred, a, b):
+    return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+def _tree_index(tree, i):
+    return jax.tree.map(
+        lambda a: lax.dynamic_index_in_dim(a, i, 0, keepdims=False), tree)
+
+
+def _tree_update(tree, val, i, pred=None):
+    def one(a, v):
+        upd = lax.dynamic_update_index_in_dim(a, v.astype(a.dtype), i, 0)
+        return upd if pred is None else jnp.where(pred, upd, a)
+    return jax.tree.map(one, tree, val)
+
+
+def _tree_shift(tree, axis, n):
+    return jax.tree.map(lambda a: pipe_shift(a, axis, n), tree)
+
+
+def _tree_stack_zeros(template, n):
+    return jax.tree.map(
+        lambda l: jnp.zeros((n,) + tuple(l.shape), l.dtype), template)
+
+
+def _leading_dim(tree) -> int:
+    return jax.tree.leaves(tree)[0].shape[0]
+
+
+# ---------------------------------------------------------------------------
+# Schedule tables (pure host-side helpers; used by tests, benches and docs).
 # ---------------------------------------------------------------------------
 def gpipe_schedule(n_micro: int, n_stages: int) -> np.ndarray:
     """(T, S) table: microbatch id stage s computes at slot t, -1 when idle.
@@ -130,6 +185,14 @@ def schedule_slots(n_micro: int, n_stages: int, schedule: str) -> int:
     raise ValueError(f"unknown pipeline schedule {schedule!r}")
 
 
+def bubble_fraction(n_micro: int, n_stages: int, schedule: str) -> float:
+    """Idle fraction of the steady-state schedule: (S-1) warmup + (S-1)
+    cooldown slots over M units of work per stage — (S-1)/(M+S-1) for both
+    GPipe and 1F1B (1F1B trades nothing in bubble, only in memory)."""
+    schedule_slots(n_micro, n_stages, schedule)   # validates the name
+    return (n_stages - 1) / (n_micro + n_stages - 1)
+
+
 # ---------------------------------------------------------------------------
 # GPipe: forward-only schedule, differentiable end-to-end by autodiff.
 # ---------------------------------------------------------------------------
@@ -138,43 +201,234 @@ def gpipe(stage_fn: Callable, xs, n_stages: int, axis: str = "pipe"):
 
     Inside shard_map: every rank along `axis` holds ITS stage's closure
     (stage_fn usually closes over that rank's gathered params). `xs` is the
-    (M, ...) stack of microbatch activations fed to stage 0 (other ranks'
-    xs values are ignored). Returns the (M, ...) outputs of the LAST stage
-    (valid on every rank only at stage S-1; callers psum/select as needed).
+    (M, ...) stack (any pytree, M-leading) of microbatch activations fed to
+    stage 0 (other ranks' xs values are ignored). Returns the (M, ...)
+    outputs of the LAST stage (valid on every rank only at stage S-1;
+    callers psum/select as needed).
 
     Differentiable: activation sends use `pipe_shift`, whose backward
     reverse-permutes the cotangents, so plain `jax.grad` through this
     function yields the pipelined backward schedule (at the cost of M live
     activations per stage — use `one_f_one_b` for the S-bounded variant).
     """
-    M = xs.shape[0]
+    M = _leading_dim(xs)
     S = n_stages
     T = M + S - 1
     rank = pipe_rank(axis)
 
-    buf0 = jnp.zeros_like(xs)          # per-stage output collection
-    state0 = jnp.zeros_like(xs[0])     # activation entering this stage
+    state0 = _tree_index(xs, 0)
+    state0 = jax.tree.map(jnp.zeros_like, state0)
+    buf0 = jax.tree.map(jnp.zeros_like, xs)     # per-stage output collection
 
     def slot(carry, t):
         state, outs = carry
         mb_idx = t - rank              # microbatch this stage works on
         active = (mb_idx >= 0) & (mb_idx < M)
+        mbc = jnp.clip(mb_idx, 0, M - 1)
         # stage 0 pulls its input from xs; others use the permuted state
-        x_in = jnp.where(rank == 0,
-                         xs[jnp.clip(mb_idx, 0, M - 1)], state)
+        x_in = _tree_where(rank == 0, _tree_index(xs, mbc), state)
         y = stage_fn(x_in)
-        y = jnp.where(active, y, state)
+        y = _tree_where(active, y, state)
         # last stage collects; everyone else forwards
-        outs = jnp.where(
-            (rank == S - 1) & active,
-            lax.dynamic_update_index_in_dim(
-                outs, y, jnp.clip(mb_idx, 0, M - 1), 0),
-            outs)
-        state_next = pipe_shift(y, axis, S)
+        outs = _tree_update(outs, y, mbc, pred=(rank == S - 1) & active)
+        state_next = _tree_shift(y, axis, S)
         return (state_next, outs), None
 
     (_, outs), _ = lax.scan(slot, (state0, buf0), jnp.arange(T))
     return outs
+
+
+# ---------------------------------------------------------------------------
+# Schedule cores (model contract): stage_step(params, state, mb) -> state,
+# loss_fn(params, y, mb) -> scalar.  `stage_step` does its own stage-0
+# injection from `mb` (see module docstring).
+# ---------------------------------------------------------------------------
+def _gpipe_total_loss(stage_step: Callable, loss_fn: Callable, state0,
+                      n_stages: int, axis: str):
+    """The masked total-loss function shared by the GPipe grad and
+    forward-only (eval) paths."""
+    S = n_stages
+    rank = pipe_rank(axis)
+
+    def run(params, mbs):
+        M = _leading_dim(mbs)
+        T = M + S - 1
+        outs0 = _tree_stack_zeros(state0, M)
+
+        def slot(carry, t):
+            state, outs = carry
+            mb_idx = t - rank
+            active = (mb_idx >= 0) & (mb_idx < M)
+            mbc = jnp.clip(mb_idx, 0, M - 1)
+            y = stage_step(params, state, _tree_index(mbs, mbc))
+            y = _tree_where(active, y, state)
+            outs = _tree_update(outs, y, mbc, pred=(rank == S - 1) & active)
+            return (_tree_shift(y, axis, S), outs), None
+
+        (_, outs), _ = lax.scan(slot, (state0, outs0), jnp.arange(T))
+        # per-microbatch losses over the collected last-stage outputs.
+        # lax.map (not vmap): the LM loss contains collectives (vocab-
+        # parallel CE psums) whose scan-body form is uniform on every rank.
+        losses = lax.map(lambda ym: loss_fn(params, ym[0], ym[1]),
+                         (outs, mbs))
+        return jnp.where(rank == S - 1, jnp.sum(losses), 0.0)
+
+    return run
+
+
+def gpipe_loss(stage_step: Callable, loss_fn: Callable, params, mbs, state0,
+               n_stages: int, axis: str = "pipe"):
+    """Forward-only pipelined total loss (eval path), psum'ed over `axis`."""
+    run = _gpipe_total_loss(stage_step, loss_fn, state0, n_stages, axis)
+    return lax.psum(run(params, mbs), axis)
+
+
+def gpipe_loss_grads(stage_step: Callable, loss_fn: Callable, params, mbs,
+                     state0, n_stages: int, axis: str = "pipe",
+                     with_dxs: bool = False):
+    """(loss, dparams, dmbs?) for the GPipe schedule via autodiff.
+
+    `mbs` is the M-leading microbatch stream (identical on every pipe rank);
+    `state0` a zero pytree of the inter-stage state.  The loss is masked to
+    the last stage (SPMD grad convention: every rank seeds a backward and
+    the `pipe_shift` transposes SUM them, so sum_r L_r == L) and psum'ed
+    over `axis` for logging.  `dmbs` (d loss / d mbs, meaningful where the
+    stream is consumed — stage 0 and the last stage) is only computed under
+    ``with_dxs``; the LM path never differentiates the raw batch.
+    """
+    run = _gpipe_total_loss(stage_step, loss_fn, state0, n_stages, axis)
+    if with_dxs:
+        loss, (dparams, dmbs) = jax.value_and_grad(run, argnums=(0, 1))(
+            params, mbs)
+    else:
+        loss, dparams = jax.value_and_grad(run)(params, mbs)
+        dmbs = None
+    return lax.psum(loss, axis), dparams, dmbs
+
+
+def one_f_one_b_loss_grads(stage_step: Callable, loss_fn: Callable, params,
+                           mbs, state0, n_stages: int, axis: str = "pipe",
+                           with_dxs: bool = False):
+    """(loss, dparams, dmbs?) under the 1F1B schedule — same contract as
+    `gpipe_loss_grads`, but the backward is hand-interleaved with the
+    forward.
+
+    Per slot each stage does (at most) one forward and one backward, on
+    opposite parities (see `one_f_one_b_schedule`). Incoming stage states
+    are saved in a ring buffer of depth S and the backward re-runs the stage
+    (and, on the last rank, the loss) via `jax.vjp` from the saved input
+    (recompute-based, like the FSDP selective-AC re-gather), so live
+    activation memory is O(S), not O(M).  Cotangents are zeroed on inactive
+    slots, which makes the vjp's parameter/input gradients vanish by
+    linearity — no masking of the accumulators is needed.
+    """
+    M = _leading_dim(mbs)
+    S = n_stages
+    T = schedule_slots(M, S, "1f1b")
+    rank = pipe_rank(axis)
+    on_last = rank == S - 1
+
+    def fwd_and_loss(p, x, mb):
+        y = stage_step(p, x, mb)
+        return y, loss_fn(p, y, mb)
+
+    carry0 = (
+        state0,                                    # state from the left
+        jax.tree.map(jnp.zeros_like, state0),      # cotangent from the right
+        _tree_stack_zeros(state0, S),              # ring of saved inputs
+        jax.tree.map(jnp.zeros_like, params),      # grad accumulator
+        jax.tree.map(jnp.zeros_like, mbs) if with_dxs else (),
+        jnp.zeros((), jnp.float32),                # loss accumulator
+    )
+
+    def slot(carry, t):
+        fwd_state, bwd_state, ring, acc_g, dmbs, loss_acc = carry
+
+        # forward half: microbatch mf at slot rank + 2*mf --------------------
+        tf = t - rank
+        mf = tf // 2
+        fwd_active = (tf >= 0) & (tf % 2 == 0) & (mf < M)
+        mfc = jnp.clip(mf, 0, M - 1)
+        y = stage_step(params, fwd_state, _tree_index(mbs, mfc))
+        y = _tree_where(fwd_active, y, fwd_state)
+        # save the INCOMING state; the backward replay re-runs stage_step on
+        # it (stage 0's injection re-derives its input from the microbatch)
+        ring = _tree_update(ring, fwd_state, mfc % S, pred=fwd_active)
+
+        # backward half: microbatch mb at slot 2(S-1) - rank + 2*mb + 1 ------
+        tb = t - (2 * (S - 1) - rank + 1)
+        mb = tb // 2
+        bwd_active = (tb >= 0) & (tb % 2 == 0) & (mb < M)
+        mbc = jnp.clip(mb, 0, M - 1)
+        x_saved = _tree_index(ring, mbc % S)
+        mb_b = _tree_index(mbs, mbc)
+        if with_dxs:
+            (_, l_mb), vjp = jax.vjp(fwd_and_loss, params, x_saved, mb_b)
+        else:
+            (_, l_mb), vjp = jax.vjp(
+                lambda p, x: fwd_and_loss(p, x, mb_b), params, x_saved)
+        ct_y = _tree_where(bwd_active & ~on_last, bwd_state,
+                           jax.tree.map(jnp.zeros_like, bwd_state))
+        ct_l = jnp.where(bwd_active & on_last, jnp.ones_like(l_mb),
+                         jnp.zeros_like(l_mb))
+        out_ct = vjp((ct_y, ct_l))
+        dp, dx = out_ct[0], out_ct[1]
+        acc_g = jax.tree.map(jnp.add, acc_g, dp)
+        loss_acc = loss_acc + jnp.where(
+            bwd_active & on_last, l_mb, 0.0).astype(jnp.float32)
+        if with_dxs:
+            dmbs = _tree_update(dmbs, out_ct[2], mbc, pred=bwd_active)
+
+        # communicate: activations right, cotangents left --------------------
+        fwd_next = jax.tree.map(lambda a: _shift_raw(a, axis, S), y)
+        bwd_next = jax.tree.map(
+            lambda a: lax.ppermute(a, axis, _bwd_perm(S)), dx)
+        return (fwd_next, bwd_next, ring, acc_g, dmbs, loss_acc), None
+
+    carry, _ = lax.scan(slot, carry0, jnp.arange(T))
+    _, _, _, grads, dmbs, loss = carry
+    return lax.psum(loss, axis), grads, (dmbs if with_dxs else None)
+
+
+def pipeline_loss_grads(stage_step: Callable, loss_fn: Callable, params, mbs,
+                        state0, cfg: DistConfig, schedule: str | None = None,
+                        with_dxs: bool = False):
+    """Dispatch the model-contract schedules: (loss, dparams, dmbs?).
+
+    `cfg.pp_axis` names the pipe mesh axis; `cfg.pp_size` is the stage
+    count; `schedule` overrides `cfg.pp_schedule`.
+    """
+    if cfg.pp_axis is None:
+        raise ValueError(
+            "pipeline_loss_grads needs cfg.pp_axis (the pipe axis)")
+    M = _leading_dim(mbs)
+    if cfg.pp_microbatches and M != cfg.pp_microbatches:
+        raise ValueError(
+            f"mbs carries {M} microbatches but cfg.pp_microbatches="
+            f"{cfg.pp_microbatches}; stack the batch to match (or leave "
+            "pp_microbatches=0 to accept any M)")
+    schedule = schedule or cfg.pp_schedule
+    args = (stage_step, loss_fn, params, mbs, state0, cfg.pp_size,
+            cfg.pp_axis, with_dxs)
+    if schedule == "gpipe":
+        return gpipe_loss_grads(*args)
+    if schedule == "1f1b":
+        return one_f_one_b_loss_grads(*args)
+    raise ValueError(f"unknown pipeline schedule {schedule!r}")
+
+
+# ---------------------------------------------------------------------------
+# Raw-stream contract (bring-your-own-stage): stage_fn(params, x) with an
+# (M, ...) activation stack injected at stage 0 — adapters over the cores.
+# ---------------------------------------------------------------------------
+def _inject_xs(stage_fn: Callable, axis: str):
+    """Lift stage_fn(params, x) to the model contract: the per-slot `mb` IS
+    the stage-0 activation, where()'d in on rank 0 (the transpose routes the
+    stage-0 input cotangent back onto the stream — that is `dxs`)."""
+    def step(params, state, mb):
+        x_in = _tree_where(lax.axis_index(axis) == 0, mb, state)
+        return stage_fn(params, x_in)
+    return step
 
 
 def gpipe_grads(stage_fn: Callable, params, xs, loss_fn: Callable,
@@ -183,105 +437,25 @@ def gpipe_grads(stage_fn: Callable, params, xs, loss_fn: Callable,
 
     `stage_fn(params, x) -> y` runs this rank's stage on its own `params`;
     `loss_fn(y) -> scalar` is one microbatch's contribution to the total
-    loss (include any 1/M normalization there). SPMD grad convention: every
-    pipe rank seeds a backward and the cross-rank `pipe_shift` transposes
-    SUM them, so the loss is masked to the last stage (sum_r L_r == L);
-    the returned loss is psum'ed over `axis` for logging. `dparams` is each
-    rank's own stage gradient; `dxs` is d(loss)/d(xs), meaningful on rank 0.
+    loss (include any 1/M normalization there). `dparams` is each rank's own
+    stage gradient; `dxs` is d(loss)/d(xs), meaningful on rank 0.
     """
-    S = n_stages
-
-    def total_loss(params, xs):
-        outs = gpipe(lambda x: stage_fn(params, x), xs, S, axis)
-        per_mb = jax.vmap(loss_fn)(outs)
-        on_last = pipe_rank(axis) == S - 1
-        return jnp.where(on_last, jnp.sum(per_mb), 0.0)
-
-    loss, (dparams, dxs) = jax.value_and_grad(total_loss, argnums=(0, 1))(
-        params, xs)
-    return lax.psum(loss, axis), dparams, dxs
+    state0 = jax.tree.map(jnp.zeros_like, _tree_index(xs, 0))
+    loss, dparams, dxs = gpipe_loss_grads(
+        _inject_xs(stage_fn, axis), lambda p, y, mb: loss_fn(y), params,
+        xs, state0, n_stages, axis, with_dxs=True)
+    return loss, dparams, dxs
 
 
-# ---------------------------------------------------------------------------
-# 1F1B: interleaved forward/backward, live activations bounded by S.
-# ---------------------------------------------------------------------------
 def one_f_one_b(stage_fn: Callable, params, xs, loss_fn: Callable,
                 n_stages: int, axis: str = "pipe"):
     """(loss, dparams, dxs) under the 1F1B schedule — same contract as
-    `gpipe_grads`, but the backward is hand-interleaved with the forward.
-
-    Per slot each stage does (at most) one forward and one backward, on
-    opposite parities (see `one_f_one_b_schedule`). Stage INPUTS are saved
-    in a ring buffer of depth S and the backward re-runs the stage via
-    `jax.vjp` from the saved input (recompute-based, like the FSDP
-    selective-AC re-gather), so live activation memory is O(S), not O(M).
-    Cotangents are zeroed on inactive slots, which makes the vjp's
-    parameter/input gradients vanish by linearity — no masking of the
-    accumulators is needed.
-    """
-    M = xs.shape[0]
-    S = n_stages
-    T = schedule_slots(M, S, "1f1b")
-    rank = pipe_rank(axis)
-
-    def fwd_and_loss(p, x):
-        y = stage_fn(p, x)
-        return y, loss_fn(y)
-
-    carry0 = (
-        jnp.zeros_like(xs[0]),                     # activation from the left
-        jnp.zeros_like(xs[0]),                     # cotangent from the right
-        jnp.zeros((S,) + xs.shape[1:], xs.dtype),  # ring of saved inputs
-        jax.tree.map(jnp.zeros_like, params),      # grad accumulator
-        jnp.zeros_like(xs),                        # dxs (rank 0)
-        jnp.zeros((), jnp.float32),                # loss accumulator
-    )
-
-    def slot(carry, t):
-        fwd_state, bwd_state, ring, acc_g, dxs, loss_acc = carry
-        on_last = rank == S - 1
-
-        # forward half: microbatch mf at slot rank + 2*mf --------------------
-        tf = t - rank
-        mf = tf // 2
-        fwd_active = (tf >= 0) & (tf % 2 == 0) & (mf < M)
-        mfc = jnp.clip(mf, 0, M - 1)
-        x_in = jnp.where(rank == 0, xs[mfc], fwd_state)
-        y = stage_fn(params, x_in)
-        y = jnp.where(fwd_active, y, fwd_state)
-        ring = jnp.where(
-            fwd_active,
-            lax.dynamic_update_index_in_dim(ring, x_in, mfc % S, 0),
-            ring)
-
-        # backward half: microbatch mb at slot 2(S-1) - rank + 2*mb + 1 ------
-        tb = t - (2 * (S - 1) - rank + 1)
-        mb = tb // 2
-        bwd_active = (tb >= 0) & (tb % 2 == 0) & (mb < M)
-        mbc = jnp.clip(mb, 0, M - 1)
-        x_saved = lax.dynamic_index_in_dim(ring, mbc % S, 0, keepdims=False)
-        (_, l_mb), vjp = jax.vjp(fwd_and_loss, params, x_saved)
-        ct_y = jnp.where(bwd_active & ~on_last, bwd_state,
-                         jnp.zeros_like(bwd_state))
-        ct_l = jnp.where(bwd_active & on_last, jnp.ones_like(l_mb),
-                         jnp.zeros_like(l_mb))
-        dp, dx = vjp((ct_y, ct_l))
-        acc_g = jax.tree.map(jnp.add, acc_g, dp)
-        loss_acc = loss_acc + jnp.where(
-            bwd_active & on_last, l_mb, 0.0).astype(jnp.float32)
-        dxs = jnp.where(
-            (rank == 0) & bwd_active,
-            lax.dynamic_update_index_in_dim(dxs, dx, mbc, 0),
-            dxs)
-
-        # communicate: activations right, cotangents left --------------------
-        fwd_next = _shift_raw(y, axis, S)
-        bwd_next = lax.ppermute(dx, axis, _bwd_perm(S))
-        return (fwd_next, bwd_next, ring, acc_g, dxs, loss_acc), None
-
-    carry, _ = lax.scan(slot, carry0, jnp.arange(T))
-    _, _, _, grads, dxs, loss = carry
-    return lax.psum(loss, axis), grads, dxs
+    `gpipe_grads`, but with the S-bounded live-activation memory model."""
+    state0 = jax.tree.map(jnp.zeros_like, _tree_index(xs, 0))
+    loss, dparams, dxs = one_f_one_b_loss_grads(
+        _inject_xs(stage_fn, axis), lambda p, y, mb: loss_fn(y), params,
+        xs, state0, n_stages, axis, with_dxs=True)
+    return loss, dparams, dxs
 
 
 # ---------------------------------------------------------------------------
@@ -312,18 +486,18 @@ def fsdp_stage_fn(stage_fn: Callable, metas_tree, cfg: DistConfig, plan=None):
 
 def pipeline_grads(stage_fn: Callable, params, xs, loss_fn: Callable,
                    cfg: DistConfig, schedule: str | None = None):
-    """Dispatch to the configured schedule: (loss, dparams, dxs).
+    """Dispatch the raw-stream schedules: (loss, dparams, dxs).
 
     `cfg.pp_axis` names the pipe mesh axis; `cfg.pp_size` is the stage
     count; `schedule` overrides `cfg.pp_schedule`.
     """
     if cfg.pp_axis is None:
         raise ValueError("pipeline_grads needs cfg.pp_axis (the pipe axis)")
-    if cfg.pp_microbatches and xs.shape[0] != cfg.pp_microbatches:
+    if cfg.pp_microbatches and _leading_dim(xs) != cfg.pp_microbatches:
         raise ValueError(
-            f"xs carries {xs.shape[0]} microbatches but cfg.pp_microbatches="
-            f"{cfg.pp_microbatches}; stack the batch to match (or leave "
-            "pp_microbatches=0 to accept any M)")
+            f"xs carries {_leading_dim(xs)} microbatches but "
+            f"cfg.pp_microbatches={cfg.pp_microbatches}; stack the batch to "
+            "match (or leave pp_microbatches=0 to accept any M)")
     schedule = schedule or cfg.pp_schedule
     args = (stage_fn, params, xs, loss_fn, cfg.pp_size, cfg.pp_axis)
     if schedule == "gpipe":

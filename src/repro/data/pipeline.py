@@ -57,6 +57,35 @@ class SyntheticC4:
                 "valid": valid}
 
 
+def adapt_batch(base: dict, specs: dict, step: int, seed: int = 0) -> dict:
+    """Fit a SyntheticC4 token batch to a model's `input_specs`.
+
+    Token-shaped fields (tokens/targets/valid) are CROPPED from the base
+    batch (models like the VLM or the enc-dec reserve part of the sequence
+    budget for the modality stream, so their text spans are shorter);
+    non-token float fields (img_embeds, frames) are synthesized from a
+    seeded rng — deterministic per (seed, step), like the token stream.
+    """
+    rng = np.random.default_rng(
+        np.random.SeedSequence([seed, step, 0x5eed]))
+    out = {}
+    for k, sd in specs.items():
+        if k in base:
+            a = base[k]
+            if a.ndim != len(sd.shape) or any(
+                    have < want for have, want in zip(a.shape, sd.shape)):
+                raise ValueError(
+                    f"batch field {k!r}: base {a.shape} cannot cover "
+                    f"spec {sd.shape}")
+            out[k] = np.ascontiguousarray(
+                a[tuple(slice(0, n) for n in sd.shape)])
+        elif np.issubdtype(np.dtype(sd.dtype), np.integer):
+            out[k] = rng.integers(3, 100, size=sd.shape).astype(sd.dtype)
+        else:
+            out[k] = (rng.standard_normal(sd.shape) * 0.3).astype(sd.dtype)
+    return out
+
+
 class Prefetcher:
     """Background-thread batch prefetch with bounded queue."""
 

@@ -2,14 +2,40 @@
 
 On real hardware this runs under one process per host with
 jax.distributed.initialize(); on this container it drives the same code on
-fake CPU devices (--devices N). Selects any assigned architecture.
+fake CPU devices. Selects any assigned architecture; mesh axes are DERIVED
+from the flags (2 entries -> (data, model), 3 -> (pod, data, model); --pp>1
+prepends an outermost 'pipe' axis), and the single Trainer routes through
+`core/api.parallelize` — pp x dp x tp is a config flip.
 
   PYTHONPATH=src python -m repro.launch.train --arch qwen3_1_7b --smoke \
-      --steps 50 --devices 8 --mesh 4,2
+      --steps 50 --mesh 4,2
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3_1_7b --smoke \
+      --steps 50 --mesh 2,2 --pp 2 --pp-schedule 1f1b --pp-microbatches 4
 """
 
 import argparse
+import math
 import os
+
+
+def mesh_from_flags(mesh: str, pp: int) -> tuple[tuple[int, ...],
+                                                 tuple[str, ...]]:
+    """Mesh (shape, axes) from the --mesh/--pp flags.
+
+    `mesh` names the non-pipe part: "D,M" -> (data, model), "P,D,M" ->
+    (pod, data, model). --pp>1 prepends the 'pipe' axis OUTERMOST
+    (core/pipeline layout convention: tiny point-to-point sends tolerate
+    the slowest interconnect; fat FSDP gathers stay inner)."""
+    shape = tuple(int(x) for x in mesh.split(","))
+    if len(shape) == 2:
+        axes: tuple[str, ...] = ("data", "model")
+    elif len(shape) == 3:
+        axes = ("pod", "data", "model")
+    else:
+        raise SystemExit(f"--mesh must have 2 or 3 entries, got {mesh!r}")
+    if pp > 1:
+        return (pp, *shape), ("pipe", *axes)
+    return shape, axes
 
 
 def main():
@@ -20,9 +46,19 @@ def main():
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--devices", type=int, default=8)
-    ap.add_argument("--mesh", default="4,2")
-    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="fake CPU device count (0 = sized to the mesh)")
+    ap.add_argument("--mesh", default="4,2",
+                    help="non-pipe mesh: 'data,model' or 'pod,data,model'")
+    ap.add_argument("--pp", type=int, default=1,
+                    help="pipeline stages; >1 adds an outermost 'pipe' axis")
+    ap.add_argument("--pp-schedule", default="1f1b",
+                    choices=("gpipe", "1f1b"))
+    ap.add_argument("--pp-microbatches", type=int, default=0,
+                    help="pipeline microbatches M (0 = use the stage count)")
+    ap.add_argument("--microbatches", type=int, default=1,
+                    help="gradient-accumulation microbatches (pp=1 only; "
+                         "under --pp use --pp-microbatches)")
     ap.add_argument("--bucket-mode", default="block")
     ap.add_argument("--no-reorder", action="store_true")
     ap.add_argument("--grad-compression", action="store_true")
@@ -30,8 +66,10 @@ def main():
     ap.add_argument("--lr", type=float, default=3e-4)
     args = ap.parse_args()
 
+    mesh_shape, mesh_axes = mesh_from_flags(args.mesh, args.pp)
+    devices = args.devices or math.prod(mesh_shape)
     os.environ["XLA_FLAGS"] = (
-        f"--xla_force_host_platform_device_count={args.devices} "
+        f"--xla_force_host_platform_device_count={devices} "
         + os.environ.get("XLA_FLAGS", ""))
 
     import logging
@@ -40,23 +78,31 @@ def main():
 
     from repro.core.dist import DistConfig
     from repro.models.common import ShapeConfig
-    from repro.models.registry import get_arch
+    from repro.models.registry import get_arch, get_arch_for_pp
     from repro.optim.adamw import AdamWConfig
     from repro.train.trainer import Trainer, TrainerConfig
 
     logging.basicConfig(level=logging.INFO)
-    mesh_shape = tuple(int(x) for x in args.mesh.split(","))
     dcfg = DistConfig(
-        mesh_axes=("data", "model"), mesh_shape=mesh_shape,
+        mesh_axes=mesh_axes, mesh_shape=mesh_shape,
+        pp_axis="pipe" if args.pp > 1 else None,
+        pp_schedule=args.pp_schedule,
+        pp_microbatches=args.pp_microbatches,
         param_dtype=jnp.bfloat16, reduce_dtype=jnp.float32,
         bucket_mode=args.bucket_mode, reorder=not args.no_reorder,
         microbatches=args.microbatches,
         grad_compression=args.grad_compression)
-    cfg, model = get_arch(args.arch, smoke=args.smoke)
+    if args.pp > 1:
+        # smoke stacks too shallow to partition get the registry override
+        cfg, model = get_arch_for_pp(args.arch, n_stages=args.pp,
+                                     smoke=args.smoke)
+    else:
+        cfg, model = get_arch(args.arch, smoke=args.smoke)
     shape = ShapeConfig("train", args.seq, args.batch, "train")
     tcfg = TrainerConfig(total_steps=args.steps, ckpt_every=args.steps,
                          log_every=5, warmup=10, ckpt_dir=args.ckpt_dir)
     trainer = Trainer(model, dcfg, shape, AdamWConfig(lr=args.lr), tcfg)
+    print(f"plan: {trainer.plan.describe()}")
     _, _, hist = trainer.run()
     print(f"done: loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}")
 

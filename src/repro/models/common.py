@@ -10,6 +10,18 @@ config so DESIGN.md's adaptation notes match the code.
 segments mapped to bucket groups, which is what lets the runtime pipeline
 all-gathers at BUCKET granularity (segment s's compute hides segment s+1's
 gather) instead of gathering the whole layer at one program point.
+
+`StageSpec` is the stage-partition contract: how a model's top-level param
+groups map onto S pipeline stages (embedding-side groups on stage 0, the
+layer stack sliced contiguously via its existing stacked leading dim,
+head+loss groups on the last stage, with groups consumed by EVERY stage —
+tied embeddings, zamba2's shared block — replicated and grad-synced over the
+pipe axis).  Every model implements ``stage_spec(n_stages)`` plus the three
+stage compute methods (``stage_pre`` / ``stage_blocks`` / ``stage_loss``)
+and declares ``stacked_keys``; `core/api.plan_parallel` resolves and
+validates the spec into the frozen `ParallelPlan`, and the single `Trainer`
+drives it through `core/pipeline` (see models/staging.py for the storage
+layout).
 """
 
 from __future__ import annotations
@@ -77,6 +89,83 @@ class BlockSegments:
             raise ValueError("BlockSegments fields must be parallel, got "
                              f"{len(self.names)}/{len(self.param_globs)}/"
                              f"{len(self.fns)}")
+
+
+@dataclasses.dataclass(frozen=True)
+class StageSpec:
+    """Stage-partition contract: top-level param groups -> S pipeline stages.
+
+    * ``pipelined``        — the stacked metas key whose leading layer dim is
+      sliced CONTIGUOUSLY into S equal chunks (stage s owns layers
+      [s*layers_per_stage, (s+1)*layers_per_stage); a reshape of the
+      existing (L, ...) stack to (S, L/S, ...)).
+    * ``layers_per_stage`` — that equal chunk size (scan steps per stage).
+    * ``pre_keys``         — groups owned by stage 0 only (embedding /
+      modality frontends; zero-filled on other stages' storage slots).
+    * ``post_keys``        — groups owned by the LAST stage only (final
+      norm + LM head + loss-side params).
+    * ``replicated_keys``  — groups consumed by EVERY stage (tied embedding
+      tables, zamba2's shared attention block): every stage slot holds the
+      same values and their gradients are psum'ed over the pipe axis (the
+      pipe axis is otherwise excluded from grad sync — stages own disjoint
+      parameters).
+
+    Together the four sets must cover the model's top-level metas keys
+    exactly once — validated by `core/api.plan_parallel`.
+    """
+
+    n_stages: int
+    pipelined: str
+    layers_per_stage: int
+    pre_keys: tuple[str, ...]
+    post_keys: tuple[str, ...]
+    replicated_keys: tuple[str, ...] = ()
+
+    def owner(self, key: str) -> int | str:
+        """Stage index owning `key` ('all' for replicated, 'sliced' for the
+        pipelined stack)."""
+        if key == self.pipelined:
+            return "sliced"
+        if key in self.replicated_keys:
+            return "all"
+        if key in self.pre_keys:
+            return 0
+        if key in self.post_keys:
+            return self.n_stages - 1
+        raise KeyError(f"{key!r} not covered by this StageSpec")
+
+    def validate(self, metas_keys, stacked_keys: dict) -> None:
+        """Coverage exactly once + slice divisibility, with pointed errors."""
+        declared = [self.pipelined, *self.pre_keys, *self.post_keys,
+                    *self.replicated_keys]
+        if len(set(declared)) != len(declared):
+            raise ValueError(f"StageSpec assigns a key twice: {declared}")
+        missing = set(metas_keys) - set(declared)
+        extra = set(declared) - set(metas_keys)
+        if missing or extra:
+            raise ValueError(
+                f"StageSpec must cover every top-level param group exactly "
+                f"once; missing={sorted(missing)} unknown={sorted(extra)}")
+        if self.pipelined not in stacked_keys:
+            raise ValueError(
+                f"pipelined key {self.pipelined!r} is not a stacked key "
+                f"({sorted(stacked_keys)})")
+        L = stacked_keys[self.pipelined]
+        if self.layers_per_stage * self.n_stages != L:
+            raise ValueError(
+                f"{self.pipelined!r}: {self.n_stages} stages x "
+                f"{self.layers_per_stage} layers != stack length {L}")
+
+
+def even_stage_slices(n_layers: int, n_stages: int, what: str) -> int:
+    """layers_per_stage for a contiguous equal partition, or a clear error."""
+    if n_stages < 1:
+        raise ValueError(f"n_stages must be >= 1, got {n_stages}")
+    if n_layers % n_stages:
+        raise ValueError(
+            f"{what}: {n_layers} scan steps do not split into "
+            f"{n_stages} equal pipeline stages")
+    return n_layers // n_stages
 
 
 @dataclasses.dataclass(frozen=True)

@@ -32,7 +32,8 @@ from repro.core.stack import apply_stack
 from repro.core import collectives as coll
 from repro.core.remat import maybe_remat
 from repro.models import layers as LY
-from repro.models.common import ArchConfig, BlockSegments, ShapeConfig
+from repro.models.common import (ArchConfig, BlockSegments, ShapeConfig,
+                                 StageSpec, even_stage_slices)
 
 
 class DenseLM:
@@ -79,6 +80,28 @@ class DenseLM:
         if not cfg.tie_embeddings:
             m["head"] = LY.head_meta("head", cfg, dt)
         return m
+
+    @property
+    def stacked_keys(self) -> dict:
+        """Top-level param groups carrying a leading layer-stack dim (the
+        model contract consumed by models/runtime and core/api)."""
+        return {"blocks": self.n_steps}
+
+    def stage_spec(self, n_stages: int) -> StageSpec:
+        """Default LM partition: embedding on stage 0, the scanned block
+        stack sliced contiguously, final norm + head + loss on the last
+        stage.  A tied embedding table is consumed at BOTH ends, so it is
+        replicated across stages (grads psum'ed over the pipe axis)."""
+        tied = self.cfg.tie_embeddings
+        return StageSpec(
+            n_stages=n_stages,
+            pipelined="blocks",
+            layers_per_stage=even_stage_slices(self.n_steps, n_stages,
+                                               self.cfg.name),
+            pre_keys=() if tied else ("embed",),
+            post_keys=("final_norm",) + (() if tied else ("head",)),
+            replicated_keys=("embed",) if tied else (),
+        )
 
     # -------------------------------------------------------------- init --
     def _sub_init(self, key, dcfg) -> dict:
@@ -274,25 +297,53 @@ class DenseLM:
             logits = LY.head_logits(w, x, cfg, dcfg)
         return logits
 
-    def loss_local(self, storage, batch, dcfg: DistConfig):
-        """batch: tokens/targets (B,S) int32, valid (B,S) f32. Local mean."""
-        cfg = self.cfg
-        tokens = batch["tokens"]
-        consts = self.consts(tokens.shape[1], dcfg)
-        x = self._embed_in(storage, tokens, dcfg)
+    def _aux0(self) -> dict:
+        """Zero-valued aux accumulator matching apply_stack's aux structure
+        (part of the inter-stage pipeline state)."""
+        return {}
+
+    def _loss_aux(self, aux):
+        """Scalar added to the CE loss from the accumulated aux (MoE)."""
+        return 0.0
+
+    # -- the stage-partition contract (models/common.StageSpec). The three
+    # methods compose to loss_local at pp=1 and are driven per-stage by the
+    # pipeline schedules under dcfg.pp_axis; the inter-stage state is
+    # (x_sp, aux_sums).
+    def stage_pre(self, storage, mb, dcfg: DistConfig):
+        """Stage-0 entry: tokens -> SP-layout embeddings (+ zero aux)."""
+        return self._embed_in(storage, mb["tokens"], dcfg), self._aux0()
+
+    def stage_blocks(self, storage, state, dcfg: DistConfig, plan=None):
+        """This stage's contiguous slice of the scanned block stack."""
+        x, aux = state
+        B, S_total = x.shape[0], x.shape[1] * dcfg.tp_size
+        consts = self.consts(S_total, dcfg)
         blk = functools.partial(self.block_fn, dcfg=dcfg)
-        x, aux = apply_stack(blk, self.block_metas(dcfg), dcfg,
-                             storage["blocks"], consts, x,
-                             block_stats=self.block_stats(dcfg,
-                                                          tokens.shape),
-                             segments=self.block_segments(dcfg))
+        x, aux2 = apply_stack(blk, self.block_metas(dcfg), dcfg,
+                              storage["blocks"], consts, x, plan=plan,
+                              block_stats=self.block_stats(dcfg,
+                                                           (B, S_total)),
+                              segments=self.block_segments(dcfg))
+        return x, jax.tree.map(jnp.add, aux, aux2)
+
+    def stage_loss(self, storage, state, mb, dcfg: DistConfig):
+        """Last-stage exit: final norm, LM head, vocab-parallel CE (+aux)."""
+        cfg = self.cfg
+        x, aux = state
         fn_meta = LY.norm_meta("final_norm", cfg.d_model, dcfg.storage_dtype)
         w_fn = coll.replicate(storage["final_norm"], fn_meta, dcfg)
         x = LY.rmsnorm(x, w_fn, cfg.norm_eps, cfg.post_norms)
         logits = self._lm_head(storage, x, dcfg)
         loss, _ = LY.vocab_parallel_xent(
-            logits, batch["targets"], batch["valid"], cfg, dcfg)
-        return loss, aux
+            logits, mb["targets"], mb["valid"], cfg, dcfg)
+        return loss + self._loss_aux(aux)
+
+    def loss_local(self, storage, batch, dcfg: DistConfig):
+        """batch: tokens/targets (B,S) int32, valid (B,S) f32. Local mean."""
+        state = self.stage_blocks(storage,
+                                  self.stage_pre(storage, batch, dcfg), dcfg)
+        return self.stage_loss(storage, state, batch, dcfg), state[1]
 
     # ------------------------------------------------------------- serve --
     def serve_block_metas(self, dcfg: DistConfig) -> dict:

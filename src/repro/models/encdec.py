@@ -30,7 +30,8 @@ from repro.core.meta import ParamMeta
 from repro.core.remat import maybe_remat
 from repro.core.stack import apply_stack
 from repro.models import layers as LY
-from repro.models.common import ArchConfig, ShapeConfig
+from repro.models.common import (ArchConfig, ShapeConfig, StageSpec,
+                                 even_stage_slices)
 
 
 class EncDecLM:
@@ -95,6 +96,20 @@ class EncDecLM:
     @property
     def stacked_keys(self):
         return {"enc_blocks": self.n_enc, "dec_blocks": self.n_dec}
+
+    def stage_spec(self, n_stages: int) -> StageSpec:
+        """The DECODER stack pipelines; the whole encoder (frontend, enc
+        blocks, enc norm) plus the target embedding runs on stage 0 and the
+        encoder memory rides the inter-stage state next to the decoder
+        hidden — every stage's cross-attention reads it from the stream."""
+        return StageSpec(
+            n_stages=n_stages,
+            pipelined="dec_blocks",
+            layers_per_stage=even_stage_slices(self.n_dec, n_stages,
+                                               self.cfg.name + ".dec"),
+            pre_keys=("embed", "front_proj", "enc_blocks", "enc_norm"),
+            post_keys=("final_norm", "head"),
+        )
 
     # -------------------------------------------------------------- init --
     def _enc_init(self, key, dcfg):
@@ -185,14 +200,14 @@ class EncDecLM:
         return {"h": x, "mem": mem}, {}
 
     # ------------------------------------------------------------- train --
-    def loss_local(self, storage, batch, dcfg: DistConfig):
+    def stage_pre(self, storage, mb, dcfg: DistConfig):
+        """Stage-0 entry: frontend + full encoder -> memory; target tokens
+        -> decoder input.  Both ride the inter-stage state."""
         cfg = self.cfg
-        frames = batch["frames"]                   # (B, S_src, frontend_dim)
-        tokens = batch["tokens"]                   # (B, S_tgt)
-        S_src, S_tgt = frames.shape[1], tokens.shape[1]
-        consts_e = {"rope_cos": None, "rope_sin": None}
+        frames = mb["frames"]                      # (B, S_src, frontend_dim)
+        tokens = mb["tokens"]                      # (B, S_tgt)
+        S_src = frames.shape[1]
         cos_e, sin_e = LY.rope_cache(S_src, cfg.head_dim, cfg.rope_theta)
-        cos_d, sin_d = LY.rope_cache(S_tgt, cfg.head_dim, cfg.rope_theta)
 
         fp_meta = ParamMeta("front_proj", (cfg.frontend_dim, cfg.d_model),
                             None, dcfg.storage_dtype)
@@ -217,21 +232,36 @@ class EncDecLM:
             return LY.embed_apply(table, ids, cfg, dcfg)
 
         x = maybe_remat(embed_fn, "fsdp_only")(storage["embed"], tokens)
+        return {"h": x, "mem": mem}
+
+    def stage_blocks(self, storage, state, dcfg: DistConfig, plan=None):
+        cfg = self.cfg
+        S_tgt = state["h"].shape[1] * dcfg.tp_size
+        cos_d, sin_d = LY.rope_cache(S_tgt, cfg.head_dim, cfg.rope_theta)
         dec_fn = functools.partial(self.dec_block, dcfg=dcfg)
         carry, _ = apply_stack(dec_fn, self.dec_block_metas(dcfg), dcfg,
                                storage["dec_blocks"],
                                {"rope_cos": cos_d, "rope_sin": sin_d},
-                               {"h": x, "mem": mem})
+                               state, plan=plan)
+        return carry
+
+    def stage_loss(self, storage, state, mb, dcfg: DistConfig):
+        cfg = self.cfg
         fn_meta = LY.norm_meta("final_norm", cfg.d_model, dcfg.storage_dtype)
-        x = LY.rmsnorm(carry["h"], coll.replicate(storage["final_norm"],
+        x = LY.rmsnorm(state["h"], coll.replicate(storage["final_norm"],
                                                   fn_meta, dcfg),
                        cfg.norm_eps)
         hd_meta = LY.head_meta("head", cfg, dcfg.storage_dtype)
         w = coll.replicate(storage["head"], hd_meta, dcfg)
         logits = LY.head_logits(w, LY.sp_gather(x, dcfg), cfg, dcfg)
-        loss, _ = LY.vocab_parallel_xent(logits, batch["targets"],
-                                         batch["valid"], cfg, dcfg)
-        return loss, {}
+        loss, _ = LY.vocab_parallel_xent(logits, mb["targets"],
+                                         mb["valid"], cfg, dcfg)
+        return loss
+
+    def loss_local(self, storage, batch, dcfg: DistConfig):
+        state = self.stage_blocks(storage,
+                                  self.stage_pre(storage, batch, dcfg), dcfg)
+        return self.stage_loss(storage, state, batch, dcfg), {}
 
     # ------------------------------------------------------------- serve --
     def prefill_local(self, params_tp, batch, dcfg: DistConfig):

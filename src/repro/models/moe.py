@@ -173,11 +173,14 @@ class MoELM(DenseLM):
         return out
 
     # ------------------------------------------------------------- train --
-    def loss_local(self, storage, batch, dcfg: DistConfig):
-        loss, aux = super().loss_local(storage, batch, dcfg)
-        if "moe_aux" in aux:
-            loss = loss + aux["moe_aux"]
-        return loss, aux
+    # The load-balance aux rides the inter-stage pipeline state (summed
+    # across every stage's block slice) and is added to the CE loss at the
+    # last stage — stage_pre/stage_blocks/stage_loss are inherited.
+    def _aux0(self) -> dict:
+        return {"moe_aux": jnp.zeros((), jnp.float32)}
+
+    def _loss_aux(self, aux):
+        return aux["moe_aux"]
 
     def bucket_units(self) -> list[list[str]]:
         return [["attn/*", "ln1"],

@@ -2,6 +2,7 @@
 
 from __future__ import annotations
 
+import dataclasses
 import importlib
 
 from repro.models.common import ArchConfig
@@ -47,3 +48,36 @@ def get_arch(arch_id: str, smoke: bool = False):
     mod = importlib.import_module(f"repro.configs.{arch_id}")
     cfg = mod.SMOKE if smoke else mod.CONFIG
     return cfg, build_model(cfg)
+
+
+# Minimal stack-depth bumps that make the reduced (smoke) configs
+# partitionable into >1 pipeline stage — some smoke stacks are too shallow
+# (gemma2's local/global pair scans as ONE step; zamba2's smoke tail breaks
+# the uniform superblock program). Production configs are untouched.
+PP_SMOKE_OVERRIDES: dict[str, dict] = {
+    "gemma2_27b": dict(n_layers=4),
+    "xlstm_1_3b": dict(n_layers=8),
+    "zamba2_1_2b": dict(shared_attn_every=4),
+}
+
+
+def get_arch_for_pp(arch_id: str, n_stages: int = 2, smoke: bool = True):
+    """`get_arch`, but guaranteeing `model.stage_spec(n_stages)` resolves —
+    applying the smoke-config override when the stock stack is too shallow.
+    Returns (ArchConfig, model)."""
+    cfg, model = get_arch(arch_id, smoke=smoke)
+    try:
+        model.stage_spec(n_stages)
+        return cfg, model
+    except ValueError:
+        if not smoke:
+            raise
+    over = PP_SMOKE_OVERRIDES.get(_ALIASES.get(arch_id, arch_id))
+    if over is None:
+        raise ValueError(
+            f"{arch_id}: smoke config cannot partition into {n_stages} "
+            "stages and no PP_SMOKE_OVERRIDES entry exists")
+    cfg = dataclasses.replace(cfg, **over)
+    model = build_model(cfg)
+    model.stage_spec(n_stages)     # still-invalid overrides raise here
+    return cfg, model

@@ -8,45 +8,35 @@ the same way.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 from jax import lax
 
 from repro.core.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro.core.api import shard_params, unshard_params
 from repro.core.dist import DistConfig, make_mesh
-from repro.core.meta import (ParamMeta, abstract_storage, from_storage,
-                             storage_specs, to_storage)
+from repro.core.meta import abstract_storage, storage_specs
 
-
-def _is_meta(x):
-    return isinstance(x, ParamMeta)
-
-
-def tree_to_storage(full_tree, metas_tree, dcfg: DistConfig):
-    """Full shaped params -> storage layout; leaves with an extra leading dim
-    relative to their meta are treated as layer-stacked."""
-    def one(p, m):
-        if p.ndim == len(m.global_shape) + 1:
-            return jnp.stack(
-                [to_storage(p[i], m, dcfg) for i in range(p.shape[0])])
-        return to_storage(p, m, dcfg)
-    return jax.tree.map(one, full_tree, metas_tree, is_leaf=_is_meta)
-
-
-def tree_from_storage(storage_tree, metas_tree, dcfg: DistConfig):
-    """Inverse of tree_to_storage (stacked-aware)."""
-    def one(p, m):
-        if p.ndim == len(m.storage_shape(dcfg)) + 1:
-            return jnp.stack(
-                [from_storage(p[i], m, dcfg) for i in range(p.shape[0])])
-        return from_storage(p, m, dcfg)
-    return jax.tree.map(one, storage_tree, metas_tree, is_leaf=_is_meta)
+# The one canonical full<->storage transform lives in core/api.py
+# (stacked-aware); these names are kept for existing call sites.
+tree_to_storage = shard_params
+tree_from_storage = unshard_params
 
 
 def stacked_keys(model) -> dict:
-    """Which top-level param groups carry a leading layer-stack dim."""
-    return getattr(model, "stacked_keys", {"blocks": model.n_steps})
+    """Which top-level param groups carry a leading layer-stack dim.
+
+    Part of the model contract: every model declares `stacked_keys`
+    explicitly (no `n_steps` guessing — models without the attribute get a
+    pointed error instead of an AttributeError deep in a tree map)."""
+    sk = getattr(model, "stacked_keys", None)
+    if sk is None:
+        raise TypeError(
+            f"{type(model).__name__} does not declare `stacked_keys`; the "
+            "model contract (models/common.py) requires a property mapping "
+            "each layer-stacked param group to its stack length, e.g. "
+            "{'blocks': n_steps}")
+    return dict(sk)
 
 
 def model_storage_specs(model, dcfg: DistConfig):

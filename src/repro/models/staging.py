@@ -1,0 +1,138 @@
+"""Stage-stacked storage layout for pipeline-parallel SimpleFSDP training.
+
+Under ``dcfg.pp_axis`` every storage leaf gains a leading stage dim sharded
+over the pipe axis (spec ``P(pp_axis, *storage_spec)``): pipe rank s holds
+slot s.  Slot contents follow the model's `StageSpec`
+(models/common.py):
+
+  * the ``pipelined`` stack's (L, storage...) leaves are RESHAPED to
+    (S, L/S, storage...) — stage s owns its contiguous layer slice, real
+    data in every slot, per-device block memory divided by S;
+  * ``pre_keys`` / ``post_keys`` leaves are zero-filled except on the
+    owning slot (0 / S-1).  SPMD needs every rank to trace the embedding
+    and head compute, so the non-owning slots exist but hold zeros and
+    receive zero gradients (the schedule's rank masks select them away);
+  * ``replicated_keys`` leaves hold the SAME values in every slot; their
+    gradients are psum'ed over the pipe axis by the staged train step and
+    identical AdamW updates keep the slots in sync.
+
+`stage_tree` / `unstage_tree` are exact inverses on the owned data, which is
+what keeps checkpoints TOPOLOGY-INDEPENDENT: the Trainer always saves and
+restores the plain (unstaged) layout, so a run can move between pp degrees
+(and back to pp=1) across restarts.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.dist import DistConfig
+from repro.core.meta import ParamMeta
+from repro.models.common import StageSpec
+
+
+def _is_meta(x):
+    return isinstance(x, ParamMeta)
+
+
+def stage_storage_specs(model, dcfg: DistConfig) -> dict:
+    """PartitionSpecs of the stage-stacked storage layout.
+
+    Partition-independent: every leaf gains the same leading
+    P(pp_axis, ...) stage dim regardless of which stage owns it (only the
+    SHAPES — stage_abstract_storage — depend on the StageSpec)."""
+    if dcfg.pp_axis is None:
+        raise ValueError("stage_storage_specs needs dcfg.pp_axis")
+    metas = model.metas(dcfg)
+    sk = model.stacked_keys
+    out = {}
+    for k in metas:
+        inner = (None,) if k in sk else ()
+
+        def one(m: ParamMeta, inner=inner):
+            return P(dcfg.pp_axis, *inner, *tuple(m.storage_spec(dcfg)))
+
+        out[k] = jax.tree.map(one, metas[k], is_leaf=_is_meta)
+    return out
+
+
+def stage_abstract_storage(model, dcfg: DistConfig, spec: StageSpec) -> dict:
+    """ShapeDtypeStructs of the stage-stacked layout (dry-run / meta-init)."""
+    metas = model.metas(dcfg)
+    sk = model.stacked_keys
+    S = spec.n_stages
+    out = {}
+    for k in metas:
+        if k == spec.pipelined:
+            lead = (S, spec.layers_per_stage)
+        elif k in sk:
+            lead = (S, sk[k])
+        else:
+            lead = (S,)
+
+        def one(m: ParamMeta, lead=lead):
+            return jax.ShapeDtypeStruct((*lead, *m.storage_shape(dcfg)),
+                                        m.dtype)
+
+        out[k] = jax.tree.map(one, metas[k], is_leaf=_is_meta)
+    return out
+
+
+def stage_tree(storage: dict, spec: StageSpec) -> dict:
+    """Plain storage (stacked leaves carry their full L dim) -> staged.
+
+    Host-side layout transform over global arrays; placement happens via
+    jax.device_put with `stage_storage_specs`.
+    """
+    S = spec.n_stages
+    out = {}
+    for k, sub in storage.items():
+        owner = spec.owner(k)
+        if owner == "sliced":
+            out[k] = jax.tree.map(
+                lambda a: a.reshape(S, spec.layers_per_stage, *a.shape[1:]),
+                sub)
+        elif owner == "all":
+            out[k] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (S, *a.shape)), sub)
+        else:
+            out[k] = jax.tree.map(
+                lambda a: jnp.zeros((S, *a.shape), a.dtype).at[owner].set(a),
+                sub)
+    return out
+
+
+def unstage_tree(staged: dict, spec: StageSpec) -> dict:
+    """Inverse of `stage_tree`: staged (S, ...) leaves -> plain storage.
+
+    For replicated keys slot 0 is taken (all slots agree after the pipe-axis
+    grad psum); for pre/post keys the owning slot; the pipelined stack's
+    slices are re-concatenated in stage order.
+    """
+    out = {}
+    for k, sub in staged.items():
+        owner = spec.owner(k)
+        if owner == "sliced":
+            out[k] = jax.tree.map(
+                lambda a: a.reshape(a.shape[0] * a.shape[1], *a.shape[2:]),
+                sub)
+        elif owner == "all":
+            out[k] = jax.tree.map(lambda a: a[0], sub)
+        else:
+            out[k] = jax.tree.map(lambda a: a[owner], sub)
+    return out
+
+
+def stage_opt_state(opt_state: dict, spec: StageSpec) -> dict:
+    """Stage the AdamW moments (storage-shaped trees); `step` is scalar."""
+    return {"m": stage_tree(opt_state["m"], spec),
+            "v": stage_tree(opt_state["v"], spec),
+            "step": opt_state["step"]}
+
+
+def unstage_opt_state(opt_state: dict, spec: StageSpec) -> dict:
+    return {"m": unstage_tree(opt_state["m"], spec),
+            "v": unstage_tree(opt_state["v"], spec),
+            "step": opt_state["step"]}

@@ -25,7 +25,7 @@ from repro.core.meta import ParamMeta
 from repro.core.remat import maybe_remat
 from repro.core.stack import apply_stack
 from repro.models import layers as LY
-from repro.models.common import ArchConfig, ShapeConfig
+from repro.models.common import ArchConfig, ShapeConfig, StageSpec
 from repro.models.dense import DenseLM
 
 
@@ -71,43 +71,51 @@ class VLM(DenseLM):
         return jnp.einsum("bnd,de->bne", h, w2)
 
     # ------------------------------------------------------------- train --
-    def loss_local(self, storage, batch, dcfg: DistConfig):
-        cfg = self.cfg
-        tokens = batch["tokens"]                     # (B, S_text)
-        img = batch["img_embeds"]                    # (B, n_img, vit_dim)
-        n_img = img.shape[1]
-        S = n_img + tokens.shape[1]
-        consts = self.consts(S, dcfg)
+    def stage_spec(self, n_stages: int) -> StageSpec:
+        """Backbone partition with the modality frontend (projector) joining
+        the embedding on stage 0."""
+        base = super().stage_spec(n_stages)
+        return dataclasses.replace(
+            base, pre_keys=base.pre_keys + ("proj_w1", "proj_w2"))
 
-        img_x = self._project_images(storage, img, dcfg)
+    def stage_pre(self, storage, mb, dcfg: DistConfig):
+        """Stage-0 entry: project image embeddings, embed text, concat into
+        the SP-layout sequence (image prefix first)."""
+        cfg = self.cfg
+        img_x = self._project_images(storage, mb["img_embeds"], dcfg)
         emb_meta = LY.embed_meta("embed", cfg, dcfg.storage_dtype)
 
         def embed_fn(shard, ids):
             table = coll.replicate(shard, emb_meta, dcfg)
             return LY.embed_apply(table, ids, cfg, dcfg, scatter=False)
 
-        txt_x = maybe_remat(embed_fn, "fsdp_only")(storage["embed"], tokens)
+        txt_x = maybe_remat(embed_fn, "fsdp_only")(storage["embed"],
+                                                   mb["tokens"])
         x = jnp.concatenate([img_x.astype(txt_x.dtype), txt_x], axis=1)
-        x = LY.sp_slice(x, dcfg)                     # full -> SP layout
+        return LY.sp_slice(x, dcfg), self._aux0()    # full -> SP layout
 
-        blk = functools.partial(self.block_fn, dcfg=dcfg)
-        x, aux = apply_stack(blk, self.block_metas(dcfg), dcfg,
-                             storage["blocks"], consts, x,
-                             block_stats=self.block_stats(
-                                 dcfg, (tokens.shape[0], S)),
-                             segments=self.block_segments(dcfg))
+    def stage_loss(self, storage, state, mb, dcfg: DistConfig):
+        """Last-stage exit: image positions masked out of the CE loss."""
+        cfg = self.cfg
+        x, aux = state
+        tokens = mb["tokens"]
+        n_img = cfg.n_img_tokens
         fn_meta = LY.norm_meta("final_norm", cfg.d_model, dcfg.storage_dtype)
         w_fn = coll.replicate(storage["final_norm"], fn_meta, dcfg)
         x = LY.rmsnorm(x, w_fn, cfg.norm_eps)
         logits = self._lm_head(storage, x, dcfg)     # (B, S, V/tp)
-        # mask image positions out of the loss
         pad_t = jnp.zeros((tokens.shape[0], n_img), tokens.dtype)
-        targets = jnp.concatenate([pad_t, batch["targets"]], axis=1)
+        targets = jnp.concatenate([pad_t, mb["targets"]], axis=1)
         valid = jnp.concatenate(
             [jnp.zeros((tokens.shape[0], n_img), jnp.float32),
-             batch["valid"]], axis=1)
+             mb["valid"]], axis=1)
         loss, _ = LY.vocab_parallel_xent(logits, targets, valid, cfg, dcfg)
-        return loss, aux
+        return loss + self._loss_aux(aux)
+
+    def loss_local(self, storage, batch, dcfg: DistConfig):
+        state = self.stage_blocks(storage,
+                                  self.stage_pre(storage, batch, dcfg), dcfg)
+        return self.stage_loss(storage, state, batch, dcfg), state[1]
 
     # ------------------------------------------------------------- serve --
     def prefill_local(self, params_tp, batch, dcfg: DistConfig):

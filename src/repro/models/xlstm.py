@@ -37,7 +37,8 @@ from repro.core.meta import ParamMeta
 from repro.core.stack import apply_stack
 from repro.core.remat import maybe_remat
 from repro.models import layers as LY
-from repro.models.common import ArchConfig, ShapeConfig
+from repro.models.common import (ArchConfig, ShapeConfig, StageSpec,
+                                 even_stage_slices)
 
 
 def _logsig(x):
@@ -250,6 +251,20 @@ class XLSTMLM:
             "head": LY.head_meta("head", self.cfg, dt),
         }
 
+    @property
+    def stacked_keys(self) -> dict:
+        return {"blocks": self.n_steps}
+
+    def stage_spec(self, n_stages: int) -> StageSpec:
+        return StageSpec(
+            n_stages=n_stages,
+            pipelined="blocks",
+            layers_per_stage=even_stage_slices(self.n_steps, n_stages,
+                                               self.cfg.name),
+            pre_keys=("embed",),
+            post_keys=("final_norm", "head"),
+        )
+
     # --------------------------------------------------------------- init --
     def _mlstm_init(self, key):
         d, di, H = self.cfg.d_model, self.d_inner, self.n_heads
@@ -363,28 +378,42 @@ class XLSTMLM:
         return x, {}
 
     # -------------------------------------------------------------- train --
-    def loss_local(self, storage, batch, dcfg: DistConfig):
+    def stage_pre(self, storage, mb, dcfg: DistConfig):
         cfg = self.cfg
-        tokens = batch["tokens"]
         emb_meta = LY.embed_meta("embed", cfg, dcfg.storage_dtype)
 
         def embed_fn(shard, ids):
             table = coll.replicate(shard, emb_meta, dcfg)
             return LY.embed_apply(table, ids, cfg, dcfg)
 
-        x = maybe_remat(embed_fn, "fsdp_only")(storage["embed"], tokens)
+        return maybe_remat(embed_fn, "fsdp_only")(storage["embed"],
+                                                  mb["tokens"]), {}
+
+    def stage_blocks(self, storage, state, dcfg: DistConfig, plan=None):
+        x, aux = state
         blk = functools.partial(self.block_fn, dcfg=dcfg)
-        x, aux = apply_stack(blk, self.block_metas(dcfg), dcfg,
-                             storage["blocks"], self.consts(0, dcfg), x)
+        x, aux2 = apply_stack(blk, self.block_metas(dcfg), dcfg,
+                              storage["blocks"], self.consts(0, dcfg), x,
+                              plan=plan)
+        return x, jax.tree.map(jnp.add, aux, aux2)
+
+    def stage_loss(self, storage, state, mb, dcfg: DistConfig):
+        cfg = self.cfg
+        x, _ = state
         fn_meta = LY.norm_meta("final_norm", cfg.d_model, dcfg.storage_dtype)
         w_fn = coll.replicate(storage["final_norm"], fn_meta, dcfg)
         x = LY.rmsnorm(x, w_fn, cfg.norm_eps)
         hd_meta = LY.head_meta("head", cfg, dcfg.storage_dtype)
         w = coll.replicate(storage["head"], hd_meta, dcfg)
         logits = LY.head_logits(w, LY.sp_gather(x, dcfg), cfg, dcfg)
-        loss, _ = LY.vocab_parallel_xent(logits, batch["targets"],
-                                         batch["valid"], cfg, dcfg)
-        return loss, aux
+        loss, _ = LY.vocab_parallel_xent(logits, mb["targets"],
+                                         mb["valid"], cfg, dcfg)
+        return loss
+
+    def loss_local(self, storage, batch, dcfg: DistConfig):
+        state = self.stage_blocks(storage,
+                                  self.stage_pre(storage, batch, dcfg), dcfg)
+        return self.stage_loss(storage, state, batch, dcfg), state[1]
 
     # -------------------------------------------------------------- serve --
     def init_state(self, batch_local: int, dcfg: DistConfig):

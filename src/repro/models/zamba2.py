@@ -35,7 +35,7 @@ from repro.core.remat import maybe_remat
 from repro.core.stack import apply_stack
 from repro.kernels.ssd.ref import ssd_chunked, ssd_step
 from repro.models import layers as LY
-from repro.models.common import ArchConfig, ShapeConfig
+from repro.models.common import ArchConfig, ShapeConfig, StageSpec
 from repro.models.xlstm import causal_conv1d
 
 
@@ -106,6 +106,40 @@ class Zamba2LM:
             "final_norm": LY.norm_meta("final_norm", cfg.d_model, dt),
             "head": LY.head_meta("head", cfg, dt),
         }
+
+    @property
+    def stacked_keys(self) -> dict:
+        return {"blocks": self.n_steps}
+
+    def stage_spec(self, n_stages: int) -> StageSpec:
+        """Mamba layers slice contiguously; the weight-tied shared attention
+        block is consumed after every superblock on EVERY stage, so it is
+        replicated across stages (grads psum'ed over the pipe axis).  SPMD
+        needs the same program on every stage, so each stage must own a
+        whole number of superblocks and there must be no trailing partial
+        superblock."""
+        cfg = self.cfg
+        if n_stages > 1:
+            if self.n_tail:
+                raise ValueError(
+                    f"{cfg.name}: pipeline stages need n_layers "
+                    f"({cfg.n_layers}) to be a multiple of "
+                    f"shared_attn_every ({self.per}); {self.n_tail} "
+                    "trailing layers break the uniform stage program")
+            if (cfg.n_layers // n_stages) % self.per or \
+                    cfg.n_layers % n_stages:
+                raise ValueError(
+                    f"{cfg.name}: each of the {n_stages} stages must own a "
+                    f"whole number of {self.per}-layer superblocks "
+                    f"(n_layers={cfg.n_layers})")
+        return StageSpec(
+            n_stages=n_stages,
+            pipelined="blocks",
+            layers_per_stage=cfg.n_layers // n_stages,
+            pre_keys=("embed",),
+            post_keys=("final_norm", "head"),
+            replicated_keys=("shared",),
+        )
 
     # -------------------------------------------------------------- init --
     def mamba_init(self, key) -> dict:
@@ -246,33 +280,81 @@ class Zamba2LM:
         return x_sp + LY.sp_scatter(o, dcfg)
 
     # ------------------------------------------------------------- train --
-    def loss_local(self, storage, batch, dcfg: DistConfig):
-        cfg = self.cfg
-        tokens = batch["tokens"]
-        emb_meta = LY.embed_meta("embed", cfg, dcfg.storage_dtype)
+    def _shared_fn(self, consts, dcfg: DistConfig):
+        """FSDP-gathering applier of the weight-tied shared block.
 
-        def embed_fn(shard, ids):
-            table = coll.replicate(shard, emb_meta, dcfg)
-            return LY.embed_apply(table, ids, cfg, dcfg)
-
-        x = maybe_remat(embed_fn, "fsdp_only")(storage["embed"], tokens)
-        emb0 = x
-        cos, sin = LY.rope_cache(tokens.shape[1], cfg.head_dim,
-                                 cfg.rope_theta)
-        consts = {"rope_cos": cos, "rope_sin": sin}
-        blk = functools.partial(self._mamba_stack_fn, dcfg=dcfg)
-        bmetas = self.block_metas(dcfg)
+        'full' remat: the shared block touches gathered full-seq
+        activations (concat 2d wide); saving its internals per invocation
+        costs ~2-3 GiB x n_super — recompute instead.
+        """
         sh_metas = self.shared_metas(dcfg)
 
         def shared_fn(sh_storage, xc, embc):
             sh = coll.replicate_tree(sh_storage, sh_metas, dcfg)
             return self.shared_block(sh, xc, embc, consts, dcfg)
 
-        # 'full' remat: the shared block touches gathered full-seq
-        # activations (concat 2d wide); saving its internals per invocation
-        # costs ~2-3 GiB x n_super — recompute instead.
-        shared_fn = maybe_remat(shared_fn, "full"
-                                if dcfg.remat != "none" else "none")
+        return maybe_remat(shared_fn, "full"
+                           if dcfg.remat != "none" else "none")
+
+    def _consts_for(self, x_sp, dcfg: DistConfig) -> dict:
+        cos, sin = LY.rope_cache(x_sp.shape[1] * dcfg.tp_size,
+                                 self.cfg.head_dim, self.cfg.rope_theta)
+        return {"rope_cos": cos, "rope_sin": sin}
+
+    def stage_pre(self, storage, mb, dcfg: DistConfig):
+        cfg = self.cfg
+        emb_meta = LY.embed_meta("embed", cfg, dcfg.storage_dtype)
+
+        def embed_fn(shard, ids):
+            table = coll.replicate(shard, emb_meta, dcfg)
+            return LY.embed_apply(table, ids, cfg, dcfg)
+
+        x = maybe_remat(embed_fn, "fsdp_only")(storage["embed"],
+                                               mb["tokens"])
+        # the shared block re-reads the initial embedding on every
+        # superblock, so it rides the inter-stage state alongside x
+        return {"x": x, "emb0": x}
+
+    def stage_blocks(self, storage, state, dcfg: DistConfig, plan=None):
+        """A whole number of superblocks: each = `per` scanned mamba layers
+        + one invocation of the (stage-replicated) shared block."""
+        x, emb0 = state["x"], state["emb0"]
+        consts = self._consts_for(x, dcfg)
+        blk = functools.partial(self._mamba_stack_fn, dcfg=dcfg)
+        bmetas = self.block_metas(dcfg)
+        shared_fn = self._shared_fn(consts, dcfg)
+        Lp = jax.tree.leaves(storage["blocks"])[0].shape[0]
+        assert Lp % self.per == 0, "stage_spec guarantees whole superblocks"
+        for g in range(Lp // self.per):
+            seg = jax.tree.map(
+                lambda s: s[g * self.per:(g + 1) * self.per],
+                storage["blocks"])
+            x, _ = apply_stack(blk, bmetas, dcfg, seg, consts, x, plan=plan)
+            x = shared_fn(storage["shared"], x, emb0)
+        return {"x": x, "emb0": emb0}
+
+    def stage_loss(self, storage, state, mb, dcfg: DistConfig):
+        cfg = self.cfg
+        x = state["x"]
+        fn_meta = LY.norm_meta("final_norm", cfg.d_model, dcfg.storage_dtype)
+        w_fn = coll.replicate(storage["final_norm"], fn_meta, dcfg)
+        x = LY.rmsnorm(x, w_fn, cfg.norm_eps)
+        hd_meta = LY.head_meta("head", cfg, dcfg.storage_dtype)
+        w = coll.replicate(storage["head"], hd_meta, dcfg)
+        logits = LY.head_logits(w, LY.sp_gather(x, dcfg), cfg, dcfg)
+        loss, _ = LY.vocab_parallel_xent(logits, mb["targets"],
+                                         mb["valid"], cfg, dcfg)
+        return loss
+
+    def loss_local(self, storage, batch, dcfg: DistConfig):
+        # general path (supports the trailing partial superblock that the
+        # staged program cannot express — see stage_spec)
+        state = self.stage_pre(storage, batch, dcfg)
+        x, emb0 = state["x"], state["emb0"]
+        consts = self._consts_for(x, dcfg)
+        blk = functools.partial(self._mamba_stack_fn, dcfg=dcfg)
+        bmetas = self.block_metas(dcfg)
+        shared_fn = self._shared_fn(consts, dcfg)
 
         pos = 0
         for _ in range(self.n_super):
@@ -285,15 +367,7 @@ class Zamba2LM:
             seg = jax.tree.map(lambda s: s[pos:pos + self.n_tail],
                                storage["blocks"])
             x, _ = apply_stack(blk, bmetas, dcfg, seg, consts, x)
-
-        fn_meta = LY.norm_meta("final_norm", cfg.d_model, dcfg.storage_dtype)
-        w_fn = coll.replicate(storage["final_norm"], fn_meta, dcfg)
-        x = LY.rmsnorm(x, w_fn, cfg.norm_eps)
-        hd_meta = LY.head_meta("head", cfg, dcfg.storage_dtype)
-        w = coll.replicate(storage["head"], hd_meta, dcfg)
-        logits = LY.head_logits(w, LY.sp_gather(x, dcfg), cfg, dcfg)
-        loss, _ = LY.vocab_parallel_xent(logits, batch["targets"],
-                                         batch["valid"], cfg, dcfg)
+        loss = self.stage_loss(storage, {"x": x, "emb0": emb0}, batch, dcfg)
         return loss, {}
 
     # ------------------------------------------------------------- serve --

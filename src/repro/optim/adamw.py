@@ -47,20 +47,25 @@ def _leaf_metas(metas_tree):
         metas_tree, is_leaf=lambda x: isinstance(x, ParamMeta))[0]
 
 
-def global_grad_norm(grads_tree, metas_tree, cfg: DistConfig):
-    """sqrt(sum of squares over every distinct gradient element)."""
-    leaves = jax.tree.leaves(grads_tree)
-    metas = []
-    for k in sorted(grads_tree):   # match jax dict-key flatten order
-        metas.extend(_leaf_metas(metas_tree[k]))
+def global_grad_norm(grads_tree, metas_tree, cfg: DistConfig,
+                     pp_replicated: tuple[str, ...] = ()):
+    """sqrt(sum of squares over every distinct gradient element).
+
+    `pp_replicated` names top-level groups replicated across pipeline
+    stages (StageSpec.replicated_keys): after the pipe-axis grad psum every
+    stage holds the SAME values, so their squares are scaled by 1/pp_size
+    to count each element once under the pipe-axis psum below."""
     tp_sq = jnp.zeros((), jnp.float32)
     rep_sq = jnp.zeros((), jnp.float32)
-    for g, m in zip(leaves, metas):
-        s = jnp.sum(g.astype(jnp.float32) ** 2)
-        if m.tp_dim is not None:
-            tp_sq = tp_sq + s
-        else:
-            rep_sq = rep_sq + s
+    for k in sorted(grads_tree):   # match jax dict-key flatten order
+        w = 1.0 / cfg.pp_size if k in pp_replicated else 1.0
+        for g, m in zip(jax.tree.leaves(grads_tree[k]),
+                        _leaf_metas(metas_tree[k])):
+            s = jnp.sum(g.astype(jnp.float32) ** 2) * w
+            if m.tp_dim is not None:
+                tp_sq = tp_sq + s
+            else:
+                rep_sq = rep_sq + s
     # shards are distinct across fsdp axes -> always psum there;
     # tp-sharded leaves are also distinct across the model axis.
     total = lax.psum(rep_sq, cfg.fsdp_axes) \
@@ -79,11 +84,11 @@ def _update_leaf(p, g, m, v, lr, ocfg: AdamWConfig, t):
 
 
 def apply_adamw(storage, grads, opt_state, metas_tree, cfg: DistConfig,
-                ocfg: AdamWConfig, lr):
+                ocfg: AdamWConfig, lr, pp_replicated: tuple[str, ...] = ()):
     """One AdamW step on the sharded storage. Returns (params, opt_state,
     grad_norm)."""
     t = opt_state["step"] + 1
-    gnorm = global_grad_norm(grads, metas_tree, cfg)
+    gnorm = global_grad_norm(grads, metas_tree, cfg, pp_replicated)
     scale = jnp.minimum(1.0, ocfg.grad_clip / jnp.maximum(gnorm, 1e-12)) \
         if ocfg.grad_clip else 1.0
 

@@ -1,6 +1,24 @@
 """Training step assembly: SimpleFSDP forward/backward + gradient
 accumulation (microbatches) + clipping + AdamW + LR schedule, all inside one
 shard_map'd jit — the "full computation-communication graph" the paper traces.
+
+Two families, one front door (`wrap_any_train_step` / `wrap_loss_step`,
+driven by `core/api.parallelize` off the resolved `ParallelPlan`):
+
+  * pp = 1 — the whole-model step (`make_train_step`): microbatch scan +
+    AdamW on the plain storage layout.
+  * pp > 1 — the STAGED step (`make_staged_train_step`): storage is
+    stage-stacked (models/staging.py), each pipe rank trains its stage
+    slice through `core/pipeline`'s GPipe/1F1B schedules using the model's
+    stage-partition contract (stage_pre / stage_blocks / stage_loss); the
+    batch splits into `plan.microbatches` microbatches, stage-replicated
+    groups (StageSpec.replicated_keys) get their grads psum'ed over the
+    pipe axis, and AdamW runs on each rank's own stage shards — all still
+    one shard_map'd jit (FSDP gathers AND pipeline sends in one graph).
+
+`make_pipeline_train_step` (bring-your-own `stage_fn`/`stage_metas`)
+remains for explicitly staged synthetic modules (benchmarks,
+dist_harness `pipeline`).
 """
 
 from __future__ import annotations
@@ -82,7 +100,183 @@ def wrap_train_step(model, dcfg: DistConfig, shape, ocfg: AdamWConfig,
 
 
 # ---------------------------------------------------------------------------
-# Pipeline-parallel training (paper SS4): stage stacks under pp x dp x tp.
+# Staged full-model training (paper SS4 x the stage-partition contract):
+# the model's own embedding/blocks/head partitioned across the pipe axis.
+# ---------------------------------------------------------------------------
+def _staged_pieces(model, plan, dcfg: DistConfig):
+    """The stage_step/loss_fn pair + state template builder for the model
+    contract (see core/pipeline module docstring)."""
+    from jax import lax as _lax
+
+    spec = plan.stage
+    M = plan.microbatches
+    bplan = plan.bucket_plan(spec.pipelined)
+
+    def stage_step(params, state, mb):
+        # every rank traces the stage-0 entry (SPMD-uniform collectives);
+        # only rank 0 keeps it — others pass the piped state through
+        entry = model.stage_pre(params, mb, dcfg)
+        rank0 = _lax.axis_index(dcfg.pp_axis) == 0
+        state = jax.tree.map(lambda a, b: jnp.where(rank0, a, b),
+                             entry, state)
+        return model.stage_blocks(params, state, dcfg, plan=bplan)
+
+    def loss_fn(params, y, mb):
+        # per-microbatch contribution; 1/M makes the total the local mean
+        return model.stage_loss(params, y, mb, dcfg) / M
+
+    def state_template(params, mb0):
+        # zeros_like of a traced stage_pre: only shapes/dtypes survive (the
+        # computation is dead-code-eliminated), no eval_shape needed
+        return jax.tree.map(jnp.zeros_like,
+                            model.stage_pre(params, mb0, dcfg))
+
+    return stage_step, loss_fn, state_template
+
+
+def _split_microbatches(batch, m: int):
+    def one(x):
+        if x.shape[0] % m:
+            raise ValueError(
+                f"local batch {x.shape[0]} does not split into {m} "
+                "pipeline microbatches; adjust global_batch or "
+                "pp_microbatches")
+        return x.reshape(m, x.shape[0] // m, *x.shape[1:])
+    return jax.tree.map(one, batch)
+
+
+def _staged_loss_grads_fn(model, plan, dcfg: DistConfig):
+    """The shared staged core: (stage-LOCAL storage, batch) ->
+    (total loss, stage grads with replicated groups psum'ed over pipe)."""
+    from repro.core.pipeline import pipeline_loss_grads
+
+    spec = plan.stage
+    stage_step, loss_fn, state_template = _staged_pieces(model, plan, dcfg)
+
+    def loss_grads(local, batch):
+        mbs = _split_microbatches(batch, plan.microbatches)
+        state0 = state_template(local, jax.tree.map(lambda a: a[0], mbs))
+        loss, grads, _ = pipeline_loss_grads(stage_step, loss_fn, local,
+                                             mbs, state0, dcfg)
+        for k in spec.replicated_keys:
+            grads[k] = jax.tree.map(lambda g: lax.psum(g, dcfg.pp_axis),
+                                    grads[k])
+        return loss, grads
+
+    return loss_grads
+
+
+def make_staged_loss_step(model, plan, dcfg: DistConfig,
+                          with_grads: bool = True):
+    """step(staged_storage, batch) -> (loss, staged_grads?) under pp."""
+    from repro.core.pipeline import gpipe_loss
+
+    loss_grads = _staged_loss_grads_fn(model, plan, dcfg)
+    stage_step, loss_fn, state_template = _staged_pieces(model, plan, dcfg)
+
+    def step(staged, batch):
+        local = jax.tree.map(lambda a: a[0], staged)   # this rank's stage
+        if with_grads:
+            loss, grads = loss_grads(local, batch)
+        else:
+            mbs = _split_microbatches(batch, plan.microbatches)
+            state0 = state_template(local,
+                                    jax.tree.map(lambda a: a[0], mbs))
+            loss = gpipe_loss(stage_step, loss_fn, local, mbs, state0,
+                              dcfg.pp_size, dcfg.pp_axis)
+        loss = lax.pmean(loss, dcfg.mesh_axes) * dcfg.tp_size
+        if not with_grads:
+            return loss
+        return loss, jax.tree.map(lambda g: g[None], grads)
+
+    return step
+
+
+def make_staged_train_step(model, plan, dcfg: DistConfig, ocfg: AdamWConfig,
+                           schedule: Callable | None = None):
+    """Staged analogue of `make_train_step`: pipeline schedule + AdamW on
+    each rank's stage shards, stage-replicated grads psum'ed over pipe."""
+    spec = plan.stage
+    metas = model.metas(dcfg)
+    sched = schedule or (lambda t: ocfg.lr)
+    loss_grads = _staged_loss_grads_fn(model, plan, dcfg)
+
+    def _local(tree):
+        return jax.tree.map(lambda a: a[0], tree)
+
+    def _restack(tree):
+        return jax.tree.map(lambda a: a[None], tree)
+
+    def step_local(staged, opt_state, batch):
+        local = _local(staged)
+        opt_local = {"m": _local(opt_state["m"]), "v": _local(opt_state["v"]),
+                     "step": opt_state["step"]}
+        loss, grads = loss_grads(local, batch)
+        lr = sched(opt_local["step"])
+        new_p, new_opt, gnorm = apply_adamw(
+            local, grads, opt_local, metas, dcfg, ocfg, lr,
+            pp_replicated=spec.replicated_keys)
+        metrics = {
+            "loss": lax.pmean(loss, dcfg.mesh_axes) * dcfg.tp_size,
+            "grad_norm": gnorm,
+            "lr": jnp.asarray(lr, jnp.float32),
+        }
+        return _restack(new_p), {"m": _restack(new_opt["m"]),
+                                 "v": _restack(new_opt["v"]),
+                                 "step": new_opt["step"]}, metrics
+
+    return step_local
+
+
+def _staged_specs(model, dcfg: DistConfig):
+    from repro.models import staging
+
+    return staging.stage_storage_specs(model, dcfg)
+
+
+def wrap_loss_step(model, plan, dcfg: DistConfig, shape,
+                   with_grads: bool = True, mesh=None):
+    """jit(shard_map(step)): (storage, batch) -> loss | (loss, grads) —
+    staged under plan.pipelined, the whole-model step otherwise."""
+    mesh = mesh or make_mesh(dcfg)
+    if not plan.pipelined:
+        step = RT.make_loss_step(model, dcfg, with_grads=with_grads)
+        pspecs = RT.model_storage_specs(model, dcfg)
+        out_specs = (P(), pspecs) if with_grads else P()
+        fn, _ = RT.wrap_step(model, dcfg, shape, step, out_specs, mesh=mesh)
+        return fn
+    pspecs = _staged_specs(model, dcfg)
+    step = make_staged_loss_step(model, plan, dcfg, with_grads=with_grads)
+    in_specs = (pspecs, RT.batch_specs(model, shape, dcfg))
+    out_specs = (P(), pspecs) if with_grads else P()
+    fn = shard_map(step, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs, check_vma=False)
+    return jax.jit(fn)
+
+
+def wrap_any_train_step(model, plan, dcfg: DistConfig, shape,
+                        ocfg: AdamWConfig, schedule=None, mesh=None,
+                        donate: bool = True):
+    """jit(shard_map(train_step)), staged or whole-model per the plan."""
+    mesh = mesh or make_mesh(dcfg)
+    if not plan.pipelined:
+        fn, _ = wrap_train_step(model, dcfg, shape, ocfg, schedule,
+                                mesh=mesh, donate=donate)
+        return fn
+    step_local = make_staged_train_step(model, plan, dcfg, ocfg, schedule)
+    pspecs = _staged_specs(model, dcfg)
+    opt_specs = {"m": pspecs, "v": pspecs, "step": P()}
+    in_specs = (pspecs, opt_specs, RT.batch_specs(model, shape, dcfg))
+    out_specs = (pspecs, opt_specs,
+                 {"loss": P(), "grad_norm": P(), "lr": P()})
+    fn = shard_map(step_local, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs, check_vma=False)
+    return jax.jit(fn, donate_argnums=(0, 1) if donate else ())
+
+
+# ---------------------------------------------------------------------------
+# Pipeline-parallel training with a bring-your-own staged module (synthetic
+# stage stacks under pp x dp x tp; benchmarks and the raw parity harness).
 # ---------------------------------------------------------------------------
 def make_pipeline_train_step(stage_fn, stage_metas, dcfg: DistConfig,
                              ocfg: AdamWConfig, loss_fn,
@@ -199,7 +393,12 @@ def default_schedule(ocfg: AdamWConfig, total_steps: int, warmup: int = 100):
                              total=total_steps)
 
 
-def init_train_state(model, dcfg: DistConfig, key=None):
+def init_train_state(model, dcfg: DistConfig, key=None, plan=None):
+    """Fresh storage + optimizer state (stage-stacked when `plan` pipelines
+    — the optimizer moments live in the same layout as the params)."""
     key = key if key is not None else jax.random.PRNGKey(0)
     storage = RT.init_storage(model, key, dcfg)
+    if plan is not None and plan.pipelined:
+        from repro.models import staging
+        storage = staging.stage_tree(storage, plan.stage)
     return storage, init_opt_state(storage)

@@ -1,29 +1,37 @@
 """Production training loop: data prefetch, checkpoint/restart, failure
 recovery, straggler mitigation, metrics.
 
+ONE `Trainer` for every parallelism layout: it resolves a frozen
+`ParallelPlan` via `core/api.parallelize` and drives the plan's train step —
+whole-model SimpleFSDP at pp=1, the staged GPipe/1F1B pipeline (per-stage
+SimpleFSDP storage, models' stage-partition contract) when `dcfg.pp_axis`
+is set.  pp x dp x tp is a config flip, not a different trainer (the old
+`PipelineTrainer` is gone; bring-your-own-stage modules keep
+`train_step.make_pipeline_train_step`).
+
 `Trainer.run` survives injected failures by restarting from the newest
-checkpoint (same or different mesh — checkpoints are topology-independent),
-exactly the restart path a 1000-node deployment needs; see ft/failures.py
-for what is simulated vs. real on this container.
+checkpoint (same or different mesh — checkpoints are topology-independent:
+they always store the PLAIN storage layout, staged layouts are converted on
+save/restore, so a run can move between pipeline degrees across restarts);
+see ft/failures.py for what is simulated vs. real on this container.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import logging
-import time
 
 import jax
 import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer
+from repro.core.api import parallelize
 from repro.core.dist import DistConfig
-from repro.data.pipeline import DataConfig, SyntheticC4
+from repro.data.pipeline import DataConfig, SyntheticC4, adapt_batch
 from repro.ft.failures import (FailureSource, StepTimer, StragglerMonitor)
 from repro.models.common import ShapeConfig
 from repro.optim.adamw import AdamWConfig
-from repro.train.train_step import (default_schedule, init_train_state,
-                                    wrap_train_step)
+from repro.train.train_step import default_schedule, init_train_state
 
 log = logging.getLogger("repro.trainer")
 
@@ -47,11 +55,6 @@ class Trainer:
                  ocfg: AdamWConfig, tcfg: TrainerConfig,
                  failure_source: FailureSource | None = None,
                  seed: int = 0):
-        if dcfg.pp_axis is not None:
-            raise ValueError(
-                "Trainer drives whole-model loss_local steps; a pipe mesh "
-                "axis needs an explicitly staged module — use "
-                "PipelineTrainer (same file) with stage_fn/stage_metas.")
         self.model, self.dcfg, self.shape = model, dcfg, shape
         self.ocfg, self.tcfg = ocfg, tcfg
         self.failures = failure_source or FailureSource()
@@ -60,9 +63,12 @@ class Trainer:
         self.data = SyntheticC4(DataConfig(
             vocab=model.cfg.vocab, seq_len=shape.seq_len,
             global_batch=shape.global_batch, seed=seed))
+        self._seed = seed
         sched = default_schedule(ocfg, tcfg.total_steps, tcfg.warmup)
-        self.step_fn, self.mesh = wrap_train_step(model, dcfg, shape, ocfg,
-                                                  sched)
+        self.par = parallelize(model, dcfg, shape)
+        self.plan = self.par.plan
+        self.mesh = self.par.mesh
+        self.step_fn = self.par.train_step(ocfg, sched)
         self.history: list[dict] = []
         self.restarts = 0
 
@@ -72,10 +78,31 @@ class Trainer:
         if latest is not None:
             storage, opt_state, _ = self.ckpt.restore(latest, self.model,
                                                       self.dcfg)
+            # checkpoints hold the plain layout; stage it for this plan
+            storage = self.par.stage_storage(storage)
+            if self.plan.pipelined:
+                from repro.models import staging
+                opt_state = staging.stage_opt_state(opt_state,
+                                                    self.plan.stage)
             log.info("restored step %d", latest)
             return storage, opt_state, latest
-        storage, opt_state = init_train_state(self.model, self.dcfg, key)
+        storage, opt_state = init_train_state(self.model, self.dcfg, key,
+                                              plan=self.plan)
         return storage, opt_state, 0
+
+    def _save(self, step, storage, opt_state):
+        if self.plan.pipelined:
+            from repro.models import staging
+            storage = self.par.unstage_storage(storage)
+            opt_state = staging.unstage_opt_state(opt_state,
+                                                  self.plan.stage)
+        self.ckpt.save(step, storage, opt_state, self.model, self.dcfg)
+
+    def _batch(self, step):
+        return adapt_batch(
+            self.data.batch(step),
+            self.model.input_specs(self.shape, self.dcfg),
+            step=step, seed=self._seed)
 
     def run(self, key=None):
         key = key if key is not None else jax.random.PRNGKey(0)
@@ -92,7 +119,7 @@ class Trainer:
                 storage, opt_state, step = self._init_or_restore(key)
                 continue
 
-            batch = self.data.batch(step)
+            batch = self._batch(step)
             with StepTimer() as t:
                 storage, opt_state, metrics = self.step_fn(
                     storage, opt_state, batch)
@@ -110,64 +137,6 @@ class Trainer:
                          t.dt * 1e3)
             if step % self.tcfg.ckpt_every == 0 \
                     or step in (self.tcfg.total_steps, stop_at):
-                self.ckpt.save(step, storage, opt_state, self.model,
-                               self.dcfg)
+                self._save(step, storage, opt_state)
         self.ckpt.wait()
         return storage, opt_state, self.history
-
-
-class PipelineTrainer:
-    """Training loop for an explicitly staged module under pp x dp x tp.
-
-    Drives `wrap_pipeline_train_step` (GPipe or 1F1B per
-    `dcfg.pp_schedule`): each pipe rank owns one stage's ZeRO-3 storage,
-    bucket-gathers it per use, and streams activations to the next stage —
-    paper SS4's composition, one shard_map'd jit per step.  Batches are
-    synthetic (M, microbatch, ...) activation stacks fed to stage 0; the
-    full-LM partition (embedding on stage 0, head+loss on the last stage)
-    is tracked in ROADMAP's open items.
-    """
-
-    def __init__(self, stage_fn, stage_metas, stage_params_fn,
-                 dcfg: DistConfig, ocfg: AdamWConfig, loss_fn,
-                 xs_shape: tuple[int, ...], total_steps: int = 100,
-                 log_every: int = 10, schedule: str | None = None,
-                 plan=None, seed: int = 0):
-        if dcfg.pp_axis is None:
-            raise ValueError("PipelineTrainer needs dcfg.pp_axis")
-        from repro.train.train_step import (init_pipeline_state,
-                                            wrap_pipeline_train_step)
-
-        self.dcfg, self.ocfg = dcfg, ocfg
-        self.xs_shape, self.seed = tuple(xs_shape), seed
-        self.total_steps, self.log_every = total_steps, log_every
-        self.straggler = StragglerMonitor()
-        sched = default_schedule(ocfg, total_steps, warmup=min(
-            10, total_steps))
-        self.step_fn, self.mesh = wrap_pipeline_train_step(
-            stage_fn, stage_metas, dcfg, ocfg, loss_fn,
-            xs_ndim=len(self.xs_shape), schedule=schedule, plan=plan,
-            lr_schedule=sched)
-        self.storage, self.opt_state = init_pipeline_state(
-            stage_params_fn, stage_metas, dcfg, jax.random.PRNGKey(seed))
-        self.history: list[dict] = []
-
-    def _batch(self, step: int):
-        key = jax.random.fold_in(jax.random.PRNGKey(self.seed + 1), step)
-        return jax.random.normal(key, self.xs_shape)
-
-    def run(self):
-        for step in range(1, self.total_steps + 1):
-            with StepTimer() as t:
-                self.storage, self.opt_state, metrics = self.step_fn(
-                    self.storage, self.opt_state, self._batch(step))
-                metrics = jax.tree.map(np.asarray, metrics)
-            if self.straggler.observe(t.dt) == "escalate":
-                log.warning("straggler escalation at step %d", step)
-            if step % self.log_every == 0 or step == 1:
-                self.history.append(
-                    {"step": step, "dt": t.dt,
-                     **{k: float(v) for k, v in metrics.items()}})
-                log.info("pipe step %d loss %.4f gnorm %.3f %.0fms", step,
-                         metrics["loss"], metrics["grad_norm"], t.dt * 1e3)
-        return self.storage, self.opt_state, self.history

@@ -20,6 +20,13 @@ The `pipeline` case covers paper SS4's pipeline-parallel composition: GPipe
 and 1F1B schedules under (pipe, data, model) meshes with FSDP bucket gathers
 active INSIDE each pipelined stage, asserted exactly against the sequential
 dense reference (losses, parameter grads, and d/d(xs)) across bucket modes.
+
+The `trainer_pipeline` case covers the unified `parallelize()` path — the
+full-LM stage partition (embedding on stage 0, layer slices, head+loss on
+the last stage, replicated tied embeddings): pp=2 vs the pp=1 baseline must
+agree exactly on losses, assembled gradients, and one AdamW step.  The
+`trainer_smoke_a/b` cases run every registered arch 2 Trainer steps (plus a
+staged checkpoint) on a pp2 x dp2 x tp2 mesh.
 """
 
 from __future__ import annotations
@@ -599,6 +606,177 @@ def case_pipeline():
 
 
 CASES["pipeline"] = case_pipeline
+
+
+# --------------------------------------------------------------------------
+# The unified Trainer path (core/api.parallelize): full-LM stage partition.
+# --------------------------------------------------------------------------
+def _fp32_pp(schedule: str, microbatches: int = 2) -> DistConfig:
+    return fp32_cfg(("pipe", "data", "model"), (2, 4, 1), ("data",),
+                    pp_axis="pipe", pp_schedule=schedule,
+                    pp_microbatches=microbatches)
+
+
+def _synth_batch(model, shape, dcfg, vocab, valid_ones=True):
+    from repro.data.pipeline import DataConfig, SyntheticC4, adapt_batch
+
+    ds = SyntheticC4(DataConfig(vocab=vocab, seq_len=shape.seq_len,
+                                global_batch=shape.global_batch))
+    batch = adapt_batch(ds.batch(0), model.input_specs(shape, dcfg), 0)
+    if valid_ones and "valid" in batch:
+        # equal per-microbatch token counts: the microbatched mean-of-means
+        # then equals the whole-batch mean exactly
+        batch["valid"] = np.ones_like(batch["valid"])
+    return batch
+
+
+def case_trainer_pipeline():
+    """Exact parity of the unified `parallelize()` path: the SAME model,
+    params and batch through (a) the whole-model pp=1 loss/grad step and
+    (b) the staged GPipe/1F1B pipeline at pp=2 — losses and every assembled
+    full gradient must agree (tp=1, so this case is exact on every jax
+    version; the stage partition covers untied heads, tied/replicated
+    embeddings, and the MoE aux channel)."""
+    from repro.core.api import parallelize
+    from repro.models import runtime as RT
+    from repro.models.common import ShapeConfig
+    from repro.models.registry import get_arch_for_pp
+
+    for arch in ("deepseek_coder_33b", "qwen3_1_7b", "qwen2_moe_a2_7b"):
+        cfg, model = get_arch_for_pp(arch, n_stages=2)
+        shape = ShapeConfig("t", 32, 8, "train")
+        d1 = fp32_cfg(("data", "model"), (4, 1), ("data",))
+        batch = _synth_batch(model, shape, d1, cfg.vocab)
+        full = model.init_full(jax.random.PRNGKey(0), d1)
+
+        metas1 = model.metas(d1)
+        st1 = {k: RT.tree_to_storage(full[k], metas1[k], d1) for k in full}
+        par1 = parallelize(model, d1, shape)
+        l1, g1 = par1.loss_step()(st1, batch)
+        g1full = {k: RT.tree_from_storage(g1[k], metas1[k], d1) for k in g1}
+        flat1 = {jax.tree_util.keystr(p): v for p, v in
+                 jax.tree_util.tree_flatten_with_path(g1full)[0]}
+
+        for schedule in ("gpipe", "1f1b"):
+            dp = _fp32_pp(schedule)
+            parp = parallelize(model, dp, shape)
+            metasp = model.metas(dp)
+            stp = parp.stage_storage(
+                {k: RT.tree_to_storage(full[k], metasp[k], dp)
+                 for k in full})
+            lp, gp = parp.loss_step()(stp, batch)
+            gplain = parp.unstage_storage(
+                jax.tree.map(np.asarray, gp))
+            gpfull = {k: RT.tree_from_storage(gplain[k], metasp[k], dp)
+                      for k in gplain}
+            flatp = {jax.tree_util.keystr(p): v for p, v in
+                     jax.tree_util.tree_flatten_with_path(gpfull)[0]}
+            tag = f"trainer_pipeline/{arch}/{schedule}"
+            np.testing.assert_allclose(float(lp), float(l1), rtol=2e-5,
+                                       err_msg=f"{tag}: loss mismatch")
+            assert set(flatp) == set(flat1), f"{tag}: grad tree mismatch"
+            for k, want in flat1.items():
+                np.testing.assert_allclose(
+                    np.asarray(flatp[k]), np.asarray(want),
+                    rtol=3e-4, atol=3e-6,
+                    err_msg=f"{tag}: grad mismatch at {k}")
+            print(f"PASS {tag} (loss {float(lp):.4f})")
+
+    # one TRAIN step through the replicated-embedding arch: the pipe-axis
+    # grad psum + the deduplicated grad-norm must reproduce the baseline
+    # metrics and the updated weights
+    from repro.optim.adamw import AdamWConfig, init_opt_state
+
+    cfg, model = get_arch_for_pp("qwen3_1_7b", n_stages=2)
+    shape = ShapeConfig("t", 32, 8, "train")
+    d1 = fp32_cfg(("data", "model"), (4, 1), ("data",))
+    batch = _synth_batch(model, shape, d1, cfg.vocab)
+    full = model.init_full(jax.random.PRNGKey(0), d1)
+    metas1 = model.metas(d1)
+    st1 = {k: RT.tree_to_storage(full[k], metas1[k], d1) for k in full}
+    par1 = parallelize(model, d1, shape)
+    fn1 = par1.train_step(AdamWConfig(lr=1e-3), donate=False)
+    new1, _, m1 = fn1(st1, init_opt_state(st1), batch)
+
+    dp = _fp32_pp("1f1b")
+    parp = parallelize(model, dp, shape)
+    metasp = model.metas(dp)
+    stp = parp.stage_storage(
+        {k: RT.tree_to_storage(full[k], metasp[k], dp) for k in full})
+    fnp = parp.train_step(AdamWConfig(lr=1e-3), donate=False)
+    newp, _, mp = fnp(stp, init_opt_state(stp), batch)
+    np.testing.assert_allclose(float(mp["loss"]), float(m1["loss"]),
+                               rtol=2e-5, err_msg="train step loss")
+    np.testing.assert_allclose(float(mp["grad_norm"]),
+                               float(m1["grad_norm"]), rtol=2e-4,
+                               err_msg="train step grad_norm")
+    new_plain = parp.unstage_storage(jax.tree.map(np.asarray, newp))
+    for k in new1:
+        a = {jax.tree_util.keystr(p): v for p, v in
+             jax.tree_util.tree_flatten_with_path(new_plain[k])[0]}
+        b = {jax.tree_util.keystr(p): v for p, v in
+             jax.tree_util.tree_flatten_with_path(
+                 jax.tree.map(np.asarray, new1[k]))[0]}
+        for kk in b:
+            np.testing.assert_allclose(
+                a[kk], b[kk], rtol=2e-4, atol=1e-6,
+                err_msg=f"updated params mismatch {k}{kk}")
+    print("PASS trainer_pipeline/train_step (loss+gnorm+updated weights)")
+
+
+CASES["trainer_pipeline"] = case_trainer_pipeline
+
+
+TRAINER_SMOKE_ARCHS = {
+    "trainer_smoke_a": ("deepseek_coder_33b", "phi3_medium_14b",
+                        "gemma2_27b", "qwen3_1_7b", "llama3_8b"),
+    "trainer_smoke_b": ("qwen2_moe_a2_7b", "qwen3_moe_30b_a3b",
+                        "xlstm_1_3b", "seamless_m4t_large_v2",
+                        "zamba2_1_2b", "internvl2_26b"),
+}
+
+
+def _case_trainer_smoke(archs):
+    """Every registered arch trains 2 steps (incl. a staged checkpoint
+    save) through the ONE Trainer on a pp2 x dp2 x tp2 mesh via
+    parallelize() — the api_redesign acceptance gate. Smoke (finite,
+    recorded losses), not parity: tp=2 grads are version-gated elsewhere."""
+    import shutil
+    import tempfile
+
+    from repro.models.common import ShapeConfig
+    from repro.models.registry import get_arch_for_pp
+    from repro.optim.adamw import AdamWConfig
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    for i, arch in enumerate(archs):
+        cfg, model = get_arch_for_pp(arch, n_stages=2)
+        seq = 64 if arch == "seamless_m4t_large_v2" else \
+            40 if arch == "internvl2_26b" else 32
+        shape = ShapeConfig("t", seq, 8, "train")
+        dcfg = fp32_cfg(("pipe", "data", "model"), (2, 2, 2), ("data",),
+                        pp_axis="pipe",
+                        pp_schedule="1f1b" if i % 2 else "gpipe")
+        ckpt_dir = tempfile.mkdtemp(prefix=f"pp_smoke_{arch}_")
+        try:
+            tcfg = TrainerConfig(total_steps=2, ckpt_every=2, log_every=1,
+                                 warmup=1, ckpt_dir=ckpt_dir)
+            tr = Trainer(model, dcfg, shape, AdamWConfig(lr=1e-3), tcfg)
+            assert tr.plan.pipelined and tr.plan.stage.n_stages == 2
+            _, _, hist = tr.run()
+            assert hist and all(np.isfinite(h["loss"]) for h in hist), \
+                f"{arch}: non-finite loss {hist}"
+            assert tr.ckpt.latest_step() == 2, f"{arch}: no staged ckpt"
+            print(f"PASS trainer_smoke/{arch} "
+                  f"({dcfg.pp_schedule}, loss {hist[-1]['loss']:.4f})")
+        finally:
+            shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+
+CASES["trainer_smoke_a"] = \
+    lambda: _case_trainer_smoke(TRAINER_SMOKE_ARCHS["trainer_smoke_a"])
+CASES["trainer_smoke_b"] = \
+    lambda: _case_trainer_smoke(TRAINER_SMOKE_ARCHS["trainer_smoke_b"])
 
 
 if __name__ == "__main__":

@@ -1,0 +1,264 @@
+"""Device-free unit tests of the `parallelize()` redesign (core/api.py).
+
+Covers: `plan_parallel` resolution and its invariants per registered arch
+(stage partitions cover every top-level param group exactly once, equal
+layer slices), the stage/unstage storage round-trip (models/staging.py),
+the model-contract `stacked_keys` fix, and the BENCH_pipeline.json schema
+(satellite CI artifact, mirroring the BENCH_overlap smoke).
+
+Multi-device semantics (pp>1 vs pp=1 exact parity, per-arch Trainer smoke)
+live in tests/dist_harness.py cases `trainer_pipeline` /
+`trainer_smoke_a/b`.
+"""
+
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.api import ParallelPlan, parallelize, plan_parallel
+from repro.core.dist import DistConfig
+from repro.models import runtime as RT
+from repro.models.common import ShapeConfig, StageSpec
+from repro.models.registry import (ARCH_IDS, get_arch, get_arch_for_pp)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SHAPE = ShapeConfig("t", 32, 8, "train")
+
+
+def _pp_cfg(stages: int = 2, **kw) -> DistConfig:
+    return DistConfig(mesh_axes=("pipe", "data", "model"),
+                      mesh_shape=(stages, 2, 2), pp_axis="pipe",
+                      param_dtype=jnp.float32, storage_dtype=jnp.float32,
+                      **kw)
+
+
+def _flat_cfg(**kw) -> DistConfig:
+    return DistConfig(mesh_axes=("data", "model"), mesh_shape=(2, 2),
+                      param_dtype=jnp.float32, storage_dtype=jnp.float32,
+                      **kw)
+
+
+# ---------------------------------------------------------------------------
+# plan_parallel resolution invariants, every registered arch
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_plan_parallel_stage_partition_invariants(arch):
+    """For every arch: the resolved plan's stage partition covers each
+    top-level param group exactly once, slices the stack evenly, and the
+    bucket plans cover every stacked group."""
+    cfg, model = get_arch_for_pp(arch, n_stages=2)
+    dcfg = _pp_cfg(2)
+    plan = plan_parallel(model, dcfg, SHAPE)
+
+    assert plan.pipelined and isinstance(plan.stage, StageSpec)
+    spec = plan.stage
+    metas = model.metas(dcfg)
+    declared = [spec.pipelined, *spec.pre_keys, *spec.post_keys,
+                *spec.replicated_keys]
+    # exactly once: no dupes, no gaps, nothing unknown
+    assert len(set(declared)) == len(declared)
+    assert set(declared) == set(metas.keys())
+    # equal contiguous slices of the existing stacked dim
+    sk = plan.stacked_keys
+    assert spec.pipelined in sk
+    assert spec.layers_per_stage * spec.n_stages == sk[spec.pipelined]
+    # owner() resolves every group to a well-defined location
+    for k in metas:
+        assert spec.owner(k) in (0, spec.n_stages - 1, "all", "sliced")
+    # microbatches resolved (default = stage count)
+    assert plan.microbatches == 2
+    # one bucket plan per stacked group
+    assert set(plan.bucket_plans) == set(sk)
+    assert "pp=2" in plan.describe()
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_plan_parallel_without_pipe_axis(arch):
+    cfg, model = get_arch(arch, smoke=True)
+    plan = plan_parallel(model, _flat_cfg(), SHAPE)
+    assert not plan.pipelined and plan.stage is None
+    assert plan.microbatches == 0
+    assert set(plan.bucket_plans) == set(plan.stacked_keys)
+
+
+def test_plan_parallel_rejects_bad_partitions():
+    # zamba2's stock smoke config has a trailing partial superblock
+    _, model = get_arch("zamba2_1_2b", smoke=True)
+    with pytest.raises(ValueError, match="shared_attn_every"):
+        plan_parallel(model, _pp_cfg(2))
+    # a stack that does not split evenly
+    _, model = get_arch("qwen3_1_7b", smoke=True)   # n_steps == 2
+    with pytest.raises(ValueError, match="equal pipeline stages"):
+        plan_parallel(model, _pp_cfg(4))
+
+
+def test_stage_spec_validate_is_strict():
+    _, model = get_arch("deepseek_coder_33b", smoke=True)
+    spec = model.stage_spec(2)
+    metas = model.metas(_pp_cfg(2))
+    # dropping a key -> gap detected
+    import dataclasses
+    bad = dataclasses.replace(spec, post_keys=("final_norm",))
+    with pytest.raises(ValueError, match="missing"):
+        bad.validate(metas.keys(), dict(model.stacked_keys))
+    # assigning a key twice -> dupe detected
+    bad = dataclasses.replace(spec, replicated_keys=("embed",),
+                              pre_keys=("embed",))
+    with pytest.raises(ValueError, match="twice"):
+        bad.validate(metas.keys(), dict(model.stacked_keys))
+
+
+def test_stacked_keys_is_part_of_the_model_contract():
+    """The old `{"blocks": model.n_steps}` fallback raised AttributeError
+    for models without n_steps; now every model declares stacked_keys and
+    strangers get a pointed TypeError."""
+    for arch in ARCH_IDS:
+        _, model = get_arch(arch, smoke=True)
+        sk = RT.stacked_keys(model)
+        assert sk and all(isinstance(v, int) and v >= 1
+                          for v in sk.values())
+
+    class NotAModel:
+        pass
+
+    with pytest.raises(TypeError, match="stacked_keys"):
+        RT.stacked_keys(NotAModel())
+
+
+def test_tree_to_storage_is_the_api_transform():
+    """Satellite: the duplicate full->storage transforms are collapsed."""
+    from repro.core.api import shard_params, unshard_params
+
+    assert RT.tree_to_storage is shard_params
+    assert RT.tree_from_storage is unshard_params
+
+
+# ---------------------------------------------------------------------------
+# Staging round-trip (models/staging.py)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ["qwen3_1_7b", "seamless_m4t_large_v2",
+                                  "zamba2_1_2b"])
+def test_stage_unstage_roundtrip(arch):
+    """stage_tree/unstage_tree are exact inverses on the owned data (the
+    topology-independent checkpoint property), incl. the two-stack enc-dec
+    and the replicated shared block."""
+    from repro.models import staging
+
+    cfg, model = get_arch_for_pp(arch, n_stages=2)
+    dcfg = _pp_cfg(2)
+    spec = model.stage_spec(2)
+    storage = RT.init_storage(model, jax.random.PRNGKey(0), dcfg)
+
+    staged = staging.stage_tree(storage, spec)
+    back = staging.unstage_tree(staged, spec)
+    flat_a = jax.tree_util.tree_flatten_with_path(storage)[0]
+    flat_b = dict((jax.tree_util.keystr(p), v) for p, v in
+                  jax.tree_util.tree_flatten_with_path(back)[0])
+    for p, v in flat_a:
+        np.testing.assert_array_equal(np.asarray(v),
+                                      np.asarray(flat_b[jax.tree_util
+                                                        .keystr(p)]))
+
+    # staged leaves carry the (S, ...) stage dim; the pipelined stack's
+    # slices are real data in every slot
+    for k, sub in staged.items():
+        for leaf in jax.tree.leaves(sub):
+            assert leaf.shape[0] == 2
+    # replicated keys: identical slots
+    for k in spec.replicated_keys:
+        for leaf in jax.tree.leaves(staged[k]):
+            np.testing.assert_array_equal(np.asarray(leaf[0]),
+                                          np.asarray(leaf[1]))
+    # specs and abstract storage agree with the actual staged shapes
+    ab = staging.stage_abstract_storage(model, dcfg, spec)
+    flat_ab = dict((jax.tree_util.keystr(p), v) for p, v in
+                   jax.tree_util.tree_flatten_with_path(ab)[0])
+    for p, v in jax.tree_util.tree_flatten_with_path(staged)[0]:
+        sd = flat_ab[jax.tree_util.keystr(p)]
+        assert tuple(v.shape) == tuple(sd.shape), jax.tree_util.keystr(p)
+    specs = staging.stage_storage_specs(model, dcfg)
+    for p, s in jax.tree_util.tree_flatten_with_path(specs)[0]:
+        assert s[0] == "pipe", jax.tree_util.keystr(p)
+
+
+def test_parallelize_bundle_flat_mesh_matches_runtime():
+    """At pp=1 the bundle is the familiar whole-model path: identical specs
+    and a loss step that agrees with the runtime-assembled one."""
+    cfg, model = get_arch("qwen3_1_7b", smoke=True)
+    dcfg = DistConfig(mesh_axes=("data", "model"), mesh_shape=(1, 1),
+                      param_dtype=jnp.float32, storage_dtype=jnp.float32)
+    shape = ShapeConfig("t", 16, 2, "train")
+    par = parallelize(model, dcfg, shape)
+    assert par.storage_specs == RT.model_storage_specs(model, dcfg)
+    storage = par.init_storage(jax.random.PRNGKey(0))
+    assert par.stage_storage(storage) is storage      # no-op at pp=1
+
+    from repro.data.pipeline import DataConfig, SyntheticC4, adapt_batch
+    ds = SyntheticC4(DataConfig(vocab=cfg.vocab, seq_len=16,
+                                global_batch=2))
+    batch = adapt_batch(ds.batch(0), model.input_specs(shape, dcfg), 0)
+    loss, grads = par.loss_step()(storage, batch)
+
+    from jax.sharding import PartitionSpec as P
+    step = RT.make_loss_step(model, dcfg)
+    fn, _ = RT.wrap_step(model, dcfg, shape, step,
+                         (P(), RT.model_storage_specs(model, dcfg)))
+    loss_ref, grads_ref = fn(storage, batch)
+    np.testing.assert_allclose(float(loss), float(loss_ref), rtol=1e-6)
+    for (pa, a), (pb, b) in zip(
+            jax.tree_util.tree_flatten_with_path(grads)[0],
+            jax.tree_util.tree_flatten_with_path(grads_ref)[0]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=0,
+                                   err_msg=jax.tree_util.keystr(pa))
+
+
+def test_plan_mismatched_dcfg_rejected():
+    _, model = get_arch("qwen3_1_7b", smoke=True)
+    plan = plan_parallel(model, _flat_cfg(), SHAPE)
+    with pytest.raises(ValueError, match="different DistConfig"):
+        parallelize(model, _flat_cfg(bucket_mode="none"), SHAPE, plan=plan)
+
+
+# ---------------------------------------------------------------------------
+# BENCH_pipeline.json emission (tier-1 smoke; schema regressions fail here)
+# ---------------------------------------------------------------------------
+def test_bench_pipeline_json_schema(tmp_path):
+    import json
+
+    sys.path.insert(0, ROOT)
+    try:
+        from benchmarks import paper_tables as T
+    finally:
+        sys.path.pop(0)
+    path = str(tmp_path / "BENCH_pipeline.json")
+    doc = T.pipeline_table(json_path=path)
+    on_disk = json.load(open(path))
+    assert on_disk == doc
+    assert doc["schema"] == "bench_pipeline_v1"
+    assert len(doc["archs"]) >= 2
+    for arch, rec in doc["archs"].items():
+        assert rec["pp_stages"] > 1
+        assert rec["layers_per_stage"] * rec["pp_stages"] \
+            == rec["n_scan_steps"]
+        assert rec["stats_source"] in ("analytic", "measured")
+        assert set(rec["schedules"]) == {"gpipe", "1f1b"}
+        for sched, rows in rec["schedules"].items():
+            for row in rows.values():
+                assert 0.0 <= row["bubble_frac"] < 1.0
+                assert row["modeled_step_s"] > 0
+                if sched == "1f1b":
+                    # the 1F1B memory claim: live activations bounded by S
+                    assert row["peak_live_microbatches"] \
+                        <= rec["pp_stages"]
+                else:
+                    assert row["peak_live_microbatches"] \
+                        == row["microbatches"]
+            # deeper microbatching shrinks the bubble
+            bubbles = [r["bubble_frac"] for r in rows.values()]
+            assert bubbles == sorted(bubbles, reverse=True) \
+                or len(set(bubbles)) == 1

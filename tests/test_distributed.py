@@ -85,3 +85,24 @@ def test_pipeline_parallel_composability():
     gathers inside each stage — exact loss/gradient match vs the sequential
     dense model across bucket modes (paper SS4)."""
     _run("pipeline")
+
+
+def test_trainer_pipeline_full_lm_parity():
+    """The unified parallelize() path: full-LM stage partition at pp=2 vs
+    the pp=1 baseline — exact losses, assembled grads, and one AdamW step
+    (untied, tied/replicated-embedding, and MoE-aux archs).  tp=1, so exact
+    on every jax version (explicit collectives only)."""
+    _run("trainer_pipeline", timeout=560)
+
+
+@pytest.mark.slow
+def test_trainer_pp_smoke_dense_family():
+    """Every registered arch runs a pp2 x dp2 x tp2 Trainer smoke (2 steps
+    + a staged checkpoint) through the ONE Trainer — dense half."""
+    _run("trainer_smoke_a", timeout=560)
+
+
+@pytest.mark.slow
+def test_trainer_pp_smoke_moe_ssm_multimodal():
+    """... and the moe/xlstm/encdec/zamba2/vlm half."""
+    _run("trainer_smoke_b", timeout=560)
