@@ -288,6 +288,82 @@ def fig4_autowrap(json_path: str | None = None):
 
 
 # ---------------------------------------------------------------------------
+# Memory — the paper's Table 3 sweep, modeled: per-device peak + step time
+# per remat mode per arch from core/memory's live-range simulator on the
+# production mesh, plus the budgeted auto-SAC row (remat='auto:<GB>').
+# --json writes benchmarks/results/BENCH_memory.json (schema-smoked in
+# tier-1 like the overlap/pipeline benches).
+# ---------------------------------------------------------------------------
+MEMORY_SCHEMA = "bench_memory_v1"
+MEMORY_ARCHS = OVERLAP_ARCHS        # the same tracked trio
+MEMORY_MODES = ("none", "save_dots", "fsdp_only", "full")
+
+
+def memory_table(json_path: str | None = None, archs=MEMORY_ARCHS,
+                 budget_gb: float | None = None):
+    """Modeled per-device peak memory and step time per remat mode per arch
+    (paper Table 3: no-AC > SAC > full-AC on memory, reversed on speed),
+    with the auto:<GB> planner row showing what the budgeted search picks.
+    Device-free analytics off the frozen MemoryPlan — the cross-PR tracking
+    artifact BENCH_memory.json."""
+    import json as _json
+    import os as _os
+
+    from repro.core import hw
+    from repro.core import memory as MEM
+    from repro.launch.mesh import production_dcfg
+
+    base = production_dcfg()
+    budget_gb = budget_gb or hw.HBM_BYTES / 1024**3
+    doc = {"schema": MEMORY_SCHEMA, "mesh": "16x16",
+           "budget_gb": budget_gb, "archs": {}}
+    for arch in archs:
+        cfg, model = get_arch(arch)
+        bshape = (1, 4096)
+        stats = model.block_stats(base, bshape)
+        L = getattr(model, "n_steps", cfg.n_layers)
+        arch_rec = {"n_scan_steps": L, "stats_source": stats.source,
+                    "modes": {}}
+        prof = MEM.build_block_profile(
+            model.block_metas(base), base, stats,
+            model.block_segments(base)
+            if hasattr(model, "block_segments") else None)
+        comp_s = prof.comp_s                  # mode-independent
+        for mode in MEMORY_MODES + (f"auto:{budget_gb:g}",):
+            mp = MEM.plan_memory(model, base.with_(remat=mode),
+                                 batch_shape=bshape, stats=stats)
+            row = {
+                "policy_spec": mp.policy_spec,
+                "peak_bytes": mp.peak,
+                "peak_gib": mp.peak / 2**30,
+                "cost_s": mp.cost_s,
+                # fwd + ~2x bwd compute per layer + recompute/exposure cost
+                "modeled_step_s": L * 3.0 * comp_s + mp.cost_s,
+                "offload_opt_state": mp.offload_opt_state,
+                "offload_residuals": mp.offload_residuals,
+            }
+            key = "auto" if mode.startswith("auto") else mode
+            arch_rec["modes"][key] = row
+            emit(f"memory_table/{arch}/{key}",
+                 row["modeled_step_s"] * 1e6,
+                 f"peak_gib={row['peak_gib']:.3f};"
+                 f"policy={mp.policy_spec};"
+                 f"offload={int(mp.offload_opt_state)}"
+                 f"{int(mp.offload_residuals)}")
+        # the paper's Table 3 ordering must reproduce in the model
+        m = arch_rec["modes"]
+        assert m["none"]["peak_bytes"] >= m["fsdp_only"]["peak_bytes"] \
+            >= m["full"]["peak_bytes"], f"{arch}: AC ordering violated"
+        doc["archs"][arch] = arch_rec
+    if json_path:
+        _os.makedirs(_os.path.dirname(json_path), exist_ok=True)
+        with open(json_path, "w") as f:
+            _json.dump(doc, f, indent=1)
+        print(f"wrote {json_path}", flush=True)
+    return doc
+
+
+# ---------------------------------------------------------------------------
 # Pipeline — paper SS4 composability as a bench row: stage-stacked MLP on a
 # (pipe, data, model) mesh, GPipe vs 1F1B trainable steps with FSDP bucket
 # gathers per use inside each stage. 1F1B's claim is the activation bound

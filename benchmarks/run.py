@@ -10,8 +10,10 @@ Run:  PYTHONPATH=src python -m benchmarks.run [table3 table5 ...] [--json]
 support it (fig4 -> benchmarks/results/BENCH_overlap.json: per-arch exposure
 + modeled step time for the none/block/greedy/auto_dp plans; pipeline ->
 benchmarks/results/BENCH_pipeline.json: modeled bubble fraction + per-stage
-exposure per schedule over the staged archs) so the perf trajectory is
-tracked across PRs.
+exposure per schedule over the staged archs; mem ->
+benchmarks/results/BENCH_memory.json: modeled per-device peak + step time
+per remat mode per arch incl. the budgeted auto-SAC row — the paper's
+Table 3 sweep) so the perf trajectory is tracked across PRs.
 """
 
 import os
@@ -30,6 +32,7 @@ RESULTS_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                            "results")
 OVERLAP_JSON = os.path.join(RESULTS_DIR, "BENCH_overlap.json")
 PIPELINE_JSON = os.path.join(RESULTS_DIR, "BENCH_pipeline.json")
+MEMORY_JSON = os.path.join(RESULTS_DIR, "BENCH_memory.json")
 
 
 def main() -> None:
@@ -55,6 +58,8 @@ def main() -> None:
         "fig5": T.fig5_convergence,
         "pipeline": lambda: T.pipeline_bench(
             json_path=PIPELINE_JSON if emit_json else None),
+        "mem": lambda: T.memory_table(
+            json_path=MEMORY_JSON if emit_json else None),
         "roofline": lambda: roofline.emit_csv(T.emit),
     }
     names = names or list(benches)

@@ -48,6 +48,13 @@ def main():
 
     par = parallelize(model, dcfg, shape)           # frozen ParallelPlan
     print("plan:", par.plan.describe())
+
+    # --- budgeted auto-SAC (core/memory): two lines pick the cheapest
+    # per-segment remat (+offload) whose modeled peak fits the HBM budget
+    par_auto = parallelize(model, dcfg.with_(remat="auto:8"), shape)
+    print("auto-SAC plan:", par_auto.plan.memory.describe(),
+          "->", par_auto.plan.exec_dcfg.remat)
+
     step = par.train_step(AdamWConfig(lr=1e-3))
     storage = par.init_storage(jax.random.PRNGKey(0))
 

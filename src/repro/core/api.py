@@ -47,6 +47,7 @@ from repro.core import collectives as coll
 from repro.core.bucketing import BucketPlan, plan_for
 from repro.core.dist import DistConfig, make_mesh
 from repro.core.meta import ParamMeta, from_storage, to_storage
+from repro.core.remat import AUTO_PREFIX, parse_remat
 
 # ---------------------------------------------------------------------------
 # The canonical full <-> storage layout transforms (stacked-aware).
@@ -105,6 +106,7 @@ class ParallelPlan:
     remat: str
     stage: Any = None                   # models/common.StageSpec | None
     microbatches: int = 0
+    memory: Any = None                  # core/memory.MemoryPlan | None
 
     @property
     def pipelined(self) -> bool:
@@ -112,6 +114,25 @@ class ParallelPlan:
 
     def bucket_plan(self, key: str) -> BucketPlan | None:
         return self.bucket_plans.get(key)
+
+    @property
+    def exec_dcfg(self) -> DistConfig:
+        """The DistConfig the steps actually trace with: `dcfg` with the
+        memory plan's decisions written back — the resolved per-segment
+        policy vector replacing ``remat="auto:<GB>"`` and, when the planner
+        retightened buckets against the budget, the chosen BucketPlan as
+        the explicit bucket_mode.  This is what keeps the pp=1 path (which
+        re-resolves plans inside `apply_stack`) executing exactly the plan
+        this object reports."""
+        d = self.dcfg
+        if self.memory is None:
+            return d
+        kw = {}
+        if self.memory.policy_spec != d.remat:
+            kw["remat"] = self.memory.policy_spec
+        if self.memory.bucket_plan is not None:
+            kw["bucket_mode"] = self.memory.bucket_plan
+        return d.with_(**kw) if kw else d
 
     def describe(self) -> str:
         d = self.dcfg
@@ -121,8 +142,10 @@ class ParallelPlan:
               f"{self.microbatches})" if self.pipelined else "")
         buckets = ",".join(f"{k}:{p.n_buckets}"
                            for k, p in self.bucket_plans.items())
+        mem = f" mem[{self.memory.describe()}]" if self.memory is not None \
+            else ""
         return (f"mesh[{mesh}] fsdp={d.fsdp_axes} tp={d.tp_size}"
-                f"{pp} remat={self.remat} buckets[{buckets}]")
+                f"{pp} remat={self.remat} buckets[{buckets}]{mem}")
 
 
 def plan_parallel(model, dcfg: DistConfig, shape=None) -> ParallelPlan:
@@ -134,6 +157,10 @@ def plan_parallel(model, dcfg: DistConfig, shape=None) -> ParallelPlan:
     requested pipeline degree cannot partition this model.
     """
     from repro.models.runtime import stacked_keys as model_stacked_keys
+
+    # malformed remat strings ('auto:' without a budget, unknown policies,
+    # bad vectors) fail HERE, once, not at first trace
+    remat_kind, _ = parse_remat(dcfg.remat)
 
     metas = model.metas(dcfg)
     sk = model_stacked_keys(model)     # pointed error for non-contract models
@@ -174,9 +201,30 @@ def plan_parallel(model, dcfg: DistConfig, shape=None) -> ParallelPlan:
         stage.validate(metas.keys(), sk)
         microbatches = dcfg.pp_microbatches or dcfg.pp_size
 
+    # ---- memory plan: simulate (and, for remat="auto:<GB>", CHOOSE) the
+    # per-segment policy vector + offload under the HBM budget.  Needs the
+    # workload shape to size activations; fixed-policy plans without a
+    # shape simply carry no memory record (nothing to choose).
+    memory = None
+    if remat_kind == AUTO_PREFIX and not hasattr(model, "block_stats"):
+        raise ValueError(
+            f"remat={dcfg.remat!r}: the budgeted auto form needs the "
+            f"model's cost contract, but {type(model).__name__} does not "
+            "implement block_stats; set an explicit policy (or vector) "
+            "instead")
+    if (shape is not None or remat_kind == AUTO_PREFIX) \
+            and hasattr(model, "block_stats"):
+        from repro.core.memory import plan_memory
+        memory = plan_memory(model, dcfg, shape, bucket_plans=bucket_plans,
+                             stage=stage, microbatches=microbatches)
+        if memory.bucket_plan is not None:
+            bucket_plans = dict(bucket_plans)
+            bucket_plans[memory.main_key] = memory.bucket_plan
+
     return ParallelPlan(dcfg=dcfg, stacked_keys=sk,
                         bucket_plans=bucket_plans, remat=dcfg.remat,
-                        stage=stage, microbatches=microbatches)
+                        stage=stage, microbatches=microbatches,
+                        memory=memory)
 
 
 # ---------------------------------------------------------------------------
@@ -254,10 +302,13 @@ class Parallelized:
         return staging.unstage_tree(storage, self.plan.stage)
 
     # ------------------------------------------------------------- steps --
+    # Steps trace with plan.exec_dcfg — dcfg with the memory plan's resolved
+    # per-segment remat vector (and any bucket retightening) written back,
+    # so the executed schedule IS the plan's (core/memory).
     def loss_step(self, with_grads: bool = True, shape=None):
         """jit(shard_map(step)): (storage, batch) -> loss | (loss, grads)."""
         from repro.train import train_step as TS
-        return TS.wrap_loss_step(self.model, self.plan, self.dcfg,
+        return TS.wrap_loss_step(self.model, self.plan, self.plan.exec_dcfg,
                                  self._resolve_shape(shape, "loss_step"),
                                  with_grads=with_grads, mesh=self.mesh)
 
@@ -267,7 +318,7 @@ class Parallelized:
         (storage, opt_state, metrics)."""
         from repro.train import train_step as TS
         return TS.wrap_any_train_step(
-            self.model, self.plan, self.dcfg,
+            self.model, self.plan, self.plan.exec_dcfg,
             self._resolve_shape(shape, "train_step"), ocfg, lr_schedule,
             mesh=self.mesh, donate=donate)
 

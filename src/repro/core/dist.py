@@ -76,7 +76,14 @@ class DistConfig:
     rs_delay: bool = True
 
     # Memory policy -----------------------------------------------------------
-    remat: str = "fsdp_only"             # 'none' | 'fsdp_only' | 'full'
+    # Activation-checkpoint spec (core/remat.py, ONE vocabulary):
+    #   'none' | 'fsdp_only' | 'full' | 'save_dots'   — uniform policy
+    #   'auto:<GB>'    — budgeted auto-SAC: core/memory picks the cheapest
+    #                    per-segment vector (+ offload) whose modeled peak
+    #                    fits the per-device HBM budget (resolved once by
+    #                    core/api.plan_parallel)
+    #   'attn=full,mlp=fsdp_only' — an explicit per-segment vector
+    remat: str = "fsdp_only"
     # Auto-wrap memory cap (paper Alg. 1 M_max), bytes of prefetched params.
     autowrap_mem_limit: float = 1.0 * 1024**3
 

@@ -36,6 +36,13 @@ ICI_ALPHA_S = 1e-6
 DCN_BW_PER_HOST = 6.25e9          # bytes/s effective per host NIC share
 DCN_ALPHA_S = 25e-6
 
+# Host DMA (device <-> host DRAM over PCIe): the offload channel used by the
+# memory planner's optimizer-state / residual host-offload options
+# (core/memory). Effective per-direction bandwidth; double-buffered copies
+# hide behind compute when the per-layer transfer fits under the layer time.
+HOST_DMA_BW = 32e9                # bytes/s effective per chip
+HOST_DMA_ALPHA_S = 10e-6
+
 # MXU/VPU native tiling (used by Pallas BlockSpec choices and padding rules).
 MXU_TILE = 128                    # systolic array dim; matmul dims want %128
 SUBLANE = 8                       # f32 sublane tiling (8, 128) vregs

@@ -37,6 +37,19 @@ class CommNode:
     def t_comp(self) -> float:
         return hw.compute_time_s(self.comp_flops, self.comp_bytes)
 
+    def act_out_bytes(self) -> float:
+        """Estimated bytes of the intermediate activation(s) the consuming
+        op produces — what a saving remat policy would keep live per layer.
+
+        Derived from the same numbers the planners already trust:
+        `comp_bytes` counts the op's total traffic (param read + activation
+        in/out), so traffic minus the param read is the activation in+out
+        volume and half of that is the output.  Exact for the analytic
+        dense/MoE models (their per-param bytes are numel*it + flops/d*it),
+        proportionally calibrated when BlockStats are measured (the dryrun
+        harvest scales param_bytes by the XLA-measured totals)."""
+        return max(0.0, self.comp_bytes - self.ag_bytes) / 2.0
+
 
 @dataclasses.dataclass(frozen=True)
 class BlockStats:
@@ -56,13 +69,20 @@ class BlockStats:
     param_bytes: dict[str, float]
     act_bytes: float = 0.0
     source: str = "analytic"
+    # measured per-segment activation footprints (segment name -> bytes),
+    # filled by launch/dryrun.harvest_block_stats when it compiles the block
+    # segment by segment; the memory simulator prefers these over the
+    # per-param activation estimates (None = derive analytically).
+    seg_act_bytes: dict[str, float] | None = None
 
     def cache_key(self) -> tuple:
         """Hashable identity for plan memoization (dict fields break the
         generated __hash__)."""
         return (self.source, self.act_bytes,
                 tuple(sorted(self.param_flops.items())),
-                tuple(sorted(self.param_bytes.items())))
+                tuple(sorted(self.param_bytes.items())),
+                tuple(sorted(self.seg_act_bytes.items()))
+                if self.seg_act_bytes else None)
 
 
 def build_nodes(metas_tree, cfg: DistConfig,

@@ -1,0 +1,64 @@
+"""Host offload: the device<->host channel the memory planner can spend.
+
+Two offloadable stores (chosen by `core/memory/planner.plan_memory`):
+
+  * optimizer state (AdamW m/v) — cold between steps, 2x the master param
+    bytes; round-trips host once per step;
+  * segment-boundary residuals — the per-layer saved block inputs; streamed
+    out during forward and prefetched back double-buffered during backward,
+    so only the spill over a layer's compute time is exposed (the cost
+    model in planner._offload_cost_s).
+
+On TPU runtimes JAX exposes host DRAM as the ``pinned_host`` memory kind
+and these helpers place arrays there for real.  This container's CPU
+backend has no distinct host memory space, so the helpers probe the
+capability once and degrade to identity (the PLAN still records the
+offload decision and the simulator still subtracts the bytes — the modeled
+numbers are the deliverable on this container, DESIGN.md SS2 [changed]).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+HOST_MEMORY_KIND = "pinned_host"
+DEVICE_MEMORY_KIND = "device"
+
+
+@functools.lru_cache(maxsize=1)
+def host_offload_supported() -> bool:
+    """True when the backend exposes a pinned_host memory space."""
+    try:
+        dev = jax.devices()[0]
+        kinds = getattr(dev, "memory_kinds", None)
+        if callable(kinds):
+            return HOST_MEMORY_KIND in kinds()
+        return any(m.kind == HOST_MEMORY_KIND
+                   for m in getattr(dev, "addressable_memories", lambda: [])())
+    except Exception:
+        return False
+
+
+def _transfer(tree, kind: str):
+    if not host_offload_supported():
+        return tree
+    try:
+        from jax.sharding import SingleDeviceSharding
+
+        dev = jax.devices()[0]
+        sh = SingleDeviceSharding(dev, memory_kind=kind)
+        return jax.tree.map(lambda x: jax.device_put(x, sh), tree)
+    except Exception:
+        return tree
+
+
+def to_host(tree):
+    """Move a pytree to pinned host memory (identity when unsupported)."""
+    return _transfer(tree, HOST_MEMORY_KIND)
+
+
+def to_device(tree):
+    """Move a pytree back to device HBM (identity when unsupported)."""
+    return _transfer(tree, DEVICE_MEMORY_KIND)

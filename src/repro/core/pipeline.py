@@ -473,13 +473,17 @@ def fsdp_stage_fn(stage_fn: Callable, metas_tree, cfg: DistConfig, plan=None):
     at one bucket.
     """
     from repro.core.collectives import replicate_tree
-    from repro.core.remat import maybe_remat
+    from repro.core.remat import maybe_remat, whole_block_policy
+
+    # a per-segment vector (core/memory's resolved form) collapses to its
+    # most aggressive entry here — the BYO stage fn is one opaque block
+    policy = whole_block_policy(cfg.remat)
 
     def wrapped(storage, x):
         def inner(storage, x):
             full = replicate_tree(storage, metas_tree, cfg, plan)
             return stage_fn(full, x)
-        return maybe_remat(inner, cfg.remat)(storage, x)
+        return maybe_remat(inner, policy)(storage, x)
 
     return wrapped
 

@@ -11,15 +11,171 @@ block-internal activations (the paper's "Full AC" rows); ``'none'`` disables
 remat entirely (the paper's "no AC" row of Table 3 — note it then saves the
 *gathered* params, which is why SimpleFSDP-noAC uses more memory than FSDP2
 in the paper; we reproduce that behaviour faithfully).
+
+This module is the ONE place the remat vocabulary lives:
+
+  * ``POLICIES``      — the four concrete per-segment policies;
+  * ``"auto:<GB>"``   — the budgeted form: `core/memory` picks the cheapest
+    per-segment policy vector (plus optional host offload) whose modeled
+    peak fits the HBM budget.  ``parse_remat`` validates both forms with
+    pointed errors and is called ONCE by `core/api.plan_parallel` (and by
+    `core/stack.apply_stack` when it self-resolves at trace time), so a
+    malformed string fails at plan time, not at first trace.
 """
 
 from __future__ import annotations
+
+import math
 
 import jax
 
 from repro.core.collectives import FSDP_GATHER_NAME
 
 POLICIES = ("none", "fsdp_only", "full", "save_dots")
+AUTO_PREFIX = "auto"
+VECTOR_KIND = "vector"
+
+# memory aggressiveness order, least -> most residuals DROPPED: 'none' saves
+# everything (incl. gathers), 'fsdp_only' everything but gathers,
+# 'save_dots' only dot outputs, 'full' only the block input — the same
+# ordering the simulator's peak monotonicity asserts.  Used when a
+# whole-block wrap must represent a per-segment vector (core/pipeline's BYO
+# stage fn, the segment_prefetch-off collapse).
+_AGGRESSIVENESS = ("none", "fsdp_only", "save_dots", "full")
+
+
+def parse_remat(spec) -> tuple[str, float | None]:
+    """Validate a remat spec -> (kind, budget_bytes).
+
+    `kind` is one of POLICIES, ``"auto"`` or ``"vector"`` (a comma-joined
+    per-segment form, see `parse_policy_vector`); `budget_bytes` is the
+    parsed HBM budget for the auto form (None otherwise).  Raises a pointed
+    ValueError for malformed strings — ``auto`` / ``auto:`` without a
+    budget, a non-numeric or non-positive budget, or an unknown policy.
+    """
+    if not isinstance(spec, str):
+        raise ValueError(
+            f"remat must be a string, got {type(spec).__name__}; one of "
+            f"{POLICIES} or 'auto:<GB>' (e.g. 'auto:12.5')")
+    if "," in spec or "=" in spec:
+        parse_policy_vector(spec)        # validates each entry pointedly
+        return VECTOR_KIND, None
+    if spec == AUTO_PREFIX or spec.startswith(AUTO_PREFIX + ":"):
+        body = spec[len(AUTO_PREFIX):]
+        if not body or body == ":":
+            raise ValueError(
+                f"remat={spec!r}: the auto form needs an HBM budget in GiB "
+                "after the colon, e.g. remat='auto:12.5'")
+        try:
+            gb = float(body[1:])
+        except ValueError:
+            raise ValueError(
+                f"remat={spec!r}: budget {body[1:]!r} is not a number; "
+                "expected remat='auto:<GB>' with a positive GiB value") \
+                from None
+        # NaN fails every comparison, so `gb <= 0` alone would let a NaN
+        # budget through and the planner would accept every candidate
+        if not math.isfinite(gb) or gb <= 0:
+            raise ValueError(
+                f"remat={spec!r}: budget must be a finite GiB value > 0")
+        return AUTO_PREFIX, gb * 1024**3
+    if spec not in POLICIES:
+        raise ValueError(
+            f"unknown remat policy {spec!r}; one of {POLICIES} or "
+            "'auto:<GB>'")
+    return spec, None
+
+
+def parse_policy_vector(spec: str) -> tuple[tuple[str | None, str], ...]:
+    """Parse the resolved per-segment form into ((seg_name|None, policy), ...).
+
+    Grammar (comma-joined, one entry per block segment in execution order):
+
+        "full,fsdp_only"            positional
+        "attn=full,mlp=fsdp_only"   named (models/common.BlockSegments names)
+
+    This is the form `plan_parallel` writes back into the executed
+    DistConfig once ``remat="auto:<GB>"`` is resolved, and users may set it
+    directly to pin a hand-chosen vector.
+    """
+    entries = []
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            raise ValueError(
+                f"remat={spec!r}: empty entry in the per-segment vector")
+        name, _, pol = part.rpartition("=")
+        name = name or None
+        if pol not in POLICIES:
+            raise ValueError(
+                f"remat={spec!r}: unknown policy {pol!r} in the per-segment "
+                f"vector; each entry must be one of {POLICIES}")
+        entries.append((name, pol))
+    named = [n is not None for n, _ in entries]
+    if any(named) and not all(named):
+        raise ValueError(
+            f"remat={spec!r}: mix of named (seg=policy) and positional "
+            "entries; use one form")
+    return tuple(entries)
+
+
+def resolve_segment_policies(spec: str, seg_names) -> tuple[str, ...]:
+    """One concrete policy per block segment for a validated remat spec.
+
+    Uniform specs broadcast over the segments; vector specs must match the
+    segment count (positional) or name every segment exactly once (named).
+    ``"auto:<GB>"`` cannot be resolved here — it must have been replaced by
+    the planner's vector before trace time (`core/api.plan_parallel`).
+    """
+    seg_names = tuple(seg_names)
+    kind, _ = parse_remat(spec)
+    if kind == AUTO_PREFIX:
+        raise ValueError(
+            f"remat={spec!r} reached the runtime unresolved; the budgeted "
+            "auto form is resolved to a per-segment vector by "
+            "core/api.plan_parallel — go through parallelize()/plan_parallel "
+            "or set an explicit policy (vector)")
+    if kind != VECTOR_KIND:
+        return (kind,) * max(1, len(seg_names))
+    entries = parse_policy_vector(spec)
+    if entries[0][0] is None:                       # positional
+        if len(entries) != max(1, len(seg_names)):
+            raise ValueError(
+                f"remat={spec!r}: {len(entries)} entries for "
+                f"{max(1, len(seg_names))} block segment(s) "
+                f"{seg_names or '(unsegmented)'}")
+        return tuple(p for _, p in entries)
+    by_name = dict(entries)
+    if len(by_name) != len(entries):
+        raise ValueError(f"remat={spec!r}: a segment is named twice")
+    missing = [s for s in seg_names if s not in by_name]
+    unknown = [n for n in by_name if n not in seg_names]
+    if missing or unknown or not seg_names:
+        raise ValueError(
+            f"remat={spec!r}: named entries must cover the block segments "
+            f"{seg_names} exactly; missing={missing} unknown={unknown}")
+    return tuple(by_name[s] for s in seg_names)
+
+
+def most_aggressive(policies) -> str:
+    """The most memory-aggressive entry of a policy vector — what a
+    whole-block wrap must use so it never saves more than the vector
+    promised (the collapse rule for paths that cannot apply a vector)."""
+    return max(policies, key=_AGGRESSIVENESS.index)
+
+
+def whole_block_policy(spec: str) -> str:
+    """Collapse a (possibly per-segment) spec to ONE policy for whole-block
+    wraps that cannot apply a vector (core/pipeline's bring-your-own stage
+    fn)."""
+    kind, _ = parse_remat(spec)
+    if kind == AUTO_PREFIX:
+        raise ValueError(
+            f"remat={spec!r} reached the runtime unresolved (see "
+            "resolve_segment_policies)")
+    if kind != VECTOR_KIND:
+        return kind
+    return most_aggressive([p for _, p in parse_policy_vector(spec)])
 
 
 def checkpoint_policy(kind: str):

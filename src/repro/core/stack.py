@@ -76,7 +76,7 @@ from repro.core.bucketing import (BucketPlan, assign_segments, plan_for,
                                   split_plan_at_segments)
 from repro.core.dist import DistConfig
 from repro.core.meta import ParamMeta, named_leaves
-from repro.core.remat import maybe_remat
+from repro.core.remat import maybe_remat, resolve_segment_policies
 
 
 def _meta_leaves(metas_tree):
@@ -96,36 +96,110 @@ def _zero_cotangent(x):
 
 def apply_stack(block_fn: Callable, metas_tree, cfg: DistConfig,
                 stacked, consts, x, plan: BucketPlan | None = None,
-                block_stats=None, segments=None):
+                block_stats=None, segments=None, remat=None):
     """Run the layer stack; returns (y, aux_sums).
 
     `segments` is an optional models/common.BlockSegments declaring the
     ordered segment chain of one block; with cfg.segment_prefetch it enables
-    bucket-granular pipelining on the reorder path (ignored by vanilla) and
-    makes the auto planners respect segment boundaries, so the planned
-    partition is the one the schedule executes.
+    bucket-granular pipelining on the reorder path and makes the auto
+    planners respect segment boundaries, so the planned partition is the
+    one the schedule executes.
+
+    `remat` is the resolved per-segment policy vector (one entry per
+    segment; `core/memory`'s auto-SAC planner output).  When omitted it is
+    resolved from ``cfg.remat`` — a single policy broadcasts, the vector
+    grammar ("attn=full,mlp=fsdp_only") maps segments by name, and the
+    unresolved ``"auto:<GB>"`` form raises pointedly (it must be resolved by
+    `core/api.plan_parallel` before trace time).  On the vanilla path a
+    non-uniform vector checkpoints each segment separately (gathers INSIDE
+    the wrap, so `fsdp_only` still drops them); on the prefetch path —
+    whose hand-written VJP already saves only block inputs and re-gathers
+    per bucket — residual-dropping entries (`full`/`save_dots`) bound the
+    backward recompute residency per segment.
     """
     if plan is None:
         plan = plan_for(metas_tree, cfg, block_stats, segments=segments)
+    seg_names = tuple(segments.names) \
+        if segments is not None and len(segments.fns) > 1 else ()
+    if remat is None:
+        remat = resolve_segment_policies(cfg.remat, seg_names)
+    remat = tuple(remat)
+    if len(remat) != max(1, len(seg_names)):
+        raise ValueError(
+            f"remat vector {remat} does not match the block's "
+            f"{max(1, len(seg_names))} segment(s) {seg_names or '(block)'}")
     if cfg.reorder:
         return _prefetch_stack(block_fn, metas_tree, cfg, plan, stacked,
-                               consts, x, segments)
-    return _vanilla_stack(block_fn, metas_tree, cfg, plan, stacked, consts, x)
+                               consts, x, segments, remat)
+    return _vanilla_stack(block_fn, metas_tree, cfg, plan, stacked, consts,
+                          x, segments, remat)
 
 
 # ---------------------------------------------------------------------------
 # Vanilla: scan(remat(gather -> compute)). Exposed comm; autodiff backward.
 # ---------------------------------------------------------------------------
-def _vanilla_stack(block_fn, metas_tree, cfg, plan, stacked, consts, x):
+def _segmented_vanilla_layer(block_fn, metas_tree, cfg, plan, consts,
+                             segments, policies):
+    """One layer as a per-segment checkpointed chain (non-uniform remat).
+
+    Each segment gathers ITS buckets inside its own `jax.checkpoint` wrap
+    (via the differentiable `gather_group`), so a `fsdp_only` entry drops
+    exactly that segment's gathered params while a neighbouring `none`
+    entry keeps its own — the auto-SAC planner's per-segment policy vector,
+    realized on the autodiff path."""
+    metas, treedef = _meta_leaves(metas_tree)
+    names = [k for k, _ in named_leaves(metas_tree)]
+    seg_of = assign_segments(names, segments.param_globs, segments.names)
+    exec_plan = split_plan_at_segments(plan, metas_tree, segments)
+    S = len(segments.fns)
+    seg_idxs = [sorted(i for i, s in enumerate(seg_of) if s == s_id)
+                for s_id in range(S)]
+    pos_in = [{i: p for p, i in enumerate(idxs)} for idxs in seg_idxs]
+    seg_groups: list[list[list[int]]] = [[] for _ in range(S)]
+    for grp in exec_plan.index_groups(metas_tree):
+        seg_groups[seg_of[grp[0]]].append(grp)
+
+    def seg_run(s, shards_s, state):
+        full: list = [None] * len(metas)
+        for grp in seg_groups[s]:
+            outs = coll.gather_group(
+                tuple(shards_s[pos_in[s][i]] for i in grp),
+                tuple(metas[i] for i in grp), cfg)
+            for i, o in zip(grp, outs):
+                full[i] = o
+        params = jax.tree_util.tree_unflatten(treedef, full)
+        return segments.fns[s](params, consts, state)
+
+    def layer(xc, layer_shards):
+        shard_leaves = treedef.flatten_up_to(layer_shards)
+        state = xc
+        for s in range(S):
+            shards_s = tuple(shard_leaves[i] for i in seg_idxs[s])
+            state = maybe_remat(
+                lambda sh, st, s=s: seg_run(s, sh, st),
+                policies[s])(shards_s, state)
+        return state                     # last segment returns (y, aux)
+
+    return layer
+
+
+def _vanilla_stack(block_fn, metas_tree, cfg, plan, stacked, consts, x,
+                   segments=None, policies=None):
     metas, treedef = _meta_leaves(metas_tree)
     leaves = treedef.flatten_up_to(stacked)
     L = leaves[0].shape[0]
 
-    def layer(xc, layer_shards):
-        params = coll.replicate_tree(layer_shards, metas_tree, cfg, plan)
-        return block_fn(params, consts, xc)
+    policies = policies or (cfg.remat,)
+    if (len(set(policies)) > 1 and segments is not None
+            and len(segments.fns) > 1):
+        layer = _segmented_vanilla_layer(block_fn, metas_tree, cfg, plan,
+                                         consts, segments, policies)
+    else:
+        def layer(xc, layer_shards):
+            params = coll.replicate_tree(layer_shards, metas_tree, cfg, plan)
+            return block_fn(params, consts, xc)
 
-    layer = maybe_remat(layer, cfg.remat)
+        layer = maybe_remat(layer, policies[0])
 
     # peel layer 0 (gives the aux accumulator its true vma type)
     y, aux = layer(x, jax.tree_util.tree_unflatten(
@@ -147,7 +221,7 @@ def _vanilla_stack(block_fn, metas_tree, cfg, plan, stacked, consts, x):
 # Prefetch: bucket-granular double-buffered scan with hand-written VJP.
 # ---------------------------------------------------------------------------
 def _prefetch_stack(block_fn, metas_tree, cfg, plan, stacked, consts, x,
-                    segments=None):
+                    segments=None, policies=None):
     metas, treedef = _meta_leaves(metas_tree)
     names = [k for k, _ in named_leaves(metas_tree)]
     stacked_leaves = treedef.flatten_up_to(stacked)
@@ -165,6 +239,24 @@ def _prefetch_stack(block_fn, metas_tree, cfg, plan, stacked, consts, x,
         # single whole-layer segment == the pre-segmentation schedule
         seg_fns = (lambda params, cst, state: block_fn(params, cst, state),)
         seg_of = [0] * len(names)
+    # Per-segment remat on the prefetch path: the hand-written VJP already
+    # saves only block inputs and re-gathers per bucket (fsdp_only-or-
+    # better semantics by construction), so only the residual-DROPPING
+    # policies change anything — they checkpoint the segment so the
+    # backward recompute (`one_bwd`'s jax.vjp sweep) holds that segment's
+    # input instead of all its intermediates. `none`/`fsdp_only` entries
+    # keep the schedule exactly as-is (values are identical either way;
+    # this is a residency knob, modeled by core/memory's simulator).
+    if policies is not None:
+        if len(policies) != len(seg_fns):
+            # segments declared but not active (cfg.segment_prefetch off):
+            # collapse the vector to its most memory-aggressive entry so the
+            # whole-layer wrap never saves more than the vector promised
+            from repro.core.remat import most_aggressive
+            policies = (most_aggressive(policies),) * len(seg_fns)
+        seg_fns = tuple(
+            maybe_remat(fn, p) if p in ("full", "save_dots") else fn
+            for fn, p in zip(seg_fns, policies))
     S = len(seg_fns)
 
     seg_groups: list[list[list[int]]] = [[] for _ in range(S)]

@@ -1,8 +1,13 @@
 import os
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    + os.environ.get("XLA_FLAGS", "")
-)
+
+if __name__ == "__main__":
+    # entry-point only: must land before jax initializes.  Library imports
+    # (tests harvesting BlockStats/MemoryStats in-process) must NOT mutate
+    # the environment — os.environ leaks into every later subprocess.
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=512 "
+        + os.environ.get("XLA_FLAGS", "")
+    )
 
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
@@ -160,68 +165,90 @@ def parse_collectives(hlo_text: str, dcfg: DistConfig) -> dict:
 # ---------------------------------------------------------------------------
 # compiled-cost harvesting: measured BlockStats for the auto planners
 # ---------------------------------------------------------------------------
+def _harvest_setup(model, dcfg: DistConfig, batch_shape):
+    """Shared 1-device harvest scaffolding: (dcfg1, mesh1, metas, consts,
+    x_abs, params_abs, analytic target/reference stats)."""
+    saved = getattr(model, "measured_stats", None)
+    if hasattr(model, "measured_stats"):
+        model.measured_stats = None
+    try:
+        an_tgt = model.block_stats(dcfg, batch_shape)
+        dcfg1 = dcfg.with_(mesh_axes=("data", "model"),
+                           mesh_shape=(1, 1), fsdp_axes=("data",),
+                           tp_axis="model", pp_axis=None,
+                           microbatches=1)
+        an_ref = model.block_stats(dcfg1, batch_shape)
+    finally:
+        if hasattr(model, "measured_stats"):
+            model.measured_stats = saved
+
+    mesh1 = compat.make_mesh((1, 1), ("data", "model"),
+                             devices=jax.devices()[:1])
+    metas = model.block_metas(dcfg1)
+    B, S = batch_shape
+    consts = model.consts(S, dcfg1)
+    x_abs = jax.ShapeDtypeStruct((B, S, model.cfg.d_model),
+                                 dcfg1.param_dtype)
+    params_abs = jax.tree.map(
+        lambda m: jax.ShapeDtypeStruct(m.local_shape(dcfg1),
+                                       dcfg1.param_dtype),
+        metas, is_leaf=lambda v: isinstance(v, ParamMeta))
+    return dcfg1, mesh1, metas, consts, x_abs, params_abs, an_tgt, an_ref
+
+
+def _compile_costs(fn, mesh1, in_abs):
+    """jit(shard_map(fn)) on the 1-device mesh ->
+    (flops, bytes, temp, out_aval) — out_aval feeds the next segment's
+    abstract state (collectives only have bound axes inside the wrap)."""
+    wrapped = shard_map(fn, mesh=mesh1,
+                        in_specs=tuple(P() for _ in in_abs),
+                        out_specs=P(), check_vma=False)
+    compiled = jax.jit(wrapped).lower(*in_abs).compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)),
+            float(compiled.memory_analysis().temp_size_in_bytes),
+            jax.eval_shape(wrapped, *in_abs))
+
+
 def harvest_block_stats(model, dcfg: DistConfig,
                         batch_shape) -> BlockStats | None:
     """Measured per-block costs from XLA, as a `BlockStats` the planners use
     in place of the analytic roofline model.
 
-    ONE block is compiled on the local backend over a degenerate 1x1 mesh
-    (so the model's TP collectives lower as no-ops) and its aggregate
-    HLO FLOPs / bytes-accessed are pulled from ``compiled.cost_analysis()``
-    and the activation footprint from ``memory_analysis().temp_size``.  XLA
-    reports per-executable totals, not per-op provenance, so the totals are
-    attributed to parameters in proportion to the analytic per-param shares:
-    the measured numbers calibrate the magnitudes (fusion wins, padding,
-    non-matmul ops the 2n default ignores) while the analytic model supplies
-    the within-block distribution.  Harvest at the same per-device
-    microbatch shape the cell runs.
+    The block is compiled on the local backend over a degenerate 1x1 mesh
+    (so the model's TP collectives lower as no-ops).  Models that declare a
+    segment chain (models/common.BlockSegments) are compiled PER SEGMENT —
+    each segment's XLA FLOPs / bytes-accessed / activation footprint scales
+    that segment's analytic shares, so both the exposure DP and the memory
+    simulator see measured per-segment numbers instead of whole-block
+    totals smeared proportionally (ROADMAP bucketing-v2 follow-up).
+    Unsegmented blocks keep the whole-block attribution.  Harvest at the
+    same per-device microbatch shape the cell runs.
 
     Returns None whenever compilation or costing is unavailable (e.g. a
     backend whose cost model reports no FLOPs) — callers fall back to the
     analytic stats.
     """
     try:
-        saved = getattr(model, "measured_stats", None)
-        if hasattr(model, "measured_stats"):
-            model.measured_stats = None
-        try:
-            an_tgt = model.block_stats(dcfg, batch_shape)
-            dcfg1 = dcfg.with_(mesh_axes=("data", "model"),
-                               mesh_shape=(1, 1), fsdp_axes=("data",),
-                               tp_axis="model", pp_axis=None,
-                               microbatches=1)
-            an_ref = model.block_stats(dcfg1, batch_shape)
-        finally:
-            if hasattr(model, "measured_stats"):
-                model.measured_stats = saved
+        (dcfg1, mesh1, metas, consts, x_abs, params_abs,
+         an_tgt, an_ref) = _harvest_setup(model, dcfg, batch_shape)
+        segments = model.block_segments(dcfg1) \
+            if hasattr(model, "block_segments") else None
 
-        mesh1 = compat.make_mesh((1, 1), ("data", "model"),
-                                 devices=jax.devices()[:1])
-        metas = model.block_metas(dcfg1)
-        B, S = batch_shape
-        consts = model.consts(S, dcfg1)
-        x_abs = jax.ShapeDtypeStruct((B, S, model.cfg.d_model),
-                                     dcfg1.param_dtype)
-        params_abs = jax.tree.map(
-            lambda m: jax.ShapeDtypeStruct(m.local_shape(dcfg1),
-                                           dcfg1.param_dtype),
-            metas, is_leaf=lambda v: isinstance(v, ParamMeta))
+        if segments is not None and len(segments.fns) > 1:
+            return _harvest_segmented(model, dcfg1, mesh1, metas, consts,
+                                      x_abs, params_abs, an_tgt, an_ref,
+                                      segments)
 
         def blk(params, x):
             return model.block_fn(params, consts, x, dcfg1)
 
-        fn = shard_map(blk, mesh=mesh1, in_specs=(P(), P()),
-                       out_specs=P(), check_vma=False)
-        compiled = jax.jit(fn).lower(params_abs, x_abs).compile()
-        cost = compiled.cost_analysis()
-        if isinstance(cost, (list, tuple)):
-            cost = cost[0] if cost else {}
-        flops = float(cost.get("flops", 0.0))
-        bts = float(cost.get("bytes accessed", 0.0))
-        act = float(compiled.memory_analysis().temp_size_in_bytes)
+        flops, bts, act, _ = _compile_costs(blk, mesh1, (params_abs, x_abs))
         if flops <= 0.0:
             return None
-
         f_ref = sum(an_ref.param_flops.values())
         b_ref = sum(an_ref.param_bytes.values())
         f_scale = flops / f_ref if f_ref > 0 else 1.0
@@ -243,6 +270,117 @@ def harvest_block_stats(model, dcfg: DistConfig,
         print(f"[harvest] measured BlockStats unavailable "
               f"({type(e).__name__}: {e}); falling back to analytic",
               flush=True)
+        return None
+
+
+def _harvest_segmented(model, dcfg1, mesh1, metas, consts, x_abs,
+                       params_abs, an_tgt, an_ref, segments) -> BlockStats:
+    """Per-segment compilation: one XLA executable per segment of the
+    chain, abstract inter-segment states threaded with `jax.eval_shape`."""
+    from repro.core.bucketing import assign_segments
+    from repro.core.meta import named_leaves
+
+    names = [k for k, _ in named_leaves(metas)]
+    seg_of = assign_segments(names, segments.param_globs, segments.names)
+    leaves, treedef = jax.tree_util.tree_flatten(
+        params_abs, is_leaf=lambda v: v is None)
+
+    pf = dict(an_tgt.param_flops)
+    pb = dict(an_tgt.param_bytes)
+    seg_act: dict[str, float] = {}
+    state = x_abs
+    total_flops = 0.0
+    act_ratio = an_tgt.act_bytes / an_ref.act_bytes \
+        if an_ref.act_bytes > 0 else 1.0
+    for s, seg_name in enumerate(segments.names):
+        masked = jax.tree_util.tree_unflatten(
+            treedef, [lf if seg_of[i] == s else None
+                      for i, lf in enumerate(leaves)])
+
+        def seg_fn(params, st, s=s):
+            return segments.fns[s](params, consts, st)
+
+        flops, bts, act, state = _compile_costs(seg_fn, mesh1,
+                                                (masked, state))
+        total_flops += flops
+        in_seg = [n for n, sg in zip(names, seg_of) if sg == s]
+        f_ref = sum(an_ref.param_flops[n] for n in in_seg)
+        b_ref = sum(an_ref.param_bytes[n] for n in in_seg)
+        f_scale = flops / f_ref if f_ref > 0 and flops > 0 else 1.0
+        b_scale = bts / b_ref if b_ref > 0 and bts > 0 else 1.0
+        for n in in_seg:
+            pf[n] = an_tgt.param_flops[n] * f_scale
+            pb[n] = an_tgt.param_bytes[n] * b_scale
+        # segment activation footprint, rescaled to the target mesh (the
+        # analytic target/reference ratio carries the tp/batch scaling)
+        seg_act[seg_name] = act * act_ratio
+    if total_flops <= 0.0:
+        raise RuntimeError("cost model reported no FLOPs for any segment")
+    return BlockStats(
+        param_flops=pf, param_bytes=pb,
+        act_bytes=an_tgt.act_bytes,        # block input: analytic shape math
+        source="measured", seg_act_bytes=seg_act,
+    )
+
+
+# ---------------------------------------------------------------------------
+# memory-model calibration: measured residual footprint for the simulator
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MemoryStats:
+    """Calibration of core/memory's activation model against XLA.
+
+    `measured_bytes` is ``memory_analysis().temp_size`` of a 1-device
+    forward+backward block compile under `policy`; `modeled_bytes` the
+    simulator's residency for the same policy; `act_scale` their clamped
+    ratio — multiply every activation-derived term by it
+    (`simulate_peak(act_scale=...)`)."""
+
+    measured_bytes: float
+    modeled_bytes: float
+    act_scale: float
+    policy: str = "fsdp_only"
+    source: str = "measured"
+
+
+def harvest_memory_stats(model, dcfg: DistConfig, batch_shape,
+                         policy: str = "fsdp_only") -> MemoryStats | None:
+    """Compile ONE block's loss+grad on a 1-device mesh and calibrate the
+    live-range simulator's activation model against
+    ``compiled.memory_analysis()``.  Returns None when the backend cannot
+    compile/cost the block (callers keep act_scale=1.0)."""
+    try:
+        from repro.core.memory import build_block_profile
+        from repro.core.remat import maybe_remat
+
+        (dcfg1, mesh1, metas, consts, x_abs, params_abs,
+         _, an_ref) = _harvest_setup(model, dcfg, batch_shape)
+        segments = model.block_segments(dcfg1) \
+            if hasattr(model, "block_segments") else None
+
+        blk = maybe_remat(
+            lambda params, x: model.block_fn(params, consts, x, dcfg1)[0],
+            policy)
+
+        def grad_step(params, x):
+            def loss(xx):
+                y = blk(params, xx)
+                return jnp.sum(y.astype(jnp.float32) ** 2)
+            return jax.grad(loss)(x)
+
+        _, _, measured, _ = _compile_costs(grad_step, mesh1,
+                                           (params_abs, x_abs))
+        prof = build_block_profile(metas, dcfg1, an_ref, segments)
+        n_seg = len(prof.segments)
+        modeled = prof.residency((policy,) * n_seg)
+        if measured <= 0 or modeled <= 0:
+            return None
+        scale = min(4.0, max(0.25, measured / modeled))
+        return MemoryStats(measured_bytes=measured, modeled_bytes=modeled,
+                           act_scale=scale, policy=policy)
+    except Exception as e:
+        print(f"[harvest] memory calibration unavailable "
+              f"({type(e).__name__}: {e}); act_scale=1.0", flush=True)
         return None
 
 
@@ -424,14 +562,20 @@ def roofline_terms(cost: dict, colls: dict, model, shape: ShapeConfig,
 
 def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
              bucket_mode="block", reorder=True, zero3=False,
-             mesh_shape=None, microbatch=None, harvest=None) -> dict:
+             mesh_shape=None, microbatch=None, harvest=None,
+             remat=None) -> dict:
     """Lower+compile one (arch, shape, mesh) cell.
 
     `harvest`: None = harvest measured BlockStats iff an auto planner will
     consume them; True/False force it. Harvested stats are plumbed into the
     cell's model so `plan_for` plans over measured costs; on failure the
     analytic model is the fallback and the row records which one fed the
-    plan."""
+    plan.
+
+    `remat`: override dcfg.remat for the cell — a fixed policy, a
+    per-segment vector, or ``"auto:<GB>"`` (resolved by core/memory's
+    budgeted planner BEFORE lowering; an infeasible budget raises the
+    planner's pointed error and the row records it)."""
     cfg, model = get_arch(arch_id)
     if shape_name in cfg.skip_shapes:
         return {"arch": arch_id, "shape": shape_name,
@@ -451,16 +595,19 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
         dcfg = production_dcfg(multi_pod=multi_pod, zero3_global=zero3)
     if microbatch is not None:
         MICROBATCH[(arch_id, shape_name)] = microbatch
+    if remat is not None:
+        dcfg = dcfg.with_(remat=remat)
 
-    # ---- measured-cost harvest + plan record (auto planners) ----
+    # ---- measured-cost harvest + plan/memory records ----
     if harvest is None:
         harvest = bucket_mode in ("auto", "auto_dp")
     measured = None
     autowrap_rec = None
-    # bucket plans (and thus harvest/plan records) only exist on the
+    memory_rec = None
+    mem_plan = None
+    # bucket/memory plans (and thus harvest records) only exist on the
     # training stack — serving paths run prefill/decode without apply_stack
-    if (harvest or bucket_mode in ("auto", "auto_dp")) \
-            and get_shape(shape_name).kind == "train":
+    if get_shape(shape_name).kind == "train":
         _, model0 = get_arch(arch_id)
         if hasattr(model0, "block_stats"):
             shape0 = get_shape(shape_name)
@@ -478,10 +625,41 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
                 stats = model0.block_stats(dcfg_plan, bshape)
                 autowrap_rec = _autowrap_record(model0, dcfg_plan, bshape,
                                                 stats)
+            # live-range memory model for the cell (core/memory): resolves
+            # remat="auto:<GB>" to its policy vector before lowering and
+            # feeds the modeled-vs-measured fits-in-HBM check below
+            from repro.core.memory import plan_memory
+            mstats = harvest_memory_stats(model0, dcfg_plan, bshape) \
+                if harvest else None
+            mem_plan = plan_memory(
+                model0, dcfg_plan, batch_shape=bshape,
+                stats=measured,
+                act_scale=mstats.act_scale if mstats else 1.0)
+            memory_rec = {
+                "policy_spec": mem_plan.policy_spec,
+                "offload_opt_state": mem_plan.offload_opt_state,
+                "offload_residuals": mem_plan.offload_residuals,
+                "bucket_override_n_buckets":
+                    mem_plan.bucket_plan.n_buckets
+                    if mem_plan.bucket_plan is not None else None,
+                "modeled_peak_bytes": mem_plan.peak,
+                "budget_bytes": mem_plan.budget_bytes,
+                "cost_s": mem_plan.cost_s,
+                "act_scale": mstats.act_scale if mstats else 1.0,
+                "breakdown": [b.describe() for b in mem_plan.breakdown],
+            }
+            if dcfg.remat != mem_plan.policy_spec:
+                dcfg = dcfg.with_(remat=mem_plan.policy_spec)
 
+    # when the memory planner retightened buckets against the budget, the
+    # cell must execute that partition (build_lowered re-applies the mode)
+    bucket_mode_exec = mem_plan.bucket_plan \
+        if mem_plan is not None and mem_plan.bucket_plan is not None \
+        else bucket_mode
     t0 = time.time()
     lowered, model, shape, dcfg = build_lowered(arch_id, shape_name, dcfg,
-                                                mesh, bucket_mode, reorder,
+                                                mesh, bucket_mode_exec,
+                                                reorder,
                                                 measured_stats=measured)
     t_lower = time.time() - t0
     t0 = time.time()
@@ -489,6 +667,8 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
     t_compile = time.time() - t0
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):     # older jax: one dict per device
+        cost = cost[0] if cost else {}
     colls = parse_collectives(compiled.as_text(), dcfg)
     terms = roofline_terms(cost, colls, model, shape, dcfg)
     per_dev = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
@@ -513,6 +693,29 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
     }
     if autowrap_rec is not None:
         rec["autowrap"] = autowrap_rec
+    if memory_rec is not None:
+        # modeled (live-range simulator) vs measured (XLA memory_analysis),
+        # side by side — the fits-in-HBM check now consumes BOTH
+        gib = 1 / 1024**3
+        modeled = memory_rec["modeled_peak_bytes"]
+        memory_rec["measured_peak_bytes"] = per_dev
+        memory_rec["modeled_over_measured"] = modeled / max(1.0, per_dev)
+        rec["memory"] = memory_rec
+        rec["fits_hbm_modeled"] = bool(modeled <= hw.HBM_BYTES)
+        print(f"[mem] {arch_id} x {shape_name}: modeled peak "
+              f"{modeled*gib:.2f} GiB vs memory_analysis {per_dev*gib:.2f} "
+              f"GiB (HBM {hw.HBM_BYTES*gib:.0f} GiB, "
+              f"remat={memory_rec['policy_spec']})", flush=True)
+        if modeled > hw.HBM_BYTES:
+            worst = max(mem_plan.breakdown, key=lambda b: b.peak_bytes)
+            msg = (f"{arch_id} x {shape_name}: modeled peak "
+                   f"{modeled*gib:.2f} GiB exceeds the "
+                   f"{hw.HBM_BYTES*gib:.0f} GiB HBM budget on stage "
+                   f"{worst.stage} ({worst.describe()}); tighten remat "
+                   f"(remat='auto:{hw.HBM_BYTES*gib:.0f}'), raise "
+                   f"microbatching, or add parallelism")
+            rec["memory_error"] = msg
+            print(f"[mem] OVER BUDGET: {msg}", flush=True)
     return rec
 
 
@@ -524,6 +727,10 @@ def main():
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--zero3", action="store_true")
     ap.add_argument("--bucket-mode", default="block")
+    ap.add_argument("--remat", default=None,
+                    help="override dcfg.remat: a policy, a per-segment "
+                         "vector ('attn=full,mlp=fsdp_only'), or the "
+                         "budgeted 'auto:<GB>' form")
     ap.add_argument("--no-reorder", action="store_true")
     ap.add_argument("--mesh-shape", default=None,
                     help="alternative factorization, e.g. 64,4")
@@ -558,7 +765,7 @@ def main():
                            reorder=not args.no_reorder,
                            zero3=args.zero3, mesh_shape=ms,
                            microbatch=args.microbatch,
-                           harvest=args.harvest)
+                           harvest=args.harvest, remat=args.remat)
             if args.tag:
                 rec["tag"] = args.tag
         except Exception as e:

@@ -71,6 +71,39 @@ class Trainer:
         self.step_fn = self.par.train_step(ocfg, sched)
         self.history: list[dict] = []
         self.restarts = 0
+        if self.plan.memory is not None:
+            log.info("plan: %s", self.plan.describe())
+            for b in self.plan.memory.breakdown:
+                log.info("modeled peak %s", b.describe())
+
+    def memory_report(self, measured: bool = True) -> dict:
+        """Modeled (live-range simulator, core/memory) vs measured (XLA
+        ``memory_analysis`` of THIS trainer's compiled step) per-device
+        peak.  `measured=False` skips the extra compile and reports the
+        model side only."""
+        mem_plan = self.plan.memory
+        rep = {
+            "modeled_peak_bytes": mem_plan.peak if mem_plan else None,
+            "policy_spec": mem_plan.policy_spec if mem_plan else
+            self.dcfg.remat,
+            "per_stage": [b.describe() for b in mem_plan.breakdown]
+            if mem_plan else [],
+        }
+        if measured:
+            from repro.optim.adamw import init_opt_state
+            params_abs = self.par.abstract_storage
+            opt_abs = jax.eval_shape(init_opt_state, params_abs)
+            batch_abs = self.model.input_specs(self.shape, self.dcfg)
+            m = self.step_fn.lower(params_abs, opt_abs,
+                                   batch_abs).compile().memory_analysis()
+            meas = (m.argument_size_in_bytes + m.temp_size_in_bytes
+                    + m.output_size_in_bytes - m.alias_size_in_bytes)
+            rep["measured_peak_bytes"] = meas
+            if mem_plan is not None:
+                rep["modeled_over_measured"] = mem_plan.peak / max(1, meas)
+                log.info("memory: modeled %.2f GiB vs measured %.2f GiB",
+                         mem_plan.peak / 2**30, meas / 2**30)
+        return rep
 
     # ------------------------------------------------------------------ --
     def _init_or_restore(self, key):

@@ -26,6 +26,10 @@ def pytest_configure(config):
         "markers",
         "autowrap: bucket planners + segmented prefetch scheduler "
         "(tests/test_autowrap.py; run `-m autowrap` after planner changes)")
+    config.addinivalue_line(
+        "markers",
+        "memory: live-range peak simulator + budgeted auto-SAC planner "
+        "(tests/test_memory.py; run `-m memory` after core/memory changes)")
 
 
 def pytest_collection_modifyitems(config, items):

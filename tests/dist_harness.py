@@ -727,6 +727,63 @@ def case_trainer_pipeline():
 CASES["trainer_pipeline"] = case_trainer_pipeline
 
 
+def case_remat_vector():
+    """Memory subsystem parity (core/memory): per-segment remat policy
+    vectors — including a budget-resolved auto plan — produce EXACTLY the
+    same losses and assembled full gradients as the whole-block policy at
+    pp2 x dp2 (tp=1, exact on every jax version).  Covers both stack paths:
+    the segmented-vanilla per-segment checkpoint chain and the prefetch
+    schedule's residency wraps."""
+    from repro.core.api import parallelize
+    from repro.models import runtime as RT
+    from repro.models.common import ShapeConfig
+    from repro.models.registry import get_arch_for_pp
+
+    cfg, model = get_arch_for_pp("qwen3_1_7b", n_stages=2)
+    shape = ShapeConfig("t", 32, 8, "train")
+    dp = fp32_cfg(("pipe", "data", "model"), (2, 4, 1), ("data",),
+                  pp_axis="pipe", pp_schedule="1f1b", pp_microbatches=2)
+    batch = _synth_batch(model, shape, dp, cfg.vocab)
+    full = model.init_full(jax.random.PRNGKey(0), dp)
+    metas = model.metas(dp)
+
+    def run(dcfg):
+        par = parallelize(model, dcfg, shape)
+        st = par.stage_storage(
+            {k: RT.tree_to_storage(full[k], metas[k], dcfg) for k in full})
+        loss, grads = par.loss_step()(st, batch)
+        plain = par.unstage_storage(jax.tree.map(np.asarray, grads))
+        gfull = {k: RT.tree_from_storage(plain[k], metas[k], dcfg)
+                 for k in plain}
+        flat = {jax.tree_util.keystr(p): np.asarray(v) for p, v in
+                jax.tree_util.tree_flatten_with_path(gfull)[0]}
+        return float(loss), flat, par.plan
+
+    ref_l, ref_g, _ = run(dp)                      # whole-block fsdp_only
+    variants = [
+        ("vector/vanilla", dp.with_(reorder=False,
+                                    remat="attn=full,mlp=fsdp_only")),
+        ("vector/prefetch", dp.with_(remat="attn=full,mlp=save_dots")),
+        ("auto_budget", dp.with_(remat="auto:8")),
+    ]
+    for tag, dcfg in variants:
+        loss, grads, plan = run(dcfg)
+        if tag == "auto_budget":
+            assert plan.memory is not None \
+                and plan.memory.peak <= plan.memory.budget_bytes
+        np.testing.assert_allclose(loss, ref_l, rtol=2e-5,
+                                   err_msg=f"remat_vector/{tag}: loss")
+        assert set(grads) == set(ref_g), f"remat_vector/{tag}: grad tree"
+        for k, want in ref_g.items():
+            np.testing.assert_allclose(
+                grads[k], want, rtol=3e-4, atol=3e-6,
+                err_msg=f"remat_vector/{tag}: grad mismatch at {k}")
+        print(f"PASS remat_vector/{tag} (loss {loss:.4f})")
+
+
+CASES["remat_vector"] = case_remat_vector
+
+
 TRAINER_SMOKE_ARCHS = {
     "trainer_smoke_a": ("deepseek_coder_33b", "phi3_medium_14b",
                         "gemma2_27b", "qwen3_1_7b", "llama3_8b"),

@@ -87,6 +87,13 @@ def test_pipeline_parallel_composability():
     _run("pipeline")
 
 
+def test_remat_vector_parity_pp2_dp2():
+    """Per-segment remat policy vectors (incl. a budget-resolved
+    remat='auto:<GB>' plan) == the whole-block policy, exactly, at
+    pp2 x dp2 through the unified parallelize() path (core/memory)."""
+    _run("remat_vector", timeout=560)
+
+
 def test_trainer_pipeline_full_lm_parity():
     """The unified parallelize() path: full-LM stage partition at pp=2 vs
     the pp=1 baseline — exact losses, assembled grads, and one AdamW step
