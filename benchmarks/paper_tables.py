@@ -364,6 +364,85 @@ def memory_table(json_path: str | None = None, archs=MEMORY_ARCHS,
 
 
 # ---------------------------------------------------------------------------
+# Context parallelism — the long-context sweep: per-device sequence shard,
+# modeled ring exposure and modeled peak/activation memory per ctx degree
+# per arch (core/context.py x core/memory).  The ctx axis is carved out of
+# the data axis with fsdp over data x ctx, so the FSDP domain (and the
+# sharded param/opt state) stays CONSTANT across degrees — what moves is
+# exactly the activation side, which must shrink ~1/cp. --json writes
+# benchmarks/results/BENCH_context.json (schema-smoked in tier-1).
+# ---------------------------------------------------------------------------
+CONTEXT_SCHEMA = "bench_context_v1"
+CONTEXT_ARCHS = ("llama3_8b", "gemma2_27b")   # full attn + sliding window
+CONTEXT_DEGREES = (1, 2, 4, 8)
+CONTEXT_SEQ = 32_768          # one long-context row per device at cp=1
+
+
+def context_table(json_path: str | None = None):
+    """Modeled context-parallel table: for each ctx degree, the per-device
+    zigzag sequence shard, the ring schedule (hop bytes/compute, live hops
+    under the arch's sliding window, exposed exchange time) and the
+    live-range simulator's peak + activation components.  Device-free
+    analytics — the cross-PR tracking artifact BENCH_context.json."""
+    import json as _json
+    import os as _os
+
+    from repro.core import context as CX
+    from repro.core import memory as MEM
+    from repro.launch.mesh import production_dcfg
+
+    doc = {"schema": CONTEXT_SCHEMA, "mesh": "16x16",
+           "seq_len": CONTEXT_SEQ, "degrees": list(CONTEXT_DEGREES),
+           "archs": {}}
+    for arch in CONTEXT_ARCHS:
+        cfg, model = get_arch(arch)
+        arch_rec = {"window": cfg.sliding_window, "modes": {}}
+        for cp in CONTEXT_DEGREES:
+            dcfg = production_dcfg(context_degree=cp)
+            bshape = (1, CONTEXT_SEQ // cp)
+            stats = model.block_stats(dcfg, bshape)
+            mp = MEM.plan_memory(model, dcfg, batch_shape=bshape,
+                                 stats=stats)
+            ring = CX.ring_cost(cfg, dcfg, bshape,
+                                window=cfg.sliding_window)
+            bk = max(mp.breakdown, key=lambda b: b.peak_bytes)
+            act = bk.parts.get("saved_residuals", 0.0) \
+                + bk.parts.get("workspace", 0.0)
+            row = {
+                "cp": cp, "seq_local": CONTEXT_SEQ // cp,
+                "peak_bytes": mp.peak,
+                "act_bytes": act,
+                "ring_kv_bytes": bk.parts.get("ring_kv", 0.0),
+                "hop_bytes": ring["hop_bytes"],
+                "hop_comm_s": ring["hop_comm_s"],
+                "hop_comp_s": ring["hop_comp_s"],
+                "live_hops": ring["live_hops"],
+                "ring_exposed_s": ring["exposed_s"],
+            }
+            arch_rec["modes"][str(cp)] = row
+            emit(f"context_table/{arch}/cp={cp}",
+                 ring["exposed_s"] * 1e6,
+                 f"seq_local={row['seq_local']};"
+                 f"peak_gib={mp.peak/2**30:.3f};"
+                 f"act_gib={act/2**30:.3f};"
+                 f"live_hops={ring['live_hops']}")
+        # the acceptance invariant: activation memory strictly shrinks
+        # with the ctx degree (params/opt are constant — fsdp covers
+        # data x ctx, so the FSDP domain never changes)
+        acts = [arch_rec["modes"][str(c)]["act_bytes"]
+                for c in CONTEXT_DEGREES]
+        assert all(a > b for a, b in zip(acts, acts[1:])), \
+            f"{arch}: activation memory not strictly decreasing: {acts}"
+        doc["archs"][arch] = arch_rec
+    if json_path:
+        _os.makedirs(_os.path.dirname(json_path), exist_ok=True)
+        with open(json_path, "w") as f:
+            _json.dump(doc, f, indent=1)
+        print(f"wrote {json_path}", flush=True)
+    return doc
+
+
+# ---------------------------------------------------------------------------
 # Pipeline — paper SS4 composability as a bench row: stage-stacked MLP on a
 # (pipe, data, model) mesh, GPipe vs 1F1B trainable steps with FSDP bucket
 # gathers per use inside each stage. 1F1B's claim is the activation bound

@@ -199,10 +199,12 @@ def analytic_terms(arch: str, shape_name: str, mb: int,
         # two all_to_alls per layer over the routed capacity
         routed = act_bytes * cfg.n_experts_active * cfg.capacity_factor
         coll += cfg.n_layers * 2 * routed * sp_frac * bwd_factor
-    t_coll = coll / (2 * hw.ICI_BW_PER_LINK)
+    # per-axis bandwidths from hw.axis_bandwidth (single cost source)
+    t_coll = coll / hw.axis_bandwidth("data").bytes_per_s
     if multi_pod and is_train:
         # HSDP cross-pod grad all-reduce (fp32, 2x payload)
-        t_coll += (2 * P_pad * 4 * (1 / 2)) / hw.DCN_BW_PER_HOST / ndev * 256
+        t_coll += (2 * P_pad * 4 * (1 / 2)) \
+            / hw.axis_bandwidth("pod").bytes_per_s / ndev * 256
 
     # --- HBM bytes per device ---------------------------------------------
     if is_train:

@@ -13,7 +13,10 @@ benchmarks/results/BENCH_pipeline.json: modeled bubble fraction + per-stage
 exposure per schedule over the staged archs; mem ->
 benchmarks/results/BENCH_memory.json: modeled per-device peak + step time
 per remat mode per arch incl. the budgeted auto-SAC row — the paper's
-Table 3 sweep) so the perf trajectory is tracked across PRs.
+Table 3 sweep; ctx -> benchmarks/results/BENCH_context.json: per ctx
+degree, the per-device sequence shard, modeled ring exposure and modeled
+peak/activation memory — the long-context sweep) so the perf trajectory is
+tracked across PRs.
 """
 
 import os
@@ -33,6 +36,7 @@ RESULTS_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
 OVERLAP_JSON = os.path.join(RESULTS_DIR, "BENCH_overlap.json")
 PIPELINE_JSON = os.path.join(RESULTS_DIR, "BENCH_pipeline.json")
 MEMORY_JSON = os.path.join(RESULTS_DIR, "BENCH_memory.json")
+CONTEXT_JSON = os.path.join(RESULTS_DIR, "BENCH_context.json")
 
 
 def main() -> None:
@@ -60,6 +64,8 @@ def main() -> None:
             json_path=PIPELINE_JSON if emit_json else None),
         "mem": lambda: T.memory_table(
             json_path=MEMORY_JSON if emit_json else None),
+        "ctx": lambda: T.context_table(
+            json_path=CONTEXT_JSON if emit_json else None),
         "roofline": lambda: roofline.emit_csv(T.emit),
     }
     names = names or list(benches)

@@ -7,9 +7,11 @@ becomes ONE entry point:
     step = par.train_step(ocfg)                 # jit(shard_map(...))
 
 `parallelize` works for every registered architecture and every mesh —
-FSDP x TP, and with ``pp_axis`` set the SAME call returns a pipelined
-(GPipe/1F1B) step over per-stage SimpleFSDP storage: pp x dp x tp is a
-config flip, not different code.
+FSDP x TP, with ``pp_axis`` set the SAME call returns a pipelined
+(GPipe/1F1B) step over per-stage SimpleFSDP storage, and with ``cp_axis``
+set the sequence shards over a 'ctx' axis with ring attention
+(core/context.py): pp x dp x cp x tp is a config flip, not different code.
+The 4-axis mesh section below explains the axis ordering.
 
 The original bring-your-own-module wrapper `simple_fsdp(apply_fn, params,
 dcfg)` still exists as a DEPRECATED shim (second half of this file) for raw
@@ -54,6 +56,40 @@ def main():
     par_auto = parallelize(model, dcfg.with_(remat="auto:8"), shape)
     print("auto-SAC plan:", par_auto.plan.memory.describe(),
           "->", par_auto.plan.exec_dcfg.remat)
+
+    # --- context parallelism (core/context.py): the 4-axis mesh ----------
+    # (pipe, data, ctx, model) — each axis carries a different traffic
+    # class, ordered by how much interconnect it needs:
+    #   pipe  OUTERMOST: one tiny point-to-point activation send per slot
+    #         (tolerates the slowest links, even DCN);
+    #   data  fat FSDP all-gathers / reduce-scatters (bulk ICI bandwidth);
+    #   ctx   ring-attention ppermute — one KV block per layer per hop,
+    #         lighter than FSDP gathers, heavier than pipe sends, which is
+    #         why ctx sits BETWEEN data and model;
+    #   model INNERMOST: the highest-frequency TP psums.
+    # The ctx axis shards the SEQUENCE: rows are zigzag-chunked so every
+    # rank owns equal causal work, attention runs as a ring with the next
+    # KV exchange overlapped behind the current chunk's compute, and the
+    # ctx axis joins fsdp_axes so params shard over data x ctx (all
+    # cross-ctx gradients ride explicit collectives).  Feed the step
+    # zigzag-permuted batches (the Trainer does this automatically).
+    from repro.core.context import zigzag_batch
+    dcfg_cp = DistConfig(mesh_axes=("data", "ctx", "model"),
+                         mesh_shape=(2, 2, 2), fsdp_axes=("data", "ctx"),
+                         cp_axis="ctx",
+                         param_dtype=jnp.float32, storage_dtype=jnp.float32)
+    par_cp = parallelize(model, dcfg_cp, shape)
+    print("cp plan:", par_cp.plan.describe())      # ... cp=2(ring) ...
+    st_cp = par_cp.init_storage(jax.random.PRNGKey(0))
+    from repro.data.pipeline import DataConfig as _DC, SyntheticC4 as _SC
+    from repro.data.pipeline import adapt_batch as _ab
+    b0 = _ab(_SC(_DC(vocab=cfg.vocab, seq_len=shape.seq_len,
+                     global_batch=shape.global_batch)).batch(0),
+             model.input_specs(shape, dcfg_cp), 0)
+    loss = par_cp.loss_step(with_grads=False)(st_cp,
+                                              zigzag_batch(b0, dcfg_cp))
+    print(f"cp=2 ring-attention loss {float(loss):.4f} "
+          f"(seq/device = {shape.seq_len // dcfg_cp.cp_size})")
 
     step = par.train_step(AdamWConfig(lr=1e-3))
     storage = par.init_storage(jax.random.PRNGKey(0))

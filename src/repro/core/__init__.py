@@ -10,6 +10,8 @@ Layers (see DESIGN.md):
   stack       apply_stack — bucketed + reordered (prefetch) layer stacks,
               pipelined at bucket granularity for segmented blocks
   pipeline    gpipe / 1F1B schedules over a 'pipe' mesh axis (paper SS4)
+  context     zigzag sequence sharding + ring attention over a 'ctx' axis
+              (context parallelism; reverse-ring exact gradients)
   api         parallelize() + ParallelPlan — the single entry point
               (simple_fsdp kept as the deprecated bring-your-own-module
               shim)
@@ -25,6 +27,8 @@ from repro.core.bucketing import (BucketPlan, manual_plan, per_param_plan,
                                   whole_block_plan)
 from repro.core.collectives import gather_group, replicate, replicate_tree
 from repro.core.compat import shard_map
+from repro.core.context import (ring_attention, ring_cost, zigzag_batch,
+                                zigzag_positions)
 from repro.core.dist import DistConfig, make_mesh, single_device_config
 from repro.core.irgraph import BlockStats
 from repro.core.meta import (ParamMeta, abstract_storage, from_storage,
@@ -43,7 +47,8 @@ __all__ = [
     "gpipe", "gpipe_grads", "make_mesh", "manual_plan", "maybe_remat",
     "one_f_one_b", "parallelize", "partition_exposure", "per_param_plan",
     "pipe_shift", "pipeline_grads", "pipeline_loss_grads", "plan_parallel",
-    "replicate", "replicate_tree", "shard_map", "shard_params",
-    "simple_fsdp", "single_device_config", "storage_specs", "to_storage",
-    "unshard_params", "whole_block_plan",
+    "replicate", "replicate_tree", "ring_attention", "ring_cost",
+    "shard_map", "shard_params", "simple_fsdp", "single_device_config",
+    "storage_specs", "to_storage", "unshard_params", "whole_block_plan",
+    "zigzag_batch", "zigzag_positions",
 ]

@@ -140,12 +140,13 @@ class ParallelPlan:
                         zip(d.mesh_axes, d.mesh_shape))
         pp = (f" pp={self.stage.n_stages}({d.pp_schedule},M="
               f"{self.microbatches})" if self.pipelined else "")
+        cp = f" cp={d.cp_size}(ring)" if d.cp_size > 1 else ""
         buckets = ",".join(f"{k}:{p.n_buckets}"
                            for k, p in self.bucket_plans.items())
         mem = f" mem[{self.memory.describe()}]" if self.memory is not None \
             else ""
         return (f"mesh[{mesh}] fsdp={d.fsdp_axes} tp={d.tp_size}"
-                f"{pp} remat={self.remat} buckets[{buckets}]{mem}")
+                f"{cp}{pp} remat={self.remat} buckets[{buckets}]{mem}")
 
 
 def plan_parallel(model, dcfg: DistConfig, shape=None) -> ParallelPlan:
@@ -162,6 +163,49 @@ def plan_parallel(model, dcfg: DistConfig, shape=None) -> ParallelPlan:
     # bad vectors) fail HERE, once, not at first trace
     remat_kind, _ = parse_remat(dcfg.remat)
 
+    # ---- context parallelism (core/context.py): validate the cp axis,
+    # the model contract and the zigzag divisibility ONCE, at plan time
+    if dcfg.cp_axis is not None:
+        if dcfg.cp_axis not in dcfg.mesh_axes:
+            raise ValueError(
+                f"cp_axis={dcfg.cp_axis!r} is not a mesh axis "
+                f"({dcfg.mesh_axes})")
+        if dcfg.cp_axis in (dcfg.tp_axis, dcfg.pp_axis):
+            raise ValueError(
+                f"cp_axis={dcfg.cp_axis!r} collides with the TP/PP axis; "
+                "context parallelism needs its own mesh axis")
+        if dcfg.cp_size > 1:
+            from repro.core.context import supports_cp
+            if not supports_cp(model):
+                raise ValueError(
+                    f"{type(model).__name__} does not support context "
+                    "parallelism (cp_supported is not set); the ctx axis "
+                    "requires the model to route attention/RoPE/loss "
+                    "through the zigzag sequence shard (models/dense.py "
+                    "is the reference)")
+            if dcfg.cp_axis not in dcfg.fsdp_axes:
+                raise ValueError(
+                    f"cp_axis={dcfg.cp_axis!r} must be one of fsdp_axes="
+                    f"{dcfg.fsdp_axes}: parameters shard over data x ctx "
+                    "so every cross-ctx gradient flow is an explicit "
+                    "collective with an exact transpose (bucket "
+                    "reduce-scatter / reverse-ring ppermute — see "
+                    "core/context.py); a ctx-replicated layout would "
+                    "depend on vma replication-transpose")
+            if shape is not None:
+                cp = dcfg.cp_size
+                if shape.seq_len % (2 * cp):
+                    raise ValueError(
+                        f"seq_len={shape.seq_len} does not split into "
+                        f"2*cp={2 * cp} zigzag chunks; pad the sequence "
+                        "or lower the cp degree")
+                if (shape.seq_len // cp) % dcfg.tp_size:
+                    raise ValueError(
+                        f"per-ctx-rank sequence {shape.seq_len // cp} is "
+                        f"not divisible by tp={dcfg.tp_size} (the SP "
+                        "layout shards the cp-local sequence over the "
+                        "model axis)")
+
     metas = model.metas(dcfg)
     sk = model_stacked_keys(model)     # pointed error for non-contract models
     for k, n in sk.items():
@@ -173,8 +217,11 @@ def plan_parallel(model, dcfg: DistConfig, shape=None) -> ParallelPlan:
     stats = None
     if shape is not None and hasattr(model, "block_stats") \
             and "blocks" in metas:
-        b_local = max(1, shape.global_batch // max(1, dcfg.dp_total))
-        stats = model.block_stats(dcfg, (b_local, shape.seq_len))
+        # per-device workload: rows shard over batch_dp, the sequence over
+        # the ctx axis — planners see the cp-shrunk compute and re-tighten
+        b_local = max(1, shape.global_batch // max(1, dcfg.batch_dp))
+        stats = model.block_stats(
+            dcfg, (b_local, shape.seq_len // max(1, dcfg.cp_size)))
 
     bucket_plans = {}
     for k in sk:

@@ -1,0 +1,533 @@
+"""Context parallelism: zigzag sequence sharding + differentiable ring
+attention over the ``ctx`` mesh axis.
+
+The fourth parallelism subsystem (after FSDP, TP/SP and the pipe axis):
+``DistConfig.cp_axis`` shards the SEQUENCE dimension of every batch row, so
+the trainable context length scales with the ctx degree instead of being
+capped by one device's activation memory.  Three pieces:
+
+  * **Zigzag layout** — causal attention work is triangular, so contiguous
+    sequence shards leave rank 0 nearly idle.  The global sequence is cut
+    into ``2*cp`` chunks and rank ``r`` owns chunks ``r`` and
+    ``2*cp-1-r``: every rank holds one early and one late chunk and the
+    causal key span summed over a rank's queries is identical across ranks
+    (asserted in tests/test_context.py).  `zigzag_batch` applies the
+    host-side permutation so a plain contiguous ``P(..., ctx)`` sharding
+    spec delivers each rank its zigzag chunks; `zigzag_positions` gives a
+    rank its GLOBAL token positions (RoPE phases, causal masks).
+
+  * **Ring attention** (`ring_attention`) — each rank computes its local
+    queries against every KV block: blocks circulate over the ctx axis via
+    ``lax.ppermute`` with the next hop's exchange issued BEFORE the current
+    chunk's attention compute (the CP analogue of `_prefetch_stack`'s
+    AG-before-wait), while an online softmax (the same flash blocking as
+    `models/layers.attention_chunked`) accumulates across hops so the full
+    score matrix never materializes.  Causal masking, gemma2's sliding
+    window and attn softcap are applied per block from global positions;
+    windowed hops with no in-window pair skip their attention compute via
+    ``lax.cond`` (the exchange still runs — the ring must keep moving).
+
+  * **Reverse-ring custom VJP** — gradients are exact and EXPLICIT: the
+    backward recirculates KV with travelling dK/dV accumulators (after
+    ``cp`` hops each accumulator is back at its owner carrying every
+    rank's contribution — the transpose of the forward ring), dQ stays
+    local, and softcap/window chain rules are hand-written.  Like
+    `core/pipeline.pipe_shift`, every cross-rank cotangent flow is an
+    explicit collective with an exact transpose, so cp parity holds on
+    every jax version (no vma replication-transpose required — which is
+    also why `core/api.plan_parallel` requires the ctx axis to be part of
+    ``fsdp_axes``: parameter gradients then cross the ctx axis through the
+    bucket reduce-scatter, another explicit collective).
+
+The per-hop math lives in standalone helpers shared by the mesh path and
+by `ring_attention_host` / `ring_attention_host_grads` — single-process
+emulators that run the identical block updates over sliced shards, which is
+what lets tests/test_context.py assert exact parity against
+`attention_ref` (forward AND the hand-written backward) without a mesh.
+
+Cost model: `ring_cost` prices one layer's ring (hop bytes, hop compute,
+live hops under a sliding window, exposed exchange time) from
+`hw.ring_hop_time_s` — the same single cost source the exposure planner
+and the dry-run use, so ctx plans and bucket plans are costed coherently.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import hw
+from repro.core.dist import DistConfig
+
+_NEG = 1e30          # finite -inf stand-in (matches attention_ref's -1e30)
+
+
+# ---------------------------------------------------------------------------
+# Zigzag layout
+# ---------------------------------------------------------------------------
+def chunk_len(seq_len: int, cp: int) -> int:
+    """Zigzag chunk length: the sequence is viewed as 2*cp chunks (padded
+    up when 2*cp does not divide seq_len — pad positions are >= seq_len and
+    masked out of attention)."""
+    return -(-seq_len // (2 * cp))
+
+
+def shard_len(seq_len: int, cp: int) -> int:
+    """Per-rank sequence shard length (2 chunks)."""
+    return 2 * chunk_len(seq_len, cp)
+
+
+def zigzag_positions(rank, cp: int, seq_len: int):
+    """Global token positions of rank `rank`'s shard: chunks (r, 2*cp-1-r).
+
+    `rank` may be a traced scalar (``lax.axis_index`` inside shard_map).
+    Positions >= seq_len mark padding (only when 2*cp does not divide
+    seq_len — the model path validates divisibility at plan time)."""
+    c = chunk_len(seq_len, cp)
+    lo = rank * c + jnp.arange(c)
+    hi = (2 * cp - 1 - rank) * c + jnp.arange(c)
+    return jnp.concatenate([lo, hi])
+
+
+def zigzag_index(seq_len: int, cp: int) -> np.ndarray:
+    """Host-side permutation: ``x[:, zigzag_index(S, cp)]`` reorders the
+    sequence so CONTIGUOUS ctx shards (the plain ``P(..., ctx)`` batch
+    spec) are exactly each rank's zigzag chunks."""
+    if seq_len % (2 * cp):
+        raise ValueError(
+            f"zigzag sharding needs seq_len % (2*cp) == 0, got "
+            f"seq_len={seq_len}, cp={cp}")
+    c = seq_len // (2 * cp)
+    idx = np.concatenate([
+        np.concatenate([np.arange(r * c, (r + 1) * c),
+                        np.arange((2 * cp - 1 - r) * c, (2 * cp - r) * c)])
+        for r in range(cp)
+    ])
+    return idx
+
+
+def zigzag_batch(batch: dict, dcfg: DistConfig) -> dict:
+    """Apply the zigzag sequence permutation to every (B, S, ...) entry of
+    a host batch (no-op at cp=1).  The Trainer calls this on each batch;
+    anything feeding a cp step directly (harness, benches) must too."""
+    cp = dcfg.cp_size
+    if cp <= 1:
+        return batch
+    out = {}
+    idx_cache: dict[int, np.ndarray] = {}
+    for k, v in batch.items():
+        if getattr(v, "ndim", 0) >= 2:
+            S = v.shape[1]
+            if S not in idx_cache:
+                idx_cache[S] = zigzag_index(S, cp)
+            out[k] = np.ascontiguousarray(np.asarray(v)[:, idx_cache[S]])
+        else:
+            out[k] = v
+    return out
+
+
+def shard_positions(dcfg: DistConfig, seq_len: int):
+    """This ctx rank's global positions (inside shard_map)."""
+    if dcfg.cp_size <= 1:
+        return jnp.arange(seq_len)
+    return zigzag_positions(lax.axis_index(dcfg.cp_axis), dcfg.cp_size,
+                            seq_len)
+
+
+def supports_cp(model) -> bool:
+    """Model-contract flag: does this model route attention/RoPE/loss
+    through the cp shard (models set ``cp_supported = True``)?"""
+    return bool(getattr(model, "cp_supported", False))
+
+
+# ---------------------------------------------------------------------------
+# Per-hop block math (shared by the mesh ring and the host emulators).
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class RingOpts:
+    """Static ring-attention configuration (hashable: custom_vjp nondiff
+    arg).  `axis` is None for the host emulators."""
+
+    axis: str | None
+    cp: int
+    seq_len: int
+    causal: bool = True
+    window: int | None = None
+    softcap: float | None = None
+    q_scale: float = 1.0
+
+
+def _softcap(x, cap):
+    return cap * jnp.tanh(x / cap) if cap else x
+
+
+def hop_mask(pos_q, pos_k, opts: RingOpts):
+    """(Sq, Sk) bool: which (query, key) pairs of one hop are attended."""
+    dq = pos_q[:, None]
+    dk = pos_k[None, :]
+    m = dk < opts.seq_len                      # pad keys (remainder shards)
+    if opts.causal:
+        m = m & (dq >= dk)
+    if opts.window is not None:
+        m = m & (dq - dk < opts.window)
+    return m
+
+
+def _hop_scores(qgs, kb, opts: RingOpts):
+    """Scaled-q scores of one hop, softcapped, fp32, UNmasked.
+    qgs: (B, Sq, Kh, g, hd) pre-scaled; kb: (B, Sk, Kh, hd)."""
+    s = jnp.einsum("bskgh,btkh->bkgst", qgs, kb,
+                   preferred_element_type=jnp.float32)
+    return _softcap(s, opts.softcap)
+
+
+def _accum_hop(acc, m, l, qgs, kb, vb, mask, opts: RingOpts):
+    """One online-softmax update: fold hop (kb, vb) into (acc, m, l).
+
+    `m` is initialized to -_NEG (finite), so a fully-masked hop leaves the
+    carry exactly unchanged (corr == 1, p == 0) with no inf/nan traffic."""
+    sc = _hop_scores(qgs, kb, opts)
+    sm = jnp.where(mask[None, None, None], sc, -_NEG)
+    m_new = jnp.maximum(m, sm.max(-1))
+    p = jnp.exp(sm - m_new[..., None]) * mask[None, None, None]
+    corr = jnp.exp(m - m_new)
+    l_new = l * corr + p.sum(-1)
+    acc_new = acc * corr[..., None] + jnp.einsum(
+        "bkgst,btkh->bkgsh", p, vb.astype(jnp.float32))
+    return acc_new, m_new, l_new
+
+
+def _finish(acc, m, l, q_dtype):
+    """(acc, m, l) -> (out (B,Sq,H,hd), lse (B,Kh,g,Sq)).  Dead rows (all
+    hops masked — only padding queries) emit 0 with lse clamped finite."""
+    lse = jnp.where(l > 0, m + jnp.log(jnp.maximum(l, 1e-30)), 0.0)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    B, Kh, g, Sq, hd = out.shape
+    out = jnp.transpose(out, (0, 3, 1, 2, 4)).reshape(B, Sq, Kh * g, hd)
+    return out.astype(q_dtype), lse
+
+
+def _hop_grads(qgs, kb, vb, do_r, D, lse, mask, opts: RingOpts):
+    """Hand-written flash backward of one hop.
+
+    qgs: pre-scaled q (B,Sq,Kh,g,hd); do_r/D/lse in the (B,Kh,g,Sq[,hd])
+    layout; returns (dqs (B,Kh,g,Sq,hd) — gradient w.r.t. the SCALED q,
+    dk_b, dv_b (B,Sk,Kh,hd), all fp32).  Softcap chain rule:
+    d tanh-cap/ds = 1 - (sc/cap)^2 with sc the capped score."""
+    sc = _hop_scores(qgs, kb, opts)
+    p = jnp.exp(sc - lse[..., None]) * mask[None, None, None]
+    dv_b = jnp.einsum("bkgst,bkgsh->btkh", p, do_r)
+    dp = jnp.einsum("bkgsh,btkh->bkgst", do_r, vb.astype(jnp.float32))
+    dsc = p * (dp - D[..., None])
+    if opts.softcap:
+        dsc = dsc * (1.0 - (sc / opts.softcap) ** 2)
+    dqs = jnp.einsum("bkgst,btkh->bkgsh", dsc, kb.astype(jnp.float32))
+    dk_b = jnp.einsum("bkgst,bskgh->btkh", dsc, qgs)
+    return dqs, dk_b, dv_b
+
+
+def _hop_maybe(live_fn, idle, mask, opts: RingOpts, skippable: bool):
+    """Run one hop's compute, or skip it entirely when the mask admits no
+    pair (sliding-window hops whose chunks are out of range).  The skip is
+    a per-rank ``lax.cond`` — branches contain NO collectives, so ranks may
+    disagree; the ring exchange itself always runs (issued by the caller,
+    outside)."""
+    if not skippable:
+        return live_fn(idle)
+    return lax.cond(jnp.any(mask), live_fn, lambda c: c, idle)
+
+
+# ---------------------------------------------------------------------------
+# The mesh ring (runs inside shard_map over dcfg.cp_axis).
+# ---------------------------------------------------------------------------
+def _ring_perm(cp: int):
+    return [(i, (i + 1) % cp) for i in range(cp)]
+
+
+def _shift(x, opts: RingOpts):
+    return lax.ppermute(x, opts.axis, _ring_perm(opts.cp))
+
+
+def _ring_fwd_impl(q, k, v, opts: RingOpts):
+    B, Sq, H, hd = q.shape
+    Kh = k.shape[2]
+    g = H // Kh
+    rank = lax.axis_index(opts.axis)
+    pos_q = zigzag_positions(rank, opts.cp, opts.seq_len)
+    qgs = (q.astype(jnp.float32) * opts.q_scale).reshape(B, Sq, Kh, g, hd)
+    acc = jnp.zeros((B, Kh, g, Sq, hd), jnp.float32)
+    m = jnp.full((B, Kh, g, Sq), -_NEG, jnp.float32)
+    l = jnp.zeros((B, Kh, g, Sq), jnp.float32)
+    kb, vb = k, v
+    for t in range(opts.cp):
+        src = (rank - t) % opts.cp
+        pos_k = zigzag_positions(src, opts.cp, opts.seq_len)
+        mask = hop_mask(pos_q, pos_k, opts)
+        if t + 1 < opts.cp:
+            # issue the NEXT hop's exchange before this hop's attention —
+            # the ring analogue of ag_before_wait (overlap by construction)
+            kb_n, vb_n = _shift(kb, opts), _shift(vb, opts)
+        acc, m, l = _hop_maybe(
+            lambda c, kb=kb, vb=vb, mask=mask: _accum_hop(
+                *c, qgs, kb, vb, mask, opts),
+            (acc, m, l), mask, opts,
+            skippable=opts.window is not None and t > 0)
+        if t + 1 < opts.cp:
+            kb, vb = kb_n, vb_n
+    return _finish(acc, m, l, q.dtype)
+
+
+def _ring_bwd_impl(q, k, v, out, lse, do, opts: RingOpts):
+    B, Sq, H, hd = q.shape
+    Kh = k.shape[2]
+    g = H // Kh
+    rank = lax.axis_index(opts.axis)
+    pos_q = zigzag_positions(rank, opts.cp, opts.seq_len)
+    qgs = (q.astype(jnp.float32) * opts.q_scale).reshape(B, Sq, Kh, g, hd)
+    do_r = jnp.transpose(do.astype(jnp.float32)
+                         .reshape(B, Sq, Kh, g, hd), (0, 2, 3, 1, 4))
+    o_r = jnp.transpose(out.astype(jnp.float32)
+                        .reshape(B, Sq, Kh, g, hd), (0, 2, 3, 1, 4))
+    D = (do_r * o_r).sum(-1)                       # (B, Kh, g, Sq)
+    dq = jnp.zeros((B, Kh, g, Sq, hd), jnp.float32)
+    kb, vb = k, v
+    # travelling accumulators: dK/dV of the block currently held — they
+    # shift WITH the block each hop, so after cp hops each is home with
+    # every rank's contribution summed (the reverse ring).
+    dka = jnp.zeros(k.shape, jnp.float32)
+    dva = jnp.zeros(v.shape, jnp.float32)
+    for t in range(opts.cp):
+        src = (rank - t) % opts.cp
+        pos_k = zigzag_positions(src, opts.cp, opts.seq_len)
+        mask = hop_mask(pos_q, pos_k, opts)
+        if t + 1 < opts.cp:
+            kb_n, vb_n = _shift(kb, opts), _shift(vb, opts)
+
+        def live(c, kb=kb, vb=vb, mask=mask):
+            dq_c, dka_c, dva_c = c
+            dqs, dk_b, dv_b = _hop_grads(qgs, kb, vb, do_r, D, lse, mask,
+                                         opts)
+            return (dq_c + dqs, dka_c + dk_b, dva_c + dv_b)
+
+        dq, dka, dva = _hop_maybe(
+            live, (dq, dka, dva), mask, opts,
+            skippable=opts.window is not None and t > 0)
+        dka, dva = _shift(dka, opts), _shift(dva, opts)
+        if t + 1 < opts.cp:
+            kb, vb = kb_n, vb_n
+    dq_full = jnp.transpose(dq, (0, 3, 1, 2, 4)).reshape(B, Sq, H, hd)
+    dq_full = (dq_full * opts.q_scale).astype(q.dtype)
+    return dq_full, dka.astype(k.dtype), dva.astype(v.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _ring_attention(q, k, v, opts: RingOpts):
+    return _ring_fwd_impl(q, k, v, opts)[0]
+
+
+def _ring_attention_fwd(q, k, v, opts):
+    out, lse = _ring_fwd_impl(q, k, v, opts)
+    return out, (q, k, v, out, lse)
+
+
+def _ring_attention_bwd(opts, res, do):
+    q, k, v, out, lse = res
+    return _ring_bwd_impl(q, k, v, out, lse, do, opts)
+
+
+_ring_attention.defvjp(_ring_attention_fwd, _ring_attention_bwd)
+
+
+def ring_attention(q, k, v, *, dcfg: DistConfig, seq_len: int,
+                   causal: bool = True, window: int | None = None,
+                   softcap: float | None = None,
+                   q_scale: float | None = None):
+    """Differentiable ring attention over ``dcfg.cp_axis``.
+
+    q: (B, S/cp, H, hd); k/v: (B, S/cp, Kh, hd) — this rank's ZIGZAG shard
+    (positions from `zigzag_positions`); `seq_len` the GLOBAL sequence
+    length.  Returns (B, S/cp, H, hd).  Runs inside shard_map; gradients
+    are exact via the reverse-ring custom VJP (see module docstring)."""
+    hd = q.shape[-1]
+    opts = RingOpts(axis=dcfg.cp_axis, cp=dcfg.cp_size, seq_len=seq_len,
+                    causal=causal, window=window, softcap=softcap,
+                    q_scale=q_scale if q_scale is not None
+                    else 1.0 / math.sqrt(hd))
+    return _ring_attention(q, k, v, opts)
+
+
+# ---------------------------------------------------------------------------
+# Host emulators: the same per-hop math over sliced shards (no mesh) —
+# the unit-test surface for forward AND the hand-written backward.
+# ---------------------------------------------------------------------------
+def _host_opts(seq_len, cp, causal, window, softcap, q_scale, hd):
+    return RingOpts(axis=None, cp=cp, seq_len=seq_len, causal=causal,
+                    window=window, softcap=softcap,
+                    q_scale=q_scale if q_scale is not None
+                    else 1.0 / math.sqrt(hd))
+
+
+def _zigzag_split(x, cp: int, seq_len: int):
+    """Full (B, S, ...) -> per-rank zigzag shards (padded when needed)."""
+    c = chunk_len(seq_len, cp)
+    pad = 2 * cp * c - seq_len
+    xp = jnp.pad(x, [(0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 2))
+    return [jnp.concatenate(
+        [xp[:, r * c:(r + 1) * c],
+         xp[:, (2 * cp - 1 - r) * c:(2 * cp - r) * c]], axis=1)
+        for r in range(cp)]
+
+
+def _zigzag_join(shards, cp: int, seq_len: int):
+    """Inverse of `_zigzag_split` (drops padding)."""
+    c = chunk_len(seq_len, cp)
+    chunks = [None] * (2 * cp)
+    for r, sh in enumerate(shards):
+        chunks[r] = sh[:, :c]
+        chunks[2 * cp - 1 - r] = sh[:, c:]
+    return jnp.concatenate(chunks, axis=1)[:, :seq_len]
+
+
+def _host_shard_fwd(q_r, ks, vs, r, opts: RingOpts):
+    """One emulated rank's forward over every block (visit order matches
+    the mesh ring: src = r - t mod cp)."""
+    B, Sq, H, hd = q_r.shape
+    Kh = ks[0].shape[2]
+    g = H // Kh
+    pos_q = zigzag_positions(r, opts.cp, opts.seq_len)
+    qgs = (q_r.astype(jnp.float32) * opts.q_scale).reshape(B, Sq, Kh, g, hd)
+    acc = jnp.zeros((B, Kh, g, Sq, hd), jnp.float32)
+    m = jnp.full((B, Kh, g, Sq), -_NEG, jnp.float32)
+    l = jnp.zeros((B, Kh, g, Sq), jnp.float32)
+    for t in range(opts.cp):
+        src = (r - t) % opts.cp
+        pos_k = zigzag_positions(src, opts.cp, opts.seq_len)
+        mask = hop_mask(pos_q, pos_k, opts)
+        acc, m, l = _accum_hop(acc, m, l, qgs, ks[src], vs[src], mask, opts)
+    return _finish(acc, m, l, q_r.dtype), qgs
+
+
+def ring_attention_host(q, k, v, cp: int, *, causal: bool = True,
+                        window: int | None = None,
+                        softcap: float | None = None,
+                        q_scale: float | None = None):
+    """Single-process emulation of the ring over FULL (B, S, H, hd)
+    inputs: zigzag-split, per-rank online-softmax sweep (identical hop
+    updates to the mesh path), reassemble.  Differentiable by autodiff —
+    tests pit it (and `ring_attention_host_grads`) against attention_ref."""
+    seq_len = q.shape[1]
+    opts = _host_opts(seq_len, cp, causal, window, softcap, q_scale,
+                      q.shape[-1])
+    qs = _zigzag_split(q, cp, seq_len)
+    ks = _zigzag_split(k, cp, seq_len)
+    vs = _zigzag_split(v, cp, seq_len)
+    outs = [_host_shard_fwd(qs[r], ks, vs, r, opts)[0][0]
+            for r in range(cp)]
+    return _zigzag_join(outs, cp, seq_len)
+
+
+def ring_attention_host_grads(q, k, v, do, cp: int, *, causal: bool = True,
+                              window: int | None = None,
+                              softcap: float | None = None,
+                              q_scale: float | None = None):
+    """Drive the HAND-WRITTEN per-hop backward (`_hop_grads` — the exact
+    math the mesh reverse-ring VJP runs) on full tensors: returns
+    (dq, dk, dv).  The mesh VJP's travelling accumulators become direct
+    scatter-adds here; parity against ``jax.grad(attention_ref)`` is the
+    unit-level proof of the reverse ring."""
+    seq_len = q.shape[1]
+    opts = _host_opts(seq_len, cp, causal, window, softcap, q_scale,
+                      q.shape[-1])
+    qs = _zigzag_split(q, cp, seq_len)
+    ks = _zigzag_split(k, cp, seq_len)
+    vs = _zigzag_split(v, cp, seq_len)
+    dos = _zigzag_split(do, cp, seq_len)
+    dqs_out = []
+    dk_acc = [jnp.zeros(ks[0].shape, jnp.float32) for _ in range(cp)]
+    dv_acc = [jnp.zeros(vs[0].shape, jnp.float32) for _ in range(cp)]
+    for r in range(cp):
+        (out_r, lse), qgs = _host_shard_fwd(qs[r], ks, vs, r, opts)
+        B, Sq, H, hd = qs[r].shape
+        Kh = ks[0].shape[2]
+        g = H // Kh
+        do_r = jnp.transpose(dos[r].astype(jnp.float32)
+                             .reshape(B, Sq, Kh, g, hd), (0, 2, 3, 1, 4))
+        o_r = jnp.transpose(out_r.astype(jnp.float32)
+                            .reshape(B, Sq, Kh, g, hd), (0, 2, 3, 1, 4))
+        D = (do_r * o_r).sum(-1)
+        dq = jnp.zeros((B, Kh, g, Sq, hd), jnp.float32)
+        pos_q = zigzag_positions(r, opts.cp, opts.seq_len)
+        for src in range(cp):
+            pos_k = zigzag_positions(src, opts.cp, opts.seq_len)
+            mask = hop_mask(pos_q, pos_k, opts)
+            dq_h, dk_b, dv_b = _hop_grads(qgs, ks[src], vs[src], do_r, D,
+                                          lse, mask, opts)
+            dq = dq + dq_h
+            dk_acc[src] = dk_acc[src] + dk_b
+            dv_acc[src] = dv_acc[src] + dv_b
+        dq = jnp.transpose(dq, (0, 3, 1, 2, 4)).reshape(B, Sq, H, hd)
+        dqs_out.append(dq * opts.q_scale)
+    return (_zigzag_join(dqs_out, cp, seq_len).astype(q.dtype),
+            _zigzag_join(dk_acc, cp, seq_len).astype(k.dtype),
+            _zigzag_join(dv_acc, cp, seq_len).astype(v.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Cost model (hw.ring_hop_time_s is the single hop-cost source).
+# ---------------------------------------------------------------------------
+def ring_live_hops(cp: int, seq_len: int, window: int | None) -> int:
+    """Modeled count of ring hops with any in-window attention work.
+
+    Full/causal attention touches every hop (zigzag gives every rank one
+    early chunk every other rank's late queries see).  A sliding window of
+    w only reaches chunks within ~w of a query chunk: hops whose nearest
+    chunk distance exceeds the window carry no live pair and skip their
+    attention compute (`_hop_maybe`); their exchange still runs."""
+    if window is None or cp <= 1:
+        return cp
+    c = chunk_len(seq_len, cp)
+    return max(1, min(cp, 2 + window // max(1, c)))
+
+
+def ring_cost(arch_cfg, dcfg: DistConfig, batch_shape,
+              window: int | None = None) -> dict:
+    """Modeled per-layer ring-attention schedule for one attention call.
+
+    `batch_shape` is the per-device (rows, seq_shard).  Returns hop bytes /
+    per-hop comm and compute times / live hops / total EXPOSED exchange
+    time: exchange t+1 is issued before hop t's compute, so a live hop
+    hides one exchange and only the spill (or a skipped hop's whole
+    exchange) is exposed — the quantity dry-run rows and BENCH_context
+    track across cp degrees."""
+    B, S_local = batch_shape
+    cp = dcfg.cp_size
+    tp = dcfg.tp_size
+    it = jnp.dtype(dcfg.param_dtype).itemsize
+    lay = arch_cfg.gqa_layout(tp)
+    kl = max(1, lay["kvp"] // tp)          # kv heads held per rank
+    hd = arch_cfg.head_dim
+    hop_bytes = 2.0 * B * S_local * kl * hd * it          # one K+V block
+    hop_comm_s = hw.ring_hop_time_s(hop_bytes, dcfg.cp_axis or "data")
+    # per-hop attention compute: scores + out for Sq x Sk block, all local
+    # q heads (4 = 2 matmuls x 2 flops/MAC)
+    hop_flops = 4.0 * B * S_local * S_local * hd * (lay["hq"] / tp)
+    hop_comp_s = hop_flops / hw.PEAK_FLOPS_BF16
+    seq_global = S_local * cp
+    live = ring_live_hops(cp, seq_global, window)
+    # cp-1 exchanges: those riding a live hop hide behind its compute;
+    # skipped hops expose their whole exchange (the ring must keep moving)
+    hidden = max(0, live - 1)
+    exposed = hidden * max(0.0, hop_comm_s - hop_comp_s) \
+        + max(0, (cp - 1) - hidden) * hop_comm_s
+    return {
+        "cp": cp, "seq_local": S_local, "hop_bytes": hop_bytes,
+        "hop_comm_s": hop_comm_s, "hop_comp_s": hop_comp_s,
+        "live_hops": live, "exposed_s": exposed,
+        "total_comm_s": (cp - 1) * hop_comm_s,
+    }

@@ -46,6 +46,23 @@ class DistConfig:
     # activations per stage; 1F1B bounds that to S (see core/pipeline.py).
     pp_microbatches: int = 0
 
+    # Context parallelism (core/context.py) -----------------------------------
+    # When set, the named mesh axis shards the SEQUENCE dimension: every
+    # batch row is split into load-balanced zigzag chunks (rank r owns
+    # chunks r and 2*cp-1-r of 2*cp, so each rank carries equal causal
+    # attention work) and attention runs as a ring — KV blocks circulate
+    # over the ctx axis via ppermute, the next hop's exchange overlapped
+    # behind the current chunk's attention compute.  Convention: 'ctx' sits
+    # BETWEEN the data and model axes — its per-hop ppermute traffic (one
+    # KV block) is lighter than the fat FSDP all-gathers on 'data' but
+    # heavier/more frequent than pipeline sends, while TP psums stay
+    # innermost.  The ctx axis must be part of `fsdp_axes`: parameters are
+    # then ZeRO-3 sharded over data x ctx and every cross-rank gradient
+    # flow (bucket reduce-scatter, ring reverse permute) is an explicit
+    # collective with an exact transpose — no reliance on vma
+    # replication-transpose (exact on every jax, like core/pipeline).
+    cp_axis: str | None = None
+
     # Mixed precision (paper SS4) --------------------------------------------
     param_dtype: Dtype = jnp.bfloat16    # forward/backward compute dtype
     reduce_dtype: Dtype = jnp.float32    # gradient reduce-scatter dtype
@@ -118,17 +135,31 @@ class DistConfig:
         return self.axis_size(self.pp_axis) if self.pp_axis else 1
 
     @property
+    def cp_size(self) -> int:
+        """Context-parallel degree (1 when no ctx axis is configured)."""
+        return self.axis_size(self.cp_axis) if self.cp_axis else 1
+
+    @property
     def dp_total(self) -> int:
         """Total data-parallel ways = every axis that is not TP or PP.
 
         Pipe ranks hold DIFFERENT stage parameters and see the same
         microbatch stream, so the pipe axis is neither a data- nor a
-        tensor-parallel domain.
+        tensor-parallel domain.  The ctx axis COUNTS here: cp ranks hold
+        disjoint token shards of the same rows, so the per-device-mean
+        gradient convention (reduce-scatter divides by dp_total) treats
+        sequence shards exactly like batch shards.
         """
         return math.prod(
             s for a, s in self.axis_sizes.items()
             if a != self.tp_axis and a != self.pp_axis
         )
+
+    @property
+    def batch_dp(self) -> int:
+        """Batch-ROW sharding ways: dp_total without the ctx axis (cp ranks
+        replicate rows and shard the sequence dim instead)."""
+        return self.dp_total // self.cp_size
 
     @property
     def grad_sync_axes(self) -> tuple[str, ...]:

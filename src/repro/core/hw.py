@@ -70,6 +70,20 @@ def axis_bandwidth(axis_name: str) -> AxisBandwidth:
     )
 
 
+def ring_hop_time_s(nbytes: float, axis_name: str = "data") -> float:
+    """One neighbour hop of a ring exchange (``lax.ppermute``) on one axis.
+
+    The SINGLE source for ring/point-to-point hop costs: pipeline activation
+    sends, the context-parallel ring attention's KV exchange
+    (core/context.py), and the roofline's collective-permute terms all price
+    a hop as alpha + payload/bw of the axis it rides — same `axis_bandwidth`
+    model the bucketed all-gather/reduce-scatter planners use, so the two
+    schedules can never be costed from drifting constants.
+    """
+    bw = axis_bandwidth(axis_name)
+    return bw.alpha_s + nbytes / bw.bytes_per_s
+
+
 def collective_time_s(nbytes: float, axis_sizes: dict[str, int],
                       axes: tuple[str, ...]) -> float:
     """alpha + beta*n model for an all-gather/reduce-scatter over `axes`.

@@ -10,7 +10,8 @@ Resolved once per (model, dcfg, shape) by `core/api.plan_parallel` into the
 frozen `MemoryPlan` on the `ParallelPlan`.
 """
 
-from repro.core.memory.planner import (MemoryPlan, RECOMPUTE_W, plan_cost_s,
+from repro.core.memory.planner import (MemoryPlan, RECOMPUTE_W,
+                                       auto_microbatches, plan_cost_s,
                                        plan_memory)
 from repro.core.memory.simulator import (BlockProfile, MemoryBreakdown,
                                          SegmentProfile, SimContext,
@@ -24,7 +25,8 @@ from repro.core.memory.offload import (host_offload_supported, to_device,
 
 __all__ = [
     "BlockProfile", "MemoryBreakdown", "MemoryPlan", "RECOMPUTE_W",
-    "SegmentProfile", "SimContext", "build_block_profile", "context_peaks",
+    "SegmentProfile", "SimContext", "auto_microbatches",
+    "build_block_profile", "context_peaks",
     "executed_segments", "host_offload_supported",
     "in_flight_microbatches", "main_block_key", "make_context",
     "plan_cost_s", "plan_memory", "simulate_peak", "storage_bytes",

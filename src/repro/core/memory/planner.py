@@ -146,9 +146,62 @@ def plan_cost_s(prof: BlockProfile, policies, L_total: int,
 
 
 def _batch_shape_for(dcfg: DistConfig, shape, microbatches: int):
-    b_local = max(1, shape.global_batch // max(1, dcfg.dp_total))
+    # rows shard over batch_dp, the sequence over the ctx axis — the
+    # simulator's activation terms see the true per-device token count
+    b_local = max(1, shape.global_batch // max(1, dcfg.batch_dp))
     mb = microbatches or dcfg.microbatches or 1
-    return (max(1, b_local // max(1, mb)), shape.seq_len)
+    return (max(1, b_local // max(1, mb)),
+            shape.seq_len // max(1, dcfg.cp_size))
+
+
+def auto_microbatches(model, dcfg: DistConfig, shape,
+                      budget: float | None = None, stage=None,
+                      act_scale: float | None = None) -> int:
+    """Smallest microbatch count whose modeled per-device peak fits
+    `budget` (HBM by default) — the simulator's stage peaks replacing the
+    hand-kept dry-run MICROBATCH table (consumed by
+    `launch.mesh.production_dcfg_for` and `launch/dryrun.run_cell`).
+
+    Candidates are DIVISORS of the per-device row count, ascending — the
+    train step reshapes rows into equal microbatches, so a non-divisor
+    pick would fail at first trace.  Without a pipeline `stage` the count
+    is gradient accumulation; with one it is the pipeline M itself
+    (candidates start at the stage count, and each candidate is simulated
+    with THAT M in flight — GPipe holds all M live stacks, so modeling a
+    smaller M than executed would understate the very peak this rule
+    guards).  Returns the deepest split when even it does not fit (the
+    dry-run's fits-HBM check reports the overflow).
+
+    `act_scale` is the measured calibration factor from
+    `launch/dryrun.harvest_memory_stats`; when the caller has no
+    measurement (pure-analytic contexts) the pick defaults to the
+    calibration clamp ceiling (4.0 — XLA's real residual footprint runs
+    well above the analytic estimate, and an optimistic split here turns
+    into an OOM at run time while a pessimistic one only costs a few
+    accumulation steps).  An unresolved ``remat='auto:<GB>'`` is evaluated
+    at the default 'fsdp_only' policy — the budgeted SAC planner refines
+    the policy afterwards, this only sizes the batch split."""
+    from repro.core.memory.simulator import simulate_peak
+    from repro.core.remat import AUTO_PREFIX, parse_remat
+
+    if not hasattr(model, "block_stats"):
+        return 1
+    budget = budget or hw.HBM_BYTES
+    act_scale = 4.0 if act_scale is None else act_scale
+    if parse_remat(dcfg.remat)[0] == AUTO_PREFIX:
+        dcfg = dcfg.with_(remat="fsdp_only")
+    b_local = max(1, shape.global_batch // max(1, dcfg.batch_dp))
+    floor = stage.n_stages if stage is not None else 1
+    cands = [d for d in range(1, b_local + 1)
+             if b_local % d == 0 and d >= floor] or [b_local]
+    for mb in cands:
+        bshape = _batch_shape_for(dcfg, shape, mb)
+        peaks = simulate_peak(model, dcfg, bshape, stage=stage,
+                              microbatches=(mb if stage is not None else 0),
+                              act_scale=act_scale)
+        if max(b.peak_bytes for b in peaks) <= budget:
+            return mb
+    return cands[-1]
 
 
 def plan_memory(model, dcfg: DistConfig, shape=None, bucket_plans=None,

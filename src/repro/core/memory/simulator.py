@@ -22,6 +22,10 @@ BYTES.  Per (stage, segment, bucket) it accounts:
     layer's packed grad cotangents across the backward sweep);
   * pipeline in-flight microbatches: GPipe holds M live activation stacks
     per stage, 1F1B bounds stage s to min(M, S - s) (core/pipeline.py);
+  * context parallelism (core/context.py): every activation-derived term is
+    sized from the cp-LOCAL sequence shard (batch_shape carries seq/cp —
+    activations divide by the ctx degree), plus the two in-flight ring KV
+    buffers of the circulating attention (current block + arriving block);
   * optional host offload (core/memory/offload.py): optimizer state and
     segment-boundary residuals move to host, leaving a double-buffered
     2-layer staging window on device.
@@ -278,6 +282,15 @@ class SimContext:
     L_stage: int
     n_stages: int
     microbatches: int
+    # context parallelism (core/context.py): in-flight ring buffers, live
+    # at every attention segment's peak.  Forward: the KV block being
+    # attended plus the one arriving from the previous ctx rank (ppermute
+    # double buffering), param dtype.  Backward additionally circulates
+    # the travelling dK/dV accumulators in fp32 alongside the KV blocks
+    # (the reverse ring), so its residency is strictly larger.  0 without
+    # a ctx axis.
+    ring_kv_b: float = 0.0          # forward-point in-flight bytes
+    ring_kv_bwd_b: float = 0.0      # backward-point in-flight bytes
 
 
 def make_context(model, dcfg: DistConfig, batch_shape,
@@ -317,7 +330,23 @@ def make_context(model, dcfg: DistConfig, batch_shape,
          for k in sk if k != main), default=0.0)
 
     n_stages = stage.n_stages if stage is not None else 1
-    b_mb, seq = batch_shape
+    b_mb, seq = batch_shape                 # seq is the cp-LOCAL shard
+
+    # ring attention in flight: current KV block + the arriving one; the
+    # backward's reverse ring also carries double-buffered fp32 dK/dV
+    # accumulators travelling with the blocks
+    ring_kv_b = ring_kv_bwd_b = 0.0
+    if dcfg.cp_size > 1:
+        from repro.core.context import supports_cp
+        acfg = getattr(model, "cfg", None)
+        if supports_cp(model) and acfg is not None \
+                and getattr(acfg, "head_dim", 0):
+            lay = acfg.gqa_layout(dcfg.tp_size)
+            kl = max(1, lay["kvp"] // dcfg.tp_size)
+            numel = 2.0 * b_mb * seq * kl * acfg.head_dim   # one K+V block
+            it = jnp.dtype(dcfg.param_dtype).itemsize
+            ring_kv_b = 2.0 * numel * it
+            ring_kv_bwd_b = ring_kv_b + 2.0 * numel * 4.0   # + fp32 dK/dV
     extras = []
     for si in range(n_stages):
         # stage-entry / exit extras (transient at the peak point): gathered
@@ -339,7 +368,8 @@ def make_context(model, dcfg: DistConfig, batch_shape,
         dcfg=dcfg, prof=prof, default_policies=default, params_b=params_b,
         other_gather=other_gather, extras=tuple(extras),
         L_stage=(stage.layers_per_stage if stage is not None else sk[main]),
-        n_stages=n_stages, microbatches=microbatches)
+        n_stages=n_stages, microbatches=microbatches, ring_kv_b=ring_kv_b,
+        ring_kv_bwd_b=ring_kv_bwd_b)
 
 
 def context_peaks(ctx: SimContext,
@@ -411,6 +441,7 @@ def context_peaks(ctx: SimContext,
                 "saved_residuals": saved, "gathered": gathered,
                 "other_stacks": ctx.other_gather,
                 "stage_extras": ctx.extras[si],
+                "ring_kv": ctx.ring_kv_b,
             },
             "backward": {
                 "params": params_b, "grads": grads_b, "opt_state": opt_dev,
@@ -418,6 +449,7 @@ def context_peaks(ctx: SimContext,
                 "pending_rs": pending_rs, "workspace": workspace,
                 "other_stacks": ctx.other_gather,
                 "stage_extras": ctx.extras[si],
+                "ring_kv": ctx.ring_kv_bwd_b,
             },
         }
         point, parts = max(candidates.items(),

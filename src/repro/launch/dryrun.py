@@ -66,15 +66,26 @@ from repro.train.train_step import make_train_step
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                            "benchmarks", "results")
 
-# per-(arch, shape) microbatch counts where one microbatch would blow HBM
-MICROBATCH = {
-    ("gemma2_27b", "train_4k"): 4,
-    ("internvl2_26b", "train_4k"): 4,
-    ("deepseek_coder_33b", "train_4k"): 4,
-    ("phi3_medium_14b", "train_4k"): 4,
-    ("xlstm_1_3b", "train_4k"): 16,
-    ("zamba2_1_2b", "train_4k"): 4,
-}
+
+def pick_microbatches(model, dcfg: DistConfig, shape,
+                      calibrate: bool = False) -> int:
+    """Gradient-accumulation count for one training cell: the memory
+    simulator's stage peaks decide (core/memory.auto_microbatches — this
+    replaced the hand-kept per-(arch, shape) MICROBATCH table; --microbatch
+    remains as an explicit override).  With `calibrate` the activation
+    model is first calibrated against a 1-device XLA compile
+    (harvest_memory_stats); otherwise the pick uses the conservative
+    default act_scale."""
+    if shape.kind != "train" or not hasattr(model, "block_stats"):
+        return 1
+    from repro.core.memory import auto_microbatches
+    act_scale = None
+    if calibrate:
+        bshape1 = (max(1, shape.global_batch // dcfg.batch_dp),
+                   shape.seq_len // max(1, dcfg.cp_size))
+        ms = harvest_memory_stats(model, dcfg, bshape1)
+        act_scale = ms.act_scale if ms is not None else None
+    return auto_microbatches(model, dcfg, shape, act_scale=act_scale)
 
 
 def _sds_with_sharding(tree_abs, tree_specs, mesh):
@@ -86,15 +97,18 @@ def _sds_with_sharding(tree_abs, tree_specs, mesh):
 
 
 def _batch_specs(model, shape, dcfg, B):
-    """Shard batch over dp axes when divisible; replicate otherwise
-    (long_500k has global_batch=1)."""
-    dp = tuple(a for a in dcfg.mesh_axes if a != dcfg.tp_axis)
-    dp_total = dcfg.dp_total
+    """`models/runtime.batch_specs` (the ONE cp/rows sharding contract),
+    with the leading dim downgraded to replicated when the global batch
+    does not divide over the row axes (long_500k has global_batch=1)."""
+    base = RT.batch_specs(model, shape, dcfg)
+    dp_total = dcfg.batch_dp
     specs = {}
     for k, sds in model.input_specs(shape, dcfg).items():
         lead = sds.shape[0]
-        first = dp if lead % dp_total == 0 and lead >= dp_total else None
-        specs[k] = P(first, *([None] * (len(sds.shape) - 1)))
+        spec = base[k]
+        if lead % dp_total or lead < dp_total:
+            spec = P(None, *spec[1:])
+        specs[k] = spec
     return specs
 
 
@@ -416,14 +430,14 @@ def _autowrap_record(model, dcfg: DistConfig, batch_shape, stats) -> dict:
 # per-cell lowering
 # ---------------------------------------------------------------------------
 def build_lowered(arch_id: str, shape_name: str, dcfg: DistConfig, mesh,
-                  bucket_mode="block", reorder=True, measured_stats=None):
+                  bucket_mode="block", reorder=True, measured_stats=None,
+                  microbatches: int = 1):
     cfg, model = get_arch(arch_id)
     if measured_stats is not None and hasattr(model, "measured_stats"):
         model.measured_stats = measured_stats
     shape = get_shape(shape_name)
-    mb = MICROBATCH.get((arch_id, shape_name), 1)
-    b_local = max(1, shape.global_batch // dcfg.dp_total)
-    mb = min(mb, b_local)        # can't split below one sample per device
+    b_local = max(1, shape.global_batch // dcfg.batch_dp)
+    mb = min(microbatches, b_local)  # can't split below one sample/device
     dcfg = dcfg.with_(microbatches=mb, bucket_mode=bucket_mode,
                       reorder=reorder)
 
@@ -533,8 +547,10 @@ def roofline_terms(cost: dict, colls: dict, model, shape: ShapeConfig,
     bts = float(cost.get("bytes accessed", 0.0))
     t_comp = flops / hw.PEAK_FLOPS_BF16
     t_mem = bts / hw.HBM_BANDWIDTH
-    t_ici = colls["ici_bytes"] / (2 * hw.ICI_BW_PER_LINK)
-    t_dcn = colls["dcn_bytes"] / hw.DCN_BW_PER_HOST
+    # per-axis bandwidths from hw.axis_bandwidth — the same single source
+    # the bucket planners and the ring scheduler cost against
+    t_ici = colls["ici_bytes"] / hw.axis_bandwidth("data").bytes_per_s
+    t_dcn = colls["dcn_bytes"] / hw.axis_bandwidth("pod").bytes_per_s
     t_coll = t_ici + t_dcn
     cfg = model.cfg
     if shape.kind == "train":
@@ -563,7 +579,7 @@ def roofline_terms(cost: dict, colls: dict, model, shape: ShapeConfig,
 def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
              bucket_mode="block", reorder=True, zero3=False,
              mesh_shape=None, microbatch=None, harvest=None,
-             remat=None) -> dict:
+             remat=None, context_degree: int = 1) -> dict:
     """Lower+compile one (arch, shape, mesh) cell.
 
     `harvest`: None = harvest measured BlockStats iff an auto planner will
@@ -575,46 +591,80 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
     `remat`: override dcfg.remat for the cell — a fixed policy, a
     per-segment vector, or ``"auto:<GB>"`` (resolved by core/memory's
     budgeted planner BEFORE lowering; an infeasible budget raises the
-    planner's pointed error and the row records it)."""
+    planner's pointed error and the row records it).
+
+    `context_degree` > 1 carves the 'ctx' axis out of the data axis (ring
+    attention, core/context.py): training cells of cp-capable models lower
+    with the sequence sharded; the row records the per-device sequence
+    shard and the modeled ring exposure.
+
+    Gradient-accumulation microbatches come from the memory simulator
+    (`pick_microbatches`) unless `microbatch` overrides them."""
     cfg, model = get_arch(arch_id)
     if shape_name in cfg.skip_shapes:
         return {"arch": arch_id, "shape": shape_name,
                 "mesh": "2x16x16" if multi_pod else "16x16",
                 "status": "SKIP",
                 "reason": "quadratic attention at 500k (DESIGN.md)"}
+    if context_degree > 1:
+        from repro.core.context import supports_cp
+        shape0 = get_shape(shape_name)
+        if shape0.kind != "train":
+            return {"arch": arch_id, "shape": shape_name, "status": "SKIP",
+                    "cp": context_degree,
+                    "reason": "context parallelism is a training-path "
+                              "feature (serving shards the KV cache "
+                              "instead)"}
+        if not supports_cp(model):
+            return {"arch": arch_id, "shape": shape_name, "status": "SKIP",
+                    "cp": context_degree,
+                    "reason": f"{type(model).__name__} does not implement "
+                              "the cp contract (cp_supported)"}
+        if shape0.seq_len % (2 * context_degree):
+            return {"arch": arch_id, "shape": shape_name, "status": "SKIP",
+                    "cp": context_degree,
+                    "reason": f"seq {shape0.seq_len} not divisible into "
+                              f"{2 * context_degree} zigzag chunks"}
     if mesh_shape is not None:      # hillclimb: alternative factorization
         import math as _m
         assert _m.prod(mesh_shape) == (512 if multi_pod else 256)
+        assert context_degree == 1, "--mesh-shape and --cp are exclusive"
         axes = ("pod", "data", "model") if multi_pod else ("data", "model")
         from repro.core import compat
         mesh = compat.make_mesh(mesh_shape, axes)
         dcfg = production_dcfg(multi_pod=multi_pod, zero3_global=zero3) \
             .with_(mesh_shape=mesh_shape)
     else:
-        mesh = make_production_mesh(multi_pod=multi_pod)
-        dcfg = production_dcfg(multi_pod=multi_pod, zero3_global=zero3)
-    if microbatch is not None:
-        MICROBATCH[(arch_id, shape_name)] = microbatch
+        mesh = make_production_mesh(multi_pod=multi_pod,
+                                    context_degree=context_degree)
+        dcfg = production_dcfg(multi_pod=multi_pod, zero3_global=zero3,
+                               context_degree=context_degree)
     if remat is not None:
         dcfg = dcfg.with_(remat=remat)
 
     # ---- measured-cost harvest + plan/memory records ----
     if harvest is None:
         harvest = bucket_mode in ("auto", "auto_dp")
+
+    # microbatches: the simulator's stage-peak rule (calibrated against a
+    # 1-device compile when harvesting), overridable per cell
+    shape0 = get_shape(shape_name)
+    mb = microbatch if microbatch is not None \
+        else pick_microbatches(model, dcfg, shape0, calibrate=harvest)
+    mb = min(mb, max(1, shape0.global_batch // dcfg.batch_dp))
     measured = None
     autowrap_rec = None
     memory_rec = None
+    ring_rec = None
     mem_plan = None
     # bucket/memory plans (and thus harvest records) only exist on the
     # training stack — serving paths run prefill/decode without apply_stack
-    if get_shape(shape_name).kind == "train":
+    if shape0.kind == "train":
         _, model0 = get_arch(arch_id)
         if hasattr(model0, "block_stats"):
-            shape0 = get_shape(shape_name)
-            mb0 = min(MICROBATCH.get((arch_id, shape_name), 1),
-                      max(1, shape0.global_batch // dcfg.dp_total))
-            b_local = max(1, shape0.global_batch // dcfg.dp_total // mb0)
-            bshape = (b_local, shape0.seq_len)
+            mb0 = mb
+            b_local = max(1, shape0.global_batch // dcfg.batch_dp // mb0)
+            bshape = (b_local, shape0.seq_len // max(1, dcfg.cp_size))
             dcfg_plan = dcfg.with_(microbatches=mb0, bucket_mode=bucket_mode,
                                    reorder=reorder)
             if harvest:
@@ -650,6 +700,12 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
             }
             if dcfg.remat != mem_plan.policy_spec:
                 dcfg = dcfg.with_(remat=mem_plan.policy_spec)
+            if dcfg.cp_size > 1:
+                # modeled ring-attention schedule of the cell (per layer):
+                # hop sizes/compute and the exposed exchange time
+                from repro.core.context import ring_cost
+                ring_rec = ring_cost(cfg, dcfg_plan, bshape,
+                                     window=cfg.sliding_window)
 
     # when the memory planner retightened buckets against the budget, the
     # cell must execute that partition (build_lowered re-applies the mode)
@@ -660,7 +716,8 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
     lowered, model, shape, dcfg = build_lowered(arch_id, shape_name, dcfg,
                                                 mesh, bucket_mode_exec,
                                                 reorder,
-                                                measured_stats=measured)
+                                                measured_stats=measured,
+                                                microbatches=mb)
     t_lower = time.time() - t0
     t0 = time.time()
     compiled = lowered.compile()
@@ -689,8 +746,24 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
         "roofline": terms,
         "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
         "bucket_mode": bucket_mode, "reorder": reorder,
-        "microbatches": MICROBATCH.get((arch_id, shape_name), 1),
+        "microbatches": mb,
     }
+    if dcfg.cp_size > 1:
+        rec["cp"] = dcfg.cp_size
+        rec["seq_local"] = shape.seq_len // dcfg.cp_size
+        if ring_rec is not None:
+            rec["ring"] = {
+                "hop_bytes": ring_rec["hop_bytes"],
+                "hop_comm_us": ring_rec["hop_comm_s"] * 1e6,
+                "hop_comp_us": ring_rec["hop_comp_s"] * 1e6,
+                "live_hops": ring_rec["live_hops"],
+                "exposed_us": ring_rec["exposed_s"] * 1e6,
+            }
+            print(f"[ctx] {arch_id} x {shape_name}: cp={dcfg.cp_size} "
+                  f"seq/dev={rec['seq_local']} ring exposed "
+                  f"{rec['ring']['exposed_us']:.1f}us "
+                  f"(live hops {ring_rec['live_hops']}/{dcfg.cp_size})",
+                  flush=True)
     if autowrap_rec is not None:
         rec["autowrap"] = autowrap_rec
     if memory_rec is not None:
@@ -734,7 +807,13 @@ def main():
     ap.add_argument("--no-reorder", action="store_true")
     ap.add_argument("--mesh-shape", default=None,
                     help="alternative factorization, e.g. 64,4")
-    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--cp", type=int, default=1,
+                    help="context-parallel degree: carves a 'ctx' axis out "
+                         "of the data axis (ring attention; train cells of "
+                         "cp-capable archs only)")
+    ap.add_argument("--microbatch", type=int, default=None,
+                    help="override the simulator-picked gradient-"
+                         "accumulation count")
     ap.add_argument("--harvest-stats", dest="harvest", action="store_true",
                     default=None,
                     help="force measured BlockStats harvesting (default: "
@@ -765,7 +844,8 @@ def main():
                            reorder=not args.no_reorder,
                            zero3=args.zero3, mesh_shape=ms,
                            microbatch=args.microbatch,
-                           harvest=args.harvest, remat=args.remat)
+                           harvest=args.harvest, remat=args.remat,
+                           context_degree=args.cp)
             if args.tag:
                 rec["tag"] = args.tag
         except Exception as e:

@@ -18,14 +18,17 @@ import math
 import os
 
 
-def mesh_from_flags(mesh: str, pp: int) -> tuple[tuple[int, ...],
-                                                 tuple[str, ...]]:
-    """Mesh (shape, axes) from the --mesh/--pp flags.
+def mesh_from_flags(mesh: str, pp: int, cp: int = 1) \
+        -> tuple[tuple[int, ...], tuple[str, ...]]:
+    """Mesh (shape, axes) from the --mesh/--pp/--cp flags.
 
     `mesh` names the non-pipe part: "D,M" -> (data, model), "P,D,M" ->
     (pod, data, model). --pp>1 prepends the 'pipe' axis OUTERMOST
     (core/pipeline layout convention: tiny point-to-point sends tolerate
-    the slowest interconnect; fat FSDP gathers stay inner)."""
+    the slowest interconnect; fat FSDP gathers stay inner). --cp>1 inserts
+    the 'ctx' axis BETWEEN data and model (ring ppermute traffic is
+    lighter than FSDP gathers, heavier than pipe sends; TP psums stay
+    innermost — core/context.py)."""
     shape = tuple(int(x) for x in mesh.split(","))
     if len(shape) == 2:
         axes: tuple[str, ...] = ("data", "model")
@@ -33,6 +36,9 @@ def mesh_from_flags(mesh: str, pp: int) -> tuple[tuple[int, ...],
         axes = ("pod", "data", "model")
     else:
         raise SystemExit(f"--mesh must have 2 or 3 entries, got {mesh!r}")
+    if cp > 1:
+        shape = (*shape[:-1], cp, shape[-1])
+        axes = (*axes[:-1], "ctx", axes[-1])
     if pp > 1:
         return (pp, *shape), ("pipe", *axes)
     return shape, axes
@@ -56,6 +62,10 @@ def main():
                     choices=("gpipe", "1f1b"))
     ap.add_argument("--pp-microbatches", type=int, default=0,
                     help="pipeline microbatches M (0 = use the stage count)")
+    ap.add_argument("--cp", type=int, default=1,
+                    help="context-parallel degree; >1 inserts a 'ctx' axis "
+                         "between data and model (zigzag seq sharding + "
+                         "ring attention, cp-capable archs only)")
     ap.add_argument("--microbatches", type=int, default=1,
                     help="gradient-accumulation microbatches (pp=1 only; "
                          "under --pp use --pp-microbatches)")
@@ -66,7 +76,7 @@ def main():
     ap.add_argument("--lr", type=float, default=3e-4)
     args = ap.parse_args()
 
-    mesh_shape, mesh_axes = mesh_from_flags(args.mesh, args.pp)
+    mesh_shape, mesh_axes = mesh_from_flags(args.mesh, args.pp, args.cp)
     devices = args.devices or math.prod(mesh_shape)
     os.environ["XLA_FLAGS"] = (
         f"--xla_force_host_platform_device_count={devices} "
@@ -88,6 +98,10 @@ def main():
         pp_axis="pipe" if args.pp > 1 else None,
         pp_schedule=args.pp_schedule,
         pp_microbatches=args.pp_microbatches,
+        cp_axis="ctx" if args.cp > 1 else None,
+        # the ctx axis joins the FSDP domain: params shard over data x ctx
+        # so cross-ctx grads ride explicit collectives (core/context.py)
+        fsdp_axes=("data", "ctx") if args.cp > 1 else ("data",),
         param_dtype=jnp.bfloat16, reduce_dtype=jnp.float32,
         bucket_mode=args.bucket_mode, reorder=not args.no_reorder,
         microbatches=args.microbatches,

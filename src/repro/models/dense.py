@@ -37,6 +37,13 @@ from repro.models.common import (ArchConfig, BlockSegments, ShapeConfig,
 
 
 class DenseLM:
+    # Context-parallel contract (core/context.py): the dense family routes
+    # attention/RoPE/loss masking through the zigzag sequence shard — the
+    # whole training path is position-exact under dcfg.cp_axis.  Families
+    # with their own stacks (xlstm/zamba2/encdec) or a modality stream
+    # whose layout a sequence permutation would break (vlm) opt out.
+    cp_supported = True
+
     def __init__(self, cfg: ArchConfig):
         self.cfg = cfg
         # gemma2 alternates (local, global); scan over pairs keeps the
@@ -317,13 +324,16 @@ class DenseLM:
     def stage_blocks(self, storage, state, dcfg: DistConfig, plan=None):
         """This stage's contiguous slice of the scanned block stack."""
         x, aux = state
-        B, S_total = x.shape[0], x.shape[1] * dcfg.tp_size
-        consts = self.consts(S_total, dcfg)
+        # S_local is the per-device (cp-shard) sequence; RoPE tables span
+        # the GLOBAL sequence and attn_apply slices them at this rank's
+        # zigzag positions.  Planner stats describe per-device work.
+        B, S_local = x.shape[0], x.shape[1] * dcfg.tp_size
+        consts = self.consts(S_local * dcfg.cp_size, dcfg)
         blk = functools.partial(self.block_fn, dcfg=dcfg)
         x, aux2 = apply_stack(blk, self.block_metas(dcfg), dcfg,
                               storage["blocks"], consts, x, plan=plan,
                               block_stats=self.block_stats(dcfg,
-                                                           (B, S_total)),
+                                                           (B, S_local)),
                               segments=self.block_segments(dcfg))
         return x, jax.tree.map(jnp.add, aux, aux2)
 
@@ -548,7 +558,7 @@ class DenseLM:
         if self.measured_stats is not None:
             return self.measured_stats
         cfg = self.cfg
-        B, S = batch_shape          # per-device microbatch
+        B, S = batch_shape          # per-device microbatch (cp-local seq)
         tokens = B * S
         d, hd = cfg.d_model, cfg.head_dim
         hq = cfg.q_heads_padded(dcfg.tp_size)
@@ -567,8 +577,13 @@ class DenseLM:
             flops = 2.0 * tokens * numel if numel > 4 * d \
                 else 8.0 * tokens * d / max(1, dcfg.tp_size)
             add(nm, flops, numel * it + flops / max(d, 1) * it)
-        # attention itself (not a param op) folds into wq's consumer cost
-        attn_flops = 4.0 * tokens * S * hd * (hq / dcfg.tp_size)
+        # attention itself (not a param op) folds into wq's consumer cost.
+        # Under context parallelism each rank's S/cp queries attend to the
+        # FULL sequence (the ring visits every KV block), so the kv span is
+        # S * cp — this is what lets the bucket planners re-tighten when
+        # per-device matmul compute shrinks by cp.
+        attn_flops = 4.0 * tokens * (S * dcfg.cp_size) * hd \
+            * (hq / dcfg.tp_size)
         first = next(iter(pf))
         pf[first] += attn_flops
         act = tokens * d * it / dcfg.tp_size

@@ -373,17 +373,37 @@ def _local_qkv(p, xg, cfg: ArchConfig, dcfg: DistConfig):
 
 def attn_apply(p, x_sp, consts, cfg: ArchConfig, dcfg: DistConfig,
                window=None, q_scale=None):
-    """Full attention sublayer on SP activations (train/prefill path)."""
+    """Full attention sublayer on SP activations (train/prefill path).
+
+    Under context parallelism (``dcfg.cp_axis``) the SP activations are
+    additionally a ZIGZAG sequence shard: RoPE phases are looked up at this
+    rank's GLOBAL positions and the attention itself runs as the ctx-axis
+    ring (core/context.ring_attention — KV blocks circulate, exchange
+    overlapped behind per-hop compute, exact reverse-ring gradients);
+    causal/sliding-window/softcap masking applies per block from global
+    positions, so gemma2's local layers skip out-of-window hops."""
     xg = sp_gather(x_sp, dcfg)
     q, k, v, head_mask = _local_qkv(p, xg, cfg, dcfg)
     if cfg.qk_norm:
         q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
         k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
     cos, sin = consts["rope_cos"], consts["rope_sin"]
-    q = apply_rope(q, cos, sin)
-    k = apply_rope(k, cos, sin)
-    out = attention(q, k, v, causal=True, window=window,
-                    softcap=cfg.attn_softcap, q_scale=q_scale)
+    if dcfg.cp_size > 1:
+        from repro.core import context as CX
+        seq_global = xg.shape[1] * dcfg.cp_size
+        pos = CX.shard_positions(dcfg, seq_global)
+        cos = jnp.take(cos, pos, axis=0)
+        sin = jnp.take(sin, pos, axis=0)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        out = CX.ring_attention(q, k, v, dcfg=dcfg, seq_len=seq_global,
+                                causal=True, window=window,
+                                softcap=cfg.attn_softcap, q_scale=q_scale)
+    else:
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        out = attention(q, k, v, causal=True, window=window,
+                        softcap=cfg.attn_softcap, q_scale=q_scale)
     out = out * head_mask[None, None, :, None]
     B, S, hl, hd = out.shape
     o = jnp.einsum("bsh,hd->bsd", out.reshape(B, S, hl * hd), p["wo"])

@@ -64,18 +64,28 @@ def init_storage(model, key, dcfg: DistConfig):
 
 
 def batch_specs(model, shape, dcfg: DistConfig):
+    """Batch sharding: rows over the data axes; under context parallelism
+    the SEQUENCE dim (dim 1 of every 2D+ input) additionally shards over
+    the ctx axis — each rank receives its contiguous slice of the
+    host-side zigzag-permuted sequence (core/context.zigzag_batch)."""
     axes = dp_axes(dcfg)
+    cp_seq = dcfg.cp_axis if dcfg.cp_size > 1 else None
     specs = {}
     for k, sds in model.input_specs(shape, dcfg).items():
-        specs[k] = P(axes, *([None] * (len(sds.shape) - 1)))
+        if cp_seq is not None and len(sds.shape) >= 2:
+            specs[k] = P(axes, cp_seq, *([None] * (len(sds.shape) - 2)))
+        else:
+            specs[k] = P(axes, *([None] * (len(sds.shape) - 1)))
     return specs
 
 
 def dp_axes(dcfg: DistConfig) -> tuple[str, ...]:
-    """Batch-sharding axes: everything that is not TP and not the pipe axis
-    (every pipe rank sees the same microbatch stream)."""
+    """Batch-ROW sharding axes: everything that is not TP, not the pipe
+    axis (every pipe rank sees the same microbatch stream) and not the ctx
+    axis (cp ranks replicate rows and shard the sequence dim instead)."""
     return tuple(a for a in dcfg.mesh_axes
-                 if a != dcfg.tp_axis and a != dcfg.pp_axis)
+                 if a != dcfg.tp_axis and a != dcfg.pp_axis
+                 and a != dcfg.cp_axis)
 
 
 def make_loss_step(model, dcfg: DistConfig, with_grads: bool = True):

@@ -30,6 +30,11 @@ from repro.models.dense import DenseLM
 
 
 class VLM(DenseLM):
+    # the image-prefix/text-span sequence layout is positional: the zigzag
+    # cp permutation would interleave modality chunks, so the VLM opts out
+    # of context parallelism (plan_parallel rejects cp > 1 pointedly)
+    cp_supported = False
+
     def __init__(self, cfg: ArchConfig):
         super().__init__(cfg)
         assert cfg.vit_dim and cfg.n_img_tokens

@@ -132,10 +132,16 @@ class Trainer:
         self.ckpt.save(step, storage, opt_state, self.model, self.dcfg)
 
     def _batch(self, step):
-        return adapt_batch(
+        batch = adapt_batch(
             self.data.batch(step),
             self.model.input_specs(self.shape, self.dcfg),
             step=step, seed=self._seed)
+        if self.dcfg.cp_size > 1:
+            # zigzag sequence permutation so the contiguous ctx sharding
+            # delivers each rank its load-balanced chunks (core/context.py)
+            from repro.core.context import zigzag_batch
+            batch = zigzag_batch(batch, self.dcfg)
+        return batch
 
     def run(self, key=None):
         key = key if key is not None else jax.random.PRNGKey(0)

@@ -30,6 +30,11 @@ def pytest_configure(config):
         "markers",
         "memory: live-range peak simulator + budgeted auto-SAC planner "
         "(tests/test_memory.py; run `-m memory` after core/memory changes)")
+    config.addinivalue_line(
+        "markers",
+        "context: context parallelism — zigzag sharding, ring attention "
+        "numerics + cost model (tests/test_context.py; run `-m context` "
+        "after core/context changes)")
 
 
 def pytest_collection_modifyitems(config, items):

@@ -27,6 +27,12 @@ the last stage, replicated tied embeddings): pp=2 vs the pp=1 baseline must
 agree exactly on losses, assembled gradients, and one AdamW step.  The
 `trainer_smoke_a/b` cases run every registered arch 2 Trainer steps (plus a
 staged checkpoint) on a pp2 x dp2 x tp2 mesh.
+
+The `context` case covers context parallelism (core/context.py): zigzag
+sequence sharding + ring attention over the ctx axis — cp2 x dp2 must
+reproduce the cp1 x dp4 baseline exactly (losses, assembled grads, one
+AdamW step) for dense + gemma2, and the 4-axis pp2 x dp2 x cp2 composition
+must reproduce pp1 x dp4.
 """
 
 from __future__ import annotations
@@ -782,6 +788,160 @@ def case_remat_vector():
 
 
 CASES["remat_vector"] = case_remat_vector
+
+
+# --------------------------------------------------------------------------
+# Context parallelism (core/context.py): zigzag seq sharding + ring
+# attention on the ctx axis — cp2 training must reproduce the cp1 baseline
+# exactly (explicit collectives only: bucket RS over data x ctx, reverse-
+# ring ppermute — exact on every jax version, like `pipeline`).
+# --------------------------------------------------------------------------
+def case_context():
+    """cp2 x dp2 == cp1 x dp4: losses, every assembled gradient, and one
+    AdamW step, for a dense arch and gemma2 (sliding window + softcaps —
+    the ring's masked-hop path); then the full 4-axis composition
+    pp2 x dp2 x cp2 against the pp1 x dp4 baseline."""
+    from repro.core import context as CX
+    from repro.core.api import parallelize
+    from repro.models import runtime as RT
+    from repro.models.common import ShapeConfig
+    from repro.models.registry import get_arch, get_arch_for_pp
+    from repro.optim.adamw import AdamWConfig, init_opt_state
+
+    def cp_cfg(**kw):
+        return fp32_cfg(("data", "ctx", "model"), (2, 2, 1),
+                        ("data", "ctx"), cp_axis="ctx", **kw)
+
+    def flat_grads(par, dcfg, metas, grads):
+        plain = par.unstage_storage(jax.tree.map(np.asarray, grads))
+        full = {k: RT.tree_from_storage(plain[k], metas[k], dcfg)
+                for k in plain}
+        return {jax.tree_util.keystr(p): np.asarray(v) for p, v in
+                jax.tree_util.tree_flatten_with_path(full)[0]}
+
+    for arch in ("qwen3_1_7b", "gemma2_27b"):
+        cfg, model = get_arch(arch, smoke=True)
+        shape = ShapeConfig("t", 32, 8, "train")
+        d_ref = fp32_cfg(("data", "model"), (4, 1), ("data",))
+        d_cp = cp_cfg()
+        batch = _synth_batch(model, shape, d_ref, cfg.vocab)
+        full = model.init_full(jax.random.PRNGKey(0), d_ref)
+
+        m_ref = model.metas(d_ref)
+        st_ref = {k: RT.tree_to_storage(full[k], m_ref[k], d_ref)
+                  for k in full}
+        par_ref = parallelize(model, d_ref, shape)
+        l_ref, g_ref = par_ref.loss_step()(st_ref, batch)
+        f_ref = flat_grads(par_ref, d_ref, m_ref, g_ref)
+
+        m_cp = model.metas(d_cp)
+        st_cp = {k: RT.tree_to_storage(full[k], m_cp[k], d_cp)
+                 for k in full}
+        par_cp = parallelize(model, d_cp, shape)
+        assert "cp=2(ring)" in par_cp.plan.describe()
+        l_cp, g_cp = par_cp.loss_step()(
+            st_cp, CX.zigzag_batch(batch, d_cp))
+        f_cp = flat_grads(par_cp, d_cp, m_cp, g_cp)
+
+        tag = f"context/{arch}/cp2_vs_cp1"
+        np.testing.assert_allclose(float(l_cp), float(l_ref), rtol=2e-5,
+                                   err_msg=f"{tag}: loss mismatch")
+        assert set(f_cp) == set(f_ref), f"{tag}: grad tree mismatch"
+        for k, want in f_ref.items():
+            np.testing.assert_allclose(
+                f_cp[k], want, rtol=3e-4, atol=3e-6,
+                err_msg=f"{tag}: grad mismatch at {k}")
+        print(f"PASS {tag} (loss {float(l_cp):.4f})")
+
+    # one AdamW train step: cp2's metrics and updated weights reproduce the
+    # baseline (grad-norm psums span the data x ctx FSDP domain)
+    cfg, model = get_arch("qwen3_1_7b", smoke=True)
+    shape = ShapeConfig("t", 32, 8, "train")
+    d_ref = fp32_cfg(("data", "model"), (4, 1), ("data",))
+    d_cp = cp_cfg()
+    batch = _synth_batch(model, shape, d_ref, cfg.vocab)
+    full = model.init_full(jax.random.PRNGKey(0), d_ref)
+
+    def one_step(dcfg, b):
+        metas = model.metas(dcfg)
+        st = {k: RT.tree_to_storage(full[k], metas[k], dcfg) for k in full}
+        par = parallelize(model, dcfg, shape)
+        fn = par.train_step(AdamWConfig(lr=1e-3), donate=False)
+        new, _, met = fn(st, init_opt_state(st), b)
+        new_full = {k: RT.tree_from_storage(jax.tree.map(np.asarray,
+                                                         new[k]),
+                                            metas[k], dcfg) for k in new}
+        flat = {jax.tree_util.keystr(p): np.asarray(v) for p, v in
+                jax.tree_util.tree_flatten_with_path(new_full)[0]}
+        return met, flat
+
+    met1, w1 = one_step(d_ref, batch)
+    met2, w2 = one_step(d_cp, CX.zigzag_batch(batch, d_cp))
+    np.testing.assert_allclose(float(met2["loss"]), float(met1["loss"]),
+                               rtol=2e-5, err_msg="context: step loss")
+    np.testing.assert_allclose(float(met2["grad_norm"]),
+                               float(met1["grad_norm"]), rtol=2e-4,
+                               err_msg="context: step grad_norm")
+    # atol 1e-5: AdamW's m/sqrt(v) amplifies fp reassociation noise on
+    # near-zero-variance coordinates (same magnitude as trainer_pipeline)
+    for k in w1:
+        np.testing.assert_allclose(w2[k], w1[k], rtol=2e-4, atol=1e-5,
+                                   err_msg=f"context: updated weights {k}")
+    print("PASS context/train_step (loss+gnorm+updated weights)")
+
+    # ---- the 4-axis composition: pp2 x dp2 x cp2 vs pp1 x dp4 ----
+    cfg, model = get_arch_for_pp("qwen3_1_7b", n_stages=2)
+    d1 = fp32_cfg(("data", "model"), (4, 1), ("data",))
+    dpc = fp32_cfg(("pipe", "data", "ctx", "model"), (2, 2, 2, 1),
+                   ("data", "ctx"), cp_axis="ctx", pp_axis="pipe",
+                   pp_schedule="1f1b", pp_microbatches=2)
+    batch = _synth_batch(model, shape, d1, cfg.vocab)
+    full = model.init_full(jax.random.PRNGKey(0), d1)
+
+    m1 = model.metas(d1)
+    st1 = {k: RT.tree_to_storage(full[k], m1[k], d1) for k in full}
+    par1 = parallelize(model, d1, shape)
+    l1, g1 = par1.loss_step()(st1, batch)
+    f1 = flat_grads(par1, d1, m1, g1)
+    fn1 = par1.train_step(AdamWConfig(lr=1e-3), donate=False)
+    new1, _, met1 = fn1(st1, init_opt_state(st1), batch)
+
+    mp = model.metas(dpc)
+    parp = parallelize(model, dpc, shape)
+    assert parp.plan.pipelined and dpc.cp_size == 2
+    stp = parp.stage_storage(
+        {k: RT.tree_to_storage(full[k], mp[k], dpc) for k in full})
+    bz = CX.zigzag_batch(batch, dpc)
+    lp, gp = parp.loss_step()(stp, bz)
+    fp_ = flat_grads(parp, dpc, mp, gp)
+    tag = "context/pp2_dp2_cp2"
+    np.testing.assert_allclose(float(lp), float(l1), rtol=2e-5,
+                               err_msg=f"{tag}: loss mismatch")
+    for k, want in f1.items():
+        np.testing.assert_allclose(fp_[k], want, rtol=3e-4, atol=3e-6,
+                                   err_msg=f"{tag}: grad mismatch at {k}")
+    fnp = parp.train_step(AdamWConfig(lr=1e-3), donate=False)
+    newp, _, metp = fnp(stp, init_opt_state(stp), bz)
+    np.testing.assert_allclose(float(metp["loss"]), float(met1["loss"]),
+                               rtol=2e-5, err_msg=f"{tag}: step loss")
+    np.testing.assert_allclose(float(metp["grad_norm"]),
+                               float(met1["grad_norm"]), rtol=2e-4,
+                               err_msg=f"{tag}: step grad_norm")
+    new_plain = parp.unstage_storage(jax.tree.map(np.asarray, newp))
+    for k in new1:
+        a = {jax.tree_util.keystr(p): v for p, v in
+             jax.tree_util.tree_flatten_with_path(new_plain[k])[0]}
+        b = {jax.tree_util.keystr(p): v for p, v in
+             jax.tree_util.tree_flatten_with_path(
+                 jax.tree.map(np.asarray, new1[k]))[0]}
+        for kk in b:
+            np.testing.assert_allclose(
+                a[kk], b[kk], rtol=2e-4, atol=1e-5,
+                err_msg=f"{tag}: updated params mismatch {k}{kk}")
+    print(f"PASS {tag} (loss {float(lp):.4f}, AdamW step exact)")
+
+
+CASES["context"] = case_context
 
 
 TRAINER_SMOKE_ARCHS = {

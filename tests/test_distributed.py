@@ -87,6 +87,16 @@ def test_pipeline_parallel_composability():
     _run("pipeline")
 
 
+def test_context_parallel_ring_parity():
+    """Context parallelism (core/context.py): cp2 x dp2 training — zigzag
+    seq sharding + ring attention on the ctx axis — reproduces the
+    cp1 x dp4 baseline exactly (losses, assembled grads, one AdamW step)
+    for dense and gemma2 (window+softcap), plus the 4-axis composition
+    pp2 x dp2 x cp2.  Explicit collectives only (bucket RS over data x ctx,
+    reverse-ring ppermute), so exact on every jax version."""
+    _run("context", timeout=560)
+
+
 def test_remat_vector_parity_pp2_dp2():
     """Per-segment remat policy vectors (incl. a budget-resolved
     remat='auto:<GB>' plan) == the whole-block policy, exactly, at
