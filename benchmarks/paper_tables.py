@@ -444,11 +444,15 @@ def context_table(json_path: str | None = None):
 
 # ---------------------------------------------------------------------------
 # Pipeline — paper SS4 composability as a bench row: stage-stacked MLP on a
-# (pipe, data, model) mesh, GPipe vs 1F1B trainable steps with FSDP bucket
-# gathers per use inside each stage. 1F1B's claim is the activation bound
-# (S live microbatches instead of M) — visible in temp_mib at M >> S.
+# (pipe, data, model) mesh, GPipe vs 1F1B vs zero-bubble trainable steps
+# with FSDP bucket gathers per use inside each stage. 1F1B's claim is the
+# activation bound (S live microbatches instead of M) — visible in temp_mib
+# at M >> S.  v2 adds the table-driven schedules: interleaved 1F1B (V
+# virtual stage chunks per rank, ~1/V of the ramp bubble, more in-flight
+# state) and zb (W-split zero-bubble: the weight-grad halves drain into
+# the cooldown ramp).
 # ---------------------------------------------------------------------------
-PIPELINE_SCHEMA = "bench_pipeline_v1"
+PIPELINE_SCHEMA = "bench_pipeline_v2"
 
 
 def staged_archs() -> tuple[str, ...]:
@@ -463,19 +467,30 @@ def staged_archs() -> tuple[str, ...]:
     return tuple(out)
 
 
-def pipeline_table(json_path: str | None = None, microbatches=(0, 8, 32)):
+def _bench_virtual(layers_per_stage: int) -> int:
+    """Smallest virtual-chunk count >= 2 that divides the stage slice —
+    the same pick the planner's auto resolution makes (core/api)."""
+    return next((v for v in range(2, layers_per_stage + 1)
+                 if layers_per_stage % v == 0), 0)
+
+
+def pipeline_table(json_path: str | None = None,
+                   microbatches=(0, 4, 8, 32)):
     """Modeled pipeline table over the staged archs: bubble fraction and
-    per-stage exposed comm per schedule on the production mesh (device-free
-    analytics off the resolved ParallelPlan — the cross-PR tracking artifact
+    per-stage exposed comm for ALL FOUR schedules (gpipe / 1f1b /
+    interleaved / zb) on the production mesh (device-free analytics off the
+    resolved ParallelPlan — the cross-PR tracking artifact
     BENCH_pipeline.json, schema-smoke-tested in tier-1 like
     BENCH_overlap.json).  `microbatches` entries of 0 mean the plan's own
-    resolved M."""
+    resolved M.  v2 invariant (asserted in tier-1): the new schedules'
+    modeled bubble is STRICTLY below 1F1B's at every benched M."""
     import json as _json
     import os as _os
 
     from repro.core.api import plan_parallel
     from repro.core.autowrap import exposed_comm_time
-    from repro.core.pipeline import bubble_fraction, schedule_slots
+    from repro.core.pipeline import (bubble_fraction, schedule_peak_state,
+                                     schedule_slots, zb_queue_depth)
     from repro.launch.mesh import production_dcfg_for
 
     doc = {"schema": PIPELINE_SCHEMA, "archs": {}}
@@ -494,32 +509,47 @@ def pipeline_table(json_path: str | None = None, microbatches=(0, 8, 32)):
         # per-microbatch stage workload: fwd + ~2x bwd compute + the
         # steady-state exposed comm of this stage's layer slice
         stage_mb_s = Lp * (3.0 * r["compute_s"] + r["exposed_s"])
+        V = _bench_virtual(Lp)
         rec = {
             "pp_stages": S, "n_scan_steps": plan.stage.layers_per_stage * S,
             "layers_per_stage": Lp, "stats_source": stats.source,
             "stage_exposed_s": Lp * r["exposed_s"],
             "stage_compute_s": Lp * r["compute_s"],
+            # what the auto resolution ('auto' default, argmin modeled
+            # bubble then in-flight memory) picked for this arch
+            "planned_schedule": plan.pp_schedule,
+            "planned_virtual": plan.pp_virtual,
             "schedules": {},
         }
-        for schedule in ("gpipe", "1f1b"):
+        scheds = [("gpipe", 1), ("1f1b", 1), ("zb", 1)]
+        if V:
+            scheds.append(("interleaved", V))
+        for schedule, virt in scheds:
             rows = {}
             for m in microbatches:
                 M = m or plan.microbatches or S
-                bub = bubble_fraction(M, S, schedule)
-                slots = schedule_slots(M, S, schedule)
-                rows[str(M)] = {
+                bub = bubble_fraction(M, S, schedule, virt)
+                slots = schedule_slots(M, S, schedule, virt)
+                row = {
                     "microbatches": M,
                     "slots": slots,
+                    "virtual": virt,
                     "bubble_frac": bub,
                     # M units of work per stage stretched by the bubble
                     "modeled_step_s": M * stage_mb_s / (1.0 - bub),
+                    # interleaved entries are chunk-granular (1/V of a
+                    # stage slice each); gpipe/1f1b/zb count whole stages
                     "peak_live_microbatches":
-                        M if schedule == "gpipe" else min(M, S),
+                        max(schedule_peak_state(M, S, schedule, virt)),
                 }
+                if schedule == "zb":
+                    row["w_queue_depth"] = zb_queue_depth(M, S)
+                rows[str(M)] = row
                 emit(f"pipeline_table/{arch}/{schedule}/M={M}",
-                     rows[str(M)]["modeled_step_s"] * 1e6,
+                     row["modeled_step_s"] * 1e6,
                      f"bubble={bub:.3f};slots={slots};"
-                     f"live={rows[str(M)]['peak_live_microbatches']}")
+                     f"live={row['peak_live_microbatches']}"
+                     + (f";V={virt}" if virt > 1 else ""))
             rec["schedules"][schedule] = rows
         doc["archs"][arch] = rec
     if json_path:
@@ -561,7 +591,14 @@ def pipeline_bench(json_path: str | None = None):
                 "w2": jax.random.normal(ks[1], (H, Dm)) * 0.1}
 
     xs = jax.random.normal(jax.random.PRNGKey(3), (M, B, Dm))
-    for schedule in ("gpipe", "1f1b"):
+    # NOTE on measured zb walltime: the scan engine executes every slot's
+    # F+vjp uniformly under SPMD masking (a rank idle in the table still
+    # traces the work, predicated off), so on these fake CPU devices zb's
+    # LONGER table reads slower than 1F1B here.  The schedule's claim is
+    # the MODELED bubble in pipeline_table below — on real hardware idle
+    # slots cost the rank nothing while the W fill shortens the critical
+    # path.
+    for schedule in ("gpipe", "1f1b", "zb"):
         fn, _ = wrap_pipeline_train_step(
             stage_fn, metas, dcfg.with_(pp_schedule=schedule),
             AdamWConfig(lr=1e-3), lambda y: jnp.mean(y ** 2) / M,

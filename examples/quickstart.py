@@ -57,6 +57,32 @@ def main():
     print("auto-SAC plan:", par_auto.plan.memory.describe(),
           "->", par_auto.plan.exec_dcfg.remat)
 
+    # --- picking a pipeline schedule (core/pipeline.py) ------------------
+    # Four pp_schedule values: "gpipe", "1f1b", "interleaved", "zb" — and
+    # "auto" (the production_dcfg default), which scores all of them by
+    # modeled bubble fraction, tie-broken by in-flight activation memory,
+    # and stamps the argmin into the plan (plan.pp_schedule/pp_virtual).
+    # Rules of thumb behind what auto picks:
+    #   * "zb" (zero-bubble W-split) beats plain 1F1B at every M: the
+    #     weight-grad halves drain into the cooldown ramp at NO extra
+    #     activation cost (same min(M, S-s) bound; the W queue holds
+    #     parameter-GRADIENT slices instead).
+    #   * "interleaved" (V virtual stage chunks per rank) shrinks the
+    #     warmup/cooldown ramps ~1/V and wins on bubble when the stage
+    #     slice chunks evenly (layers_per_stage % V == 0, chunkable
+    #     partition) and M is small — but each rank then HOLDS ~V x the
+    #     in-flight chunk states.  Under a tight remat="auto:<GB>" budget
+    #     that extra in-flight memory can force a costlier remat vector
+    #     than the bubble win is worth — the memory simulator models the
+    #     schedule (in_flight_microbatches), so compare plan.memory.peak
+    #     across explicit pp_schedule choices before overriding auto.
+    #   * "gpipe" only ever matches 1f1b's bubble and holds all M
+    #     microbatches — it survives as the forward-only eval path.
+    # e.g.: dcfg_pp = DistConfig(mesh_axes=("pipe", "data", "model"),
+    #                            mesh_shape=(2, 2, 2), pp_axis="pipe",
+    #                            pp_schedule="auto")  # or "zb", or
+    #                            # "interleaved" with pp_virtual=V
+
     # --- context parallelism (core/context.py): the 4-axis mesh ----------
     # (pipe, data, ctx, model) — each axis carries a different traffic
     # class, ordered by how much interconnect it needs:

@@ -107,6 +107,12 @@ class ParallelPlan:
     stage: Any = None                   # models/common.StageSpec | None
     microbatches: int = 0
     memory: Any = None                  # core/memory.MemoryPlan | None
+    # Resolved pipeline schedule: dcfg.pp_schedule="auto" is scored here
+    # (bubble_fraction argmin, peak in-flight state as the tie-break) and
+    # the winner recorded; pp_virtual is the resolved V for 'interleaved'
+    # (1 for every other schedule).  "" when not pipelined.
+    pp_schedule: str = ""
+    pp_virtual: int = 1
 
     @property
     def pipelined(self) -> bool:
@@ -125,20 +131,25 @@ class ParallelPlan:
         re-resolves plans inside `apply_stack`) executing exactly the plan
         this object reports."""
         d = self.dcfg
-        if self.memory is None:
-            return d
         kw = {}
-        if self.memory.policy_spec != d.remat:
-            kw["remat"] = self.memory.policy_spec
-        if self.memory.bucket_plan is not None:
-            kw["bucket_mode"] = self.memory.bucket_plan
+        if self.pipelined and self.pp_schedule != d.pp_schedule:
+            kw["pp_schedule"] = self.pp_schedule
+        if self.pipelined and self.pp_virtual != d.pp_virtual:
+            kw["pp_virtual"] = self.pp_virtual
+        if self.memory is not None:
+            if self.memory.policy_spec != d.remat:
+                kw["remat"] = self.memory.policy_spec
+            if self.memory.bucket_plan is not None:
+                kw["bucket_mode"] = self.memory.bucket_plan
         return d.with_(**kw) if kw else d
 
     def describe(self) -> str:
         d = self.dcfg
         mesh = "x".join(f"{a}={s}" for a, s in
                         zip(d.mesh_axes, d.mesh_shape))
-        pp = (f" pp={self.stage.n_stages}({d.pp_schedule},M="
+        sched = self.pp_schedule + (
+            f"xV{self.pp_virtual}" if self.pp_virtual > 1 else "")
+        pp = (f" pp={self.stage.n_stages}({sched},M="
               f"{self.microbatches})" if self.pipelined else "")
         cp = f" cp={d.cp_size}(ring)" if d.cp_size > 1 else ""
         buckets = ",".join(f"{k}:{p.n_buckets}"
@@ -147,6 +158,83 @@ class ParallelPlan:
             else ""
         return (f"mesh[{mesh}] fsdp={d.fsdp_axes} tp={d.tp_size}"
                 f"{cp}{pp} remat={self.remat} buckets[{buckets}]{mem}")
+
+
+def _auto_virtual(dcfg: DistConfig, stage) -> int:
+    """The V the planner proposes for 'interleaved': dcfg.pp_virtual when
+    the user pinned one, else the smallest divisor >= 2 of layers_per_stage
+    (smallest V already captures most of the ~1/V bubble shrink while
+    holding the least extra in-flight state).  0 when no valid V exists."""
+    if dcfg.pp_virtual >= 2:
+        return dcfg.pp_virtual
+    lps = stage.layers_per_stage
+    for v in range(2, lps + 1):
+        if lps % v == 0:
+            return v
+    return 0
+
+
+def _resolve_pp_schedule(dcfg: DistConfig, stage, microbatches: int):
+    """Resolve dcfg.pp_schedule to a concrete (schedule, V, stage).
+
+    'auto' scores every schedule valid for this stage partition by modeled
+    bubble fraction (core/pipeline.bubble_fraction — computed from the real
+    slot tables for interleaved/zb) with peak in-flight saved state as the
+    tie-break, and picks the argmin.  An explicit schedule is honored but
+    validated (interleaved needs a chunkable, even partition and V >= 2).
+    Returns the stage with `virtual` stamped in so the staged storage
+    layout, the memory simulator and the engines all see the same V.
+    """
+    from repro.core.pipeline import (PIPE_SCHEDULES, bubble_fraction,
+                                     schedule_peak_state)
+
+    def interleave_ok(v: int) -> str | None:
+        if not stage.chunkable:
+            return ("this model's stage program is not chunkable "
+                    "(StageSpec.chunkable=False — e.g. zamba2's superblock "
+                    "cadence)")
+        if stage.stage_layers is not None:
+            return "uneven stage partitions cannot be virtual-chunked"
+        if v < 2:
+            return (f"layers_per_stage={stage.layers_per_stage} has no "
+                    "divisor >= 2 to chunk into virtual stages")
+        if stage.layers_per_stage % v:
+            return (f"pp_virtual={v} does not divide layers_per_stage="
+                    f"{stage.layers_per_stage}")
+        return None
+
+    req = dcfg.pp_schedule
+    if req == "auto":
+        v = _auto_virtual(dcfg, stage)
+        # candidate order is the tie-break of last resort: prefer the
+        # bounded-memory baseline when scores come out equal
+        cands = [("1f1b", 1), ("zb", 1), ("gpipe", 1)]
+        if interleave_ok(v) is None:
+            cands.append(("interleaved", v))
+
+        def score(c):
+            s, cv = c
+            bf = bubble_fraction(microbatches, stage.n_stages, s, cv)
+            peak = max(schedule_peak_state(
+                microbatches, stage.n_stages, s, cv))
+            return (round(bf, 6), peak)
+
+        sched, virtual = min(cands, key=score)
+    elif req == "interleaved":
+        virtual = _auto_virtual(dcfg, stage)
+        why = interleave_ok(virtual)
+        if why is not None:
+            raise ValueError(f"pp_schedule='interleaved': {why}")
+        sched = req
+    elif req in PIPE_SCHEDULES:
+        sched, virtual = req, 1
+    else:
+        raise ValueError(
+            f"unknown pp_schedule {req!r}; valid: "
+            f"{PIPE_SCHEDULES + ('auto',)}")
+    if virtual != stage.virtual:
+        stage = dataclasses.replace(stage, virtual=virtual)
+    return sched, virtual, stage
 
 
 def plan_parallel(model, dcfg: DistConfig, shape=None) -> ParallelPlan:
@@ -231,7 +319,7 @@ def plan_parallel(model, dcfg: DistConfig, shape=None) -> ParallelPlan:
                                    stats if k == "blocks" else None,
                                    segments=segments)
 
-    stage, microbatches = None, 0
+    stage, microbatches, pp_schedule, pp_virtual = None, 0, "", 1
     if dcfg.pp_axis is not None:
         if not hasattr(model, "stage_spec"):
             raise ValueError(
@@ -245,8 +333,10 @@ def plan_parallel(model, dcfg: DistConfig, shape=None) -> ParallelPlan:
                 "dcfg.pp_microbatches — pipeline microbatches ARE the "
                 "accumulation under pp")
         stage = model.stage_spec(dcfg.pp_size)
-        stage.validate(metas.keys(), sk)
         microbatches = dcfg.pp_microbatches or dcfg.pp_size
+        pp_schedule, pp_virtual, stage = _resolve_pp_schedule(
+            dcfg, stage, microbatches)
+        stage.validate(metas.keys(), sk)
 
     # ---- memory plan: simulate (and, for remat="auto:<GB>", CHOOSE) the
     # per-segment policy vector + offload under the HBM budget.  Needs the
@@ -262,7 +352,12 @@ def plan_parallel(model, dcfg: DistConfig, shape=None) -> ParallelPlan:
     if (shape is not None or remat_kind == AUTO_PREFIX) \
             and hasattr(model, "block_stats"):
         from repro.core.memory import plan_memory
-        memory = plan_memory(model, dcfg, shape, bucket_plans=bucket_plans,
+        # the memory model walks the RESOLVED schedule (in-flight state and
+        # the zb W-queue depend on it), not the user's 'auto'
+        mem_dcfg = dcfg if stage is None else dcfg.with_(
+            pp_schedule=pp_schedule, pp_virtual=pp_virtual)
+        memory = plan_memory(model, mem_dcfg, shape,
+                             bucket_plans=bucket_plans,
                              stage=stage, microbatches=microbatches)
         if memory.bucket_plan is not None:
             bucket_plans = dict(bucket_plans)
@@ -271,7 +366,8 @@ def plan_parallel(model, dcfg: DistConfig, shape=None) -> ParallelPlan:
     return ParallelPlan(dcfg=dcfg, stacked_keys=sk,
                         bucket_plans=bucket_plans, remat=dcfg.remat,
                         stage=stage, microbatches=microbatches,
-                        memory=memory)
+                        memory=memory, pp_schedule=pp_schedule,
+                        pp_virtual=pp_virtual)
 
 
 # ---------------------------------------------------------------------------
@@ -298,9 +394,20 @@ class Parallelized:
     def storage_specs(self):
         if self.plan.pipelined:
             from repro.models import staging
-            return staging.stage_storage_specs(self.model, self.dcfg)
+            return staging.stage_storage_specs(self.model, self.dcfg,
+                                               self.plan.stage)
         from repro.models import runtime as RT
         return RT.model_storage_specs(self.model, self.dcfg)
+
+    @property
+    def pipe_sharded(self) -> frozenset:
+        """The single-owner param groups stored pipe-SHARDED (see
+        models/staging.pipe_sharded_groups) — empty at pp=1."""
+        if not self.plan.pipelined:
+            return frozenset()
+        from repro.models import staging
+        return staging.pipe_sharded_groups(self.model, self.dcfg,
+                                           self.plan.stage)
 
     @property
     def abstract_storage(self):
@@ -340,13 +447,15 @@ class Parallelized:
         if not self.plan.pipelined:
             return storage
         from repro.models import staging
-        return staging.stage_tree(storage, self.plan.stage)
+        return staging.stage_tree(storage, self.plan.stage, self.dcfg,
+                                  self.pipe_sharded)
 
     def unstage_storage(self, storage):
         if not self.plan.pipelined:
             return storage
         from repro.models import staging
-        return staging.unstage_tree(storage, self.plan.stage)
+        return staging.unstage_tree(storage, self.plan.stage, self.dcfg,
+                                    self.pipe_sharded)
 
     # ------------------------------------------------------------- steps --
     # Steps trace with plan.exec_dcfg — dcfg with the memory plan's resolved

@@ -209,6 +209,34 @@ gather_group.defvjp(_gg_fwd, _gg_bwd)
 
 
 # ---------------------------------------------------------------------------
+# 2b. Pipe-axis param reconstruction for pipe-SHARDED single-owner groups
+# (models/staging.py): a pre/post group's storage is split (S, chunk/S)
+# over the pipe axis instead of zero-filled on non-owner slots, and each
+# step re-assembles this device's ordinary FSDP chunk with one all-gather
+# over the pipe axis.  The backward is the exact transpose: a tiled
+# psum-scatter (no mean — non-consuming ranks contribute exact-zero
+# cotangents by schedule masking, so the sum IS the owner's gradient, and
+# each pipe rank keeps d(its slice)).
+# ---------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def pipe_param_gather(x: jax.Array, axis: str, n_stages: int) -> jax.Array:
+    """(..., chunk/S) pipe-local slice -> (..., chunk) full FSDP chunk."""
+    return lax.all_gather(x, axis, axis=x.ndim - 1, tiled=True)
+
+
+def _ppg_fwd(x, axis, n_stages):
+    return lax.all_gather(x, axis, axis=x.ndim - 1, tiled=True), None
+
+
+def _ppg_bwd(axis, n_stages, _res, ct):
+    return (lax.psum_scatter(ct, axis, scatter_dimension=ct.ndim - 1,
+                             tiled=True),)
+
+
+pipe_param_gather.defvjp(_ppg_fwd, _ppg_bwd)
+
+
+# ---------------------------------------------------------------------------
 # 3. Per-parameter convenience (paper Fig. 1(2), group of one).
 # ---------------------------------------------------------------------------
 def replicate(shard: jax.Array, meta: ParamMeta, cfg: DistConfig) -> jax.Array:

@@ -39,7 +39,17 @@ class DistConfig:
     # point-to-point, so it tolerates the slowest interconnect, while the fat
     # FSDP gathers stay on the inner (ICI) axes.
     pp_axis: str | None = None
-    pp_schedule: str = "gpipe"           # 'gpipe' | '1f1b'
+    # 'gpipe' | '1f1b' | 'interleaved' | 'zb' | 'auto'.  'interleaved' gives
+    # each pipe rank V non-contiguous virtual stage slices (bubble / V);
+    # 'zb' splits the backward into input-grad (Bx) and weight-grad (W)
+    # halves so the W work fills the cooldown bubble; 'auto' lets
+    # plan_parallel score every valid schedule (bubble_fraction + the memory
+    # simulator) and pick the argmin (core/pipeline.py, core/api.py).
+    pp_schedule: str = "gpipe"
+    # Virtual stages per pipe rank for the interleaved schedule (0 = let the
+    # planner pick the smallest divisor >= 2 of layers_per_stage).  Ignored
+    # by the other schedules.
+    pp_virtual: int = 0
     # Expected microbatch count M per pipelined step; 0 accepts any M.
     # When set, pipeline_grads rejects an xs stack whose leading dim
     # disagrees (M is otherwise inferred from xs).  GPipe keeps M live

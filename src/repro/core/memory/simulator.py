@@ -6,8 +6,9 @@ not hidden; this module walks the same schedule and takes the max over LIVE
 BYTES.  Per (stage, segment, bucket) it accounts:
 
   * sharded params / grads / optimizer state (the ZeRO-3 storage layout —
-    including the known staging cost that pre/post groups occupy zero-filled
-    slots on every pipe rank, models/staging.py);
+    under pp, pre/post groups whose chunks divide by S are pipe-sharded
+    1/S slices per rank; only non-divisible groups still pay the
+    zero-filled full slot, models/staging.py);
   * gathered buckets in flight: the executed partition (split at segment
     boundaries, segment-major — `bucketing.split_plan_at_segments`, the SAME
     rewrite the stack and the exposure model apply) with
@@ -21,7 +22,10 @@ BYTES.  Per (stage, segment, bucket) it accounts:
   * the delayed per-bucket reduce-scatter buffers (`cfg.rs_delay` holds one
     layer's packed grad cotangents across the backward sweep);
   * pipeline in-flight microbatches: GPipe holds M live activation stacks
-    per stage, 1F1B bounds stage s to min(M, S - s) (core/pipeline.py);
+    per stage, 1F1B (and zb's matching F/Bx slots) bounds stage s to
+    min(M, S - s), interleaved counts chunk-granularity entries from its
+    actual slot table, and zb adds its params-shaped W-queue
+    (core/pipeline.py);
   * context parallelism (core/context.py): every activation-derived term is
     sized from the cp-LOCAL sequence shard (batch_shape carries seq/cp —
     activations divide by the ctx degree), plus the two in-flight ring KV
@@ -145,15 +149,28 @@ def _group_gather_bytes(metas_tree, cfg: DistConfig) -> float:
 def storage_bytes(metas: dict, stacked_keys: dict, dcfg: DistConfig,
                   stage=None) -> float:
     """Per-device sharded master-param bytes of the whole model (one pipe
-    rank's slot under `stage`: the pipelined stack holds 1/S of its layers,
-    every other group occupies its full — possibly zero-filled — slot)."""
+    rank's slot under `stage`): the pipelined stack holds 1/S of its
+    layers; single-owner (pre/post) groups whose chunks divide by S are
+    pipe-SHARDED — 1/S per rank instead of a full zero-filled slot
+    (models/staging.py); only non-divisible groups still pay the
+    zero-fill."""
+    from repro.core.meta import pipe_shardable
+
     total = 0.0
     for k in metas:
         g = _group_storage_bytes(metas[k], dcfg)
-        if k in stacked_keys:
+        if stage is not None and k == stage.pipelined:
+            # the per-rank slot: layers_per_stage rows (zero-padded under
+            # uneven stage_layers partitions — padding occupies real bytes)
+            g *= stage.layers_per_stage
+        elif k in stacked_keys:
             g *= stacked_keys[k]
-            if stage is not None and k == stage.pipelined:
+            if stage is not None and isinstance(_owner(stage, k), int) \
+                    and pipe_shardable(metas[k], dcfg):
                 g /= stage.n_stages
+        elif stage is not None and isinstance(_owner(stage, k), int) \
+                and pipe_shardable(metas[k], dcfg):
+            g /= stage.n_stages
         total += g
     return total
 
@@ -254,14 +271,32 @@ def executed_segments(dcfg: DistConfig, segments, policies=None):
         (tuple(policies) if policies is not None else None)
 
 
+def _resolved_schedule(dcfg: DistConfig, virtual: int = 1) -> str:
+    """The schedule the memory model walks: a stamped StageSpec.virtual > 1
+    means the planner chose interleaved; a still-unresolved 'auto' is
+    modeled as 1f1b (the bounded-memory baseline the scorer ties back to)."""
+    if virtual > 1 or dcfg.pp_schedule == "interleaved":
+        return "interleaved"
+    return "1f1b" if dcfg.pp_schedule == "auto" else dcfg.pp_schedule
+
+
 def in_flight_microbatches(dcfg: DistConfig, stage_idx: int, n_stages: int,
-                           microbatches: int) -> int:
-    """Live microbatch activation stacks at one stage: GPipe keeps all M,
-    1F1B bounds stage s to min(M, S - s) (core/pipeline.py's ring)."""
+                           microbatches: int, virtual: int = 1) -> int:
+    """Live saved-state entries at one stage: GPipe keeps all M microbatch
+    stacks, 1F1B (and zb, whose F/Bx slots match 1F1B exactly) bounds stage
+    s to min(M, S - s) (core/pipeline.py's ring).  Interleaved counts
+    CHUNK-granularity entries from the actual slot table (roughly
+    V*min(M, S - s) — each entry covers only layers_per_stage/V layers, so
+    multiply by the per-chunk residency, not the per-stage one)."""
     if n_stages <= 1:
         return 1
     M = microbatches or n_stages
-    if dcfg.pp_schedule == "1f1b":
+    sched = _resolved_schedule(dcfg, virtual)
+    if sched == "interleaved":
+        from repro.core.pipeline import schedule_peak_state
+        v = virtual if virtual > 1 else max(2, dcfg.pp_virtual)
+        return schedule_peak_state(M, n_stages, "interleaved", v)[stage_idx]
+    if sched in ("1f1b", "zb"):
         return max(1, min(M, n_stages - stage_idx))
     return M
 
@@ -291,6 +326,9 @@ class SimContext:
     # a ctx axis.
     ring_kv_b: float = 0.0          # forward-point in-flight bytes
     ring_kv_bwd_b: float = 0.0      # backward-point in-flight bytes
+    # interleaved pipeline: virtual chunks per rank (StageSpec.virtual);
+    # saved-state entries are chunk-granular (L_stage/virtual layers each)
+    virtual: int = 1
 
 
 def make_context(model, dcfg: DistConfig, batch_shape,
@@ -369,7 +407,8 @@ def make_context(model, dcfg: DistConfig, batch_shape,
         other_gather=other_gather, extras=tuple(extras),
         L_stage=(stage.layers_per_stage if stage is not None else sk[main]),
         n_stages=n_stages, microbatches=microbatches, ring_kv_b=ring_kv_b,
-        ring_kv_bwd_b=ring_kv_bwd_b)
+        ring_kv_bwd_b=ring_kv_bwd_b,
+        virtual=(getattr(stage, "virtual", 1) if stage is not None else 1))
 
 
 def context_peaks(ctx: SimContext,
@@ -397,11 +436,23 @@ def context_peaks(ctx: SimContext,
             f"{len(prof.segments)} segment(s) "
             f"{tuple(s.name for s in prof.segments)}")
 
-    # ---- storage-resident state (identical on every pipe rank: pre/post
-    # groups occupy zero-filled slots on non-owners, models/staging.py) ----
+    # ---- storage-resident state (near-identical on every pipe rank:
+    # pre/post groups are pipe-sharded 1/S slices where chunks divide,
+    # zero-filled full slots otherwise — models/staging.py) ----
     params_b = ctx.params_b
     grads_b = params_b
     opt_b = 2.0 * params_b
+
+    # zb decouples the weight-grad half of each backward and queues the
+    # per-microbatch dW cotangent pytrees until their fill slots drain
+    # them into the accumulator (core/pipeline.py's W-queue) — a real
+    # params-shaped buffer per queued entry
+    w_queue_b = 0.0
+    if ctx.n_stages > 1 and \
+            _resolved_schedule(dcfg, ctx.virtual) == "zb":
+        from repro.core.pipeline import zb_queue_depth
+        w_queue_b = zb_queue_depth(ctx.microbatches or ctx.n_stages,
+                                   ctx.n_stages) * params_b
 
     # ---- per-layer terms ----
     reorder = bool(dcfg.reorder)
@@ -412,11 +463,15 @@ def context_peaks(ctx: SimContext,
     pending_rs = prof.layer_rs_bytes if (reorder and dcfg.rs_delay) else 0.0
     workspace = residency if reorder else 0.0
 
+    # interleaved saved-state entries are chunk-granular: each covers only
+    # L_stage/virtual layers (in_flight_microbatches counts entries)
+    layers_per_entry = ctx.L_stage // max(1, ctx.virtual)
+
     out = []
     for si in range(ctx.n_stages):
         inflight = in_flight_microbatches(dcfg, si, ctx.n_stages,
-                                          ctx.microbatches)
-        saved = ctx.L_stage * per_layer_saved * inflight
+                                          ctx.microbatches, ctx.virtual)
+        saved = layers_per_entry * per_layer_saved * inflight
 
         host = 0.0
         if offload_opt:
@@ -427,7 +482,7 @@ def context_peaks(ctx: SimContext,
         if offload_residuals:
             # segment-boundary residuals (the per-layer inputs) stream to
             # host; a double-buffered 2-layer staging window stays on device
-            boundary = ctx.L_stage * act_scale \
+            boundary = layers_per_entry * act_scale \
                 * prof.segments[0].input_bytes * inflight
             boundary = min(boundary, saved)
             keep = min(boundary, 2.0 * act_scale
@@ -450,6 +505,7 @@ def context_peaks(ctx: SimContext,
                 "other_stacks": ctx.other_gather,
                 "stage_extras": ctx.extras[si],
                 "ring_kv": ctx.ring_kv_bwd_b,
+                "w_queue": w_queue_b,
             },
         }
         point, parts = max(candidates.items(),

@@ -182,6 +182,20 @@ def storage_specs(metas, cfg: DistConfig, stacked: bool = False):
                         is_leaf=lambda x: isinstance(x, ParamMeta))
 
 
+def pipe_shardable(metas, cfg: DistConfig) -> bool:
+    """True iff every ParamMeta leaf's per-device FSDP chunk splits evenly
+    over the pipe axis — the condition for storing a single-owner (pre/post)
+    param group as (S, chunk/S) pipe-sharded slices instead of zero-filling
+    non-owner stage slots (models/staging.py).  All-or-nothing per group so
+    the staged layout stays uniform.  chunk_len is a multiple of LANE=128,
+    so any power-of-two pipe degree qualifies in practice."""
+    if cfg.pp_axis is None or cfg.pp_size <= 1:
+        return False
+    ms = jax.tree.leaves(metas, is_leaf=lambda x: isinstance(x, ParamMeta))
+    return bool(ms) and all(
+        m.chunk_len(cfg) % cfg.pp_size == 0 for m in ms)
+
+
 def param_bytes(metas, cfg: DistConfig, n_layers: int = 1) -> int:
     total = 0
     for _, m in named_leaves(metas):

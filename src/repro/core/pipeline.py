@@ -53,10 +53,27 @@ Schedules and their memory models (M microbatches, S stages):
     activation storage is bounded by S (in fact S - s at stage s)
     **independent of M** — the PipeDream-flush/1F1B memory bound, vs
     GPipe's M.
+  * Interleaved 1F1B (`pp_schedule='interleaved'`, `_table_loss_grads` over
+    a `PipeSchedule`): each pipe rank owns **V non-contiguous virtual stage
+    slices** (chunk j = v*S + s of the layer stack lives on rank j % S), so
+    the warmup/cooldown ramps are V times shallower in stage units — bubble
+    ~(S-1)/(V*M+S-1).  Every forward hop is the SAME +1 cyclic ppermute
+    (rank S-1 -> 0 advances to the next chunk round), the price is ~V times
+    the saved-input states per rank (see `schedule_peak_state`).  Needs the
+    model contract (the chunk_step slices its chunk's parameters); the raw
+    stream cannot run it.
+  * Zero-bubble W-split (`pp_schedule='zb'`, `zero_bubble`): F and the
+    input-grad half (Bx) of the backward keep their 1F1B slots; the
+    weight-grad half W is decoupled (pushed onto a per-rank queue at Bx,
+    drained at a first-fit scheduled W slot), so the dW work fills the
+    cooldown bubble — modeled idle drops to ~(S-1)/(3M+S-1), strictly below
+    1F1B for every M.  Conceptually the same dW/dX flow separation as the
+    bucketed `rs_delay` (core/fsdp v2): delay the weight-gradient flow so
+    the critical dX path never waits on it.
 
-Both schedules return identical losses/gradients (exact-parity tested against
-a single-device dense reference in tests/dist_harness.py cases `pipeline` and
-`trainer_pipeline`).
+All schedules return identical losses/gradients (exact-parity tested against
+a single-device dense reference in tests/dist_harness.py cases `pipeline`,
+`pipeline_v2` and `trainer_pipeline`).
 """
 
 from __future__ import annotations
@@ -176,21 +193,303 @@ def one_f_one_b_schedule(n_micro: int, n_stages: int) \
     return fwd, bwd
 
 
-def schedule_slots(n_micro: int, n_stages: int, schedule: str) -> int:
-    """Total scan length of a schedule (analytic)."""
+PIPE_SCHEDULES = ("gpipe", "1f1b", "interleaved", "zb")
+
+
+def _greedy_interleaved(n_micro: int, n_stages: int, virtual: int):
+    """Slot assignment for interleaved 1F1B: virtual stage j = v*S + s lives
+    on rank j % S (rank r owns V non-contiguous chunks).  A greedy list
+    scheduler — one work unit per rank per slot, backwards first (lowest
+    microbatch), then forwards advancing the DEEPEST ready chunk (highest j)
+    — reproduces the Megatron-style interleaved pattern: for M a multiple of
+    S it lands on T = 2(V*M + S - 1) chunk-slots, i.e. bubble
+    (S-1)/(V*M + S - 1), ~1/V of plain 1F1B's.
+
+    Dependencies: F(j,m) after F(j-1,m) (the +1 cyclic activation hop —
+    rank S-1 -> rank 0 advances the chunk, so EVERY forward send is the
+    same ppermute); B(j,m) after F(j,m) and B(j+1,m) (cotangents travel the
+    reverse ring); the last virtual stage seeds its own cotangent from the
+    loss.  Returns ({(j, m): slot} x2 for fwd/bwd).
+    """
+    M, S, V = n_micro, n_stages, virtual
+    VS = V * S
+    fslot: dict = {}
+    bslot: dict = {}
+    pend_f = {(j, m) for j in range(VS) for m in range(M)}
+    pend_b = set(pend_f)
+    t = 0
+    limit = 4 * (VS * M + S) + 8
+    while pend_f or pend_b:
+        if t > limit:
+            raise RuntimeError(
+                f"interleaved scheduler stalled (M={M} S={S} V={V})")
+        for r in range(S):
+            ready_b = sorted(
+                (m, j) for (j, m) in pend_b
+                if j % S == r and (j, m) in fslot and fslot[(j, m)] < t
+                and (j == VS - 1
+                     or ((j + 1, m) in bslot and bslot[(j + 1, m)] < t)))
+            if ready_b:
+                m, j = ready_b[0]
+                bslot[(j, m)] = t
+                pend_b.discard((j, m))
+                continue
+            ready_f = sorted(
+                (-j, m) for (j, m) in pend_f
+                if j % S == r
+                and (j == 0 or ((j - 1, m) in fslot and fslot[(j - 1, m)] < t)))
+            if ready_f:
+                j, m = -ready_f[0][0], ready_f[0][1]
+                fslot[(j, m)] = t
+                pend_f.discard((j, m))
+        t += 1
+    return fslot, bslot
+
+
+def _zb_assignment(n_micro: int, n_stages: int):
+    """Slot assignment for the zero-bubble W-split: F and the input-grad
+    half (Bx) keep their exact 1F1B positions; the weight-grad half W(m) is
+    first-fit placed into this rank's idle slots after Bx(m), in microbatch
+    order (FIFO — the drain order of the W queue).  The cooldown bubble
+    behind the last Bx absorbs the W work, so the idle fraction drops below
+    1F1B's (S-1)/(M+S-1) for every M >= 1, S > 1.
+
+    Returns ({(j,m): slot} fwd, same bwd, {(rank, m): slot} W)."""
+    M, S = n_micro, n_stages
+    fslot = {(s, m): s + 2 * m for s in range(S) for m in range(M)}
+    bslot = {(s, m): 2 * (S - 1) - s + 2 * m + 1
+             for s in range(S) for m in range(M)}
+    wslot: dict = {}
+    for s in range(S):
+        busy = {fslot[(s, m)] for m in range(M)}
+        busy |= {bslot[(s, m)] for m in range(M)}
+        prev = -1
+        for m in range(M):
+            t = max(bslot[(s, m)] + 1, prev + 1)
+            while t in busy:
+                t += 1
+            wslot[(s, m)] = t
+            busy.add(t)
+            prev = t
+    return fslot, bslot, wslot
+
+
+def _alloc_registers(entries):
+    """Interval register allocation: entries [(birth, death, key)] ->
+    ({key: reg}, n_regs).  Greedy smallest-free-index over lifetimes
+    (optimal for intervals); birth/death slots are inclusive."""
+    import heapq
+
+    regs: dict = {}
+    free: list = []
+    active: list = []          # (death, reg)
+    n_regs = 0
+    for birth, death, key in sorted(entries):
+        while active and active[0][0] < birth:
+            _, r = heapq.heappop(active)
+            heapq.heappush(free, r)
+        if free:
+            r = heapq.heappop(free)
+        else:
+            r = n_regs
+            n_regs += 1
+        regs[key] = r
+        heapq.heappush(active, (death, r))
+    return regs, max(n_regs, 1)
+
+
+class PipeSchedule:
+    """A fully tabulated pipeline schedule for the scan engine
+    (`_table_loss_grads`): (T, S) int32/bool tables indexed [slot, rank].
+
+    Forward tables: `f_mb`/`f_chunk` — microbatch / local chunk this rank
+    runs (-1 idle); `f_in` — input ring-buffer register to read;
+    `f_recv` — register the activation arriving at the START of this slot
+    (sent by the left neighbour last slot) is written to (-1 none).
+    Backward tables: `b_mb`/`b_chunk`/`b_in` (saved-input register for the
+    recompute replay), `b_ct` (cotangent register to consume), `b_recv`
+    (arriving cotangent's register), `b_last` (this backward is the LAST
+    virtual stage — seed the cotangent from the loss instead).
+    W-split tables (zb): `b_push` — W-queue register the weight-grad half
+    is pushed to at a Bx slot; `w_idx` — register drained at a W slot.
+
+    `depth_in`/`depth_ct`/`depth_w` size the ring buffers (max over ranks
+    of an optimal interval register allocation of entry lifetimes)."""
+
+    def __init__(self, schedule: str, n_micro: int, n_stages: int,
+                 virtual: int = 1):
+        M, S = n_micro, n_stages
+        V = virtual if schedule == "interleaved" else 1
+        if schedule == "interleaved":
+            fslot, bslot = _greedy_interleaved(M, S, V)
+            wslot = {}
+        elif schedule == "zb":
+            fslot, bslot, wslot = _zb_assignment(M, S)
+        else:
+            raise ValueError(
+                f"PipeSchedule tabulates 'interleaved'/'zb', not "
+                f"{schedule!r}")
+        VS = V * S
+        T = 1 + max(max(fslot.values()), max(bslot.values()),
+                    max(wslot.values(), default=0))
+        self.schedule, self.n_micro, self.n_stages, self.virtual, self.slots \
+            = schedule, M, S, V, T
+
+        ii = lambda: np.full((T, S), -1, np.int32)
+        self.f_mb, self.f_chunk, self.f_in, self.f_recv = (ii(), ii(), ii(),
+                                                           ii())
+        self.b_mb, self.b_chunk, self.b_in, self.b_ct, self.b_recv = (
+            ii(), ii(), ii(), ii(), ii())
+        self.b_push, self.w_idx = ii(), ii()
+        self.b_last = np.zeros((T, S), bool)
+
+        # input entries: chunk j's input (j>0) arrives at fslot(j-1)+1 and
+        # is read at its forward AND at its backward replay; j=0 injects
+        # from the microbatch stream (no buffer entry, dummy register 0)
+        in_regs: dict = {}
+        depth_in = 1
+        for r in range(S):
+            ent = [(fslot[(j - 1, m)] + 1, bslot[(j, m)], (j, m))
+                   for (j, m) in fslot if j % S == r and j > 0]
+            regs, n = _alloc_registers(ent)
+            in_regs.update(regs)
+            depth_in = max(depth_in, n)
+        # cotangent entries: d(chunk j output) is produced by B(j+1,m) on
+        # rank (j+1)%S and reverse-ppermuted here, arriving at
+        # bslot(j+1)+1; consumed at bslot(j).  The last virtual stage seeds
+        # from the loss; B(0,m)'s outgoing dx is the stream cotangent
+        # (with_dxs) and is never ring-buffered.
+        ct_regs: dict = {}
+        depth_ct = 1
+        for r in range(S):
+            ent = [(bslot[(j + 1, m)] + 1, bslot[(j, m)], (j, m))
+                   for (j, m) in bslot if j % S == r and j < VS - 1]
+            regs, n = _alloc_registers(ent)
+            ct_regs.update(regs)
+            depth_ct = max(depth_ct, n)
+        # W-queue entries (zb): pushed at the Bx slot, drained at the W slot
+        w_regs: dict = {}
+        depth_w = 1
+        for r in range(S):
+            ent = [(bslot[(r, m)], wslot[(r, m)], m)
+                   for (rr, m) in wslot if rr == r]
+            regs, n = _alloc_registers(ent)
+            w_regs.update({(r, m): v for m, v in regs.items()})
+            depth_w = max(depth_w, n)
+        self.depth_in, self.depth_ct, self.depth_w = (depth_in, depth_ct,
+                                                      depth_w)
+
+        for (j, m), t in fslot.items():
+            s = j % S
+            self.f_mb[t, s] = m
+            self.f_chunk[t, s] = j // S
+            self.f_in[t, s] = in_regs.get((j, m), 0)
+            if j + 1 < VS:
+                nxt = j + 1                       # arrives at rank (j+1)%S
+                self.f_recv[t + 1, nxt % S] = in_regs[(nxt, m)]
+        for (j, m), t in bslot.items():
+            s = j % S
+            self.b_mb[t, s] = m
+            self.b_chunk[t, s] = j // S
+            self.b_in[t, s] = in_regs.get((j, m), 0)
+            self.b_ct[t, s] = ct_regs.get((j, m), 0)
+            self.b_last[t, s] = j == VS - 1
+            if j > 0 and t + 1 < T:
+                self.b_recv[t + 1, (j - 1) % S] = ct_regs[(j - 1, m)]
+            if wslot:
+                self.b_push[t, s] = w_regs[(s, m)]
+        for (s, m), t in wslot.items():
+            self.w_idx[t, s] = w_regs[(s, m)]
+
+        # per-rank peak of simultaneously live saved-input states (the
+        # in-flight memory model consumed by core/memory/simulator)
+        self.peak_state = [0] * S
+        for r in range(S):
+            ent = [(fslot[(j - 1, m)] + 1, bslot[(j, m)])
+                   for (j, m) in fslot if j % S == r and j > 0]
+            for t in range(T):
+                live = sum(1 for b, d in ent if b <= t <= d)
+                self.peak_state[r] = max(self.peak_state[r], live)
+        # rank 0's chunk-0 inputs live on the microbatch stream, not the
+        # ring; count them as one resident state so the model never says 0
+        self.peak_state = [max(1, p) for p in self.peak_state]
+
+    @property
+    def work_units(self) -> int:
+        """Uniform-cost work slots per rank (F=Bx=W=1, full backward = 2):
+        2*V*M chunk-units for interleaved (each 1/V of a stage unit, so
+        utilization compares 1:1 with 1F1B), 3*M for zb."""
+        if self.schedule == "zb":
+            return 3 * self.n_micro
+        return 2 * self.virtual * self.n_micro
+
+
+@functools.lru_cache(maxsize=None)
+def build_pipe_schedule(n_micro: int, n_stages: int, schedule: str,
+                        virtual: int = 1) -> PipeSchedule:
+    return PipeSchedule(schedule, n_micro, n_stages, virtual)
+
+
+def schedule_slots(n_micro: int, n_stages: int, schedule: str,
+                   virtual: int = 1) -> int:
+    """Total scan length of a schedule (analytic for gpipe/1f1b, from the
+    built table for interleaved/zb)."""
     if schedule == "gpipe":
         return n_micro + n_stages - 1
     if schedule == "1f1b":
         return 2 * (n_micro + n_stages - 1)
-    raise ValueError(f"unknown pipeline schedule {schedule!r}")
+    if schedule in ("interleaved", "zb"):
+        return build_pipe_schedule(n_micro, n_stages, schedule,
+                                   virtual).slots
+    raise ValueError(f"unknown pipeline schedule {schedule!r}; "
+                     f"known: {PIPE_SCHEDULES}")
 
 
-def bubble_fraction(n_micro: int, n_stages: int, schedule: str) -> float:
-    """Idle fraction of the steady-state schedule: (S-1) warmup + (S-1)
-    cooldown slots over M units of work per stage — (S-1)/(M+S-1) for both
-    GPipe and 1F1B (1F1B trades nothing in bubble, only in memory)."""
-    schedule_slots(n_micro, n_stages, schedule)   # validates the name
-    return (n_stages - 1) / (n_micro + n_stages - 1)
+def bubble_fraction(n_micro: int, n_stages: int, schedule: str,
+                    virtual: int = 1) -> float:
+    """Idle fraction of the schedule under uniform work units (F = Bx = W =
+    1 unit; a full backward = 2 — so `modeled_step = work / (1 - bubble)`
+    is comparable across schedules):
+
+      * gpipe == 1f1b: (S-1)/(M+S-1) (1F1B trades nothing in bubble, only
+        in memory);
+      * interleaved: (S-1)/(V*M+S-1) for M a multiple of S — each rank's
+        V chunk slices shrink the warmup/cooldown ramps by ~1/V (computed
+        from the built table, so irregular M stays honest);
+      * zb: the W half of the backward fills the cooldown ramp; from the
+        built table (~(S-1)/(3M+S-1) at the ideal placement), strictly
+        below 1F1B for every M >= 1, S > 1.
+    """
+    if schedule in ("gpipe", "1f1b"):
+        return (n_stages - 1) / (n_micro + n_stages - 1)
+    if schedule in ("interleaved", "zb"):
+        sched = build_pipe_schedule(n_micro, n_stages, schedule, virtual)
+        return 1.0 - sched.work_units / sched.slots
+    raise ValueError(f"unknown pipeline schedule {schedule!r}; "
+                     f"known: {PIPE_SCHEDULES}")
+
+
+def schedule_peak_state(n_micro: int, n_stages: int, schedule: str,
+                        virtual: int = 1) -> list:
+    """Per-rank peak count of resident microbatch input states (the
+    in-flight memory model): M for gpipe, min(M, S-s) for 1f1b/zb, and the
+    table-derived buffer peak for interleaved (V chunks per rank hold
+    ~V * min(M, S-s) states — the schedule's extra in-flight memory)."""
+    M, S = n_micro, n_stages
+    if schedule == "gpipe":
+        return [M] * S
+    if schedule in ("1f1b", "zb"):
+        return [max(1, min(M, S - s)) for s in range(S)]
+    if schedule == "interleaved":
+        return list(build_pipe_schedule(M, S, schedule, virtual).peak_state)
+    raise ValueError(f"unknown pipeline schedule {schedule!r}; "
+                     f"known: {PIPE_SCHEDULES}")
+
+
+def zb_queue_depth(n_micro: int, n_stages: int) -> int:
+    """Max backlog of the zb W-queue (weight-grad halves pushed at Bx,
+    drained at W slots) — sizes the queue's parameter-gradient storage."""
+    return build_pipe_schedule(n_micro, n_stages, "zb").depth_w
 
 
 # ---------------------------------------------------------------------------
@@ -239,12 +538,20 @@ def gpipe(stage_fn: Callable, xs, n_stages: int, axis: str = "pipe"):
 
 
 # ---------------------------------------------------------------------------
-# Schedule cores (model contract): stage_step(params, state, mb) -> state,
-# loss_fn(params, y, mb) -> scalar.  `stage_step` does its own stage-0
-# injection from `mb` (see module docstring).
+# Schedule cores (model contract):
+#   stage_step(params, state, mb, pre) -> state,
+#   loss_fn(params, y, mb) -> scalar,
+#   pre_fn(params, mbs) -> (M, ...) stack of stage-0 entry states (or None).
+# `stage_step` does its own stage-0 injection — from its per-slot `pre`
+# when a pre_fn is given (the hoisted stage_pre stream: traced ONCE per
+# step, not once per slot), else from `mb` directly (see module docstring).
 # ---------------------------------------------------------------------------
+def _pre_slot(pres, mbc):
+    return _tree_index(pres, mbc) if pres is not None else ()
+
+
 def _gpipe_total_loss(stage_step: Callable, loss_fn: Callable, state0,
-                      n_stages: int, axis: str):
+                      n_stages: int, axis: str, pre_fn: Callable | None = None):
     """The masked total-loss function shared by the GPipe grad and
     forward-only (eval) paths."""
     S = n_stages
@@ -254,13 +561,17 @@ def _gpipe_total_loss(stage_step: Callable, loss_fn: Callable, state0,
         M = _leading_dim(mbs)
         T = M + S - 1
         outs0 = _tree_stack_zeros(state0, M)
+        # hoisted stage-0 stream: ONE trace before the slot loop; autodiff
+        # routes the per-slot injection cotangents back through it
+        pres = pre_fn(params, mbs) if pre_fn is not None else None
 
         def slot(carry, t):
             state, outs = carry
             mb_idx = t - rank
             active = (mb_idx >= 0) & (mb_idx < M)
             mbc = jnp.clip(mb_idx, 0, M - 1)
-            y = stage_step(params, state, _tree_index(mbs, mbc))
+            y = stage_step(params, state, _tree_index(mbs, mbc),
+                           _pre_slot(pres, mbc))
             y = _tree_where(active, y, state)
             outs = _tree_update(outs, y, mbc, pred=(rank == S - 1) & active)
             return (_tree_shift(y, axis, S), outs), None
@@ -277,15 +588,18 @@ def _gpipe_total_loss(stage_step: Callable, loss_fn: Callable, state0,
 
 
 def gpipe_loss(stage_step: Callable, loss_fn: Callable, params, mbs, state0,
-               n_stages: int, axis: str = "pipe"):
+               n_stages: int, axis: str = "pipe",
+               pre_fn: Callable | None = None):
     """Forward-only pipelined total loss (eval path), psum'ed over `axis`."""
-    run = _gpipe_total_loss(stage_step, loss_fn, state0, n_stages, axis)
+    run = _gpipe_total_loss(stage_step, loss_fn, state0, n_stages, axis,
+                            pre_fn)
     return lax.psum(run(params, mbs), axis)
 
 
 def gpipe_loss_grads(stage_step: Callable, loss_fn: Callable, params, mbs,
                      state0, n_stages: int, axis: str = "pipe",
-                     with_dxs: bool = False):
+                     with_dxs: bool = False,
+                     pre_fn: Callable | None = None):
     """(loss, dparams, dmbs?) for the GPipe schedule via autodiff.
 
     `mbs` is the M-leading microbatch stream (identical on every pipe rank);
@@ -296,7 +610,8 @@ def gpipe_loss_grads(stage_step: Callable, loss_fn: Callable, params, mbs,
     stream is consumed — stage 0 and the last stage) is only computed under
     ``with_dxs``; the LM path never differentiates the raw batch.
     """
-    run = _gpipe_total_loss(stage_step, loss_fn, state0, n_stages, axis)
+    run = _gpipe_total_loss(stage_step, loss_fn, state0, n_stages, axis,
+                            pre_fn)
     if with_dxs:
         loss, (dparams, dmbs) = jax.value_and_grad(run, argnums=(0, 1))(
             params, mbs)
@@ -308,7 +623,8 @@ def gpipe_loss_grads(stage_step: Callable, loss_fn: Callable, params, mbs,
 
 def one_f_one_b_loss_grads(stage_step: Callable, loss_fn: Callable, params,
                            mbs, state0, n_stages: int, axis: str = "pipe",
-                           with_dxs: bool = False):
+                           with_dxs: bool = False,
+                           pre_fn: Callable | None = None):
     """(loss, dparams, dmbs?) under the 1F1B schedule — same contract as
     `gpipe_loss_grads`, but the backward is hand-interleaved with the
     forward.
@@ -321,6 +637,12 @@ def one_f_one_b_loss_grads(stage_step: Callable, loss_fn: Callable, params,
     activation memory is O(S), not O(M).  Cotangents are zeroed on inactive
     slots, which makes the vjp's parameter/input gradients vanish by
     linearity — no masking of the accumulators is needed.
+
+    With `pre_fn`, the stage-0 entry stream is computed ONCE (one trace,
+    one `jax.vjp` outside the slot loop); per-slot replays differentiate
+    w.r.t. their `pre` slice, the cotangents accumulate into a d(pres)
+    stream, and the hoisted vjp maps it back to parameter gradients after
+    the scan.  Non-injecting ranks contribute exact zeros (linearity).
     """
     M = _leading_dim(mbs)
     S = n_stages
@@ -328,8 +650,13 @@ def one_f_one_b_loss_grads(stage_step: Callable, loss_fn: Callable, params,
     rank = pipe_rank(axis)
     on_last = rank == S - 1
 
-    def fwd_and_loss(p, x, mb):
-        y = stage_step(p, x, mb)
+    if pre_fn is not None:
+        pres, pre_vjp = jax.vjp(lambda p: pre_fn(p, mbs), params)
+    else:
+        pres, pre_vjp = None, None
+
+    def fwd_and_loss(p, x, pr, mb):
+        y = stage_step(p, x, mb, pr)
         return y, loss_fn(p, y, mb)
 
     carry0 = (
@@ -337,22 +664,24 @@ def one_f_one_b_loss_grads(stage_step: Callable, loss_fn: Callable, params,
         jax.tree.map(jnp.zeros_like, state0),      # cotangent from the right
         _tree_stack_zeros(state0, S),              # ring of saved inputs
         jax.tree.map(jnp.zeros_like, params),      # grad accumulator
+        jax.tree.map(jnp.zeros_like, pres) if pres is not None else (),
         jax.tree.map(jnp.zeros_like, mbs) if with_dxs else (),
         jnp.zeros((), jnp.float32),                # loss accumulator
     )
 
     def slot(carry, t):
-        fwd_state, bwd_state, ring, acc_g, dmbs, loss_acc = carry
+        fwd_state, bwd_state, ring, acc_g, d_pres, dmbs, loss_acc = carry
 
         # forward half: microbatch mf at slot rank + 2*mf --------------------
         tf = t - rank
         mf = tf // 2
         fwd_active = (tf >= 0) & (tf % 2 == 0) & (mf < M)
         mfc = jnp.clip(mf, 0, M - 1)
-        y = stage_step(params, fwd_state, _tree_index(mbs, mfc))
+        y = stage_step(params, fwd_state, _tree_index(mbs, mfc),
+                       _pre_slot(pres, mfc))
         y = _tree_where(fwd_active, y, fwd_state)
         # save the INCOMING state; the backward replay re-runs stage_step on
-        # it (stage 0's injection re-derives its input from the microbatch)
+        # it (stage 0's injection re-derives its input from `pre`/`mb`)
         ring = _tree_update(ring, fwd_state, mfc % S, pred=fwd_active)
 
         # backward half: microbatch mb at slot 2(S-1) - rank + 2*mb + 1 ------
@@ -362,11 +691,14 @@ def one_f_one_b_loss_grads(stage_step: Callable, loss_fn: Callable, params,
         mbc = jnp.clip(mb, 0, M - 1)
         x_saved = _tree_index(ring, mbc % S)
         mb_b = _tree_index(mbs, mbc)
+        pre_b = _pre_slot(pres, mbc)
         if with_dxs:
-            (_, l_mb), vjp = jax.vjp(fwd_and_loss, params, x_saved, mb_b)
+            (_, l_mb), vjp = jax.vjp(fwd_and_loss, params, x_saved, pre_b,
+                                     mb_b)
         else:
             (_, l_mb), vjp = jax.vjp(
-                lambda p, x: fwd_and_loss(p, x, mb_b), params, x_saved)
+                lambda p, x, pr: fwd_and_loss(p, x, pr, mb_b), params,
+                x_saved, pre_b)
         ct_y = _tree_where(bwd_active & ~on_last, bwd_state,
                            jax.tree.map(jnp.zeros_like, bwd_state))
         ct_l = jnp.where(bwd_active & on_last, jnp.ones_like(l_mb),
@@ -376,27 +708,201 @@ def one_f_one_b_loss_grads(stage_step: Callable, loss_fn: Callable, params,
         acc_g = jax.tree.map(jnp.add, acc_g, dp)
         loss_acc = loss_acc + jnp.where(
             bwd_active & on_last, l_mb, 0.0).astype(jnp.float32)
+        if pres is not None:
+            d_pres = _tree_update(d_pres, out_ct[2], mbc, pred=bwd_active)
         if with_dxs:
-            dmbs = _tree_update(dmbs, out_ct[2], mbc, pred=bwd_active)
+            dmbs = _tree_update(dmbs, out_ct[3], mbc, pred=bwd_active)
 
         # communicate: activations right, cotangents left --------------------
         fwd_next = jax.tree.map(lambda a: _shift_raw(a, axis, S), y)
         bwd_next = jax.tree.map(
             lambda a: lax.ppermute(a, axis, _bwd_perm(S)), dx)
-        return (fwd_next, bwd_next, ring, acc_g, dmbs, loss_acc), None
+        return (fwd_next, bwd_next, ring, acc_g, d_pres, dmbs, loss_acc), None
 
     carry, _ = lax.scan(slot, carry0, jnp.arange(T))
-    _, _, _, grads, dmbs, loss = carry
+    _, _, _, grads, d_pres, dmbs, loss = carry
+    if pre_vjp is not None:
+        grads = jax.tree.map(jnp.add, grads, pre_vjp(d_pres)[0])
     return lax.psum(loss, axis), grads, (dmbs if with_dxs else None)
+
+
+# ---------------------------------------------------------------------------
+# Table engine: runs any PipeSchedule (interleaved, zb) slot by slot.
+# Chunk contract: chunk_step(params, chunk, state, mb, pre) -> state, where
+# `chunk` is the LOCAL virtual-stage index on this rank (traced int; V=1
+# schedules always pass 0) — the step slices its chunk's parameters and does
+# its own injection for (rank 0, chunk 0).
+# ---------------------------------------------------------------------------
+def _table_loss_grads(sched: PipeSchedule, chunk_step: Callable,
+                      loss_fn: Callable, params, mbs, state0, axis: str,
+                      with_dxs: bool = False,
+                      pre_fn: Callable | None = None):
+    """(loss, dparams, dmbs?) by scanning a tabulated schedule.
+
+    One scan slot = one table row: (1) the activation/cotangent sent by the
+    neighbours LAST slot is filed into its ring-buffer register (`f_recv` /
+    `b_recv`); (2) the forward chunk runs from its input register; (3) the
+    backward chunk replays from its SAVED input register via `jax.vjp`
+    (recompute-based, exactly like 1F1B) with the cotangent read from the
+    ct register — or seeded from the loss on the last virtual stage — and
+    its parameter gradient is accumulated; under zb the blocks' weight-grad
+    half is instead pushed onto the W-queue at its `b_push` register and
+    drained into the accumulator at the scheduled W slot; (4) this slot's
+    outputs are ppermuted (+1 for activations, -1 for cotangents) —
+    unconditionally, SPMD-uniform; receivers discard garbage by table.
+
+    Inactive phases run masked (zero cotangents -> exact-zero gradient
+    contributions by linearity), so accumulators need no masking beyond
+    the table preds.  Gradient exactness is pinned by the dist_harness
+    `pipeline_v2` parity case.
+    """
+    M, S, T = sched.n_micro, sched.n_stages, sched.slots
+    rank = pipe_rank(axis)
+    is_zb = sched.schedule == "zb"
+
+    if pre_fn is not None:
+        pres, pre_vjp = jax.vjp(lambda p: pre_fn(p, mbs), params)
+    else:
+        pres, pre_vjp = None, None
+
+    if is_zb:
+        # W-split: the queue holds the FULL parameter-gradient pytree of one
+        # backward (the weight half); the input half is the dx that leaves
+        # immediately.  depth_w bounds the backlog.
+        wq0 = _tree_stack_zeros(jax.tree.map(jnp.zeros_like, params),
+                                sched.depth_w)
+    else:
+        wq0 = ()
+
+    zeros_state = jax.tree.map(jnp.zeros_like, state0)
+    carry0 = (
+        zeros_state,                                   # arriving activation
+        zeros_state,                                   # arriving cotangent
+        _tree_stack_zeros(state0, sched.depth_in),     # saved-input registers
+        _tree_stack_zeros(state0, sched.depth_ct),     # cotangent registers
+        jax.tree.map(jnp.zeros_like, params),          # grad accumulator
+        wq0,                                           # zb W-queue
+        jax.tree.map(jnp.zeros_like, pres) if pres is not None else (),
+        jax.tree.map(jnp.zeros_like, mbs) if with_dxs else (),
+        jnp.zeros((), jnp.float32),                    # loss accumulator
+    )
+    tables = dict(
+        f_mb=sched.f_mb, f_chunk=sched.f_chunk, f_in=sched.f_in,
+        f_recv=sched.f_recv, b_mb=sched.b_mb, b_chunk=sched.b_chunk,
+        b_in=sched.b_in, b_ct=sched.b_ct, b_recv=sched.b_recv,
+        b_last=sched.b_last, b_push=sched.b_push, w_idx=sched.w_idx)
+    tables = {k: jnp.asarray(v) for k, v in tables.items()}
+
+    def slot(carry, row):
+        (in_state, in_ct, in_buf, ct_buf, acc_g, wq, d_pres, dmbs,
+         loss_acc) = carry
+        g = lambda k: row[k][rank]
+
+        # (1) file the arrivals --------------------------------------------
+        f_recv, b_recv = g("f_recv"), g("b_recv")
+        in_buf = _tree_update(in_buf, in_state, jnp.maximum(f_recv, 0),
+                              pred=f_recv >= 0)
+        ct_buf = _tree_update(ct_buf, in_ct, jnp.maximum(b_recv, 0),
+                              pred=b_recv >= 0)
+
+        # (2) forward chunk -------------------------------------------------
+        mfc = jnp.clip(g("f_mb"), 0, M - 1)
+        y = chunk_step(params, jnp.maximum(g("f_chunk"), 0),
+                       _tree_index(in_buf, g("f_in")),
+                       _tree_index(mbs, mfc), _pre_slot(pres, mfc))
+
+        # (3) backward chunk: replay from the saved input -------------------
+        b_act = g("b_mb") >= 0
+        mbc = jnp.clip(g("b_mb"), 0, M - 1)
+        chunk_b = jnp.maximum(g("b_chunk"), 0)
+        x_saved = _tree_index(in_buf, g("b_in"))
+        mb_b = _tree_index(mbs, mbc)
+        pre_b = _pre_slot(pres, mbc)
+        on_last = g("b_last")
+
+        def replay(p, x, pr, mb_):
+            yb = chunk_step(p, chunk_b, x, mb_, pr)
+            return yb, loss_fn(p, yb, mb_)
+
+        if with_dxs:
+            (_, l_mb), vjp = jax.vjp(replay, params, x_saved, pre_b, mb_b)
+        else:
+            (_, l_mb), vjp = jax.vjp(
+                lambda p, x, pr: replay(p, x, pr, mb_b), params, x_saved,
+                pre_b)
+        ct_read = _tree_index(ct_buf, g("b_ct"))
+        ct_y = _tree_where(b_act & ~on_last, ct_read,
+                           jax.tree.map(jnp.zeros_like, ct_read))
+        ct_l = jnp.where(b_act & on_last, jnp.ones_like(l_mb),
+                         jnp.zeros_like(l_mb))
+        out_ct = vjp((ct_y, ct_l))
+        dp, dx = out_ct[0], out_ct[1]
+        if is_zb:
+            # push the weight half; drain the scheduled W-queue register
+            push, widx = g("b_push"), g("w_idx")
+            wq = _tree_update(wq, dp, jnp.maximum(push, 0),
+                              pred=(push >= 0) & b_act)
+            drained = _tree_index(wq, jnp.maximum(widx, 0))
+            acc_g = jax.tree.map(
+                lambda a, d: a + jnp.where(widx >= 0, d, jnp.zeros_like(d)),
+                acc_g, drained)
+        else:
+            acc_g = jax.tree.map(jnp.add, acc_g, dp)
+        loss_acc = loss_acc + jnp.where(
+            b_act & on_last, l_mb, 0.0).astype(jnp.float32)
+        if pres is not None:
+            # accumulate (a rank backs up SEVERAL chunks of the same
+            # microbatch under interleaving; non-injecting chunks add exact
+            # zeros)
+            d_pres = _tree_update(
+                d_pres,
+                jax.tree.map(jnp.add, _tree_index(d_pres, mbc), out_ct[2]),
+                mbc, pred=b_act)
+        if with_dxs:
+            dmbs = _tree_update(
+                dmbs,
+                jax.tree.map(jnp.add, _tree_index(dmbs, mbc), out_ct[3]),
+                mbc, pred=b_act)
+
+        # (4) communicate: activations +1, cotangents -1 --------------------
+        out_state = jax.tree.map(lambda a: _shift_raw(a, axis, S), y)
+        out_ct = jax.tree.map(
+            lambda a: lax.ppermute(a, axis, _bwd_perm(S)), dx)
+        return (out_state, out_ct, in_buf, ct_buf, acc_g, wq, d_pres, dmbs,
+                loss_acc), None
+
+    carry, _ = lax.scan(slot, carry0, tables)
+    _, _, _, _, grads, _, d_pres, dmbs, loss = carry
+    if pre_vjp is not None:
+        grads = jax.tree.map(jnp.add, grads, pre_vjp(d_pres)[0])
+    return lax.psum(loss, axis), grads, (dmbs if with_dxs else None)
+
+
+def _as_chunk_step(stage_step: Callable) -> Callable:
+    """Lift a single-chunk stage_step(params, state, mb, pre) to the chunk
+    contract (V=1 schedules: the chunk index is always 0)."""
+    return lambda p, chunk, state, mb, pre: stage_step(p, state, mb, pre)
+
+
+def resolve_schedule(schedule: str) -> str:
+    """Map 'auto' to a concrete schedule for paths without a planner (BYO
+    dispatchers, benches): zb — it strictly improves the 1F1B bubble with
+    the same V=1 stage layout, so it is the safe argmin absent a model."""
+    return "zb" if schedule == "auto" else schedule
 
 
 def pipeline_loss_grads(stage_step: Callable, loss_fn: Callable, params, mbs,
                         state0, cfg: DistConfig, schedule: str | None = None,
-                        with_dxs: bool = False):
+                        with_dxs: bool = False,
+                        pre_fn: Callable | None = None,
+                        chunk_step: Callable | None = None):
     """Dispatch the model-contract schedules: (loss, dparams, dmbs?).
 
     `cfg.pp_axis` names the pipe mesh axis; `cfg.pp_size` is the stage
-    count; `schedule` overrides `cfg.pp_schedule`.
+    count; `schedule` overrides `cfg.pp_schedule` ('auto' resolves to zb
+    here — the planner resolves 'auto' properly via the cost model before
+    reaching this).  The interleaved schedule needs `chunk_step` (per-
+    virtual-stage parameter slicing) and `cfg.pp_virtual >= 2`.
     """
     if cfg.pp_axis is None:
         raise ValueError(
@@ -407,14 +913,34 @@ def pipeline_loss_grads(stage_step: Callable, loss_fn: Callable, params, mbs,
             f"mbs carries {M} microbatches but cfg.pp_microbatches="
             f"{cfg.pp_microbatches}; stack the batch to match (or leave "
             "pp_microbatches=0 to accept any M)")
-    schedule = schedule or cfg.pp_schedule
-    args = (stage_step, loss_fn, params, mbs, state0, cfg.pp_size,
-            cfg.pp_axis, with_dxs)
+    schedule = resolve_schedule(schedule or cfg.pp_schedule)
     if schedule == "gpipe":
-        return gpipe_loss_grads(*args)
+        return gpipe_loss_grads(stage_step, loss_fn, params, mbs, state0,
+                                cfg.pp_size, cfg.pp_axis, with_dxs, pre_fn)
     if schedule == "1f1b":
-        return one_f_one_b_loss_grads(*args)
-    raise ValueError(f"unknown pipeline schedule {schedule!r}")
+        return one_f_one_b_loss_grads(stage_step, loss_fn, params, mbs,
+                                      state0, cfg.pp_size, cfg.pp_axis,
+                                      with_dxs, pre_fn)
+    if schedule in ("zb", "interleaved"):
+        if schedule == "interleaved":
+            if chunk_step is None:
+                raise ValueError(
+                    "pp_schedule='interleaved' needs a chunk_step (per-"
+                    "virtual-stage parameter slicing); the staged Trainer "
+                    "path provides one — see train/train_step.py")
+            V = cfg.pp_virtual
+            if V < 2:
+                raise ValueError(
+                    "pp_schedule='interleaved' needs pp_virtual >= 2 "
+                    f"(got {V}); plan_parallel resolves pp_virtual=0")
+        else:
+            V = 1
+            chunk_step = chunk_step or _as_chunk_step(stage_step)
+        sched = build_pipe_schedule(M, cfg.pp_size, schedule, V)
+        return _table_loss_grads(sched, chunk_step, loss_fn, params, mbs,
+                                 state0, cfg.pp_axis, with_dxs, pre_fn)
+    raise ValueError(f"unknown pipeline schedule {schedule!r}; "
+                     f"known: {PIPE_SCHEDULES} or 'auto'")
 
 
 # ---------------------------------------------------------------------------
@@ -424,8 +950,10 @@ def pipeline_loss_grads(stage_step: Callable, loss_fn: Callable, params, mbs,
 def _inject_xs(stage_fn: Callable, axis: str):
     """Lift stage_fn(params, x) to the model contract: the per-slot `mb` IS
     the stage-0 activation, where()'d in on rank 0 (the transpose routes the
-    stage-0 input cotangent back onto the stream — that is `dxs`)."""
-    def step(params, state, mb):
+    stage-0 input cotangent back onto the stream — that is `dxs`).  The
+    `pre` slot of the 4-arg contract is unused (raw streams have no hoisted
+    stage-0 entry computation)."""
+    def step(params, state, mb, pre=()):
         x_in = _tree_where(lax.axis_index(axis) == 0, mb, state)
         return stage_fn(params, x_in)
     return step
@@ -455,6 +983,23 @@ def one_f_one_b(stage_fn: Callable, params, xs, loss_fn: Callable,
     loss, dparams, dxs = one_f_one_b_loss_grads(
         _inject_xs(stage_fn, axis), lambda p, y, mb: loss_fn(y), params,
         xs, state0, n_stages, axis, with_dxs=True)
+    return loss, dparams, dxs
+
+
+def zero_bubble(stage_fn: Callable, params, xs, loss_fn: Callable,
+                n_stages: int, axis: str = "pipe"):
+    """(loss, dparams, dxs) under the zero-bubble W-split schedule — same
+    contract as `gpipe_grads`.  F/Bx sit at their 1F1B slots; the weight-
+    grad half of each backward is queued and drained into the accumulator
+    at its scheduled W slot (filling the cooldown bubble), so the modeled
+    idle fraction drops to ~(S-1)/(3M+S-1)."""
+    M = _leading_dim(xs)
+    state0 = jax.tree.map(jnp.zeros_like, _tree_index(xs, 0))
+    sched = build_pipe_schedule(M, n_stages, "zb")
+    loss, dparams, dxs = _table_loss_grads(
+        sched, _as_chunk_step(_inject_xs(stage_fn, axis)),
+        lambda p, y, mb: loss_fn(y), params, xs, state0, axis,
+        with_dxs=True)
     return loss, dparams, dxs
 
 
@@ -502,10 +1047,19 @@ def pipeline_grads(stage_fn: Callable, params, xs, loss_fn: Callable,
             f"xs carries {_leading_dim(xs)} microbatches but "
             f"cfg.pp_microbatches={cfg.pp_microbatches}; stack the batch to "
             "match (or leave pp_microbatches=0 to accept any M)")
-    schedule = schedule or cfg.pp_schedule
+    schedule = resolve_schedule(schedule or cfg.pp_schedule)
     args = (stage_fn, params, xs, loss_fn, cfg.pp_size, cfg.pp_axis)
     if schedule == "gpipe":
         return gpipe_grads(*args)
     if schedule == "1f1b":
         return one_f_one_b(*args)
-    raise ValueError(f"unknown pipeline schedule {schedule!r}")
+    if schedule == "zb":
+        return zero_bubble(*args)
+    if schedule == "interleaved":
+        raise ValueError(
+            "the raw-stream contract cannot run 'interleaved': an opaque "
+            "stage_fn(params, x) has no virtual-stage slicing.  Use the "
+            "model contract (parallelize() / pipeline_loss_grads with a "
+            "chunk_step) instead.")
+    raise ValueError(f"unknown pipeline schedule {schedule!r}; "
+                     f"known: {PIPE_SCHEDULES} or 'auto'")

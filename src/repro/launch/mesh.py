@@ -55,13 +55,14 @@ def make_production_mesh(*, multi_pod: bool = False,
 
 
 def production_dcfg(*, multi_pod: bool = False, zero3_global: bool = False,
-                    pipeline_stages: int = 1, pp_schedule: str = "1f1b",
+                    pipeline_stages: int = 1, pp_schedule: str = "auto",
                     context_degree: int = 1, **overrides) -> DistConfig:
     """bf16 training config on the production mesh. Default multi-pod
     sharding is HSDP (shard in-pod, replicate across pods — bounded DCN
     traffic); zero3_global shards over pod x data instead.
-    pipeline_stages > 1 adds an outermost 'pipe' axis (1F1B by default —
-    live activations bounded by the stage count, see core/pipeline.py);
+    pipeline_stages > 1 adds an outermost 'pipe' axis ('auto' by default:
+    plan_parallel scores gpipe/1f1b/interleaved/zb by modeled bubble
+    fraction and picks the argmin, see core/pipeline.py + core/api.py);
     context_degree > 1 adds the 'ctx' axis between data and model (ring
     attention, core/context.py) and folds it into the FSDP domain."""
     shape, axes = _production_layout(multi_pod, pipeline_stages,

@@ -10,7 +10,7 @@ prepends an outermost 'pipe' axis), and the single Trainer routes through
   PYTHONPATH=src python -m repro.launch.train --arch qwen3_1_7b --smoke \
       --steps 50 --mesh 4,2
   PYTHONPATH=src python -m repro.launch.train --arch qwen3_1_7b --smoke \
-      --steps 50 --mesh 2,2 --pp 2 --pp-schedule 1f1b --pp-microbatches 4
+      --steps 50 --mesh 2,2 --pp 2 --pp-schedule zb --pp-microbatches 4
 """
 
 import argparse
@@ -58,8 +58,15 @@ def main():
                     help="non-pipe mesh: 'data,model' or 'pod,data,model'")
     ap.add_argument("--pp", type=int, default=1,
                     help="pipeline stages; >1 adds an outermost 'pipe' axis")
-    ap.add_argument("--pp-schedule", default="1f1b",
-                    choices=("gpipe", "1f1b"))
+    ap.add_argument("--pp-schedule", default="auto",
+                    choices=("auto", "gpipe", "1f1b", "interleaved", "zb"),
+                    help="'auto' scores every valid schedule by modeled "
+                         "bubble fraction + in-flight memory and picks the "
+                         "argmin (core/api); the resolved pick is printed "
+                         "in the plan line")
+    ap.add_argument("--pp-virtual", type=int, default=0,
+                    help="virtual stage chunks per rank for 'interleaved' "
+                         "(0 = smallest divisor >= 2 of layers_per_stage)")
     ap.add_argument("--pp-microbatches", type=int, default=0,
                     help="pipeline microbatches M (0 = use the stage count)")
     ap.add_argument("--cp", type=int, default=1,
@@ -97,6 +104,7 @@ def main():
         mesh_axes=mesh_axes, mesh_shape=mesh_shape,
         pp_axis="pipe" if args.pp > 1 else None,
         pp_schedule=args.pp_schedule,
+        pp_virtual=args.pp_virtual,
         pp_microbatches=args.pp_microbatches,
         cp_axis="ctx" if args.cp > 1 else None,
         # the ctx axis joins the FSDP domain: params shard over data x ctx

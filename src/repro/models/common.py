@@ -120,6 +120,23 @@ class StageSpec:
     pre_keys: tuple[str, ...]
     post_keys: tuple[str, ...]
     replicated_keys: tuple[str, ...] = ()
+    # Virtual stages per pipe rank (interleaved schedule): the stack is laid
+    # out (S, V, layers_per_stage/V, storage...) and chunk j = v*S + s (the
+    # j-th slice of the layer order) lives at slot [s, v].  1 = plain
+    # contiguous staging; set by plan_parallel from the resolved schedule.
+    virtual: int = 1
+    # Uneven stage sizes: stage_layers[s] REAL layers on stage s (models
+    # whose block granularity doesn't divide L, e.g. zamba2 superblocks).
+    # The stack is still stored (S, layers_per_stage, ...) with
+    # layers_per_stage = max needed; the tail of a short stage is
+    # ZERO-PADDED and the model's stage_blocks must make padding layers
+    # exact identities (zamba2: zero-param blocks).  None = even.
+    stage_layers: tuple[int, ...] | None = None
+    # Whether the layer stack may be sliced into V > 1 virtual chunks.
+    # Models with intra-stage structure that a chunk boundary would break
+    # (zamba2's shared-block cadence) set False; the planner then never
+    # proposes the interleaved schedule.
+    chunkable: bool = True
 
     def owner(self, key: str) -> int | str:
         """Stage index owning `key` ('all' for replicated, 'sliced' for the
@@ -151,10 +168,40 @@ class StageSpec:
                 f"pipelined key {self.pipelined!r} is not a stacked key "
                 f"({sorted(stacked_keys)})")
         L = stacked_keys[self.pipelined]
-        if self.layers_per_stage * self.n_stages != L:
-            raise ValueError(
-                f"{self.pipelined!r}: {self.n_stages} stages x "
-                f"{self.layers_per_stage} layers != stack length {L}")
+        if self.stage_layers is None:
+            if self.layers_per_stage * self.n_stages != L:
+                raise ValueError(
+                    f"{self.pipelined!r}: {self.n_stages} stages x "
+                    f"{self.layers_per_stage} layers != stack length {L}")
+        else:
+            if len(self.stage_layers) != self.n_stages:
+                raise ValueError(
+                    f"stage_layers has {len(self.stage_layers)} entries for "
+                    f"{self.n_stages} stages")
+            if sum(self.stage_layers) != L:
+                raise ValueError(
+                    f"{self.pipelined!r}: stage_layers {self.stage_layers} "
+                    f"sum to {sum(self.stage_layers)} != stack length {L}")
+            if max(self.stage_layers) > self.layers_per_stage:
+                raise ValueError(
+                    f"stage_layers max {max(self.stage_layers)} exceeds the "
+                    f"padded layers_per_stage {self.layers_per_stage}")
+            if self.virtual != 1:
+                raise ValueError(
+                    "uneven stage_layers cannot be interleaved (virtual "
+                    f"must be 1, got {self.virtual})")
+        if self.virtual < 1:
+            raise ValueError(f"virtual must be >= 1, got {self.virtual}")
+        if self.virtual > 1:
+            if not self.chunkable:
+                raise ValueError(
+                    f"{self.pipelined!r} is not chunkable (model forbids "
+                    "virtual stage slicing) but virtual="
+                    f"{self.virtual}")
+            if self.layers_per_stage % self.virtual:
+                raise ValueError(
+                    f"layers_per_stage {self.layers_per_stage} does not "
+                    f"split into {self.virtual} virtual chunks")
 
 
 def even_stage_slices(n_layers: int, n_stages: int, what: str) -> int:

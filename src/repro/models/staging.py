@@ -7,11 +7,23 @@ slot s.  Slot contents follow the model's `StageSpec`
 
   * the ``pipelined`` stack's (L, storage...) leaves are RESHAPED to
     (S, L/S, storage...) — stage s owns its contiguous layer slice, real
-    data in every slot, per-device block memory divided by S;
-  * ``pre_keys`` / ``post_keys`` leaves are zero-filled except on the
-    owning slot (0 / S-1).  SPMD needs every rank to trace the embedding
-    and head compute, so the non-owning slots exist but hold zeros and
-    receive zero gradients (the schedule's rank masks select them away);
+    data in every slot, per-device block memory divided by S.  With
+    ``spec.virtual = V > 1`` (interleaved schedule) the layout is
+    (S, V, L/(S*V), storage...): slot [s, v] holds virtual-stage chunk
+    j = v*S + s of the layer order, so rank s owns V NON-CONTIGUOUS slices.
+    With ``spec.stage_layers`` (uneven stages, e.g. zamba2 superblocks)
+    stage s holds its stage_layers[s] real layers zero-padded to
+    layers_per_stage — the model's stage_blocks must make the zero-padding
+    layers exact identities;
+  * ``pre_keys`` / ``post_keys`` leaves are PIPE-SHARDED when their
+    per-device FSDP chunk divides by S (core/meta.pipe_shardable — compute
+    `pipe_sharded_groups` once and pass it in): the owner's storage is
+    split (S, chunk/S) across the pipe ranks and re-assembled per step with
+    one pipe-axis all-gather (core/collectives.pipe_param_gather), so no
+    rank carries a full-size zero buffer and the memory simulator's staging
+    term matches device reality.  Groups that don't divide fall back to the
+    original zero-fill (owner slot real, others zero — SPMD still traces
+    the embedding/head on every rank either way);
   * ``replicated_keys`` leaves hold the SAME values in every slot; their
     gradients are psum'ed over the pipe axis by the staged train step and
     identical AdamW updates keep the slots in sync.
@@ -29,7 +41,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.dist import DistConfig
-from repro.core.meta import ParamMeta
+from repro.core.meta import ParamMeta, pipe_shardable
 from repro.models.common import StageSpec
 
 
@@ -37,12 +49,77 @@ def _is_meta(x):
     return isinstance(x, ParamMeta)
 
 
-def stage_storage_specs(model, dcfg: DistConfig) -> dict:
+def pipe_sharded_groups(model, dcfg: DistConfig | None,
+                        spec: StageSpec) -> frozenset:
+    """The single-owner (pre/post) groups stored pipe-SHARDED under this
+    (model, dcfg, spec) — the one decision point shared by stage_tree /
+    unstage_tree / the abstract shapes / the train step / the memory
+    simulator, so layouts can never disagree."""
+    if dcfg is None or dcfg.pp_axis is None or dcfg.pp_size <= 1:
+        return frozenset()
+    metas = model.metas(dcfg)
+    return frozenset(
+        k for k in metas
+        if isinstance(spec.owner(k), int) and pipe_shardable(metas[k], dcfg))
+
+
+def _pipe_shard(a, S: int, fsdp: int):
+    """(..., pl) -> (S, ..., pl/S): within EVERY per-device FSDP chunk of
+    the flat storage, pipe rank r takes the r-th 1/S slice — so a tiled
+    pipe-axis all-gather of the (fsdp-sharded) slices reconstructs each
+    device's ordinary FSDP chunk exactly (core/collectives.
+    pipe_param_gather)."""
+    *lead, pl = a.shape
+    q = pl // (fsdp * S)
+    b = a.reshape(*lead, fsdp, S, q)
+    b = jnp.moveaxis(b, -2, 0)
+    return b.reshape(S, *lead, pl // S)
+
+
+def _pipe_unshard(a, fsdp: int):
+    """Exact inverse of `_pipe_shard`."""
+    S = a.shape[0]
+    lead, pls = list(a.shape[1:-1]), a.shape[-1]
+    q = pls // fsdp
+    b = a.reshape(S, *lead, fsdp, q)
+    b = jnp.moveaxis(b, 0, -2)
+    return b.reshape(*lead, S * fsdp * q)
+
+
+def _stage_stack(a, spec: StageSpec):
+    """(L, storage...) pipelined stack -> the staged slot layout."""
+    S, Lp, V = spec.n_stages, spec.layers_per_stage, spec.virtual
+    if spec.stage_layers is not None:
+        out = jnp.zeros((S, Lp, *a.shape[1:]), a.dtype)
+        off = 0
+        for s, n in enumerate(spec.stage_layers):
+            out = out.at[s, :n].set(a[off:off + n])
+            off += n
+        return out
+    if V > 1:
+        b = a.reshape(V, S, Lp // V, *a.shape[1:])
+        return jnp.moveaxis(b, 0, 1)          # (S, V, Lp/V, ...)
+    return a.reshape(S, Lp, *a.shape[1:])
+
+
+def _unstage_stack(a, spec: StageSpec):
+    if spec.stage_layers is not None:
+        return jnp.concatenate(
+            [a[s, :n] for s, n in enumerate(spec.stage_layers)], axis=0)
+    if spec.virtual > 1:
+        b = jnp.moveaxis(a, 1, 0)             # (V, S, Lp/V, ...)
+        return b.reshape(b.shape[0] * b.shape[1] * b.shape[2], *b.shape[3:])
+    return a.reshape(a.shape[0] * a.shape[1], *a.shape[2:])
+
+
+def stage_storage_specs(model, dcfg: DistConfig,
+                        spec: StageSpec | None = None) -> dict:
     """PartitionSpecs of the stage-stacked storage layout.
 
-    Partition-independent: every leaf gains the same leading
-    P(pp_axis, ...) stage dim regardless of which stage owns it (only the
-    SHAPES — stage_abstract_storage — depend on the StageSpec)."""
+    Near-partition-independent: every leaf gains the same leading
+    P(pp_axis, ...) stage dim (pipe-sharded groups keep the SAME spec —
+    only their trailing length changes); the interleaved (S, V, L/(S*V))
+    stack needs `spec` for its extra unsharded chunk dim."""
     if dcfg.pp_axis is None:
         raise ValueError("stage_storage_specs needs dcfg.pp_axis")
     metas = model.metas(dcfg)
@@ -50,6 +127,8 @@ def stage_storage_specs(model, dcfg: DistConfig) -> dict:
     out = {}
     for k in metas:
         inner = (None,) if k in sk else ()
+        if (spec is not None and k == spec.pipelined and spec.virtual > 1):
+            inner = (None, None)               # (V, Lp/V) chunk dims
 
         def one(m: ParamMeta, inner=inner):
             return P(dcfg.pp_axis, *inner, *tuple(m.storage_spec(dcfg)))
@@ -63,40 +142,50 @@ def stage_abstract_storage(model, dcfg: DistConfig, spec: StageSpec) -> dict:
     metas = model.metas(dcfg)
     sk = model.stacked_keys
     S = spec.n_stages
+    sharded = pipe_sharded_groups(model, dcfg, spec)
     out = {}
     for k in metas:
         if k == spec.pipelined:
-            lead = (S, spec.layers_per_stage)
+            if spec.virtual > 1:
+                lead = (S, spec.virtual, spec.layers_per_stage // spec.virtual)
+            else:
+                lead = (S, spec.layers_per_stage)
         elif k in sk:
             lead = (S, sk[k])
         else:
             lead = (S,)
+        div = S if k in sharded else 1
 
-        def one(m: ParamMeta, lead=lead):
-            return jax.ShapeDtypeStruct((*lead, *m.storage_shape(dcfg)),
-                                        m.dtype)
+        def one(m: ParamMeta, lead=lead, div=div):
+            shape = m.storage_shape(dcfg)
+            shape = (*shape[:-1], shape[-1] // div)
+            return jax.ShapeDtypeStruct((*lead, *shape), m.dtype)
 
         out[k] = jax.tree.map(one, metas[k], is_leaf=_is_meta)
     return out
 
 
-def stage_tree(storage: dict, spec: StageSpec) -> dict:
+def stage_tree(storage: dict, spec: StageSpec, dcfg: DistConfig | None = None,
+               sharded: frozenset = frozenset()) -> dict:
     """Plain storage (stacked leaves carry their full L dim) -> staged.
 
     Host-side layout transform over global arrays; placement happens via
-    jax.device_put with `stage_storage_specs`.
+    jax.device_put with `stage_storage_specs`.  `sharded` names the
+    single-owner groups stored pipe-sharded (`pipe_sharded_groups`; needs
+    `dcfg` for the FSDP degree) — others zero-fill non-owner slots.
     """
     S = spec.n_stages
     out = {}
     for k, sub in storage.items():
         owner = spec.owner(k)
         if owner == "sliced":
-            out[k] = jax.tree.map(
-                lambda a: a.reshape(S, spec.layers_per_stage, *a.shape[1:]),
-                sub)
+            out[k] = jax.tree.map(lambda a: _stage_stack(a, spec), sub)
         elif owner == "all":
             out[k] = jax.tree.map(
                 lambda a: jnp.broadcast_to(a[None], (S, *a.shape)), sub)
+        elif k in sharded:
+            fsdp = dcfg.fsdp_size
+            out[k] = jax.tree.map(lambda a: _pipe_shard(a, S, fsdp), sub)
         else:
             out[k] = jax.tree.map(
                 lambda a: jnp.zeros((S, *a.shape), a.dtype).at[owner].set(a),
@@ -104,35 +193,43 @@ def stage_tree(storage: dict, spec: StageSpec) -> dict:
     return out
 
 
-def unstage_tree(staged: dict, spec: StageSpec) -> dict:
+def unstage_tree(staged: dict, spec: StageSpec,
+                 dcfg: DistConfig | None = None,
+                 sharded: frozenset = frozenset()) -> dict:
     """Inverse of `stage_tree`: staged (S, ...) leaves -> plain storage.
 
     For replicated keys slot 0 is taken (all slots agree after the pipe-axis
-    grad psum); for pre/post keys the owning slot; the pipelined stack's
-    slices are re-concatenated in stage order.
+    grad psum); pipe-sharded groups are re-assembled from their slices;
+    other pre/post keys take the owning slot; the pipelined stack's slices
+    are re-concatenated in stage (and virtual-chunk) order.
     """
     out = {}
     for k, sub in staged.items():
         owner = spec.owner(k)
         if owner == "sliced":
-            out[k] = jax.tree.map(
-                lambda a: a.reshape(a.shape[0] * a.shape[1], *a.shape[2:]),
-                sub)
+            out[k] = jax.tree.map(lambda a: _unstage_stack(a, spec), sub)
         elif owner == "all":
             out[k] = jax.tree.map(lambda a: a[0], sub)
+        elif k in sharded:
+            fsdp = dcfg.fsdp_size
+            out[k] = jax.tree.map(lambda a: _pipe_unshard(a, fsdp), sub)
         else:
             out[k] = jax.tree.map(lambda a: a[owner], sub)
     return out
 
 
-def stage_opt_state(opt_state: dict, spec: StageSpec) -> dict:
+def stage_opt_state(opt_state: dict, spec: StageSpec,
+                    dcfg: DistConfig | None = None,
+                    sharded: frozenset = frozenset()) -> dict:
     """Stage the AdamW moments (storage-shaped trees); `step` is scalar."""
-    return {"m": stage_tree(opt_state["m"], spec),
-            "v": stage_tree(opt_state["v"], spec),
+    return {"m": stage_tree(opt_state["m"], spec, dcfg, sharded),
+            "v": stage_tree(opt_state["v"], spec, dcfg, sharded),
             "step": opt_state["step"]}
 
 
-def unstage_opt_state(opt_state: dict, spec: StageSpec) -> dict:
-    return {"m": unstage_tree(opt_state["m"], spec),
-            "v": unstage_tree(opt_state["v"], spec),
+def unstage_opt_state(opt_state: dict, spec: StageSpec,
+                      dcfg: DistConfig | None = None,
+                      sharded: frozenset = frozenset()) -> dict:
+    return {"m": unstage_tree(opt_state["m"], spec, dcfg, sharded),
+            "v": unstage_tree(opt_state["v"], spec, dcfg, sharded),
             "step": opt_state["step"]}

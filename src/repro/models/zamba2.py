@@ -111,34 +111,59 @@ class Zamba2LM:
     def stacked_keys(self) -> dict:
         return {"blocks": self.n_steps}
 
+    def _stage_partition(self, n_stages: int):
+        """Superblock-granularity stage split with an uneven tail.
+
+        The n_super full superblocks are dealt round-robin (earlier stages
+        take the remainder) and the trailing partial superblock rides the
+        LAST stage.  Every stage's storage slot is zero-padded to a uniform
+        layers_per_stage that is a whole number of superblocks — an
+        all-zero mamba block is an EXACT identity (output = x + y @ w_out
+        with y == 0 and w_out == 0) whose parameter gradients are exactly
+        zero (every grad path carries a w_out or y factor), so padding
+        layers stay zero under AdamW and pp parity with the dense model is
+        exact.  Returns (supers_per_stage, real_layers_per_stage, padded
+        layers_per_stage)."""
+        base, rem = divmod(self.n_super, n_stages)
+        if base == 0:
+            raise ValueError(
+                f"{self.cfg.name}: {n_stages} pipeline stages need at least "
+                f"one {self.per}-layer superblock each (n_super="
+                f"{self.n_super})")
+        supers = tuple(base + (1 if s < rem else 0) for s in range(n_stages))
+        reals = [c * self.per for c in supers]
+        reals[-1] += self.n_tail
+        lps = -(-max(reals) // self.per) * self.per
+        return supers, tuple(reals), lps
+
     def stage_spec(self, n_stages: int) -> StageSpec:
-        """Mamba layers slice contiguously; the weight-tied shared attention
-        block is consumed after every superblock on EVERY stage, so it is
-        replicated across stages (grads psum'ed over the pipe axis).  SPMD
-        needs the same program on every stage, so each stage must own a
-        whole number of superblocks and there must be no trailing partial
-        superblock."""
+        """Mamba layers slice contiguously at SUPERBLOCK granularity; the
+        weight-tied shared attention block is consumed after every full
+        superblock on EVERY stage, so it is replicated across stages (grads
+        psum'ed over the pipe axis).  Stages may be uneven (trailing
+        partial superblock, non-divisible superblock counts): short stages
+        are zero-padded to a uniform slot size and `stage_blocks` gates the
+        shared block by this rank's real superblock count.  The superblock
+        cadence means the stack must NOT be sliced into virtual chunks
+        (chunkable=False — the planner never proposes interleaving)."""
         cfg = self.cfg
-        if n_stages > 1:
-            if self.n_tail:
-                raise ValueError(
-                    f"{cfg.name}: pipeline stages need n_layers "
-                    f"({cfg.n_layers}) to be a multiple of "
-                    f"shared_attn_every ({self.per}); {self.n_tail} "
-                    "trailing layers break the uniform stage program")
-            if (cfg.n_layers // n_stages) % self.per or \
-                    cfg.n_layers % n_stages:
-                raise ValueError(
-                    f"{cfg.name}: each of the {n_stages} stages must own a "
-                    f"whole number of {self.per}-layer superblocks "
-                    f"(n_layers={cfg.n_layers})")
+        if n_stages == 1:
+            return StageSpec(
+                n_stages=1, pipelined="blocks",
+                layers_per_stage=cfg.n_layers, pre_keys=("embed",),
+                post_keys=("final_norm", "head"),
+                replicated_keys=("shared",), chunkable=False)
+        _, reals, lps = self._stage_partition(n_stages)
+        uneven = any(r != lps for r in reals)
         return StageSpec(
             n_stages=n_stages,
             pipelined="blocks",
-            layers_per_stage=cfg.n_layers // n_stages,
+            layers_per_stage=lps,
             pre_keys=("embed",),
             post_keys=("final_norm", "head"),
             replicated_keys=("shared",),
+            stage_layers=reals if uneven else None,
+            chunkable=False,
         )
 
     # -------------------------------------------------------------- init --
@@ -316,21 +341,33 @@ class Zamba2LM:
         return {"x": x, "emb0": x}
 
     def stage_blocks(self, storage, state, dcfg: DistConfig, plan=None):
-        """A whole number of superblocks: each = `per` scanned mamba layers
-        + one invocation of the (stage-replicated) shared block."""
+        """A whole number of superblock SLOTS: each = `per` scanned mamba
+        layers + one invocation of the (stage-replicated) shared block,
+        GATED by this rank's real full-superblock count.  Uneven stages
+        (trailing partial superblock / non-divisible splits) zero-pad the
+        layer stack — zero mamba layers are exact identities — and skip the
+        shared block on padded/tail slots.  The program stays rank-uniform
+        (SPMD): every rank traces the same groups and the same shared-block
+        collectives, and jnp.where selects which outputs take effect."""
         x, emb0 = state["x"], state["emb0"]
         consts = self._consts_for(x, dcfg)
         blk = functools.partial(self._mamba_stack_fn, dcfg=dcfg)
         bmetas = self.block_metas(dcfg)
         shared_fn = self._shared_fn(consts, dcfg)
         Lp = jax.tree.leaves(storage["blocks"])[0].shape[0]
-        assert Lp % self.per == 0, "stage_spec guarantees whole superblocks"
+        assert Lp % self.per == 0, "stage_spec pads to whole superblocks"
+        if dcfg.pp_axis is not None and dcfg.pp_size > 1:
+            supers, _, _ = self._stage_partition(dcfg.pp_size)
+            my_count = jnp.asarray(supers)[jax.lax.axis_index(dcfg.pp_axis)]
+        else:
+            my_count = jnp.asarray(Lp // self.per)
         for g in range(Lp // self.per):
             seg = jax.tree.map(
                 lambda s: s[g * self.per:(g + 1) * self.per],
                 storage["blocks"])
             x, _ = apply_stack(blk, bmetas, dcfg, seg, consts, x, plan=plan)
-            x = shared_fn(storage["shared"], x, emb0)
+            x_sh = shared_fn(storage["shared"], x, emb0)
+            x = jnp.where(g < my_count, x_sh, x)
         return {"x": x, "emb0": emb0}
 
     def stage_loss(self, storage, state, mb, dcfg: DistConfig):
@@ -347,8 +384,9 @@ class Zamba2LM:
         return loss
 
     def loss_local(self, storage, batch, dcfg: DistConfig):
-        # general path (supports the trailing partial superblock that the
-        # staged program cannot express — see stage_spec)
+        # general path: full superblocks then the trailing partial
+        # superblock (no shared block after the tail) — the staged program
+        # reproduces this exactly via zero-padded slots (see stage_spec)
         state = self.stage_pre(storage, batch, dcfg)
         x, emb0 = state["x"], state["emb0"]
         consts = self._consts_for(x, dcfg)

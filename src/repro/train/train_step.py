@@ -104,22 +104,44 @@ def wrap_train_step(model, dcfg: DistConfig, shape, ocfg: AdamWConfig,
 # the model's own embedding/blocks/head partitioned across the pipe axis.
 # ---------------------------------------------------------------------------
 def _staged_pieces(model, plan, dcfg: DistConfig):
-    """The stage_step/loss_fn pair + state template builder for the model
-    contract (see core/pipeline module docstring)."""
+    """The pre_fn/stage_step/chunk_step/loss_fn quadruple + state template
+    builder for the model contract (see core/pipeline module docstring).
+
+    `pre_fn` is the hoisted stage-0 entry stream: `model.stage_pre`
+    (including encdec's ENTIRE encoder) is traced exactly once per step —
+    a single `lax.map` over the M microbatches — instead of once per
+    pipeline slot; the engines thread the per-microbatch entry states (and
+    their cotangents) through the scan carry."""
     from jax import lax as _lax
 
     spec = plan.stage
     M = plan.microbatches
     bplan = plan.bucket_plan(spec.pipelined)
 
-    def stage_step(params, state, mb):
-        # every rank traces the stage-0 entry (SPMD-uniform collectives);
-        # only rank 0 keeps it — others pass the piped state through
-        entry = model.stage_pre(params, mb, dcfg)
+    def pre_fn(params, mbs):
+        return _lax.map(lambda mb: model.stage_pre(params, mb, dcfg), mbs)
+
+    def stage_step(params, state, mb, pre):
+        # every rank ran the (SPMD-uniform) entry stream via pre_fn; only
+        # rank 0 keeps it — others pass the piped state through
         rank0 = _lax.axis_index(dcfg.pp_axis) == 0
         state = jax.tree.map(lambda a, b: jnp.where(rank0, a, b),
-                             entry, state)
+                             pre, state)
         return model.stage_blocks(params, state, dcfg, plan=bplan)
+
+    def chunk_step(params, chunk, state, mb, pre):
+        # interleaved: the pipelined stack is laid out (V, Lp/V, ...) per
+        # rank; virtual stage j = chunk*S + rank runs chunk's layer slice.
+        # The entry state injects at virtual stage 0 = (rank 0, chunk 0).
+        inject = (_lax.axis_index(dcfg.pp_axis) == 0) & (chunk == 0)
+        state = jax.tree.map(lambda a, b: jnp.where(inject, a, b),
+                             pre, state)
+        sliced = dict(params)
+        sliced[spec.pipelined] = jax.tree.map(
+            lambda a: _lax.dynamic_index_in_dim(a, chunk, axis=0,
+                                                keepdims=False),
+            params[spec.pipelined])
+        return model.stage_blocks(sliced, state, dcfg, plan=bplan)
 
     def loss_fn(params, y, mb):
         # per-microbatch contribution; 1/M makes the total the local mean
@@ -131,7 +153,7 @@ def _staged_pieces(model, plan, dcfg: DistConfig):
         return jax.tree.map(jnp.zeros_like,
                             model.stage_pre(params, mb0, dcfg))
 
-    return stage_step, loss_fn, state_template
+    return pre_fn, stage_step, chunk_step, loss_fn, state_template
 
 
 def _split_microbatches(batch, m: int):
@@ -145,19 +167,52 @@ def _split_microbatches(batch, m: int):
     return jax.tree.map(one, batch)
 
 
+def _materialize_fn(model, plan, dcfg: DistConfig):
+    """(stage-LOCAL storage) -> storage with pipe-SHARDED pre/post groups
+    re-assembled into full FSDP chunks (ONE pipe-axis all-gather per group
+    per step; models/staging.py).  Differentiated with jax.vjp around the
+    whole pipeline engine, so the transpose is the matching psum-scatter —
+    non-consuming ranks contribute exact-zero cotangents by schedule
+    masking, keeping pp parity exact."""
+    from repro.core import collectives as coll
+    from repro.models import staging
+
+    sharded = staging.pipe_sharded_groups(model, dcfg, plan.stage)
+
+    def materialize(local):
+        out = dict(local)
+        for k in sharded:
+            out[k] = jax.tree.map(
+                lambda a: coll.pipe_param_gather(a, dcfg.pp_axis,
+                                                 dcfg.pp_size),
+                local[k])
+        return out
+
+    return materialize
+
+
 def _staged_loss_grads_fn(model, plan, dcfg: DistConfig):
     """The shared staged core: (stage-LOCAL storage, batch) ->
-    (total loss, stage grads with replicated groups psum'ed over pipe)."""
+    (total loss, stage grads with replicated groups psum'ed over pipe).
+
+    Routes the plan-resolved schedule (dcfg here is plan.exec_dcfg, which
+    carries the scored pp_schedule/pp_virtual write-back)."""
     from repro.core.pipeline import pipeline_loss_grads
 
     spec = plan.stage
-    stage_step, loss_fn, state_template = _staged_pieces(model, plan, dcfg)
+    pre_fn, stage_step, chunk_step, loss_fn, state_template = \
+        _staged_pieces(model, plan, dcfg)
+    materialize = _materialize_fn(model, plan, dcfg)
 
     def loss_grads(local, batch):
         mbs = _split_microbatches(batch, plan.microbatches)
-        state0 = state_template(local, jax.tree.map(lambda a: a[0], mbs))
-        loss, grads, _ = pipeline_loss_grads(stage_step, loss_fn, local,
-                                             mbs, state0, dcfg)
+        full, mat_vjp = jax.vjp(materialize, local)
+        state0 = state_template(full, jax.tree.map(lambda a: a[0], mbs))
+        loss, grads, _ = pipeline_loss_grads(
+            stage_step, loss_fn, full, mbs, state0, dcfg,
+            pre_fn=pre_fn,
+            chunk_step=chunk_step if spec.virtual > 1 else None)
+        (grads,) = mat_vjp(grads)
         for k in spec.replicated_keys:
             grads[k] = jax.tree.map(lambda g: lax.psum(g, dcfg.pp_axis),
                                     grads[k])
@@ -171,19 +226,26 @@ def make_staged_loss_step(model, plan, dcfg: DistConfig,
     """step(staged_storage, batch) -> (loss, staged_grads?) under pp."""
     from repro.core.pipeline import gpipe_loss
 
+    spec = plan.stage
     loss_grads = _staged_loss_grads_fn(model, plan, dcfg)
-    stage_step, loss_fn, state_template = _staged_pieces(model, plan, dcfg)
+    pre_fn, stage_step, _, loss_fn, state_template = \
+        _staged_pieces(model, plan, dcfg)
+    materialize = _materialize_fn(model, plan, dcfg)
 
     def step(staged, batch):
         local = jax.tree.map(lambda a: a[0], staged)   # this rank's stage
-        if with_grads:
+        if with_grads or spec.virtual > 1:
+            # interleaved lays the stack out in virtual chunks, which the
+            # plain forward-only gpipe stream cannot traverse — reuse the
+            # full engine and drop the grads for eval
             loss, grads = loss_grads(local, batch)
         else:
             mbs = _split_microbatches(batch, plan.microbatches)
-            state0 = state_template(local,
+            full = materialize(local)
+            state0 = state_template(full,
                                     jax.tree.map(lambda a: a[0], mbs))
-            loss = gpipe_loss(stage_step, loss_fn, local, mbs, state0,
-                              dcfg.pp_size, dcfg.pp_axis)
+            loss = gpipe_loss(stage_step, loss_fn, full, mbs, state0,
+                              dcfg.pp_size, dcfg.pp_axis, pre_fn=pre_fn)
         loss = lax.pmean(loss, dcfg.mesh_axes) * dcfg.tp_size
         if not with_grads:
             return loss
@@ -228,10 +290,10 @@ def make_staged_train_step(model, plan, dcfg: DistConfig, ocfg: AdamWConfig,
     return step_local
 
 
-def _staged_specs(model, dcfg: DistConfig):
+def _staged_specs(model, dcfg: DistConfig, spec=None):
     from repro.models import staging
 
-    return staging.stage_storage_specs(model, dcfg)
+    return staging.stage_storage_specs(model, dcfg, spec)
 
 
 def wrap_loss_step(model, plan, dcfg: DistConfig, shape,
@@ -245,7 +307,7 @@ def wrap_loss_step(model, plan, dcfg: DistConfig, shape,
         out_specs = (P(), pspecs) if with_grads else P()
         fn, _ = RT.wrap_step(model, dcfg, shape, step, out_specs, mesh=mesh)
         return fn
-    pspecs = _staged_specs(model, dcfg)
+    pspecs = _staged_specs(model, dcfg, plan.stage)
     step = make_staged_loss_step(model, plan, dcfg, with_grads=with_grads)
     in_specs = (pspecs, RT.batch_specs(model, shape, dcfg))
     out_specs = (P(), pspecs) if with_grads else P()
@@ -264,7 +326,7 @@ def wrap_any_train_step(model, plan, dcfg: DistConfig, shape,
                                 mesh=mesh, donate=donate)
         return fn
     step_local = make_staged_train_step(model, plan, dcfg, ocfg, schedule)
-    pspecs = _staged_specs(model, dcfg)
+    pspecs = _staged_specs(model, dcfg, plan.stage)
     opt_specs = {"m": pspecs, "v": pspecs, "step": P()}
     in_specs = (pspecs, opt_specs, RT.batch_specs(model, shape, dcfg))
     out_specs = (pspecs, opt_specs,
@@ -400,5 +462,7 @@ def init_train_state(model, dcfg: DistConfig, key=None, plan=None):
     storage = RT.init_storage(model, key, dcfg)
     if plan is not None and plan.pipelined:
         from repro.models import staging
-        storage = staging.stage_tree(storage, plan.stage)
+        storage = staging.stage_tree(
+            storage, plan.stage, dcfg,
+            staging.pipe_sharded_groups(model, dcfg, plan.stage))
     return storage, init_opt_state(storage)

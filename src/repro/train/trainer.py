@@ -115,8 +115,9 @@ class Trainer:
             storage = self.par.stage_storage(storage)
             if self.plan.pipelined:
                 from repro.models import staging
-                opt_state = staging.stage_opt_state(opt_state,
-                                                    self.plan.stage)
+                opt_state = staging.stage_opt_state(
+                    opt_state, self.plan.stage, self.dcfg,
+                    self.par.pipe_sharded)
             log.info("restored step %d", latest)
             return storage, opt_state, latest
         storage, opt_state = init_train_state(self.model, self.dcfg, key,
@@ -127,8 +128,9 @@ class Trainer:
         if self.plan.pipelined:
             from repro.models import staging
             storage = self.par.unstage_storage(storage)
-            opt_state = staging.unstage_opt_state(opt_state,
-                                                  self.plan.stage)
+            opt_state = staging.unstage_opt_state(
+                opt_state, self.plan.stage, self.dcfg,
+                self.par.pipe_sharded)
         self.ckpt.save(step, storage, opt_state, self.model, self.dcfg)
 
     def _batch(self, step):

@@ -28,6 +28,12 @@ agree exactly on losses, assembled gradients, and one AdamW step.  The
 `trainer_smoke_a/b` cases run every registered arch 2 Trainer steps (plus a
 staged checkpoint) on a pp2 x dp2 x tp2 mesh.
 
+The `pipeline_v2` case covers the PR-6 schedules: interleaved 1F1B (V=2
+virtual stage chunks per rank) and zb (W-split zero-bubble) at pp2 x dp4
+must reproduce pp=1 exactly (losses, grads, AdamW steps), plus zamba2's
+uneven zero-padded stage partition over two chained train steps and the
+stage_pre-hoist trace-count regression.
+
 The `context` case covers context parallelism (core/context.py): zigzag
 sequence sharding + ring attention over the ctx axis — cp2 x dp2 must
 reproduce the cp1 x dp4 baseline exactly (losses, assembled grads, one
@@ -731,6 +737,165 @@ def case_trainer_pipeline():
 
 
 CASES["trainer_pipeline"] = case_trainer_pipeline
+
+
+# --------------------------------------------------------------------------
+# PR-6 schedules: interleaved 1F1B (virtual stages) + zero-bubble W-split.
+# --------------------------------------------------------------------------
+def case_pipeline_v2():
+    """Exact parity of the NEW table-driven schedules through
+    `parallelize()`: at pp2 x dp4, `interleaved` (V=2 virtual stage chunks
+    per rank) and `zb` (W-split zero-bubble) must reproduce the pp=1 losses
+    and every assembled full gradient for a dense and an MoE arch, and the
+    zb AdamW step must reproduce the pp=1 updated weights (tp=1, explicit
+    collectives only, so exact on every jax version).  Also covers zamba2's
+    UNEVEN superblock partition (stage_layers=(3,5), slots zero-padded to
+    6): two chained train steps at pp=2 must track pp=1 — step 2 only
+    agrees if the padded slots stayed exact identities through step 1's
+    optimizer update — and the padded rows are asserted still exactly 0."""
+    import dataclasses as _dc
+
+    from repro.core.api import parallelize
+    from repro.models import runtime as RT
+    from repro.models.common import ShapeConfig
+    from repro.models.registry import build_model, get_arch
+    from repro.optim.adamw import AdamWConfig, init_opt_state
+
+    def _flat(tree):
+        return {jax.tree_util.keystr(p): np.asarray(v) for p, v in
+                jax.tree_util.tree_flatten_with_path(tree)[0]}
+
+    shape = ShapeConfig("t", 32, 8, "train")
+    d1 = fp32_cfg(("data", "model"), (4, 1), ("data",))
+
+    for arch in ("qwen3_1_7b", "qwen2_moe_a2_7b"):
+        cfg, _ = get_arch(arch, smoke=True)
+        cfg = _dc.replace(cfg, n_layers=4)     # Lps=2 -> V=2 chunks
+        model = build_model(cfg)
+        batch = _synth_batch(model, shape, d1, cfg.vocab)
+        full = model.init_full(jax.random.PRNGKey(0), d1)
+        metas1 = model.metas(d1)
+        st1 = {k: RT.tree_to_storage(full[k], metas1[k], d1) for k in full}
+        l1, g1 = parallelize(model, d1, shape).loss_step()(st1, batch)
+        flat1 = _flat({k: RT.tree_from_storage(g1[k], metas1[k], d1)
+                       for k in g1})
+
+        for schedule, virtual in (("zb", 0), ("interleaved", 2)):
+            dp = _fp32_pp(schedule).with_(pp_virtual=virtual)
+            parp = parallelize(model, dp, shape)
+            assert parp.plan.pp_schedule == schedule, parp.plan.pp_schedule
+            if schedule == "interleaved":
+                assert parp.plan.pp_virtual == 2, parp.plan.pp_virtual
+            metasp = model.metas(dp)
+            stp = parp.stage_storage(
+                {k: RT.tree_to_storage(full[k], metasp[k], dp)
+                 for k in full})
+            lp, gp = parp.loss_step()(stp, batch)
+            gplain = parp.unstage_storage(jax.tree.map(np.asarray, gp))
+            flatp = _flat({k: RT.tree_from_storage(gplain[k], metasp[k], dp)
+                           for k in gplain})
+            tag = f"pipeline_v2/{arch}/{schedule}"
+            np.testing.assert_allclose(float(lp), float(l1), rtol=2e-5,
+                                       err_msg=f"{tag}: loss mismatch")
+            assert set(flatp) == set(flat1), f"{tag}: grad tree mismatch"
+            for k, want in flat1.items():
+                np.testing.assert_allclose(
+                    flatp[k], want, rtol=3e-4, atol=3e-6,
+                    err_msg=f"{tag}: grad mismatch at {k}")
+            print(f"PASS {tag} (loss {float(lp):.4f})")
+
+        if arch == "qwen3_1_7b":       # one zb AdamW step vs pp=1
+            fn1 = parallelize(model, d1, shape).train_step(
+                AdamWConfig(lr=1e-3), donate=False)
+            new1, _, m1 = fn1(st1, init_opt_state(st1), batch)
+            dp = _fp32_pp("zb")
+            parp = parallelize(model, dp, shape)
+            metasp = model.metas(dp)
+            stp = parp.stage_storage(
+                {k: RT.tree_to_storage(full[k], metasp[k], dp)
+                 for k in full})
+            fnp = parp.train_step(AdamWConfig(lr=1e-3), donate=False)
+            newp, _, mp = fnp(stp, init_opt_state(stp), batch)
+            np.testing.assert_allclose(float(mp["loss"]), float(m1["loss"]),
+                                       rtol=2e-5, err_msg="zb step loss")
+            np.testing.assert_allclose(
+                float(mp["grad_norm"]), float(m1["grad_norm"]), rtol=2e-4,
+                err_msg="zb step grad_norm")
+            a = _flat(parp.unstage_storage(jax.tree.map(np.asarray, newp)))
+            b = _flat(jax.tree.map(np.asarray, new1))
+            for k in b:
+                np.testing.assert_allclose(
+                    a[k], b[k], rtol=2e-4, atol=1e-5,
+                    err_msg=f"zb updated params mismatch at {k}")
+            print("PASS pipeline_v2/qwen3_1_7b/zb_train_step")
+
+    # zamba2's uneven stages: (3, 5) real layers zero-padded to 6-row slots
+    cfg, model = get_arch("zamba2_1_2b", smoke=True)
+    spec = model.stage_spec(2)
+    assert spec.stage_layers == (3, 5), spec.stage_layers
+    assert spec.layers_per_stage == 6, spec.layers_per_stage
+    batch = _synth_batch(model, shape, d1, cfg.vocab)
+    full = model.init_full(jax.random.PRNGKey(0), d1)
+    metas1 = model.metas(d1)
+    st1 = {k: RT.tree_to_storage(full[k], metas1[k], d1) for k in full}
+    fn1 = parallelize(model, d1, shape).train_step(
+        AdamWConfig(lr=1e-3), donate=False)
+    opt1 = init_opt_state(st1)
+    new1, opt1, m1a = fn1(st1, opt1, batch)
+    new1, _, m1b = fn1(new1, opt1, batch)
+
+    dp = _fp32_pp("1f1b")
+    parp = parallelize(model, dp, shape)
+    metasp = model.metas(dp)
+    stp = parp.stage_storage(
+        {k: RT.tree_to_storage(full[k], metasp[k], dp) for k in full})
+    fnp = parp.train_step(AdamWConfig(lr=1e-3), donate=False)
+    optp = init_opt_state(stp)
+    newp, optp, mpa = fnp(stp, optp, batch)
+    newp, _, mpb = fnp(newp, optp, batch)
+    np.testing.assert_allclose(float(mpa["loss"]), float(m1a["loss"]),
+                               rtol=2e-5, err_msg="zamba2 step-1 loss")
+    np.testing.assert_allclose(float(mpb["loss"]), float(m1b["loss"]),
+                               rtol=2e-4, err_msg="zamba2 step-2 loss")
+    # padded rows (slot 0 holds 3 real layers of 6) must still be EXACT
+    # zeros after two optimizer steps — the identity-slot invariant
+    for leaf in jax.tree.leaves(jax.tree.map(np.asarray,
+                                             newp[spec.pipelined])):
+        pad = leaf[0, spec.stage_layers[0]:]
+        assert not np.any(pad), "zamba2 padded slot drifted from zero"
+    a = _flat(parp.unstage_storage(jax.tree.map(np.asarray, newp)))
+    b = _flat(jax.tree.map(np.asarray, new1))
+    for k in b:
+        np.testing.assert_allclose(
+            a[k], b[k], rtol=5e-4, atol=3e-5,
+            err_msg=f"zamba2 2-step params mismatch at {k}")
+    print("PASS pipeline_v2/zamba2_1_2b/uneven_stages (2 chained steps)")
+
+    # regression: stage-0's `stage_pre` (the embedding) is HOISTED out of
+    # the slot loop — per step build it traces once inside the lax.map
+    # over microbatches (+1 for the hoisted-vjp replay), NOT once per
+    # pipeline slot (2(M+S-1) slots would each retrace it before the fix)
+    calls = []
+    orig_pre = model.stage_pre
+
+    def counting_pre(*a, **kw):
+        calls.append(1)
+        return orig_pre(*a, **kw)
+
+    model.stage_pre = counting_pre
+    try:
+        par2 = parallelize(model, dp, shape)
+        jax.eval_shape(par2.loss_step(), stp, batch)
+    finally:
+        model.stage_pre = orig_pre
+    n_slots = 2 * (dp.pp_microbatches + dp.pp_size - 1)
+    assert 1 <= len(calls) <= 2 < n_slots, \
+        f"stage_pre traced {len(calls)}x per step (slots={n_slots})"
+    print(f"PASS pipeline_v2/stage_pre_hoist (traced {len(calls)}x, "
+          f"{n_slots} slots)")
+
+
+CASES["pipeline_v2"] = case_pipeline_v2
 
 
 def case_remat_vector():

@@ -62,10 +62,15 @@ def test_plan_parallel_stage_partition_invariants(arch):
     # exactly once: no dupes, no gaps, nothing unknown
     assert len(set(declared)) == len(declared)
     assert set(declared) == set(metas.keys())
-    # equal contiguous slices of the existing stacked dim
+    # contiguous slices of the existing stacked dim: equal, or declared
+    # uneven (zero-padded slots of layers_per_stage rows each)
     sk = plan.stacked_keys
     assert spec.pipelined in sk
-    assert spec.layers_per_stage * spec.n_stages == sk[spec.pipelined]
+    if spec.stage_layers is not None:
+        assert sum(spec.stage_layers) == sk[spec.pipelined]
+        assert spec.layers_per_stage >= max(spec.stage_layers)
+    else:
+        assert spec.layers_per_stage * spec.n_stages == sk[spec.pipelined]
     # owner() resolves every group to a well-defined location
     for k in metas:
         assert spec.owner(k) in (0, spec.n_stages - 1, "all", "sliced")
@@ -86,10 +91,15 @@ def test_plan_parallel_without_pipe_axis(arch):
 
 
 def test_plan_parallel_rejects_bad_partitions():
-    # zamba2's stock smoke config has a trailing partial superblock
+    # zamba2's stock smoke config now plans at pp=2 (uneven superblock
+    # stages, zero-padded slots) but still rejects a degree with fewer
+    # superblocks than stages
     _, model = get_arch("zamba2_1_2b", smoke=True)
-    with pytest.raises(ValueError, match="shared_attn_every"):
-        plan_parallel(model, _pp_cfg(2))
+    plan = plan_parallel(model, _pp_cfg(2))
+    assert plan.stage.stage_layers == (3, 5)
+    assert plan.stage.layers_per_stage == 6
+    with pytest.raises(ValueError, match="superblock"):
+        plan_parallel(model, _pp_cfg(4))
     # a stack that does not split evenly
     _, model = get_arch("qwen3_1_7b", smoke=True)   # n_steps == 2
     with pytest.raises(ValueError, match="equal pipeline stages"):
@@ -153,8 +163,9 @@ def test_stage_unstage_roundtrip(arch):
     spec = model.stage_spec(2)
     storage = RT.init_storage(model, jax.random.PRNGKey(0), dcfg)
 
-    staged = staging.stage_tree(storage, spec)
-    back = staging.unstage_tree(staged, spec)
+    sharded = staging.pipe_sharded_groups(model, dcfg, spec)
+    staged = staging.stage_tree(storage, spec, dcfg, sharded)
+    back = staging.unstage_tree(staged, spec, dcfg, sharded)
     flat_a = jax.tree_util.tree_flatten_with_path(storage)[0]
     flat_b = dict((jax.tree_util.keystr(p), v) for p, v in
                   jax.tree_util.tree_flatten_with_path(back)[0])
@@ -239,26 +250,42 @@ def test_bench_pipeline_json_schema(tmp_path):
     doc = T.pipeline_table(json_path=path)
     on_disk = json.load(open(path))
     assert on_disk == doc
-    assert doc["schema"] == "bench_pipeline_v1"
+    assert doc["schema"] == "bench_pipeline_v2"
     assert len(doc["archs"]) >= 2
     for arch, rec in doc["archs"].items():
         assert rec["pp_stages"] > 1
         assert rec["layers_per_stage"] * rec["pp_stages"] \
             == rec["n_scan_steps"]
         assert rec["stats_source"] in ("analytic", "measured")
-        assert set(rec["schedules"]) == {"gpipe", "1f1b"}
+        assert {"gpipe", "1f1b", "zb", "interleaved"} \
+            >= set(rec["schedules"]) >= {"gpipe", "1f1b", "zb"}
+        # the auto resolution recorded what it picked for this arch
+        assert rec["planned_schedule"] in ("gpipe", "1f1b", "zb",
+                                           "interleaved")
         for sched, rows in rec["schedules"].items():
             for row in rows.values():
                 assert 0.0 <= row["bubble_frac"] < 1.0
                 assert row["modeled_step_s"] > 0
-                if sched == "1f1b":
+                if sched in ("1f1b", "zb"):
                     # the 1F1B memory claim: live activations bounded by S
                     assert row["peak_live_microbatches"] \
                         <= rec["pp_stages"]
-                else:
+                elif sched == "gpipe":
                     assert row["peak_live_microbatches"] \
                         == row["microbatches"]
+                else:                   # interleaved: chunk-granular, > 0
+                    assert row["virtual"] >= 2
+                    assert row["peak_live_microbatches"] >= 1
+                if sched == "zb":
+                    assert row["w_queue_depth"] >= 1
             # deeper microbatching shrinks the bubble
             bubbles = [r["bubble_frac"] for r in rows.values()]
             assert bubbles == sorted(bubbles, reverse=True) \
                 or len(set(bubbles)) == 1
+        # the v2 acceptance claim: at EVERY benched microbatch count the
+        # new schedules' modeled bubble strictly improves on 1F1B
+        for M, base in rec["schedules"]["1f1b"].items():
+            for sched in ("zb", "interleaved"):
+                if sched in rec["schedules"]:
+                    assert rec["schedules"][sched][M]["bubble_frac"] \
+                        < base["bubble_frac"], (arch, sched, M)

@@ -112,6 +112,14 @@ def test_trainer_pipeline_full_lm_parity():
     _run("trainer_pipeline", timeout=560)
 
 
+def test_pipeline_v2_schedules():
+    """PR-6 schedules: interleaved (V=2) + zb at pp2 x dp4 == pp=1 exactly
+    (losses, grads, AdamW steps) for dense + MoE, plus zamba2's uneven
+    zero-padded stage partition over two chained train steps.  tp=1, so
+    exact on every jax version (explicit collectives only)."""
+    _run("pipeline_v2", timeout=560)
+
+
 @pytest.mark.slow
 def test_trainer_pp_smoke_dense_family():
     """Every registered arch runs a pp2 x dp2 x tp2 Trainer smoke (2 steps
