@@ -57,6 +57,31 @@ def main():
     print("auto-SAC plan:", par_auto.plan.memory.describe(),
           "->", par_auto.plan.exec_dcfg.remat)
 
+    # --- choosing a comm precision (kernels/quant) -----------------------
+    # DistConfig.comm_precision shrinks how many bytes each collective
+    # moves (the planners already minimize WHEN comm happens):
+    #   "bf16"   default wire dtype — BIT-exact vs the untouched path;
+    #   "fp8_ag" quantize the param all-gathers only (deterministic
+    #            round-to-nearest, per-128-elem-chunk fp32 scales,
+    #            ~0.52x the bytes) — gradients stay full precision;
+    #   "fp8"    both directions: AG as above + STOCHASTICALLY-rounded
+    #            grad reduce-scatters (unbiased, no state);
+    #   "fp8_ef" adds a persistent error-feedback accumulator in the
+    #            optimizer state (opt_state["ef"], fp32 per shard): the
+    #            residual each quantized step leaves behind is re-added
+    #            to the next gradient, so the Markov-et-al. convergence
+    #            guarantee applies;
+    #   "auto"   per-BUCKET choice: the auto_dp planner searches
+    #            partitions x {bf16, fp8_ag, fp8_ef} jointly, paying the
+    #            modeled quantize/dequantize time and keeping bf16
+    #            wherever comm is already hidden (ties break to bf16).
+    # The wire codec is a Pallas quantize/dequantize kernel pair fused
+    # into the flat-buffer pack/unpack path (kernels/quant/); run
+    # `python -m benchmarks.run fig4` for the per-arch exposed-comm
+    # ablation, or pytest -m quant for the parity suite.
+    par_q = parallelize(model, dcfg.with_(comm_precision="auto"), shape)
+    print("quant plan:", par_q.plan.describe())
+
     # --- picking a pipeline schedule (core/pipeline.py) ------------------
     # Four pp_schedule values: "gpipe", "1f1b", "interleaved", "zb" — and
     # "auto" (the production_dcfg default), which scores all of them by

@@ -156,8 +156,15 @@ class ParallelPlan:
                            for k, p in self.bucket_plans.items())
         mem = f" mem[{self.memory.describe()}]" if self.memory is not None \
             else ""
+        quant = ""
+        if d.comm_precision != "bf16":
+            per_bucket = {q for p in self.bucket_plans.values()
+                          for q in (p.precisions or ())}
+            quant = f" comm={d.comm_precision}"
+            if per_bucket:
+                quant += "(" + ",".join(sorted(per_bucket)) + ")"
         return (f"mesh[{mesh}] fsdp={d.fsdp_axes} tp={d.tp_size}"
-                f"{cp}{pp} remat={self.remat} buckets[{buckets}]{mem}")
+                f"{cp}{pp} remat={self.remat} buckets[{buckets}]{quant}{mem}")
 
 
 def _auto_virtual(dcfg: DistConfig, stage) -> int:

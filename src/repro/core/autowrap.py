@@ -48,9 +48,16 @@ import math
 
 from repro.core import hw
 from repro.core.bucketing import BucketPlan
-from repro.core.dist import DistConfig
+from repro.core.dist import AUTO_PRECISIONS, DistConfig
 from repro.core.irgraph import (BlockStats, CommNode, ag_time, build_nodes,
-                                comp_time, rs_time)
+                                comp_time, quant_overhead_s, rs_time)
+
+
+def _cfg_precision(cfg: DistConfig) -> str:
+    """The uniform wire precision a planner prices when it is NOT doing the
+    per-bucket search: the config's own value, with 'auto' planning at bf16
+    (precisions are then assigned per bucket afterwards)."""
+    return "bf16" if cfg.comm_precision == "auto" else cfg.comm_precision
 
 
 def greedy_buckets(nodes: list[CommNode], cfg: DistConfig,
@@ -71,8 +78,9 @@ def greedy_buckets(nodes: list[CommNode], cfg: DistConfig,
         # comm-dominated graphs don't degenerate into one giant bucket.
         prev_c = comp_time(buckets[-1]) if buckets else comp_time(cur)
         cand = cur + [nd]
-        t_ag = ag_time(cand, cfg)
-        t_rs = rs_time(buckets[-1], cfg) if buckets else 0.0
+        prec = _cfg_precision(cfg)
+        t_ag = ag_time(cand, cfg, prec)
+        t_rs = rs_time(buckets[-1], cfg, prec) if buckets else 0.0
         time_ok = (t_ag <= prev_c) and (t_rs + t_ag <= prev_c)
         # `cand` already includes nd; counting nd.mem_bytes again would halve
         # the effective cap for the incoming node (regression-tested in
@@ -91,7 +99,8 @@ def greedy_buckets(nodes: list[CommNode], cfg: DistConfig,
 # The modeled objective both planners are scored on.
 # ---------------------------------------------------------------------------
 def partition_exposure(buckets: list[list[CommNode]], cfg: DistConfig,
-                       pools: list[int] | None = None) -> float:
+                       pools: list[int] | None = None,
+                       precisions: list[str] | None = None) -> float:
     """Cyclic steady-state exposed collective time of a node partition.
 
     Without `pools` (one pool per bucket): bucket i's all-gather and bucket
@@ -111,22 +120,33 @@ def partition_exposure(buckets: list[list[CommNode]], cfg: DistConfig,
 
     The one-time prologue gather is amortized over the layer count and
     ignored in both forms.
+
+    With `precisions` (one resolved wire precision per bucket; default = the
+    config's uniform precision) each bucket's AG/RS is priced at its own
+    wire bytes and the bucket's encode/decode overhead (quant_overhead_s —
+    unhidden compute added to the critical path) is included, so the value
+    is the objective the precision-aware planners minimize.
     """
     if not buckets:
         return 0.0
     if pools is None:
         pools = list(range(len(buckets)))
+    if precisions is None:
+        precisions = [_cfg_precision(cfg)] * len(buckets)
     # merge consecutive same-pool buckets into pooled AG/RS/compute terms
     pooled: list[tuple[float, float, float]] = []   # (ag, rs, comp)
     cur_id = None
-    for pid, grp in zip(pools, buckets):
+    overhead = 0.0
+    for pid, grp, prec in zip(pools, buckets, precisions):
         if pid != cur_id:
             pooled.append((0.0, 0.0, 0.0))
             cur_id = pid
         ag, rs, cp = pooled[-1]
-        pooled[-1] = (ag + ag_time(grp, cfg), rs + rs_time(grp, cfg),
+        pooled[-1] = (ag + ag_time(grp, cfg, prec),
+                      rs + rs_time(grp, cfg, prec),
                       cp + comp_time(grp))
-    exposed = 0.0
+        overhead += quant_overhead_s(grp, prec)
+    exposed = overhead
     k = len(pooled)
     for i, (ag, _, _) in enumerate(pooled):
         _, rs_prev, comp_prev = pooled[(i - 1) % k]
@@ -188,13 +208,14 @@ def dp_buckets(nodes: list[CommNode], cfg: DistConfig,
     m_max = cfg.autowrap_mem_limit if mem_limit is None else mem_limit
     alpha, beta = _linear_coll(cfg)
 
+    prec = _cfg_precision(cfg)
     agb = [0.0] * (n + 1)
     rsb = [0.0] * (n + 1)
     cpt = [0.0] * (n + 1)
     memb = [0.0] * (n + 1)
     for i, nd in enumerate(nodes):
-        agb[i + 1] = agb[i] + nd.ag_bytes
-        rsb[i + 1] = rsb[i] + nd.rs_bytes
+        agb[i + 1] = agb[i] + nd.ag_wire(prec)
+        rsb[i + 1] = rsb[i] + nd.rs_wire(prec)
         cpt[i + 1] = cpt[i] + nd.t_comp()
         memb[i + 1] = memb[i] + nd.mem_bytes
 
@@ -258,6 +279,143 @@ def dp_buckets(nodes: list[CommNode], cfg: DistConfig,
     if partition_exposure(greedy, cfg) < partition_exposure(buckets, cfg):
         return greedy
     return buckets
+
+
+def dp_buckets_precision(
+        nodes: list[CommNode], cfg: DistConfig,
+        mem_limit: float | None = None,
+        cuts: frozenset[int] = frozenset()
+) -> tuple[list[list[CommNode]], list[str]]:
+    """Joint partition x per-bucket-precision DP (comm_precision='auto').
+
+    Same interval DP as `dp_buckets`, with states extended by the LAST
+    bucket's wire precision (the cyclic cost of bucket i prices bucket i's
+    AG at its own precision and bucket i-1's RS at the previous one) and by
+    the FIRST bucket's precision (needed to close the wraparound term).
+    Each bucket additionally pays its encode/decode overhead
+    (quant_overhead_s).  Values are (exposure, quantized-bucket count)
+    tuples compared lexicographically, so at equal exposure the plan
+    prefers bf16 — quantization must buy modeled time to be chosen.
+    """
+    n = len(nodes)
+    if n == 0:
+        return [], []
+    m_max = cfg.autowrap_mem_limit if mem_limit is None else mem_limit
+    alpha, beta = _linear_coll(cfg)
+    precs = AUTO_PRECISIONS
+
+    agb = {p: [0.0] * (n + 1) for p in precs}
+    rsb = {p: [0.0] * (n + 1) for p in precs}
+    ovh = {p: [0.0] * (n + 1) for p in precs}
+    cpt = [0.0] * (n + 1)
+    memb = [0.0] * (n + 1)
+    for i, nd in enumerate(nodes):
+        for p in precs:
+            agb[p][i + 1] = agb[p][i] + nd.ag_wire(p)
+            rsb[p][i + 1] = rsb[p][i] + nd.rs_wire(p)
+            ovh[p][i + 1] = ovh[p][i] + quant_overhead_s([nd], p)
+        cpt[i + 1] = cpt[i] + nd.t_comp()
+        memb[i + 1] = memb[i] + nd.mem_bytes
+
+    def feasible(i: int, j: int) -> bool:          # bucket = nodes[i:j]
+        if any(i < c < j for c in cuts):
+            return False
+        return j - i == 1 or memb[j] - memb[i] <= m_max
+
+    def ag_t(i: int, j: int, p: str) -> float:
+        return alpha + beta * (agb[p][j] - agb[p][i])
+
+    def rs_t(i: int, j: int, p: str) -> float:
+        return alpha + beta * (rsb[p][j] - rsb[p][i])
+
+    def nq(p: str) -> int:
+        return 0 if p == "bf16" else 1
+
+    inf = (math.inf, math.inf)
+    best_total, best_sol = inf, None
+
+    for p in precs:                 # single-bucket partition wraps on itself
+        if not feasible(0, n):
+            break
+        e = max(0.0, ag_t(0, n, p) + rs_t(0, n, p) - cpt[n]) + ovh[p][n]
+        cand = (e, nq(p))
+        if cand < best_total:
+            best_total, best_sol = cand, ([0, n], [p])
+
+    for f in range(1, n):                          # first bucket = nodes[0:f]
+        if not feasible(0, f):
+            continue
+        # dp[i][(j, p, pf)]: best (exposure, n_quant) of nodes[0:i] whose
+        # last bucket is nodes[j:i] at precision p, with the first bucket
+        # (nodes[0:f]) at precision pf; each non-first bucket's cyclic term
+        # and every bucket's overhead are counted, the first bucket's own
+        # cyclic term closes at wrap-up.
+        dp: list[dict] = [dict() for _ in range(n + 1)]
+        parent: list[dict] = [dict() for _ in range(n + 1)]
+        for pf in precs:
+            dp[f][(0, pf, pf)] = (ovh[pf][f], nq(pf))
+        for i in range(f, n):
+            for (j, p, pf), base in dp[i].items():
+                for t in range(i + 1, n + 1):
+                    if not feasible(i, t):
+                        continue
+                    for q in precs:
+                        step = max(0.0, ag_t(i, t, q) + rs_t(j, i, p)
+                                   - (cpt[i] - cpt[j])) \
+                            + ovh[q][t] - ovh[q][i]
+                        cand = (base[0] + step, base[1] + nq(q))
+                        key = (i, q, pf)
+                        if cand < dp[t].get(key, inf):
+                            dp[t][key] = cand
+                            parent[t][key] = (j, p)
+        for (j, p, pf), val in dp[n].items():
+            wrap = max(0.0, ag_t(0, f, pf) + rs_t(j, n, p)
+                       - (cpt[n] - cpt[j]))
+            total = (val[0] + wrap, val[1])
+            if total < best_total:
+                bounds, pvec = [n], [p]
+                end, cur = n, (j, p, pf)
+                while cur[0] > 0:
+                    bounds.append(cur[0])
+                    prev = parent[end][cur]
+                    pvec.append(prev[1])
+                    end, cur = cur[0], (prev[0], prev[1], pf)
+                bounds.append(0)
+                best_total = total
+                best_sol = (bounds[::-1], pvec[::-1])
+
+    assert best_sol is not None   # per-param partition is always feasible
+    best_cut, best_prec = best_sol
+    buckets = [list(nodes[a:b]) for a, b in zip(best_cut, best_cut[1:])]
+
+    # Belt and braces, mirroring dp_buckets: never return a plan worse
+    # under the shared objective than greedy-at-bf16 with post-hoc local
+    # precision assignment.
+    greedy = greedy_partition(nodes, cfg, mem_limit, cuts)
+    g_prec = _local_precisions(greedy, cfg)
+    if partition_exposure(greedy, cfg, precisions=g_prec) \
+            < partition_exposure(buckets, cfg, precisions=best_prec):
+        return greedy, g_prec
+    return buckets, best_prec
+
+
+def _local_precisions(buckets: list[list[CommNode]], cfg: DistConfig,
+                      pools: list[int] | None = None) -> list[str]:
+    """Per-bucket precisions for a FIXED partition: one coordinate-descent
+    pass over the global exposure objective — each bucket in turn picks the
+    precision minimizing partition_exposure with the others held fixed
+    (ties prefer bf16, the first lattice entry).  Used when the partition
+    came from a planner that did not search precisions jointly."""
+    precs = ["bf16"] * len(buckets)
+    for b in range(len(buckets)):
+        best, best_p = None, "bf16"
+        for p in AUTO_PRECISIONS:
+            precs[b] = p
+            e = partition_exposure(buckets, cfg, pools, precs)
+            if best is None or e < best:
+                best, best_p = e, p
+        precs[b] = best_p
+    return precs
 
 
 # ---------------------------------------------------------------------------
@@ -333,19 +491,46 @@ def auto_dp_plan(metas_tree, cfg: DistConfig,
     """Exposure-minimizing planner -> BucketPlan (bucket_mode='auto_dp').
 
     Unsegmented blocks: the exact interval DP over the cyclic per-bucket
-    objective. Segmented blocks: the executed schedule pools each segment's
-    gathers at one program point, so the exact minimizer of the pooled
-    objective is minimum-bucket-count packing per segment under the memory
-    cap (fewer collectives = less alpha; hiding windows are fixed by the
-    segment chain)."""
+    objective — joint over partition x per-bucket precision when
+    comm_precision='auto' (halved wire bytes change the optimal cuts, so
+    the dimensions cannot be searched separately). Segmented blocks: the
+    executed schedule pools each segment's gathers at one program point, so
+    the exact minimizer of the pooled objective is minimum-bucket-count
+    packing per segment under the memory cap (fewer collectives = less
+    alpha; hiding windows are fixed by the segment chain), with precisions
+    assigned per bucket afterwards."""
     nodes = build_nodes(metas_tree, cfg, stats)
     if not _active(segments):
+        if cfg.comm_precision == "auto":
+            buckets, precs = dp_buckets_precision(nodes, cfg)
+            return BucketPlan(
+                tuple(tuple(n.name for n in grp) for grp in buckets),
+                tuple(precs))
         buckets = dp_buckets(nodes, cfg)
+        pools = None
     else:
         m_max = cfg.autowrap_mem_limit
-        perm, cuts, _ = _segment_order(metas_tree, segments)
+        perm, cuts, seg_x = _segment_order(metas_tree, segments)
         buckets = _min_count_packing([nodes[i] for i in perm], m_max, cuts)
-    return BucketPlan(tuple(tuple(n.name for n in grp) for grp in buckets))
+        pools = _bucket_pools(buckets, seg_x)
+    groups = tuple(tuple(n.name for n in grp) for grp in buckets)
+    if cfg.comm_precision == "auto":
+        return BucketPlan(groups,
+                          tuple(_local_precisions(buckets, cfg, pools)))
+    return BucketPlan(groups)
+
+
+def assign_precisions(plan: BucketPlan, metas_tree, cfg: DistConfig,
+                      stats: BlockStats | None = None) -> BucketPlan:
+    """Attach per-bucket precisions to a partition produced without the
+    joint search (bucket_mode none/block/auto/manual under
+    comm_precision='auto'): coordinate descent on the exposure objective
+    over the plan's own groups."""
+    if cfg.comm_precision != "auto" or plan.precisions is not None:
+        return plan
+    nodes = {n.name: n for n in build_nodes(metas_tree, cfg, stats)}
+    buckets = [[nodes[name] for name in grp] for grp in plan.groups]
+    return BucketPlan(plan.groups, tuple(_local_precisions(buckets, cfg)))
 
 
 def _bucket_pools(buckets: list[list[CommNode]],
@@ -385,12 +570,28 @@ def exposed_comm_time(plan: BucketPlan, metas_tree, cfg: DistConfig,
         name_seg = dict(zip(names, seg_of))
         pools = [name_seg[grp[0]] for grp in plan.groups]
     groups = [[nodes[name] for name in grp] for grp in plan.groups]
-    total_comm = sum(ag_time(g, cfg) + rs_time(g, cfg) for g in groups)
+    if plan.precisions is not None:
+        precisions = list(plan.precisions)
+    else:
+        precisions = [_cfg_precision(cfg)] * len(groups)
+    total_comm = sum(ag_time(g, cfg, p) + rs_time(g, cfg, p)
+                     for g, p in zip(groups, precisions))
+    wire = sum(n.ag_wire(p) + n.rs_wire(p)
+               for g, p in zip(groups, precisions) for n in g)
+    overhead = sum(quant_overhead_s(g, p)
+                   for g, p in zip(groups, precisions))
+    exposed = partition_exposure(groups, cfg, pools, precisions)
     return {
-        "exposed_s": partition_exposure(groups, cfg, pools),
+        # the planners' full objective: unhidden comm + encode/decode cost
+        "exposed_s": exposed,
+        # the comm component alone (overhead enters linearly, never hidden)
+        "exposed_comm_s": exposed - overhead,
+        "quant_overhead_s": overhead,
         "total_comm_s": total_comm,
         "compute_s": comp_time(list(nodes.values())),
         "n_buckets": len(groups),
+        "comm_wire_bytes": wire,
+        "precisions": tuple(precisions),
     }
 
 

@@ -34,6 +34,11 @@ class BucketPlan:
     """Ordered partition of parameter names into gather groups."""
 
     groups: tuple[tuple[str, ...], ...]
+    # Per-group resolved wire precision (core/dist.COMM_PRECISIONS minus
+    # 'auto'), aligned with `groups`.  None = every bucket at the config's
+    # own (non-auto) comm_precision; set by the auto planners when
+    # comm_precision='auto'.
+    precisions: tuple[str, ...] | None = None
 
     def index_groups(self, metas_tree) -> list[list[int]]:
         """Map name groups -> leaf indices in tree-flatten order."""
@@ -63,12 +68,27 @@ class BucketPlan:
         """Gathered payload per bucket (param_dtype bytes) — feeds Alg. 1."""
         import jax.numpy as jnp
 
+        from repro.core.irgraph import wire_bytes
+
         metas = dict(named_leaves(metas_tree))
         itemsize = jnp.dtype(cfg.param_dtype).itemsize
         return [
-            sum(metas[n].padded_len(cfg) * itemsize for n in grp)
+            sum(wire_bytes(metas[n].padded_len(cfg), itemsize) for n in grp)
             for grp in self.groups
         ]
+
+    def group_precisions(self, metas_tree, cfg: DistConfig) -> list[str]:
+        """Resolved per-bucket wire precision aligned with `index_groups`
+        output (unplanned params gather individually at the default).  The
+        default is the config's own precision, with 'auto' degrading to
+        bf16 for any bucket the planner did not annotate."""
+        default = cfg.comm_precision if cfg.comm_precision != "auto" \
+            else "bf16"
+        n_groups = len(self.index_groups(metas_tree))
+        out = list(self.precisions) if self.precisions is not None \
+            else [default] * len(self.groups)
+        out += [default] * (n_groups - len(out))
+        return out
 
 
 def assign_segments(names: list[str], param_globs, seg_names) -> list[int]:
@@ -104,13 +124,25 @@ def split_plan_at_segments(plan: BucketPlan, metas_tree,
     pos = {n: i for i, n in enumerate(names)}
     n_seg = len(segments.names)
     out: list[list[tuple[str, ...]]] = [[] for _ in range(n_seg)]
-    for grp in plan.index_groups(metas_tree):
+    out_prec: list[list[str]] = [[] for _ in range(n_seg)]
+    precs = None
+    if plan.precisions is not None:
+        # appended singletons (params the plan left out) carry bf16, the
+        # same default group_precisions resolves for them
+        precs = list(plan.precisions)
+    for gi, grp in enumerate(plan.index_groups(metas_tree)):
+        parent_prec = precs[gi] if precs is not None and gi < len(precs) \
+            else "bf16"
         by_seg: dict[int, list[int]] = {}
         for i in grp:
             by_seg.setdefault(seg_of[i], []).append(i)
         for s in sorted(by_seg):
             out[s].append(tuple(names[i] for i in sorted(by_seg[s])))
-    return BucketPlan(tuple(g for s in range(n_seg) for g in out[s]))
+            out_prec[s].append(parent_prec)
+    return BucketPlan(
+        tuple(g for s in range(n_seg) for g in out[s]),
+        tuple(p for s in range(n_seg) for p in out_prec[s])
+        if precs is not None else None)
 
 
 def per_param_plan(metas_tree) -> BucketPlan:
@@ -176,28 +208,43 @@ def _plan_cache_key(metas_tree, cfg: DistConfig, block_stats,
 def _resolve_plan(metas_tree, cfg: DistConfig, block_stats,
                   segments) -> BucketPlan:
     if cfg.bucket_mode == "none":
-        return per_param_plan(metas_tree)
-    if cfg.bucket_mode == "block":
-        return whole_block_plan(metas_tree)
-    if cfg.bucket_mode in ("auto", "auto_dp"):
+        plan = per_param_plan(metas_tree)
+    elif cfg.bucket_mode == "block":
+        plan = whole_block_plan(metas_tree)
+    elif cfg.bucket_mode in ("auto", "auto_dp"):
         from repro.core.autowrap import (auto_dp_plan, auto_plan,
                                          exposed_comm_time)
 
         planner = auto_plan if cfg.bucket_mode == "auto" else auto_dp_plan
         plan = planner(metas_tree, cfg, block_stats, segments=segments)
+        plan = _with_precisions(plan, metas_tree, cfg, block_stats)
         r = exposed_comm_time(plan, metas_tree, cfg, block_stats,
                               segments=segments)
         log.info(
             "bucket_mode=%s (stats=%s): %d buckets, exposed=%.1fus "
-            "comm=%.1fus compute=%.1fus, plan=%s",
+            "comm=%.1fus compute=%.1fus, precisions=%s, plan=%s",
             cfg.bucket_mode,
             getattr(block_stats, "source", "default"),
             r["n_buckets"], r["exposed_s"] * 1e6, r["total_comm_s"] * 1e6,
-            r["compute_s"] * 1e6, [list(g) for g in plan.groups])
+            r["compute_s"] * 1e6, list(r["precisions"]),
+            [list(g) for g in plan.groups])
         return plan
-    if isinstance(cfg.bucket_mode, BucketPlan):
-        return cfg.bucket_mode
-    raise ValueError(f"unknown bucket_mode {cfg.bucket_mode!r}")
+    elif isinstance(cfg.bucket_mode, BucketPlan):
+        plan = cfg.bucket_mode
+    else:
+        raise ValueError(f"unknown bucket_mode {cfg.bucket_mode!r}")
+    return _with_precisions(plan, metas_tree, cfg, block_stats)
+
+
+def _with_precisions(plan: BucketPlan, metas_tree, cfg: DistConfig,
+                     block_stats) -> BucketPlan:
+    """Under comm_precision='auto', every resolved plan leaves here with
+    per-bucket precisions attached (no-op otherwise)."""
+    if cfg.comm_precision != "auto" or plan.precisions is not None:
+        return plan
+    from repro.core.autowrap import assign_precisions
+
+    return assign_precisions(plan, metas_tree, cfg, block_stats)
 
 
 def _active_segments(metas_tree, cfg: DistConfig, segments):

@@ -29,10 +29,31 @@ import jax.numpy as jnp
 from jax import lax
 from jax.ad_checkpoint import checkpoint_name
 
-from repro.core.dist import DistConfig
+from repro.core.dist import DistConfig, precision_codecs
 from repro.core.meta import ParamMeta, flatten_local, unflatten_local
+from repro.kernels.quant import ops as quant_ops
 
 FSDP_GATHER_NAME = "fsdp_gather"
+
+
+def default_precision(cfg: DistConfig) -> str:
+    """The wire precision a collective runs at when its bucket has no
+    per-bucket annotation: the config's own value, with 'auto' degrading to
+    bf16 (under 'auto' the resolved plan is what carries fp8 buckets)."""
+    return "bf16" if cfg.comm_precision == "auto" else cfg.comm_precision
+
+
+def _quant_wire(buf: jax.Array, codec: str | None,
+                stochastic: bool) -> jax.Array:
+    """Encode+decode the flat buffer to the wire codec ahead of the
+    collective.  Because dequantization commutes with all-gather (each
+    rank's slice decodes independently) and with psum's direct reduce when
+    every contribution is quantized exactly once, this local roundtrip is
+    numerically identical to shipping the quantized payload — the cost
+    model prices the actual wire bytes separately (irgraph.wire_bytes)."""
+    if codec is None:
+        return buf
+    return quant_ops.roundtrip(buf, codec, stochastic=stochastic)
 
 
 def _fsdp_axes(cfg: DistConfig):
@@ -120,14 +141,22 @@ def _vma_classes(metas: Sequence[ParamMeta]) -> list[list[int]]:
 
 def gather_group_fwd_raw(shards: Sequence[jax.Array],
                          metas: Sequence[ParamMeta],
-                         cfg: DistConfig) -> list[jax.Array]:
-    """Pack -> one AG per vma class -> unpack; returns compute tensors."""
+                         cfg: DistConfig,
+                         precision: str | None = None) -> list[jax.Array]:
+    """Pack -> one AG per vma class -> unpack; returns compute tensors.
+
+    `precision` is the bucket's resolved wire precision (None = the config
+    default): a quantized AG encodes the packed buffer to per-chunk-scaled
+    fp8 (deterministic round-to-nearest — every rank must decode identical
+    params) before the gather."""
+    ag_codec, _ = precision_codecs(precision or default_precision(cfg))
     flats = [_squeeze_tp(s, m) for s, m in zip(shards, metas)]
     if cfg.gather_in_param_dtype:
         flats = [f.astype(cfg.param_dtype) for f in flats]
     outs: list = [None] * len(flats)
     for idxs in _vma_classes(metas):
         buf = pack_shards([flats[i] for i in idxs])
+        buf = _quant_wire(buf, ag_codec, stochastic=False)
         g = checkpoint_name(gather_flat(buf, cfg), FSDP_GATHER_NAME)
         sub = unpack_gathered(g, [metas[i] for i in idxs], cfg)
         for i, o in zip(idxs, sub):
@@ -154,8 +183,17 @@ def pack_grad_bucket(grads_full: Sequence[jax.Array],
 
 def finalize_grad_bucket(cts: tuple, metas: Sequence[ParamMeta],
                          cfg: DistConfig,
-                         shard_shapes: Sequence[tuple]) -> list[jax.Array]:
+                         shard_shapes: Sequence[tuple],
+                         precision: str | None = None) -> list[jax.Array]:
     """One RS per vma class (mean over DP) -> per-param local grad chunks.
+
+    A quantized RS ('fp8'/'fp8_ef') encodes each rank's contribution to
+    per-chunk-scaled fp8 with STOCHASTIC rounding before the psum-scatter —
+    one quantization per contribution, direct-reduced (the qgZ shape), and
+    unbiased, which is the condition Markov et al.'s convergence analysis
+    needs; 'fp8_ef' additionally compensates the reduced shard's wire
+    format with the persistent error-feedback accumulator in the optimizer
+    (optim/adamw.py — gradient state cannot thread through this vjp).
 
     Cross-pod (HSDP) and TP-replication gradient sums are NOT issued here:
     under shard_map's varying-manual-axes (vma) tracking, the transpose of
@@ -164,8 +202,10 @@ def finalize_grad_bucket(cts: tuple, metas: Sequence[ParamMeta],
     this reduce-scatter already summed over every axis the parameter is
     replicated on. (Verified by tests/dist_harness.py against dense refs.)
     """
+    _, rs_codec = precision_codecs(precision or default_precision(cfg))
     outs: list = [None] * len(metas)
     for ct, idxs in zip(cts, _vma_classes(metas)):
+        ct = _quant_wire(ct, rs_codec, stochastic=True)
         local = reduce_scatter_flat(ct, cfg)
         # Partial(avg): mean over the full DP domain. Combined with a
         # per-device local-mean loss this is the global-batch mean gradient.
@@ -180,28 +220,30 @@ def finalize_grad_bucket(cts: tuple, metas: Sequence[ParamMeta],
 def reduce_group_bwd_raw(grads_full: Sequence[jax.Array],
                          metas: Sequence[ParamMeta],
                          cfg: DistConfig,
-                         shard_shapes: Sequence[tuple]) -> list[jax.Array]:
+                         shard_shapes: Sequence[tuple],
+                         precision: str | None = None) -> list[jax.Array]:
     """Pack grads -> one RS (reduce_dtype, mean) -> per-param local chunks."""
     ct = pack_grad_bucket(grads_full, metas, cfg)
-    return finalize_grad_bucket(ct, metas, cfg, shard_shapes)
+    return finalize_grad_bucket(ct, metas, cfg, shard_shapes, precision)
 
 
 # ---------------------------------------------------------------------------
 # 2. The differentiable bucket gather (paper's parametrization).
 # ---------------------------------------------------------------------------
-@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
-def gather_group(shards: tuple, metas: tuple, cfg: DistConfig):
-    return gather_group_fwd_raw(shards, metas, cfg)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def gather_group(shards: tuple, metas: tuple, cfg: DistConfig,
+                 precision: str | None = None):
+    return gather_group_fwd_raw(shards, metas, cfg, precision)
 
 
-def _gg_fwd(shards, metas, cfg):
-    outs = gather_group_fwd_raw(shards, metas, cfg)
+def _gg_fwd(shards, metas, cfg, precision):
+    outs = gather_group_fwd_raw(shards, metas, cfg, precision)
     return outs, tuple(s.shape for s in shards)
 
 
-def _gg_bwd(metas, cfg, shard_shapes, cts):
+def _gg_bwd(metas, cfg, precision, shard_shapes, cts):
     # shard_shapes already carry the (1, chunk) tp-index dim where present
-    grads = reduce_group_bwd_raw(cts, metas, cfg, shard_shapes)
+    grads = reduce_group_bwd_raw(cts, metas, cfg, shard_shapes, precision)
     return (tuple(grads),)
 
 
@@ -254,13 +296,15 @@ def replicate_tree(shards_tree, metas_tree, cfg: DistConfig, plan=None):
     metas = treedef.flatten_up_to(metas_tree)
     if plan is None:
         groups = [[i] for i in range(len(leaves))]
+        precisions = [default_precision(cfg)] * len(groups)
     else:
         assert isinstance(plan, BucketPlan)
         groups = plan.index_groups(metas_tree)
+        precisions = plan.group_precisions(metas_tree, cfg)
     out: list = [None] * len(leaves)
-    for grp in groups:
+    for grp, prec in zip(groups, precisions):
         gathered = gather_group(tuple(leaves[i] for i in grp),
-                                tuple(metas[i] for i in grp), cfg)
+                                tuple(metas[i] for i in grp), cfg, prec)
         for i, g in zip(grp, gathered):
             out[i] = g
     return jax.tree_util.tree_unflatten(treedef, out)

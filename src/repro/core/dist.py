@@ -17,6 +17,26 @@ import jax.numpy as jnp
 
 Dtype = Any  # jnp dtype-like
 
+# Wire-precision vocabulary for the bucket collectives (see
+# DistConfig.comm_precision) and the per-bucket lattice the auto_dp planner
+# searches over.  'fp8' (stateless SR reduce-scatter, no error feedback) is
+# a valid config value but not in the auto lattice: at equal wire bytes
+# 'fp8_ef' strictly dominates it on convergence.
+COMM_PRECISIONS = ("bf16", "fp8_ag", "fp8", "fp8_ef", "auto")
+AUTO_PRECISIONS = ("bf16", "fp8_ag", "fp8_ef")
+
+
+def precision_codecs(precision: str) -> tuple[str | None, str | None]:
+    """(all-gather codec, reduce-scatter codec) of one RESOLVED precision —
+    None means uncompressed.  'auto' must be resolved to a per-bucket
+    precision by the planner before reaching here."""
+    return {
+        "bf16": (None, None),
+        "fp8_ag": ("fp8", None),
+        "fp8": ("fp8", "fp8"),
+        "fp8_ef": ("fp8", "fp8"),
+    }[precision]
+
 
 @dataclasses.dataclass(frozen=True)
 class DistConfig:
@@ -117,13 +137,42 @@ class DistConfig:
     # Gradient compression: reduce-scatter in bf16 with fp32 master accumulate.
     grad_compression: bool = False
 
+    # Quantized collectives (kernels/quant): per-128-chunk-scaled fp8 e4m3
+    # wire format for the bucket collectives.  Modes:
+    #   'bf16'    — off (bit-exact today's path; the name is the wire story:
+    #               payloads already travel in param/reduce dtype)
+    #   'fp8_ag'  — quantize param all-gathers only (deterministic RTN;
+    #               grads stay full precision)
+    #   'fp8'     — AG + stochastically-rounded grad reduce-scatter
+    #               (unbiased, stateless — Markov et al.'s SR condition)
+    #   'fp8_ef'  — 'fp8' plus a persistent per-shard error-feedback
+    #               accumulator in the optimizer state compensating the
+    #               reduced shard's wire format (optim/adamw.py)
+    #   'auto'    — the auto_dp planner picks per-BUCKET from
+    #               {bf16, fp8_ag, fp8_ef} jointly with the partition
+    comm_precision: str = "bf16"
+
     # int8 KV cache (per-token/head absmax scales) — halves decode HBM.
     kv_cache_int8: bool = False
 
     # Microbatching (gradient accumulation) for activation memory.
     microbatches: int = 1
 
+    def __post_init__(self):
+        if self.comm_precision not in COMM_PRECISIONS:
+            raise ValueError(
+                f"comm_precision={self.comm_precision!r} not in "
+                f"{COMM_PRECISIONS}")
+
     # ------------------------------------------------------------------ utils
+    @property
+    def needs_ef(self) -> bool:
+        """Whether the optimizer state carries the error-feedback
+        accumulator: 'fp8_ef' always, 'auto' too (the planner may assign
+        fp8_ef to any bucket, and the state tree's structure must not
+        depend on the plan)."""
+        return self.comm_precision in ("fp8_ef", "auto")
+
     def axis_size(self, name: str) -> int:
         return self.mesh_shape[self.mesh_axes.index(name)]
 

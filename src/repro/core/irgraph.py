@@ -19,8 +19,19 @@ import dataclasses
 import jax.numpy as jnp
 
 from repro.core import hw
-from repro.core.dist import DistConfig
+from repro.core.dist import DistConfig, precision_codecs
 from repro.core.meta import ParamMeta, named_leaves
+from repro.kernels.quant.ref import QCHUNK, SCALE_BYTES
+
+
+def wire_bytes(n_elems: int, itemsize: int, codec: str | None = None) -> int:
+    """THE place modeled comm bytes come from: the payload one length-n
+    buffer occupies on the wire.  Uncompressed (codec=None): n * itemsize.
+    Quantized (fp8/int8): one byte per element plus an f32 scale per
+    QCHUNK-element group — n + 4*ceil(n/128)."""
+    if codec is None:
+        return n_elems * itemsize
+    return n_elems + SCALE_BYTES * (-(-n_elems // QCHUNK))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -28,11 +39,25 @@ class CommNode:
     """One parameter's collective + the compute it feeds (paper Table 1)."""
 
     name: str
-    ag_bytes: int          # gathered payload (param_dtype)
-    rs_bytes: int          # gradient reduce-scatter payload (reduce_dtype)
+    ag_bytes: int          # gathered payload (param_dtype, uncompressed)
+    rs_bytes: int          # grad reduce-scatter payload (reduce_dtype, ditto)
     comp_flops: float      # T_ci numerator: FLOPs of the consuming compute
     comp_bytes: float      # bytes accessed by the consuming compute
     mem_bytes: float       # M_ci: peak bytes to hold param + its activations
+    n_elems: int = 0       # padded element count (0 on hand-built test nodes)
+
+    def ag_wire(self, precision: str = "bf16") -> int:
+        """All-gather wire bytes under a resolved comm precision."""
+        codec = precision_codecs(precision)[0]
+        if codec is None or not self.n_elems:
+            return self.ag_bytes
+        return wire_bytes(self.n_elems, 0, codec)
+
+    def rs_wire(self, precision: str = "bf16") -> int:
+        codec = precision_codecs(precision)[1]
+        if codec is None or not self.n_elems:
+            return self.rs_bytes
+        return wire_bytes(self.n_elems, 0, codec)
 
     def t_comp(self) -> float:
         return hw.compute_time_s(self.comp_flops, self.comp_bytes)
@@ -100,24 +125,43 @@ def build_nodes(metas_tree, cfg: DistConfig,
             else 3.0 * n * p_item
         nodes.append(CommNode(
             name=name,
-            ag_bytes=n * p_item,
-            rs_bytes=n * r_item,
+            ag_bytes=wire_bytes(n, p_item),
+            rs_bytes=wire_bytes(n, r_item),
             comp_flops=flops,
             comp_bytes=bts,
             mem_bytes=n * p_item + (stats.act_bytes if stats else 0.0),
+            n_elems=n,
         ))
     return nodes
 
 
-def ag_time(nodes: list[CommNode], cfg: DistConfig) -> float:
-    """alpha + beta*n for ONE bucketed all-gather of these nodes."""
-    return hw.collective_time_s(sum(n.ag_bytes for n in nodes),
+def ag_time(nodes: list[CommNode], cfg: DistConfig,
+            precision: str = "bf16") -> float:
+    """alpha + beta*n for ONE bucketed all-gather of these nodes, priced at
+    the bucket's resolved wire precision."""
+    return hw.collective_time_s(sum(n.ag_wire(precision) for n in nodes),
                                 cfg.axis_sizes, cfg.fsdp_axes)
 
 
-def rs_time(nodes: list[CommNode], cfg: DistConfig) -> float:
-    return hw.collective_time_s(sum(n.rs_bytes for n in nodes),
+def rs_time(nodes: list[CommNode], cfg: DistConfig,
+            precision: str = "bf16") -> float:
+    return hw.collective_time_s(sum(n.rs_wire(precision) for n in nodes),
                                 cfg.axis_sizes, cfg.fsdp_axes)
+
+
+def quant_overhead_s(nodes: list[CommNode], precision: str = "bf16") -> float:
+    """Encode+decode cost of quantizing a bucket: one read + one write of
+    the full-precision buffer per quantized endpoint, priced at HBM
+    bandwidth (the Pallas kernels are bandwidth-bound elementwise passes).
+    Zero for bf16 — the planner's tie-break toward bf16 then falls out of
+    the exposure objective itself."""
+    ag_codec, rs_codec = precision_codecs(precision)
+    t = 0.0
+    if ag_codec is not None:
+        t += 2.0 * sum(n.ag_bytes for n in nodes) / hw.HBM_BANDWIDTH
+    if rs_codec is not None:
+        t += 2.0 * sum(n.rs_bytes for n in nodes) / hw.HBM_BANDWIDTH
+    return t
 
 
 def comp_time(nodes: list[CommNode]) -> float:

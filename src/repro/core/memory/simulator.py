@@ -442,6 +442,10 @@ def context_peaks(ctx: SimContext,
     params_b = ctx.params_b
     grads_b = params_b
     opt_b = 2.0 * params_b
+    if dcfg.needs_ef:
+        # quantized-RS error-feedback accumulator (optim/adamw): one more
+        # storage-shaped tree, held in fp32 regardless of param dtype
+        opt_b += params_b * (4.0 / jnp.dtype(dcfg.param_dtype).itemsize)
 
     # zb decouples the weight-grad half of each backward and queues the
     # per-microbatch dW cotangent pytrees until their fill slots drain
@@ -462,6 +466,14 @@ def context_peaks(ctx: SimContext,
     gathered = prof.gathered_live(dcfg)
     pending_rs = prof.layer_rs_bytes if (reorder and dcfg.rs_delay) else 0.0
     workspace = residency if reorder else 0.0
+
+    # quantized collectives (kernels/quant): per-QCHUNK(=128-elem) fp32
+    # scale buffers live alongside the packed payload while it is in
+    # flight — 4B per 128 elems of a 2B payload = payload/64
+    scales_fwd = scales_bwd = 0.0
+    if dcfg.comm_precision != "bf16":
+        scales_fwd = gathered / 64.0
+        scales_bwd = (gathered + pending_rs) / 64.0
 
     # interleaved saved-state entries are chunk-granular: each covers only
     # L_stage/virtual layers (in_flight_microbatches counts entries)
@@ -497,6 +509,7 @@ def context_peaks(ctx: SimContext,
                 "other_stacks": ctx.other_gather,
                 "stage_extras": ctx.extras[si],
                 "ring_kv": ctx.ring_kv_b,
+                "quant_scales": scales_fwd,
             },
             "backward": {
                 "params": params_b, "grads": grads_b, "opt_state": opt_dev,
@@ -506,6 +519,7 @@ def context_peaks(ctx: SimContext,
                 "stage_extras": ctx.extras[si],
                 "ring_kv": ctx.ring_kv_bwd_b,
                 "w_queue": w_queue_b,
+                "quant_scales": scales_bwd,
             },
         }
         point, parts = max(candidates.items(),

@@ -156,15 +156,18 @@ def _segmented_vanilla_layer(block_fn, metas_tree, cfg, plan, consts,
                 for s_id in range(S)]
     pos_in = [{i: p for p, i in enumerate(idxs)} for idxs in seg_idxs]
     seg_groups: list[list[list[int]]] = [[] for _ in range(S)]
-    for grp in exec_plan.index_groups(metas_tree):
+    seg_precs: list[list[str]] = [[] for _ in range(S)]
+    exec_precs = exec_plan.group_precisions(metas_tree, cfg)
+    for grp, prec in zip(exec_plan.index_groups(metas_tree), exec_precs):
         seg_groups[seg_of[grp[0]]].append(grp)
+        seg_precs[seg_of[grp[0]]].append(prec)
 
     def seg_run(s, shards_s, state):
         full: list = [None] * len(metas)
-        for grp in seg_groups[s]:
+        for grp, prec in zip(seg_groups[s], seg_precs[s]):
             outs = coll.gather_group(
                 tuple(shards_s[pos_in[s][i]] for i in grp),
-                tuple(metas[i] for i in grp), cfg)
+                tuple(metas[i] for i in grp), cfg, prec)
             for i, o in zip(grp, outs):
                 full[i] = o
         params = jax.tree_util.tree_unflatten(treedef, full)
@@ -260,10 +263,14 @@ def _prefetch_stack(block_fn, metas_tree, cfg, plan, stacked, consts, x,
     S = len(seg_fns)
 
     seg_groups: list[list[list[int]]] = [[] for _ in range(S)]
-    for grp in plan.index_groups(metas_tree):
+    seg_precs: list[list[str]] = [[] for _ in range(S)]
+    for grp, prec in zip(plan.index_groups(metas_tree),
+                         plan.group_precisions(metas_tree, cfg)):
         seg_groups[seg_of[grp[0]]].append(grp)
+        seg_precs[seg_of[grp[0]]].append(prec)
     # flat group order is segment-major — the RS finalization order
     flat_groups = [g for s in range(S) for g in seg_groups[s]]
+    flat_precs = [p for s in range(S) for p in seg_precs[s]]
     seg_base = [sum(len(seg_groups[t]) for t in range(s)) for s in range(S)]
     seg_idxs = [sorted(i for g in seg_groups[s] for i in g)
                 for s in range(S)]
@@ -301,10 +308,10 @@ def _prefetch_stack(block_fn, metas_tree, cfg, plan, stacked, consts, x,
                 for sh in shards
             ]
         full: list = [None] * len(shards)
-        for grp in seg_groups[s]:
+        for grp, prec in zip(seg_groups[s], seg_precs[s]):
             outs = coll.gather_group_fwd_raw(
                 [shards[pos_in[s][i]] for i in grp],
-                [metas[i] for i in grp], cfg)
+                [metas[i] for i in grp], cfg, prec)
             for i, o in zip(grp, outs):
                 full[pos_in[s][i]] = o
         return full
@@ -381,7 +388,7 @@ def _prefetch_stack(block_fn, metas_tree, cfg, plan, stacked, consts, x,
             grp = flat_groups[gi]
             parts = coll.finalize_grad_bucket(
                 ct, [metas[i] for i in grp], cfg,
-                [shard_shapes[i] for i in grp])
+                [shard_shapes[i] for i in grp], flat_precs[gi])
             for i, p in zip(grp, parts):
                 out[i] = p
 

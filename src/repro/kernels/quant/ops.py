@@ -1,0 +1,48 @@
+"""Quantize/dequantize ops: backend dispatcher.
+
+`roundtrip` — the entry the collectives use: encode the flat bucket buffer
+to the wire codec and decode it back, which (because dequant commutes with
+all-gather and with psum's direct reduce when each contribution is
+quantized exactly once) is numerically identical to shipping the quantized
+payload.  Pure-jnp math (ref.py) everywhere except real TPUs, where the
+Pallas pair runs; `roundtrip_pallas` is also exercised in interpret mode
+by the kernel test sweep on CPU.
+
+The op is intentionally non-differentiable: it only ever runs inside the
+gather custom_vjp's hand-written forward/backward, never under autodiff.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant import kernel as K
+from repro.kernels.quant import ref
+
+QCHUNK = ref.QCHUNK
+
+
+def roundtrip(x: jax.Array, codec: str | None,
+              stochastic: bool = False) -> jax.Array:
+    if codec is None:
+        return x
+    if jax.default_backend() == "tpu":
+        return roundtrip_pallas(x, codec, stochastic)
+    return ref.roundtrip(x, codec, stochastic)
+
+
+def roundtrip_pallas(x: jax.Array, codec: str, stochastic: bool = False,
+                     interpret: bool = False) -> jax.Array:
+    """Pallas encode+decode of an arbitrary-shaped buffer: chunk to
+    (m, QCHUNK), pad rows to the kernel's ROW_BLOCK (zero rows quantize to
+    zero under the scale=1 guard), run the pair, slice back."""
+    x2, n = ref.chunk(x)
+    m = x2.shape[0]
+    pad = (-m) % K.ROW_BLOCK
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    seed = ref.buffer_seed(x2) if stochastic else jnp.uint32(0)
+    q, s = K.quant_fwd(x2, seed, codec, stochastic, interpret=interpret)
+    out = K.dequant_fwd(q, s, interpret=interpret)
+    return out.reshape(-1)[:n].reshape(x.shape).astype(x.dtype)

@@ -422,6 +422,9 @@ def _autowrap_record(model, dcfg: DistConfig, batch_shape, stats) -> dict:
         "exposed_us": r["exposed_s"] * 1e6,
         "total_comm_us": r["total_comm_s"] * 1e6,
         "compute_us": r["compute_s"] * 1e6,
+        "comm_precision": dcfg.comm_precision,
+        "precisions": list(r["precisions"]),
+        "comm_wire_bytes": r["comm_wire_bytes"],
         "plan": [list(g) for g in plan.groups],
     }
 
@@ -445,6 +448,8 @@ def build_lowered(arch_id: str, shape_name: str, dcfg: DistConfig, mesh,
         step = make_train_step(model, dcfg, AdamWConfig())
         pspecs = RT.model_storage_specs(model, dcfg)
         opt_specs = {"m": pspecs, "v": pspecs, "step": P()}
+        if dcfg.needs_ef:
+            opt_specs["ef"] = pspecs
         bspecs = _batch_specs(model, shape, dcfg, shape.global_batch)
         fn = shard_map(step, mesh=mesh,
                        in_specs=(pspecs, opt_specs, bspecs),
@@ -455,6 +460,10 @@ def build_lowered(arch_id: str, shape_name: str, dcfg: DistConfig, mesh,
         params_abs = RT.model_abstract_storage(model, dcfg)
         opt_abs = {"m": params_abs, "v": params_abs,
                    "step": jax.ShapeDtypeStruct((), jnp.int32)}
+        if dcfg.needs_ef:
+            opt_abs["ef"] = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                params_abs)
         batch_abs = model.input_specs(shape, dcfg)
         args = (
             _sds_with_sharding(params_abs, pspecs, mesh),
@@ -579,7 +588,8 @@ def roofline_terms(cost: dict, colls: dict, model, shape: ShapeConfig,
 def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
              bucket_mode="block", reorder=True, zero3=False,
              mesh_shape=None, microbatch=None, harvest=None,
-             remat=None, context_degree: int = 1) -> dict:
+             remat=None, context_degree: int = 1,
+             comm_precision=None) -> dict:
     """Lower+compile one (arch, shape, mesh) cell.
 
     `harvest`: None = harvest measured BlockStats iff an auto planner will
@@ -641,6 +651,8 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
                                context_degree=context_degree)
     if remat is not None:
         dcfg = dcfg.with_(remat=remat)
+    if comm_precision is not None:
+        dcfg = dcfg.with_(comm_precision=comm_precision)
 
     # ---- measured-cost harvest + plan/memory records ----
     if harvest is None:
@@ -747,6 +759,7 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
         "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
         "bucket_mode": bucket_mode, "reorder": reorder,
         "microbatches": mb,
+        "comm_precision": dcfg.comm_precision,
     }
     if dcfg.cp_size > 1:
         rec["cp"] = dcfg.cp_size
@@ -811,6 +824,9 @@ def main():
                     help="context-parallel degree: carves a 'ctx' axis out "
                          "of the data axis (ring attention; train cells of "
                          "cp-capable archs only)")
+    ap.add_argument("--comm-precision", default=None,
+                    help="override dcfg.comm_precision: bf16 | fp8_ag | "
+                         "fp8 | fp8_ef | auto (per-bucket planner choice)")
     ap.add_argument("--microbatch", type=int, default=None,
                     help="override the simulator-picked gradient-"
                          "accumulation count")
@@ -845,7 +861,8 @@ def main():
                            zero3=args.zero3, mesh_shape=ms,
                            microbatch=args.microbatch,
                            harvest=args.harvest, remat=args.remat,
-                           context_degree=args.cp)
+                           context_degree=args.cp,
+                           comm_precision=args.comm_precision)
             if args.tag:
                 rec["tag"] = args.tag
         except Exception as e:

@@ -77,6 +77,14 @@ def main():
                     help="gradient-accumulation microbatches (pp=1 only; "
                          "under --pp use --pp-microbatches)")
     ap.add_argument("--bucket-mode", default="block")
+    ap.add_argument("--comm-precision", default="bf16",
+                    choices=("bf16", "fp8_ag", "fp8", "fp8_ef", "auto"),
+                    help="collective wire precision (kernels/quant): bf16 "
+                         "is bit-exact; fp8_ag quantizes param all-gathers "
+                         "only; fp8 adds stochastically-rounded grad "
+                         "reduce-scatters; fp8_ef adds the error-feedback "
+                         "accumulator; 'auto' lets the bucket planner pick "
+                         "per bucket")
     ap.add_argument("--no-reorder", action="store_true")
     ap.add_argument("--grad-compression", action="store_true")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
@@ -112,6 +120,7 @@ def main():
         fsdp_axes=("data", "ctx") if args.cp > 1 else ("data",),
         param_dtype=jnp.bfloat16, reduce_dtype=jnp.float32,
         bucket_mode=args.bucket_mode, reorder=not args.no_reorder,
+        comm_precision=args.comm_precision,
         microbatches=args.microbatches,
         grad_compression=args.grad_compression)
     if args.pp > 1:

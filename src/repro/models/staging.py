@@ -221,15 +221,14 @@ def unstage_tree(staged: dict, spec: StageSpec,
 def stage_opt_state(opt_state: dict, spec: StageSpec,
                     dcfg: DistConfig | None = None,
                     sharded: frozenset = frozenset()) -> dict:
-    """Stage the AdamW moments (storage-shaped trees); `step` is scalar."""
-    return {"m": stage_tree(opt_state["m"], spec, dcfg, sharded),
-            "v": stage_tree(opt_state["v"], spec, dcfg, sharded),
-            "step": opt_state["step"]}
+    """Stage the AdamW moments (and the error-feedback accumulator when
+    present — all storage-shaped trees); `step` is scalar."""
+    return {k: (v if k == "step" else stage_tree(v, spec, dcfg, sharded))
+            for k, v in opt_state.items()}
 
 
 def unstage_opt_state(opt_state: dict, spec: StageSpec,
                       dcfg: DistConfig | None = None,
                       sharded: frozenset = frozenset()) -> dict:
-    return {"m": unstage_tree(opt_state["m"], spec, dcfg, sharded),
-            "v": unstage_tree(opt_state["v"], spec, dcfg, sharded),
-            "step": opt_state["step"]}
+    return {k: (v if k == "step" else unstage_tree(v, spec, dcfg, sharded))
+            for k, v in opt_state.items()}

@@ -33,13 +33,22 @@ class AdamWConfig:
     grad_clip: float = 1.0
 
 
-def init_opt_state(storage_tree):
+def init_opt_state(storage_tree, cfg: DistConfig | None = None):
+    """Fresh moments (+ the error-feedback accumulator when the config's
+    comm_precision carries one — `DistConfig.needs_ef`).  The EF residual is
+    strictly smaller than one quantization step, so it lives in float32
+    regardless of the param dtype; it is storage-shaped like m/v (ZeRO-3:
+    per-shard, no optimizer-state collectives)."""
     zeros = lambda p: jnp.zeros_like(p)
-    return {
+    state = {
         "m": jax.tree.map(zeros, storage_tree),
         "v": jax.tree.map(zeros, storage_tree),
         "step": jnp.zeros((), jnp.int32),
     }
+    if cfg is not None and cfg.needs_ef:
+        state["ef"] = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), storage_tree)
+    return state
 
 
 def _leaf_metas(metas_tree):
@@ -83,11 +92,38 @@ def _update_leaf(p, g, m, v, lr, ocfg: AdamWConfig, t):
                                   eps=ocfg.eps, wd=ocfg.weight_decay, t=t)
 
 
+def _error_feedback(grads, ef):
+    """Quantize-compensate hop (QSGD/EF14 style): the shard-local reduced
+    gradient is pushed through the SAME fp8 wire codec the quantized
+    reduce-scatter uses, with the rounding residual carried to the next
+    step.  `g2 = g + ef; gq = dq(q(g2)); ef' = g2 - gq` — deterministic RTN
+    here (EF compensates the bias; the in-collective hop is the stochastic
+    one).  Applied uniformly whenever the state carries "ef"
+    (comm_precision in {"fp8_ef", "auto"}): the step function and the state
+    tree must not depend on the per-block traced plan."""
+    from repro.kernels.quant import ops as quant_ops
+
+    def one(g, e):
+        g2 = g.astype(jnp.float32) + e
+        gq = quant_ops.roundtrip(g2, "fp8", stochastic=False)
+        return gq, g2 - gq
+
+    out = jax.tree.map(one, grads, ef)
+    gq = jax.tree.map(lambda o: o[0], out,
+                      is_leaf=lambda x: isinstance(x, tuple))
+    new_ef = jax.tree.map(lambda o: o[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return gq, new_ef
+
+
 def apply_adamw(storage, grads, opt_state, metas_tree, cfg: DistConfig,
                 ocfg: AdamWConfig, lr, pp_replicated: tuple[str, ...] = ()):
     """One AdamW step on the sharded storage. Returns (params, opt_state,
     grad_norm)."""
     t = opt_state["step"] + 1
+    new_ef = None
+    if "ef" in opt_state:
+        grads, new_ef = _error_feedback(grads, opt_state["ef"])
     gnorm = global_grad_norm(grads, metas_tree, cfg, pp_replicated)
     scale = jnp.minimum(1.0, ocfg.grad_clip / jnp.maximum(gnorm, 1e-12)) \
         if ocfg.grad_clip else 1.0
@@ -103,4 +139,7 @@ def apply_adamw(storage, grads, opt_state, metas_tree, cfg: DistConfig,
                          is_leaf=lambda x: isinstance(x, tuple))
     new_v = jax.tree.map(lambda o: o[2], out,
                          is_leaf=lambda x: isinstance(x, tuple))
-    return new_p, {"m": new_m, "v": new_v, "step": t}, gnorm
+    new_state = {"m": new_m, "v": new_v, "step": t}
+    if new_ef is not None:
+        new_state["ef"] = new_ef
+    return new_p, new_state, gnorm

@@ -39,6 +39,21 @@ from repro.optim.adamw import AdamWConfig, apply_adamw, init_opt_state
 from repro.optim.schedule import warmup_cosine
 
 
+def _opt_specs(pspecs, dcfg: DistConfig):
+    """Optimizer-state specs: moments mirror the params; the error-feedback
+    accumulator (quantized-RS configs, `DistConfig.needs_ef`) is
+    storage-shaped too."""
+    specs = {"m": pspecs, "v": pspecs, "step": P()}
+    if dcfg.needs_ef:
+        specs["ef"] = pspecs
+    return specs
+
+
+def _opt_local(opt_state, local):
+    """Strip the leading stage dim off every storage-shaped entry."""
+    return {k: (v if k == "step" else local(v)) for k, v in opt_state.items()}
+
+
 def make_train_step(model, dcfg: DistConfig, ocfg: AdamWConfig,
                     schedule: Callable | None = None):
     """Returns step_local(storage, opt_state, batch) -> (storage, opt_state,
@@ -90,7 +105,7 @@ def wrap_train_step(model, dcfg: DistConfig, shape, ocfg: AdamWConfig,
     mesh = mesh or make_mesh(dcfg)
     step_local = make_train_step(model, dcfg, ocfg, schedule)
     pspecs = RT.model_storage_specs(model, dcfg)
-    opt_specs = {"m": pspecs, "v": pspecs, "step": P()}
+    opt_specs = _opt_specs(pspecs, dcfg)
     in_specs = (pspecs, opt_specs, RT.batch_specs(model, shape, dcfg))
     out_specs = (pspecs, opt_specs,
                  {"loss": P(), "grad_norm": P(), "lr": P()})
@@ -271,8 +286,7 @@ def make_staged_train_step(model, plan, dcfg: DistConfig, ocfg: AdamWConfig,
 
     def step_local(staged, opt_state, batch):
         local = _local(staged)
-        opt_local = {"m": _local(opt_state["m"]), "v": _local(opt_state["v"]),
-                     "step": opt_state["step"]}
+        opt_local = _opt_local(opt_state, _local)
         loss, grads = loss_grads(local, batch)
         lr = sched(opt_local["step"])
         new_p, new_opt, gnorm = apply_adamw(
@@ -283,9 +297,7 @@ def make_staged_train_step(model, plan, dcfg: DistConfig, ocfg: AdamWConfig,
             "grad_norm": gnorm,
             "lr": jnp.asarray(lr, jnp.float32),
         }
-        return _restack(new_p), {"m": _restack(new_opt["m"]),
-                                 "v": _restack(new_opt["v"]),
-                                 "step": new_opt["step"]}, metrics
+        return _restack(new_p), _opt_local(new_opt, _restack), metrics
 
     return step_local
 
@@ -327,7 +339,7 @@ def wrap_any_train_step(model, plan, dcfg: DistConfig, shape,
         return fn
     step_local = make_staged_train_step(model, plan, dcfg, ocfg, schedule)
     pspecs = _staged_specs(model, dcfg, plan.stage)
-    opt_specs = {"m": pspecs, "v": pspecs, "step": P()}
+    opt_specs = _opt_specs(pspecs, dcfg)
     in_specs = (pspecs, opt_specs, RT.batch_specs(model, shape, dcfg))
     out_specs = (pspecs, opt_specs,
                  {"loss": P(), "grad_norm": P(), "lr": P()})
@@ -370,8 +382,7 @@ def make_pipeline_train_step(stage_fn, stage_metas, dcfg: DistConfig,
 
     def step_local(storage, opt_state, xs):
         local = _local(storage)               # this rank's stage shards
-        opt_local = {"m": _local(opt_state["m"]), "v": _local(opt_state["v"]),
-                     "step": opt_state["step"]}
+        opt_local = _opt_local(opt_state, _local)
         loss, grads, _ = pipeline_grads(stage, local, xs, loss_fn, dcfg,
                                         schedule)
         lr = sched(opt_local["step"])
@@ -382,9 +393,7 @@ def make_pipeline_train_step(stage_fn, stage_metas, dcfg: DistConfig,
             "grad_norm": gnorm,
             "lr": jnp.asarray(lr, jnp.float32),
         }
-        return _restack(new_p), {"m": _restack(new_opt["m"]),
-                                 "v": _restack(new_opt["v"]),
-                                 "step": new_opt["step"]}, metrics
+        return _restack(new_p), _opt_local(new_opt, _restack), metrics
 
     return step_local
 
@@ -411,7 +420,7 @@ def wrap_pipeline_train_step(stage_fn, stage_metas, dcfg: DistConfig,
                                           loss_fn, schedule, plan,
                                           lr_schedule)
     pspecs = pipeline_storage_specs(stage_metas, dcfg)
-    opt_specs = {"m": pspecs, "v": pspecs, "step": P()}
+    opt_specs = _opt_specs(pspecs, dcfg)
     xs_spec = P(None, RT.dp_axes(dcfg), *([None] * (xs_ndim - 2)))
     in_specs = (pspecs, opt_specs, xs_spec)
     out_specs = (pspecs, opt_specs,
@@ -437,7 +446,7 @@ def init_pipeline_state(stage_params_fn, stage_metas, dcfg: DistConfig,
     storage = jax.tree.map(
         lambda m, *ps: jnp.stack([to_storage(p, m, dcfg) for p in ps]),
         stage_metas, *fulls, is_leaf=lambda x: isinstance(x, ParamMeta))
-    return storage, init_opt_state(storage)
+    return storage, init_opt_state(storage, dcfg)
 
 
 def make_eval_step(model, dcfg: DistConfig, shape, mesh=None):
@@ -465,4 +474,4 @@ def init_train_state(model, dcfg: DistConfig, key=None, plan=None):
         storage = staging.stage_tree(
             storage, plan.stage, dcfg,
             staging.pipe_sharded_groups(model, dcfg, plan.stage))
-    return storage, init_opt_state(storage)
+    return storage, init_opt_state(storage, dcfg)

@@ -92,7 +92,8 @@ class Trainer:
         if measured:
             from repro.optim.adamw import init_opt_state
             params_abs = self.par.abstract_storage
-            opt_abs = jax.eval_shape(init_opt_state, params_abs)
+            opt_abs = jax.eval_shape(
+                lambda s: init_opt_state(s, self.dcfg), params_abs)
             batch_abs = self.model.input_specs(self.shape, self.dcfg)
             m = self.step_fn.lower(params_abs, opt_abs,
                                    batch_abs).compile().memory_analysis()

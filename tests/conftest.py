@@ -35,6 +35,11 @@ def pytest_configure(config):
         "context: context parallelism — zigzag sharding, ring attention "
         "numerics + cost model (tests/test_context.py; run `-m context` "
         "after core/context changes)")
+    config.addinivalue_line(
+        "markers",
+        "quant: quantized collectives — fp8/int8 wire codec round-trips, "
+        "error feedback, precision-aware planner (tests/test_quant.py; "
+        "run `-m quant` after kernels/quant or comm_precision changes)")
 
 
 def pytest_collection_modifyitems(config, items):

@@ -34,6 +34,13 @@ must reproduce pp=1 exactly (losses, grads, AdamW steps), plus zamba2's
 uneven zero-padded stage partition over two chained train steps and the
 stage_pre-hoist trace-count regression.
 
+The `quant` case covers quantized collectives (kernels/quant +
+DistConfig.comm_precision): comm_precision="bf16" must be BIT-exact vs the
+default path over two chained AdamW steps, while fp8_ag / fp8 / fp8_ef /
+auto must track the bf16 reference within documented EF-theory tolerance
+(loss rtol 5e-2, per-coordinate weight drift <= 4*lr*steps) with the
+error-feedback accumulator present exactly when DistConfig.needs_ef.
+
 The `context` case covers context parallelism (core/context.py): zigzag
 sequence sharding + ring attention over the ctx axis — cp2 x dp2 must
 reproduce the cp1 x dp4 baseline exactly (losses, assembled grads, one
@@ -1107,6 +1114,90 @@ def case_context():
 
 
 CASES["context"] = case_context
+
+
+# --------------------------------------------------------------------------
+# Quantized collectives (kernels/quant + comm_precision): the wire codec is
+# simulated by a local quantize->dequantize roundtrip before each collective,
+# so dp4 runs every real code path (bucketed AG encode, RS encode, EF hop).
+# --------------------------------------------------------------------------
+def case_quant():
+    """comm_precision end to end on a dp4 mesh (qwen3_1_7b smoke):
+    (a) "bf16" is BIT-exact vs the default config over two chained AdamW
+        steps (the identity codec must compile away);
+    (b) fp8_ag / fp8 / fp8_ef / auto stay within documented EF-theory
+        tolerance of the bf16 reference: losses rtol 5e-2, and per-
+        coordinate updated-weight drift <= 4*lr*steps (AdamW's update is
+        bounded by ~lr per step, so two quantized steps can disagree with
+        the reference by at most ~2*lr per coordinate);
+    (c) modes with an RS codec visibly perturb the weights (the codec is
+        engaged, not silently skipped), and exactly the needs_ef modes
+        carry a persistent error-feedback accumulator in opt_state."""
+    from repro.core.api import parallelize
+    from repro.models import runtime as RT
+    from repro.models.common import ShapeConfig
+    from repro.models.registry import get_arch
+    from repro.optim.adamw import AdamWConfig, init_opt_state
+
+    cfg, model = get_arch("qwen3_1_7b", smoke=True)
+    shape = ShapeConfig("t", 32, 8, "train")
+    d_ref = fp32_cfg(("data", "model"), (4, 1), ("data",))
+    batch = _synth_batch(model, shape, d_ref, cfg.vocab)
+    full = model.init_full(jax.random.PRNGKey(0), d_ref)
+
+    def two_steps(dcfg):
+        metas = model.metas(dcfg)
+        st = {k: RT.tree_to_storage(full[k], metas[k], dcfg) for k in full}
+        par = parallelize(model, dcfg, shape)
+        fn = par.train_step(AdamWConfig(lr=1e-3), donate=False)
+        opt = init_opt_state(st, dcfg)
+        losses = []
+        for _ in range(2):
+            st, opt, met = fn(st, opt, batch)
+            losses.append(float(met["loss"]))
+        flat = {jax.tree_util.keystr(p): np.asarray(v) for p, v in
+                jax.tree_util.tree_flatten_with_path(st)[0]}
+        return losses, flat, opt
+
+    l_ref, w_ref, opt_ref = two_steps(d_ref)
+    assert "ef" not in opt_ref
+
+    # ---- (a) explicit bf16 == default path, bit for bit ----
+    l_bf, w_bf, opt_bf = two_steps(d_ref.with_(comm_precision="bf16"))
+    assert l_bf == l_ref, f"quant/bf16: losses {l_bf} != {l_ref}"
+    assert set(w_bf) == set(w_ref)
+    for k in w_ref:
+        assert np.array_equal(w_bf[k], w_ref[k]), \
+            f"quant/bf16: storage leaf {k} not bit-exact"
+    assert "ef" not in opt_bf
+    print(f"PASS quant/bf16_bit_exact (losses {l_bf})")
+
+    # ---- (b)+(c) quantized modes ----
+    lr, steps = 1e-3, 2
+    drift_bound = 4.0 * lr * steps
+    for mode in ("fp8_ag", "fp8", "fp8_ef", "auto"):
+        dq = d_ref.with_(comm_precision=mode)
+        l_q, w_q, opt_q = two_steps(dq)
+        tag = f"quant/{mode}"
+        assert all(np.isfinite(l) for l in l_q), f"{tag}: {l_q}"
+        np.testing.assert_allclose(l_q, l_ref, rtol=5e-2,
+                                   err_msg=f"{tag}: loss drift")
+        worst = max(float(np.max(np.abs(w_q[k] - w_ref[k])))
+                    for k in w_ref)
+        assert worst <= drift_bound, \
+            f"{tag}: weight drift {worst:.2e} > {drift_bound:.2e}"
+        if mode in ("fp8", "fp8_ef"):  # RS codec active -> SR perturbs
+            assert any(not np.array_equal(w_q[k], w_ref[k])
+                       for k in w_ref), f"{tag}: codec silently skipped"
+        assert ("ef" in opt_q) == dq.needs_ef, f"{tag}: ef presence"
+        if "ef" in opt_q:
+            ef_mag = max(float(jnp.max(jnp.abs(l)))
+                         for l in jax.tree.leaves(opt_q["ef"]))
+            assert ef_mag > 0.0, f"{tag}: EF accumulator never updated"
+        print(f"PASS {tag} (losses {l_q}, max drift {worst:.2e})")
+
+
+CASES["quant"] = case_quant
 
 
 TRAINER_SMOKE_ARCHS = {

@@ -426,7 +426,7 @@ def test_bench_overlap_json_schema(tmp_path):
     assert out.returncode == 0, out.stderr[-3000:]
     path = os.path.join(ROOT, "benchmarks", "results", "BENCH_overlap.json")
     doc = json.load(open(path))
-    assert doc["schema"] == "bench_overlap_v1"
+    assert doc["schema"] == "bench_overlap_v2"
     assert len(doc["archs"]) >= 2
     for arch, rec in doc["archs"].items():
         assert rec["stats_source"] in ("analytic", "measured")
@@ -441,3 +441,16 @@ def test_bench_overlap_json_schema(tmp_path):
             <= modes["greedy"]["exposed_s"] + 1e-12
         assert modes["greedy"]["exposed_s"] \
             <= modes["none"]["exposed_s"] + 1e-12
+        # v2: the per-bucket comm_precision ablation (PR 7) — wire-byte
+        # and exposed-comm claims re-checked on the emitted artifact
+        cp = rec["comm_precision"]
+        assert {"bf16", "fp8", "fp8_ef", "auto"} <= set(cp)
+        bf16 = cp["bf16"]
+        assert bf16["quant_overhead_s"] == 0.0
+        for q in ("fp8", "fp8_ef"):
+            assert cp[q]["comm_wire_bytes"] \
+                <= 0.55 * bf16["comm_wire_bytes"], (arch, q)
+            if bf16["exposed_comm_s"] > 0:
+                assert cp[q]["exposed_comm_s"] < bf16["exposed_comm_s"], \
+                    (arch, q)
+        assert cp["auto"]["exposed_s"] <= bf16["exposed_s"] + 1e-12, arch

@@ -1,0 +1,126 @@
+"""Every checked-in benchmarks/results/BENCH_*.json validates against its
+declared ``schema`` version.
+
+benchmarks/paper_tables.py re-emits these files; this test keeps the
+on-disk artifacts honest between regenerations (a bench that changes its
+row shape must bump the schema string AND update the validator here).
+Runs in tier-1 (auto-marked ``unit``).
+"""
+
+import glob
+import json
+import os
+
+import pytest
+
+RESULTS_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "benchmarks", "results")
+BENCH_FILES = sorted(glob.glob(os.path.join(RESULTS_DIR, "BENCH_*.json")))
+
+OVERLAP_MODES = {"none", "block", "greedy", "auto_dp"}
+QUANT_MODES = {"bf16", "fp8", "fp8_ef", "auto"}
+QUANT_ROW = {"exposed_s", "exposed_comm_s", "quant_overhead_s",
+             "total_comm_s", "comm_wire_bytes", "n_buckets", "precisions"}
+MEMORY_MODES = {"none", "save_dots", "fsdp_only", "full", "auto"}
+PIPELINE_SCHEDULES = {"gpipe", "1f1b", "zb", "interleaved"}
+
+
+def _check_overlap_v2(doc):
+    assert doc["mesh"]
+    assert doc["archs"]
+    for arch, rec in doc["archs"].items():
+        assert rec["n_layers"] > 0 and rec["n_scan_steps"] > 0, arch
+        assert OVERLAP_MODES <= set(rec["modes"]), arch
+        for mode, row in rec["modes"].items():
+            assert row["exposed_s"] >= 0 and row["modeled_step_s"] > 0
+            assert row["n_buckets"] >= 1
+        cp = rec["comm_precision"]
+        assert QUANT_MODES <= set(cp), arch
+        for q, row in cp.items():
+            assert QUANT_ROW <= set(row), (arch, q)
+            assert row["comm_wire_bytes"] > 0
+            assert row["quant_overhead_s"] >= 0
+            # exposed_s is the planner objective: pure comm + codec time
+            assert row["exposed_s"] == pytest.approx(
+                row["exposed_comm_s"] + row["quant_overhead_s"], abs=1e-12)
+            assert len(row["precisions"]) == row["n_buckets"]
+        # headline claims of the quant ablation, re-asserted on disk
+        bf16 = cp["bf16"]
+        assert bf16["quant_overhead_s"] == 0.0
+        assert set(bf16["precisions"]) == {"bf16"}
+        for q in ("fp8", "fp8_ef"):
+            if q in cp:
+                assert cp[q]["comm_wire_bytes"] <= \
+                    0.55 * bf16["comm_wire_bytes"], (arch, q)
+                if bf16["exposed_comm_s"] > 0:
+                    assert cp[q]["exposed_comm_s"] < \
+                        bf16["exposed_comm_s"], (arch, q)
+        assert cp["auto"]["exposed_s"] <= bf16["exposed_s"] + 1e-12, arch
+
+
+def _check_pipeline_v2(doc):
+    assert doc["archs"]
+    for arch, rec in doc["archs"].items():
+        assert rec["pp_stages"] >= 2, arch
+        assert rec["layers_per_stage"] > 0
+        assert PIPELINE_SCHEDULES <= set(rec["schedules"]), arch
+        for sched, by_mb in rec["schedules"].items():
+            assert by_mb, (arch, sched)
+            for mb, row in by_mb.items():
+                assert int(mb) >= 1 and row["microbatches"] == int(mb)
+                assert 0.0 <= row["bubble_frac"] < 1.0, (arch, sched)
+                assert row["modeled_step_s"] > 0
+                assert row["slots"] >= row["microbatches"]
+
+
+def _check_memory_v1(doc):
+    assert doc["budget_gb"] > 0
+    assert doc["archs"]
+    for arch, rec in doc["archs"].items():
+        assert MEMORY_MODES <= set(rec["modes"]), arch
+        for mode, row in rec["modes"].items():
+            assert row["peak_bytes"] > 0 and row["modeled_step_s"] > 0
+        modes = rec["modes"]
+        # more remat never raises the simulated peak
+        assert modes["full"]["peak_bytes"] <= \
+            modes["fsdp_only"]["peak_bytes"] <= \
+            modes["none"]["peak_bytes"], arch
+
+
+def _check_context_v1(doc):
+    assert doc["seq_len"] > 0 and doc["degrees"]
+    for arch, rec in doc["archs"].items():
+        assert set(map(str, doc["degrees"])) <= set(rec["modes"]), arch
+        prev = None
+        for cp in sorted(map(int, rec["modes"])):
+            row = rec["modes"][str(cp)]
+            assert row["cp"] == cp and row["seq_local"] * cp == \
+                doc["seq_len"], arch
+            # per-device activation residency shrinks with cp
+            if prev is not None:
+                assert row["act_bytes"] < prev, (arch, cp)
+            prev = row["act_bytes"]
+
+
+VALIDATORS = {
+    "bench_overlap_v2": _check_overlap_v2,
+    "bench_pipeline_v2": _check_pipeline_v2,
+    "bench_memory_v1": _check_memory_v1,
+    "bench_context_v1": _check_context_v1,
+}
+
+
+def test_results_dir_nonempty():
+    assert BENCH_FILES, f"no BENCH_*.json under {RESULTS_DIR}"
+
+
+@pytest.mark.parametrize(
+    "path", BENCH_FILES, ids=[os.path.basename(p) for p in BENCH_FILES])
+def test_bench_json_matches_declared_schema(path):
+    with open(path) as f:
+        doc = json.load(f)
+    schema = doc.get("schema")
+    assert schema in VALIDATORS, \
+        f"{os.path.basename(path)}: unknown schema {schema!r} — add a " \
+        f"validator to tests/test_bench_schemas.py"
+    VALIDATORS[schema](doc)

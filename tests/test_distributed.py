@@ -97,6 +97,15 @@ def test_context_parallel_ring_parity():
     _run("context", timeout=560)
 
 
+def test_quantized_collectives_parity():
+    """Quantized collectives (kernels/quant + comm_precision): "bf16" is
+    bit-exact vs the default path over two AdamW steps; fp8_ag/fp8/fp8_ef/
+    auto stay within documented EF-theory tolerance with the error-feedback
+    accumulator present exactly when needs_ef.  dp4 x tp1, explicit
+    roundtrip before each collective, so exact on every jax version."""
+    _run("quant", timeout=560)
+
+
 def test_remat_vector_parity_pp2_dp2():
     """Per-segment remat policy vectors (incl. a budget-resolved
     remat='auto:<GB>' plan) == the whole-block policy, exactly, at
