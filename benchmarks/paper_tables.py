@@ -718,3 +718,105 @@ def fig5_convergence(steps=30):
               zip(losses["simplefsdp"], losses["vanilla"]))
     emit("fig5/max_divergence", 0.0, f"abs={gap:.6f}")
     assert gap < 5e-3, "optimizations altered convergence!"
+
+
+# ---------------------------------------------------------------------------
+# Serving — the core/serving subsystem as a bench: ServePlan analytics for
+# the paged arena (modeled paged vs dense decode throughput at equal batch)
+# plus the continuous-batching scheduler run against the deterministic
+# virtual clock — continuous+chunked-prefill vs the static prefill-blocking
+# baseline on the same synthetic trace, and a prefix-cache variant with a
+# shared system prompt.  Device-free: every latency is priced by the frozen
+# plan (hw.py roofline), so the artifact BENCH_serving.json is stable
+# across machines and schema-checked in tier-1.
+# ---------------------------------------------------------------------------
+SERVING_SCHEMA = "bench_serving_v1"
+SERVING_ARCHS = ("qwen3_1_7b", "gemma2_27b", "qwen2_moe_a2_7b")
+SERVING_ARENA_GIB = 4.0
+SERVING_TRACE_N = 64
+
+
+def serving_table(json_path: str | None = None):
+    import dataclasses as _dc
+    import json as _json
+    import os as _os
+
+    from repro.core.serving import (PrefixCache, plan_serve, run_virtual,
+                                    static_schedule, synthetic_trace)
+    from repro.launch.mesh import production_dcfg
+
+    doc = {"schema": SERVING_SCHEMA, "mesh": "16x16",
+           "arena_gib": SERVING_ARENA_GIB,
+           "trace_n": SERVING_TRACE_N, "archs": {}}
+    for arch in SERVING_ARCHS:
+        cfg, model = get_arch(arch)
+        dcfg = production_dcfg()
+        plan = plan_serve(model, dcfg,
+                          arena_bytes=int(SERVING_ARENA_GIB * 2**30),
+                          max_batch=32, max_seq=1024, page=16)
+        # modeled decode throughput at equal batch: dense streams the full
+        # allocated window (tmax) per slot, pages stream only the live
+        # context — the arena's bandwidth win, priced by the roofline
+        mean_ctx = 256.0
+        paged_tok_s = plan.modeled_decode_tok_s(plan.max_batch, mean_ctx)
+        dense_tok_s = plan.modeled_decode_tok_s(plan.max_batch, mean_ctx,
+                                                paged=False)
+        assert paged_tok_s > dense_tok_s, \
+            f"{arch}: paged decode not beating dense at equal batch"
+
+        # one synthetic trace, three policies, one virtual clock
+        ia = plan.decode_step_s / 4.0
+        trace = synthetic_trace(SERVING_TRACE_N, seed=0,
+                                mean_interarrival_s=ia)
+        static = static_schedule(plan, trace)
+        cont = run_virtual(plan, trace).metrics()
+        assert cont["tok_s"] >= static["tok_s"], \
+            f"{arch}: continuous batching slower than static"
+        assert cont["p99_s"] <= static["p99_s"], \
+            f"{arch}: chunked-prefill p99 above the prefill-blocking " \
+            f"baseline"
+        assert cont["peak_pages"] <= plan.n_pages, arch
+
+        # prefix variant: every request shares a 64-token system prompt
+        sysp = tuple(range(100, 164))
+        ptrace = [_dc.replace(r, prompt=sysp + tuple(r.prompt))
+                  for r in trace]
+        contp = run_virtual(plan, ptrace,
+                            prefix_cache=PrefixCache()).metrics()
+        assert contp["requests"] == SERVING_TRACE_N, arch
+        assert contp["prefix_hit_rate"] > 0.0, \
+            f"{arch}: shared system prompt produced no prefix hits"
+
+        doc["archs"][arch] = {
+            "plan": {
+                "page": plan.page, "n_pages": plan.n_pages,
+                "max_pages_per_seq": plan.max_pages_per_seq,
+                "max_batch": plan.max_batch,
+                "prefill_chunk": plan.prefill_chunk,
+                "interleave": plan.interleave, "codec": plan.codec,
+                "kv_token_bytes": plan.kv_token_bytes,
+                "arena_bytes": plan.arena_bytes,
+                "decode_step_s": plan.decode_step_s,
+                "prefill_tok_s": plan.prefill_tok_s,
+                "cp_prefill": plan.cp_prefill,
+            },
+            "modeled": {"batch": plan.max_batch, "ctx_tokens": mean_ctx,
+                        "paged_tok_s": paged_tok_s,
+                        "dense_tok_s": dense_tok_s},
+            "policies": {"static": static, "continuous": cont,
+                         "continuous_prefix": contp},
+        }
+        emit(f"serving_table/{arch}", plan.decode_step_s * 1e6,
+             f"paged_tok_s={paged_tok_s:.0f};dense_tok_s={dense_tok_s:.0f};"
+             f"cont_tok_s={cont['tok_s']:.0f};"
+             f"static_tok_s={static['tok_s']:.0f};"
+             f"cont_p99_ms={cont['p99_s']*1e3:.2f};"
+             f"static_p99_ms={static['p99_s']*1e3:.2f};"
+             f"prefix_hit={contp['prefix_hit_rate']:.2f};"
+             f"arena_util={cont['arena_util']:.2f}")
+    if json_path:
+        _os.makedirs(_os.path.dirname(json_path), exist_ok=True)
+        with open(json_path, "w") as f:
+            _json.dump(doc, f, indent=1)
+        print(f"wrote {json_path}", flush=True)
+    return doc

@@ -15,8 +15,10 @@ benchmarks/results/BENCH_memory.json: modeled per-device peak + step time
 per remat mode per arch incl. the budgeted auto-SAC row — the paper's
 Table 3 sweep; ctx -> benchmarks/results/BENCH_context.json: per ctx
 degree, the per-device sequence shard, modeled ring exposure and modeled
-peak/activation memory — the long-context sweep) so the perf trajectory is
-tracked across PRs.
+peak/activation memory — the long-context sweep; serve ->
+benchmarks/results/BENCH_serving.json: ServePlan analytics — modeled paged
+vs dense decode tok/s, continuous-vs-static virtual-clock latency, prefix
+hit rates) so the perf trajectory is tracked across PRs.
 """
 
 import os
@@ -37,6 +39,7 @@ OVERLAP_JSON = os.path.join(RESULTS_DIR, "BENCH_overlap.json")
 PIPELINE_JSON = os.path.join(RESULTS_DIR, "BENCH_pipeline.json")
 MEMORY_JSON = os.path.join(RESULTS_DIR, "BENCH_memory.json")
 CONTEXT_JSON = os.path.join(RESULTS_DIR, "BENCH_context.json")
+SERVING_JSON = os.path.join(RESULTS_DIR, "BENCH_serving.json")
 
 
 def main() -> None:
@@ -66,6 +69,8 @@ def main() -> None:
             json_path=MEMORY_JSON if emit_json else None),
         "ctx": lambda: T.context_table(
             json_path=CONTEXT_JSON if emit_json else None),
+        "serve": lambda: T.serving_table(
+            json_path=SERVING_JSON if emit_json else None),
         "roofline": lambda: roofline.emit_csv(T.emit),
     }
     names = names or list(benches)

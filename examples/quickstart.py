@@ -155,8 +155,93 @@ def main():
         storage, opt, metrics = step(storage, opt, batch)
         print(f"step {i} loss {float(metrics['loss']):.4f}")
 
+    # --- serving (core/serving): plan -> prefill -> continuous decode ----
+    serving_quickstart()
+
     # --- DEPRECATED: bring-your-own-module simple_fsdp shim --------------
     byo_quickstart()
+
+
+def serving_quickstart():
+    """Inference mirrors training: ONE frozen plan, executed by dumb loops.
+
+    `plan_serve` is the serving analogue of `parallelize` — it freezes a
+    ServePlan (page size, pool capacity, decode slots, chunked-prefill
+    chunk, modeled service rates) from the hw.py roofline and the KV-arena
+    byte budget.  The paged KV cache stores every sequence as fixed-size
+    pages in a pooled arena (heads sharded over 'model', pages over the
+    data axes) and decodes through a gather that reconstructs the dense
+    logical view — so paged decode is BITWISE equal to the dense cache
+    path (tests/test_serving.py asserts exact parity per family).
+
+    When to turn the knobs:
+      * prefix caching (PrefixCache): workloads with a shared system
+        prompt — full prompt pages are refcounted and re-used across
+        requests, so repeated prefixes prefill once;
+      * int8/fp8 pages (DistConfig.kv_cache_codec="int8"/"fp8"): halves
+        (or quarters) arena bytes per token via the kernels/quant codec
+        (per-128-chunk scales) — more live sequences per budget, at a
+        small dequant error priced by `pytest -m serving` tolerances.
+    """
+    import numpy as np
+
+    from repro.core.serving import (PrefixCache, Request, dense_to_pages,
+                                    plan_serve, run_virtual, synthetic_trace)
+    from repro.models.common import ShapeConfig
+    from repro.models.registry import get_arch
+    from repro.models import runtime as RT
+    from repro.train import serve as SV
+
+    cfg, model = get_arch("qwen3_1_7b", smoke=True)
+    dcfg = DistConfig(mesh_axes=("data", "model"), mesh_shape=(2, 2),
+                      param_dtype=jnp.float32, reduce_dtype=jnp.float32)
+    plan = plan_serve(model, dcfg, arena_bytes=64 * 2**20, max_batch=4,
+                      max_seq=128, page=16)
+    print(f"serve plan: page={plan.page} pool={plan.n_pages}p "
+          f"slots={plan.max_batch} chunk={plan.prefill_chunk} "
+          f"decode={plan.decode_step_s*1e6:.2f}us")
+
+    # prefill once (dense), scatter into the paged arena, decode paged:
+    B, prompt, gen, page = 4, 24, 8, 8
+    T = prompt + gen
+    max_pages, n_pages_local = T // page, (B // 2) * (T // page) + 2
+    storage = RT.init_storage(model, jax.random.PRNGKey(0), dcfg)
+    params = SV.serve_params_from_storage(model, storage, dcfg)
+    pf, mesh = SV.make_prefill_step(model, dcfg,
+                                    ShapeConfig("p", T, B, "prefill"))
+    pstep, _ = SV.make_paged_step(
+        model, dcfg, ShapeConfig("d", T, B, "decode"), page=page,
+        n_pages_local=n_pages_local, max_pages=max_pages, mesh=mesh)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, prompt), 3,
+                              cfg.vocab)
+    logits, cache = pf(params, {"tokens": jnp.pad(
+        toks, ((0, 0), (0, gen)), constant_values=3)})
+    arena, table, pools = dense_to_pages(
+        cache, np.full((B,), prompt), page, n_pages_local, max_pages,
+        dp_shards=dcfg.dp_total)
+    tbl = np.array(table)
+    filled = -(-prompt // page)
+    for b in range(B):
+        for j, pid in enumerate(pools[b // (B // 2)].alloc(
+                max_pages - filled)):
+            tbl[b, filled + j] = pid
+    table = jnp.asarray(tbl)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    for i in range(gen):
+        pos = jnp.full((B,), prompt + i, jnp.int32)
+        lg, arena = pstep(params, arena, table, tok[:, None], pos[:, None])
+        tok = jnp.argmax(lg, -1).astype(jnp.int32)
+    print(f"paged decode: {B} seqs x {gen} tokens, last ids "
+          f"{np.asarray(tok).tolist()}")
+
+    # continuous batching on the plan's virtual clock (deterministic):
+    trace = synthetic_trace(16, seed=0,
+                            mean_interarrival_s=plan.decode_step_s,
+                            prompt_lens=(24, 48), gen_lens=(8, 16))
+    m = run_virtual(plan, trace, prefix_cache=PrefixCache()).metrics()
+    print(f"continuous batching: {m['requests']} reqs "
+          f"{m['tok_s']:.0f} tok/s p99={m['p99_s']*1e3:.2f}ms "
+          f"preempt={m['preemptions']} arena_util={m['arena_util']:.2f}")
 
 
 VOCAB, D, H, SEQ, BATCH = 512, 64, 128, 32, 16

@@ -45,7 +45,9 @@ def main():
 
     outs = [tok]
     for i in range(gen - 1):
-        pos = jnp.array([prompt_len + i], jnp.int32)
+        # per-request positions (B,): rows may sit at different depths
+        # under continuous batching; here the batch advances in lockstep
+        pos = jnp.full((B,), prompt_len + i, jnp.int32)
         logits, cache = decode(params, cache, tok, pos)
         tok = jnp.argmax(logits, -1).astype(jnp.int32)
         outs.append(tok)

@@ -152,7 +152,11 @@ class DistConfig:
     #               {bf16, fp8_ag, fp8_ef} jointly with the partition
     comm_precision: str = "bf16"
 
-    # int8 KV cache (per-token/head absmax scales) — halves decode HBM.
+    # Quantized KV cache: serving caches/pages store wire-codec values +
+    # per-128-chunk f32 scales (kernels/quant — the SAME audited codec the
+    # quantized collectives use).  'int8' | 'fp8' | None.  The legacy
+    # ``kv_cache_int8`` bool is kept as an alias for codec='int8'.
+    kv_cache_codec: str | None = None
     kv_cache_int8: bool = False
 
     # Microbatching (gradient accumulation) for activation memory.
@@ -163,6 +167,16 @@ class DistConfig:
             raise ValueError(
                 f"comm_precision={self.comm_precision!r} not in "
                 f"{COMM_PRECISIONS}")
+        if self.kv_cache_codec not in (None, "int8", "fp8"):
+            raise ValueError(
+                f"kv_cache_codec={self.kv_cache_codec!r} not in "
+                f"(None, 'int8', 'fp8')")
+
+    @property
+    def kv_codec(self) -> str | None:
+        """Resolved KV-cache wire codec (kernels/quant vocabulary)."""
+        return self.kv_cache_codec or ("int8" if self.kv_cache_int8
+                                       else None)
 
     # ------------------------------------------------------------------ utils
     @property

@@ -1,0 +1,178 @@
+"""Paged KV cache: fixed-size pages in a pooled arena.
+
+Layout (ParallelPlan-style, resolved at plan time): every cache leaf the
+dense prefill emits as ``(L, B, T, *rest)`` becomes an arena pool leaf
+``(L, n_pages_global, page, *rest)`` with the SAME partition spec — heads
+stay sharded over the model axis, and the pages dimension is sharded over
+the data axes (each data shard owns its own pool; page ids are local to
+the shard).  The last pool row of every shard is a scratch page: inactive
+batch slots (page-table entries -1) write there and are never read back.
+
+Device side (called from models/dense.py::_paged_writer, inside
+shard_map):  `scatter_tokens` commits new K/V at the slots the page table
+maps logical positions to; `gather_tokens` reads the table's full logical
+window back as a dense (B, max_pages*page, ...) view — for every
+allocated position this is bit-identical to the dense cache, which is
+what makes paged-vs-dense decode EXACTLY parity-checkable.
+
+Host side: `PagePool` (free list + refcounts, shared pages for the prefix
+cache), `dense_to_pages` (repage a prefilled dense cache into an arena —
+the load path and the parity harness), `arena_abstract` (abstract
+shapes/specs derived from the dense cache abstracts).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Device gather/scatter over page indices
+# ---------------------------------------------------------------------------
+def scatter_tokens(pool, table, qpos, val, page: int):
+    """Commit val (B, C, *rest) at logical positions qpos (B, C).
+
+    pool: (n_pages+1, page, *rest) — local pool, last row = scratch;
+    table: (B, max_pages) int32 local page ids, -1 = unallocated (routed
+    to the scratch page so inactive slots never corrupt live pages)."""
+    B, C = qpos.shape
+    ib = jnp.arange(B)[:, None]
+    pi = jnp.clip(qpos // page, 0, table.shape[1] - 1)
+    pid = table[ib, pi]
+    pid = jnp.where(pid < 0, pool.shape[0] - 1, pid)
+    slot = qpos % page
+    return pool.at[pid, slot].set(val.astype(pool.dtype))
+
+
+def gather_tokens(pool, table, page: int):
+    """Read the table's logical window: (B, max_pages*page, *rest).
+
+    Unallocated table entries gather arbitrary pool rows (clipped ids) —
+    callers mask by position, and the scheduler invariant (every position
+    <= pos is backed by an allocated page) keeps the masked-in region
+    exact."""
+    flat = pool.reshape(pool.shape[0] * page, *pool.shape[2:])
+    safe = jnp.clip(table, 0, pool.shape[0] - 1)
+    idx = (safe[:, :, None] * page
+           + jnp.arange(page)[None, None, :]).reshape(table.shape[0], -1)
+    return flat[idx]
+
+
+# ---------------------------------------------------------------------------
+# Abstract arena layout (plan-time)
+# ---------------------------------------------------------------------------
+def arena_abstract(cache_abs, cache_specs, n_pages_local: int, page: int,
+                   dp_shards: int):
+    """Derive (arena_abs, arena_specs) from the dense cache abstracts.
+
+    Each leaf (L, B, T, *rest) -> (L, dp_shards*(n_pages_local+1), page,
+    *rest) with the SAME spec: dim 1 (pages) rides the data axes exactly
+    where the batch dim did, heads keep the model axis (+1 is the
+    per-shard scratch page)."""
+    np_global = dp_shards * (n_pages_local + 1)
+
+    def leaf(a):
+        return jax.ShapeDtypeStruct(
+            (a.shape[0], np_global, page, *a.shape[3:]), a.dtype)
+
+    # the dense cache specs apply unchanged: dim 1 (pages for the arena,
+    # batch for the dense cache) rides the data axes either way
+    return jax.tree.map(leaf, cache_abs), cache_specs
+
+
+# ---------------------------------------------------------------------------
+# Host page pool
+# ---------------------------------------------------------------------------
+class PagePool:
+    """Free-list + refcount page allocator for ONE data shard's pool.
+
+    Pages are the unit of both allocation and sharing: the prefix cache
+    retains full pages by bumping refcounts, so `release` only returns a
+    page to the free list when its last reference drops.  The scratch
+    page is NOT managed here — it sits past `n_pages` in the arena."""
+
+    def __init__(self, n_pages: int):
+        self.n_pages = n_pages
+        self._free = list(range(n_pages - 1, -1, -1))
+        self._ref = np.zeros(n_pages, dtype=np.int64)
+
+    @property
+    def used(self) -> int:
+        return self.n_pages - len(self._free)
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> list[int] | None:
+        """Allocate n pages (refcount 1 each) or None — never partial."""
+        if n > len(self._free):
+            return None
+        ids = [self._free.pop() for _ in range(n)]
+        self._ref[ids] = 1
+        return ids
+
+    def retain(self, pid: int) -> None:
+        assert self._ref[pid] > 0, f"retain of free page {pid}"
+        self._ref[pid] += 1
+
+    def release(self, pid: int) -> bool:
+        """Drop one reference; True when the page actually freed."""
+        assert self._ref[pid] > 0, f"release of free page {pid}"
+        self._ref[pid] -= 1
+        if self._ref[pid] == 0:
+            self._free.append(pid)
+            return True
+        return False
+
+    def release_all(self, pids) -> None:
+        for p in pids:
+            self.release(p)
+
+    def check(self) -> None:
+        """Invariant: every page is exactly free or referenced."""
+        free = set(self._free)
+        assert len(free) == len(self._free), "double-free"
+        for pid in range(self.n_pages):
+            assert (pid in free) == (self._ref[pid] == 0), pid
+
+
+# ---------------------------------------------------------------------------
+# Repage a dense cache (host) — the load path and the parity harness
+# ---------------------------------------------------------------------------
+def dense_to_pages(cache, lengths, page: int, n_pages_local: int,
+                   max_pages: int, dp_shards: int = 1):
+    """Scatter a prefilled dense cache into a fresh arena.
+
+    cache: pytree of np/jnp leaves (L, B, T, *rest); lengths: (B,) valid
+    prefix per sequence.  Rows are dealt to data shards contiguously
+    (shard = b // (B/dp_shards)) and each shard allocates from its own
+    pool, so the returned table holds LOCAL page ids.  Returns
+    (arena_tree, tables (B, max_pages) int32, pools per shard)."""
+    leaves, treedef = jax.tree.flatten(cache)
+    B = leaves[0].shape[1]
+    assert B % dp_shards == 0
+    rows_per = B // dp_shards
+    pools = [PagePool(n_pages_local) for _ in range(dp_shards)]
+    np1 = n_pages_local + 1
+    tables = np.full((B, max_pages), -1, dtype=np.int32)
+
+    out = [np.zeros((lf.shape[0], dp_shards * np1, page, *lf.shape[3:]),
+                    dtype=lf.dtype) for lf in leaves]
+    for b in range(B):
+        shard = b // rows_per
+        n_needed = -(-int(lengths[b]) // page) if lengths[b] else 0
+        assert n_needed <= max_pages, (b, lengths[b])
+        ids = pools[shard].alloc(n_needed)
+        assert ids is not None, "arena too small for dense_to_pages"
+        for j, pid in enumerate(ids):
+            tables[b, j] = pid
+            lo = j * page
+            m = min(page, int(lengths[b]) - lo)
+            for lf, dst in zip(leaves, out):
+                dst[:, shard * np1 + pid, :m] = np.asarray(
+                    lf[:, b, lo:lo + m])
+    return (jax.tree.unflatten(treedef, [jnp.asarray(a) for a in out]),
+            jnp.asarray(tables), pools)

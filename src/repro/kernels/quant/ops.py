@@ -32,6 +32,46 @@ def roundtrip(x: jax.Array, codec: str | None,
     return ref.roundtrip(x, codec, stochastic)
 
 
+# ---------------------------------------------------------------------------
+# KV-cache codec: the serving cache / paged-arena storage format.
+#
+# Each (..., head_dim) vector is padded to a whole number of QCHUNK groups
+# and quantized with the SAME chunk_scales/encode_chunks math the wire
+# codec uses (deterministic RTN — a cache readback must be reproducible),
+# so KV-cache quantization and collective compression share one audited
+# code path.  Scales ride alongside as (..., kv_chunks(head_dim)) f32.
+# ---------------------------------------------------------------------------
+def kv_chunks(head_dim: int) -> int:
+    """Scale groups per head vector: ceil(head_dim / QCHUNK)."""
+    return -(-head_dim // QCHUNK)
+
+
+def kv_wire_dtype(codec: str):
+    return ref.WIRE_DTYPE[codec]
+
+
+def encode_kv(x: jax.Array, codec: str):
+    """x: (..., hd) -> (wire values (..., hd), f32 scales (..., nc))."""
+    hd = x.shape[-1]
+    nc = kv_chunks(hd)
+    pad = nc * QCHUNK - hd
+    xf = x.astype(jnp.float32)
+    if pad:
+        xf = jnp.pad(xf, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    x2 = xf.reshape(-1, QCHUNK)
+    scale = ref.chunk_scales(x2, codec)
+    q = ref.encode_chunks(x2, scale, codec, stochastic=False)
+    q = q.reshape(*x.shape[:-1], nc * QCHUNK)[..., :hd]
+    return q, scale.reshape(*x.shape[:-1], nc)
+
+
+def decode_kv(q: jax.Array, scales: jax.Array, dtype) -> jax.Array:
+    """Inverse of `encode_kv` back to `dtype` (same trailing hd)."""
+    hd = q.shape[-1]
+    s = jnp.repeat(scales, QCHUNK, axis=-1)[..., :hd]
+    return (q.astype(jnp.float32) * s).astype(dtype)
+
+
 def roundtrip_pallas(x: jax.Array, codec: str, stochastic: bool = False,
                      interpret: bool = False) -> jax.Array:
     """Pallas encode+decode of an arbitrary-shaped buffer: chunk to

@@ -509,13 +509,13 @@ def build_lowered(arch_id: str, shape_name: str, dcfg: DistConfig, mesh,
                 is_leaf=lambda x: isinstance(x, P))
 
         def step(params, cache, tok, pos):
-            logits, cache = model.decode_local(params, cache, tok, pos[0],
+            logits, cache = model.decode_local(params, cache, tok, pos,
                                                dcfg)
             return logits, cache
 
         fn = shard_map(step, mesh=mesh,
                        in_specs=(SV.serve_param_specs(model, dcfg),
-                                 cache_specs, P(lead), P()),
+                                 cache_specs, P(lead), P(lead)),
                        out_specs=(P(lead, dcfg.tp_axis), cache_specs),
                        check_vma=False)
         args = (
@@ -524,8 +524,8 @@ def build_lowered(arch_id: str, shape_name: str, dcfg: DistConfig, mesh,
             _sds_with_sharding(cache_abs, cache_specs, mesh),
             jax.ShapeDtypeStruct((B,), jnp.int32,
                                  sharding=NamedSharding(mesh, P(lead))),
-            jax.ShapeDtypeStruct((1,), jnp.int32,
-                                 sharding=NamedSharding(mesh, P())),
+            jax.ShapeDtypeStruct((B,), jnp.int32,
+                                 sharding=NamedSharding(mesh, P(lead))),
         )
         # donate the cache: decode updates it in place (halves HBM)
         lowered = jax.jit(fn, donate_argnums=(1,)).lower(*args)

@@ -386,9 +386,10 @@ class DenseLM:
         h, _ = self._ffn_apply(p["mlp"], h, dcfg)
         if cfg.post_norms:
             h = LY.rmsnorm(h, p["pn2"], cfg.norm_eps, uo)
-        if dcfg.kv_cache_int8:
-            kq, ks = LY.kv_quantize(k)
-            vq, vs = LY.kv_quantize(v)
+        codec = dcfg.kv_codec
+        if codec:
+            kq, ks = LY.kv_quantize(k, codec)
+            vq, vs = LY.kv_quantize(v, codec)
             return x + h, {"k": kq, "ks": ks, "v": vq, "vs": vs}
         return x + h, (k.astype(dcfg.param_dtype), v.astype(dcfg.param_dtype))
 
@@ -431,8 +432,71 @@ class DenseLM:
         return logits[:, 0], cache
 
     # decode -----------------------------------------------------------------
-    def _decode_sub(self, p, x, kv, pos, cos, sin, dcfg, window):
-        """x: (B,1,D) replicated over model; kv: (B,T,Kl,hd) cache."""
+    # Paged-serving contract (core/serving): this family stores its cache
+    # as fixed-size KV pages in a pooled arena and decodes through the
+    # gather/scatter path below.  Recurrent families (xlstm/zamba2) carry
+    # O(1) state — paging does not apply; encdec's dual cache is a
+    # follow-up (ROADMAP serving notes).
+    paged_kv = True
+
+    def _dense_writer(self, kv, k, v, *, qpos, dcfg):
+        """Commit new (B,C,Kl,hd) K/V into the dense (B,T,...) cache at
+        per-request positions qpos (B,C); returns (new_kv, ck, cv) where
+        ck/cv are the full dense read views the attention consumes."""
+        ib = jnp.arange(k.shape[0])[:, None]
+        codec = dcfg.kv_codec
+        if codec:
+            kq, ks = LY.kv_quantize(k, codec)
+            vq, vs = LY.kv_quantize(v, codec)
+            kv = {
+                "k": kv["k"].at[ib, qpos].set(kq),
+                "ks": kv["ks"].at[ib, qpos].set(ks),
+                "v": kv["v"].at[ib, qpos].set(vq),
+                "vs": kv["vs"].at[ib, qpos].set(vs),
+            }
+            ck = LY.kv_dequantize(kv["k"], kv["ks"], dcfg.param_dtype)
+            cv = LY.kv_dequantize(kv["v"], kv["vs"], dcfg.param_dtype)
+            return kv, ck, cv
+        ck, cv = kv
+        ck = ck.at[ib, qpos].set(k.astype(ck.dtype))
+        cv = cv.at[ib, qpos].set(v.astype(cv.dtype))
+        return (ck, cv), ck, cv
+
+    def _paged_writer(self, kv, k, v, *, table, qpos, dcfg, page):
+        """Paged cache commit: scatter new K/V into the page pool at the
+        slots `table` maps qpos to, then gather the table's full logical
+        window back as the dense read views (exactly the dense cache
+        contents for every allocated position <= qpos)."""
+        from repro.core.serving import pages as PG
+        codec = dcfg.kv_codec
+        if codec:
+            kq, ks = LY.kv_quantize(k, codec)
+            vq, vs = LY.kv_quantize(v, codec)
+            kv = {
+                "k": PG.scatter_tokens(kv["k"], table, qpos, kq, page),
+                "ks": PG.scatter_tokens(kv["ks"], table, qpos, ks, page),
+                "v": PG.scatter_tokens(kv["v"], table, qpos, vq, page),
+                "vs": PG.scatter_tokens(kv["vs"], table, qpos, vs, page),
+            }
+            ck = LY.kv_dequantize(PG.gather_tokens(kv["k"], table, page),
+                                  PG.gather_tokens(kv["ks"], table, page),
+                                  dcfg.param_dtype)
+            cv = LY.kv_dequantize(PG.gather_tokens(kv["v"], table, page),
+                                  PG.gather_tokens(kv["vs"], table, page),
+                                  dcfg.param_dtype)
+            return kv, ck, cv
+        pk, pv = kv
+        pk = PG.scatter_tokens(pk, table, qpos, k.astype(pk.dtype), page)
+        pv = PG.scatter_tokens(pv, table, qpos, v.astype(pv.dtype), page)
+        return ((pk, pv), PG.gather_tokens(pk, table, page),
+                PG.gather_tokens(pv, table, page))
+
+    def _decode_sub(self, p, x, kv, qpos, cos, sin, dcfg, window,
+                    writer=None):
+        """x: (B,C,D) replicated over model; qpos: (B,C) absolute
+        positions per query token.  `writer(kv, k, v)` commits new K/V to
+        the cache and returns (new_kv, ck, cv) dense read views
+        (B,T,Kl,hd); the default writes the dense cache in place."""
         cfg = self.cfg
         uo = cfg.post_norms
         h = LY.rmsnorm(x, p["ln1"], cfg.norm_eps, uo)
@@ -440,46 +504,32 @@ class DenseLM:
         if cfg.qk_norm:
             q = LY.rmsnorm(q, p["attn"]["q_norm"], cfg.norm_eps)
             k = LY.rmsnorm(k, p["attn"]["k_norm"], cfg.norm_eps)
-        q = LY.apply_rope(q, cos, sin)
-        k = LY.apply_rope(k, cos, sin)
-        if dcfg.kv_cache_int8:
-            kq, ks = LY.kv_quantize(k)
-            vq, vs = LY.kv_quantize(v)
-            kv = {
-                "k": lax.dynamic_update_slice_in_dim(kv["k"], kq, pos, 1),
-                "ks": lax.dynamic_update_slice_in_dim(kv["ks"], ks, pos, 1),
-                "v": lax.dynamic_update_slice_in_dim(kv["v"], vq, pos, 1),
-                "vs": lax.dynamic_update_slice_in_dim(kv["vs"], vs, pos, 1),
-            }
-            ck = LY.kv_dequantize(kv["k"], kv["ks"], dcfg.param_dtype)
-            cv = LY.kv_dequantize(kv["v"], kv["vs"], dcfg.param_dtype)
-            new_kv = kv
-        else:
-            ck, cv = kv
-            ck = lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype),
-                                                 pos, 1)
-            cv = lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype),
-                                                 pos, 1)
-            new_kv = (ck, cv)
+        q = LY.apply_rope_pos(q, cos, sin)
+        k = LY.apply_rope_pos(k, cos, sin)
+        if writer is None:
+            writer = functools.partial(self._dense_writer, qpos=qpos,
+                                       dcfg=dcfg)
+        new_kv, ck, cv = writer(kv, k, v)
+        B, C = qpos.shape
         T = ck.shape[1]
         kl = ck.shape[2]
         hl = q.shape[2]
         group = hl // kl
-        qg = q.reshape(q.shape[0], 1, kl, group, cfg.head_dim)
+        qg = q.reshape(B, C, kl, group, cfg.head_dim)
         s = jnp.einsum("bqkgh,btkh->bkgqt", qg * self._q_scale, ck,
                        preferred_element_type=jnp.float32)
         s = LY._softcap(s, cfg.attn_softcap)
         tpos = jnp.arange(T)
-        msk = tpos <= pos
+        msk = tpos[None, None, :] <= qpos[:, :, None]
         if window is not None:
-            msk &= tpos > pos - window
-        s = jnp.where(msk[None, None, None, None, :], s, -1e30)
+            msk &= tpos[None, None, :] > qpos[:, :, None] - window
+        s = jnp.where(msk[:, None, None, :, :], s, -1e30)
         pr = jax.nn.softmax(s, axis=-1)
         out = jnp.einsum("bkgqt,btkh->bqkgh", pr.astype(cv.dtype), cv)
-        out = out.reshape(q.shape[0], 1, hl, cfg.head_dim)
+        out = out.reshape(B, C, hl, cfg.head_dim)
         out = out * head_mask[None, None, :, None]
         o = jnp.einsum("bsh,hd->bsd",
-                       out.reshape(q.shape[0], 1, hl * cfg.head_dim),
+                       out.reshape(B, C, hl * cfg.head_dim),
                        p["attn"]["wo"])
         o = lax.psum(o, dcfg.tp_axis)
         if cfg.post_norms:
@@ -491,15 +541,15 @@ class DenseLM:
             o = LY.rmsnorm(o, p["pn2"], cfg.norm_eps, uo)
         return x + o, new_kv
 
-    def decode_local(self, params_tp, cache, tok, pos, dcfg: DistConfig):
-        """One decode step. tok: (B,) int32; pos: scalar int32.
-        cache: pytree of (n_steps, B, T, Kl, hd) pairs."""
+    def _cached_forward(self, params_tp, cache, toks, qpos, dcfg,
+                        writer=None):
+        """Shared decode/chunked-prefill core: embed toks (B,C) at
+        positions qpos (B,C), scan the stack against the cache (dense or
+        paged via `writer`), return (last-position logits, cache)."""
         cfg = self.cfg
-        cos, sin = LY.rope_cache(1, cfg.head_dim, cfg.rope_theta,
-                                 positions=pos[None])
-        table = params_tp["embed"]
+        cos, sin = LY.rope_pos(qpos, cfg.head_dim, cfg.rope_theta)
         scale = math.sqrt(cfg.d_model) if cfg.post_norms else None
-        x = LY.embed_apply(table, tok[:, None], cfg, dcfg, scale=scale,
+        x = LY.embed_apply(params_tp["embed"], toks, cfg, dcfg, scale=scale,
                            scatter=False)
 
         # The cache rides the scan CARRY and is updated in place at the
@@ -525,12 +575,14 @@ class DenseLM:
             if self.layers_per_step == 1:
                 w = cfg.sliding_window \
                     if not cfg.local_global_alternate else None
-                y, kv2 = self._decode_sub(p, xc, kv, pos, cos, sin, dcfg, w)
+                y, kv2 = self._decode_sub(p, xc, kv, qpos, cos, sin, dcfg,
+                                          w, writer)
             else:
-                y, kv_l = self._decode_sub(p["local"], xc, kv[0], pos, cos,
-                                           sin, dcfg, cfg.sliding_window)
-                y, kv_g = self._decode_sub(p["global"], y, kv[1], pos, cos,
-                                           sin, dcfg, None)
+                y, kv_l = self._decode_sub(p["local"], xc, kv[0], qpos,
+                                           cos, sin, dcfg,
+                                           cfg.sliding_window, writer)
+                y, kv_g = self._decode_sub(p["global"], y, kv[1], qpos,
+                                           cos, sin, dcfg, None, writer)
                 kv2 = (kv_l, kv_g)
             return (y, put_kv(cache_all, kv2, idx)), None
 
@@ -538,6 +590,7 @@ class DenseLM:
             body, (x, cache), (params_tp["blocks"], jnp.arange(L)))
         x = LY.rmsnorm(x, params_tp["final_norm"], cfg.norm_eps,
                        cfg.post_norms)
+        x = x[:, -1:]
         if cfg.tie_embeddings:
             logits = jnp.einsum("bsd,vd->bsv", x, params_tp["embed"],
                                 preferred_element_type=jnp.float32)
@@ -546,6 +599,27 @@ class DenseLM:
                                 preferred_element_type=jnp.float32)
         logits = LY._softcap(logits, cfg.final_softcap)
         return logits[:, 0], cache
+
+    def decode_local(self, params_tp, cache, tok, pos, dcfg: DistConfig):
+        """One decode step. tok: (B,) int32; pos: (B,) int32 PER-REQUEST
+        positions — ragged batches decode at their own offsets.
+        cache: pytree of (n_steps, B, T, Kl, hd) pairs."""
+        return self._cached_forward(params_tp, cache, tok[:, None],
+                                    pos[:, None], dcfg)
+
+    def paged_step_local(self, params_tp, arena, table, toks, qpos, dcfg,
+                         page: int):
+        """One paged serving step: decode (C=1) or a prefill chunk (C>1).
+
+        arena: pytree of page pools, leaves (n_steps, n_pages+1, page, ...)
+        — the last pool row is the scratch page that inactive slots
+        (table entries -1) harmlessly write to; table: (B, max_pages)
+        int32 page ids local to this shard's pool; toks/qpos: (B, C).
+        Returns (last-position logits (B, V/tp), updated arena)."""
+        writer = functools.partial(self._paged_writer, table=table,
+                                   qpos=qpos, dcfg=dcfg, page=page)
+        return self._cached_forward(params_tp, arena, toks, qpos, dcfg,
+                                    writer=writer)
 
     # ----------------------------------------------------------- costing --
     def block_stats(self, dcfg: DistConfig, batch_shape) -> BlockStats:

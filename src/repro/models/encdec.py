@@ -333,25 +333,26 @@ class EncDecLM:
     def decode_local(self, params_tp, cache, tok, pos, dcfg: DistConfig):
         """One decoder token against (self-KV cache, cross-KV cache).
 
-        cache = {"self": (L,B,T,Kl,hd) pairs, "cross": (L,B,S_src,Kl,hd)
-        pairs precomputed from encoder memory at prefill}."""
+        pos: (B,) per-request positions — ragged batches advance each
+        row independently.  cache = {"self": (L,B,T,Kl,hd) pairs,
+        "cross": (L,B,S_src,Kl,hd) pairs precomputed from encoder memory
+        at prefill}."""
         cfg = self.cfg
-        cos, sin = LY.rope_cache(1, cfg.head_dim, cfg.rope_theta,
-                                 positions=pos[None])
+        cos, sin = LY.rope_pos(pos[:, None], cfg.head_dim, cfg.rope_theta)
         x = LY.embed_apply(params_tp["embed"], tok[:, None], cfg, dcfg,
                            scatter=False)
+        ib = jnp.arange(tok.shape[0])
 
         def body(xc, inp):
             p, (kv_self, kv_cross) = inp
             # self attention (causal, cached)
             h = LY.rmsnorm(xc, p["ln1"], cfg.norm_eps)
             q, k, v, hm = LY._local_qkv(p["attn"], h, cfg, dcfg)
-            q, k = LY.apply_rope(q, cos, sin), LY.apply_rope(k, cos, sin)
+            q = LY.apply_rope_pos(q, cos, sin)
+            k = LY.apply_rope_pos(k, cos, sin)
             ck, cv = kv_self
-            ck = lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype),
-                                                 pos, 1)
-            cv = lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype),
-                                                 pos, 1)
+            ck = ck.at[ib, pos].set(k[:, 0].astype(ck.dtype))
+            cv = cv.at[ib, pos].set(v[:, 0].astype(cv.dtype))
             o = _cached_attn(q, ck, cv, pos, cfg, hm)
             o = jnp.einsum("bsh,hd->bsd", o, p["attn"]["wo"])
             o = lax.psum(o, dcfg.tp_axis)
@@ -417,7 +418,8 @@ class EncDecLM:
 
 
 def _cached_attn(q, ck, cv, pos, cfg, head_mask):
-    """q: (B,1,Hl,hd); ck/cv: (B,T,Kl,hd). pos=None -> attend everything."""
+    """q: (B,1,Hl,hd); ck/cv: (B,T,Kl,hd). pos (B,) per-request;
+    pos=None -> attend everything."""
     B, _, hl, hd = q.shape
     kl = ck.shape[2]
     group = hl // kl
@@ -425,8 +427,8 @@ def _cached_attn(q, ck, cv, pos, cfg, head_mask):
     s = jnp.einsum("bqkgh,btkh->bkgqt", qg / math.sqrt(hd), ck,
                    preferred_element_type=jnp.float32)
     if pos is not None:
-        msk = jnp.arange(ck.shape[1]) <= pos
-        s = jnp.where(msk[None, None, None, None, :], s, -1e30)
+        msk = jnp.arange(ck.shape[1])[None, :] <= pos[:, None]
+        s = jnp.where(msk[:, None, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgqt,btkh->bqkgh", p.astype(cv.dtype), cv)
     out = out.reshape(B, 1, hl, hd) * head_mask[None, None, :, None]

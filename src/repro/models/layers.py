@@ -104,6 +104,26 @@ def apply_rope(x, cos, sin):
         [x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
 
 
+def rope_pos(positions, head_dim: int, theta: float, dtype=jnp.float32):
+    """cos/sin for an explicit per-request position grid.
+
+    positions: (B, S) int — each row its own offsets (ragged decode /
+    chunked prefill).  Returns (B, S, hd/2) tables for `apply_rope_pos`."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2) / head_dim))
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def apply_rope_pos(x, cos, sin):
+    """x: (B, S, H, hd); cos/sin: (B, S, hd/2) from `rope_pos`."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[:, :, None, :]
+    s = sin[:, :, None, :]
+    return jnp.concatenate(
+        [x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
 # ---------------------------------------------------------------------------
 # Attention core (reference + chunked-online-softmax used for long context)
 # ---------------------------------------------------------------------------
@@ -456,16 +476,16 @@ def mlp_apply(p, x_sp, cfg: ArchConfig, dcfg: DistConfig):
 
 
 # ---------------------------------------------------------------------------
-# int8 KV-cache quantization (per-token, per-head absmax scales)
+# Quantized KV cache (kernels/quant codec: per-128-chunk f32 scales over
+# each head vector — the SAME audited path the wire collectives use, so
+# cache and collective quantization cannot drift).
 # ---------------------------------------------------------------------------
-def kv_quantize(x):
-    """x: (..., hd) -> (int8 values, f32 scales (...,))."""
-    s = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
-    s = jnp.maximum(s, 1e-8)
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s[..., None]),
-                 -127, 127).astype(jnp.int8)
-    return q, s
+def kv_quantize(x, codec="int8"):
+    """x: (..., hd) -> (wire values (..., hd), f32 scales (..., nc))."""
+    from repro.kernels.quant import ops as QOPS
+    return QOPS.encode_kv(x, codec)
 
 
 def kv_dequantize(q, s, dtype):
-    return (q.astype(jnp.float32) * s[..., None]).astype(dtype)
+    from repro.kernels.quant import ops as QOPS
+    return QOPS.decode_kv(q, s, dtype)

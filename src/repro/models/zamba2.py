@@ -572,13 +572,13 @@ class Zamba2LM:
 
     def decode_local(self, params_tp, state, tok, pos, dcfg: DistConfig):
         """Shared attention during decode attends over its own KV cache held
-        in `state['sh_kv']` (B, T, Kl, hd) per invocation point."""
+        in `state['sh_kv']` (B, T, Kl, hd) per invocation point.
+        pos: (B,) per-request positions."""
         cfg = self.cfg
         x = LY.embed_apply(params_tp["embed"], tok[:, None], cfg, dcfg,
                            scatter=False)
         emb0 = x
-        cos, sin = LY.rope_cache(1, cfg.head_dim, cfg.rope_theta,
-                                 positions=pos[None])
+        cos, sin = LY.rope_pos(pos[:, None], cfg.head_dim, cfg.rope_theta)
         new_state = dict(state)
         # scan over mamba layers in python segments mirroring training
         S, cx, cbc = state["S"], state["conv_x"], state["conv_bc"]
@@ -617,11 +617,12 @@ class Zamba2LM:
             head_dim=cfg.head_dim, pad_to=cfg.pad_to)
         q, k, v, head_mask = LY._local_qkv(
             {"wq": p["wq"], "wk": p["wk"], "wv": p["wv"]}, h, fake, dcfg)
-        q = LY.apply_rope(q, cos, sin)
-        k = LY.apply_rope(k, cos, sin)
+        q = LY.apply_rope_pos(q, cos, sin)
+        k = LY.apply_rope_pos(k, cos, sin)
         ck, cv = state["sh_kv"][idx]
-        ck = lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), pos, 1)
-        cv = lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), pos, 1)
+        ib = jnp.arange(q.shape[0])
+        ck = ck.at[ib, pos].set(k[:, 0].astype(ck.dtype))
+        cv = cv.at[ib, pos].set(v[:, 0].astype(cv.dtype))
         kl = ck.shape[2]
         hl = q.shape[2]
         group = hl // kl
@@ -629,8 +630,8 @@ class Zamba2LM:
         s = jnp.einsum("bqkgh,btkh->bkgqt",
                        qg / math.sqrt(cfg.head_dim), ck,
                        preferred_element_type=jnp.float32)
-        msk = jnp.arange(ck.shape[1]) <= pos
-        s = jnp.where(msk[None, None, None, None, :], s, -1e30)
+        msk = jnp.arange(ck.shape[1])[None, :] <= pos[:, None]
+        s = jnp.where(msk[:, None, None, None, :], s, -1e30)
         pr = jax.nn.softmax(s, axis=-1)
         out = jnp.einsum("bkgqt,btkh->bqkgh", pr.astype(cv.dtype), cv)
         out = out.reshape(q.shape[0], 1, hl, cfg.head_dim)

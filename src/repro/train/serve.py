@@ -17,6 +17,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.dist import DistConfig, make_mesh
 from repro.core.meta import ParamMeta
+from repro.kernels.quant import ops as QOPS
 from repro.models import runtime as RT
 from repro.models.common import ShapeConfig
 
@@ -93,14 +94,15 @@ def cache_abstract(model, shape: ShapeConfig, dcfg: DistConfig):
 
     def kv_pair(t_len, heads):
         spec = P(None, dp, None, dcfg.tp_axis, None)
-        spec3 = P(None, dp, None, dcfg.tp_axis)
-        if dcfg.kv_cache_int8:
+        codec = dcfg.kv_codec
+        if codec:
             q = jax.ShapeDtypeStruct((model.n_steps, B, t_len, heads,
-                                      cfg.head_dim), jnp.int8)
-            sc = jax.ShapeDtypeStruct((model.n_steps, B, t_len, heads),
-                                      jnp.float32)
+                                      cfg.head_dim), QOPS.kv_wire_dtype(codec))
+            sc = jax.ShapeDtypeStruct(
+                (model.n_steps, B, t_len, heads,
+                 QOPS.kv_chunks(cfg.head_dim)), jnp.float32)
             return ({"k": q, "ks": sc, "v": q, "vs": sc},
-                    {"k": spec, "ks": spec3, "v": spec, "vs": spec3})
+                    {"k": spec, "ks": spec, "v": spec, "vs": spec})
         sds = jax.ShapeDtypeStruct((model.n_steps, B, t_len, heads,
                                     cfg.head_dim), dcfg.param_dtype)
         return (sds, sds), (spec, spec)
@@ -191,10 +193,10 @@ def make_decode_step(model, dcfg: DistConfig, shape: ShapeConfig, mesh=None):
     _, cache_specs = cache_abstract(model, shape, dcfg)
 
     def step(params, cache, tok, pos):
-        logits, cache = model.decode_local(params, cache, tok, pos[0], dcfg)
+        logits, cache = model.decode_local(params, cache, tok, pos, dcfg)
         return logits, cache
 
-    in_specs = (serve_param_specs(model, dcfg), cache_specs, P(dp), P())
+    in_specs = (serve_param_specs(model, dcfg), cache_specs, P(dp), P(dp))
     out_specs = (P(dp, dcfg.tp_axis), cache_specs)
     return jax.jit(shard_map(step, mesh=mesh, in_specs=in_specs,
                              out_specs=out_specs, check_vma=False),
@@ -233,5 +235,50 @@ def decode_inputs_abstract(model, shape: ShapeConfig, dcfg: DistConfig):
         "params": serve_abstract_params(model, dcfg),
         "cache": cache_abs,
         "tok": jax.ShapeDtypeStruct((B,), jnp.int32),
-        "pos": jax.ShapeDtypeStruct((1,), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((B,), jnp.int32),
     }
+
+
+# ---------------------------------------------------------------------------
+# Paged decode/chunked-prefill step (core.serving arena layout)
+# ---------------------------------------------------------------------------
+def paged_abstracts(model, shape: ShapeConfig, dcfg: DistConfig, *,
+                    page: int, n_pages_local: int, max_pages: int):
+    """(arena_abs, arena_specs, table_abs, table_spec) for a paged step."""
+    from repro.core.serving import pages as PG
+    cache_abs, cache_specs = cache_abstract(model, shape, dcfg)
+    arena_abs, arena_specs = PG.arena_abstract(
+        cache_abs, cache_specs, n_pages_local, page, dcfg.dp_total)
+    dp = _dp_axes(dcfg)
+    table_abs = jax.ShapeDtypeStruct(
+        (shape.global_batch, max_pages), jnp.int32)
+    return arena_abs, arena_specs, table_abs, P(dp)
+
+
+def make_paged_step(model, dcfg: DistConfig, shape: ShapeConfig, *,
+                    page: int, n_pages_local: int, max_pages: int,
+                    chunk: int = 1, mesh=None):
+    """Jitted paged step over (params, arena, table, toks, qpos).
+
+    chunk=1 is one decode step; chunk>1 runs one chunked-prefill slab
+    through the same kernel.  toks/qpos are (B, chunk); the table holds
+    LOCAL page ids (each data shard allocates from its own pool)."""
+    if not getattr(model, "paged_kv", False):
+        raise ValueError(
+            f"{model.cfg.family}: no paged decode path (see plan_serve)")
+    mesh = mesh or make_mesh(dcfg)
+    dp = _dp_axes(dcfg)
+    _, arena_specs, _, table_spec = paged_abstracts(
+        model, shape, dcfg, page=page, n_pages_local=n_pages_local,
+        max_pages=max_pages)
+
+    def step(params, arena, table, toks, qpos):
+        return model.paged_step_local(params, arena, table, toks, qpos,
+                                      dcfg, page=page)
+
+    in_specs = (serve_param_specs(model, dcfg), arena_specs, table_spec,
+                P(dp), P(dp))
+    out_specs = (P(dp, dcfg.tp_axis), arena_specs)
+    return jax.jit(shard_map(step, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False),
+                   donate_argnums=(1,)), mesh

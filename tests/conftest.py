@@ -40,6 +40,11 @@ def pytest_configure(config):
         "quant: quantized collectives — fp8/int8 wire codec round-trips, "
         "error feedback, precision-aware planner (tests/test_quant.py; "
         "run `-m quant` after kernels/quant or comm_precision changes)")
+    config.addinivalue_line(
+        "markers",
+        "serving: paged KV cache, continuous batching, prefix cache, "
+        "router (tests/test_serving.py; run `-m serving` after "
+        "core/serving or decode-path changes)")
 
 
 def pytest_collection_modifyitems(config, items):

@@ -1252,6 +1252,95 @@ CASES["trainer_smoke_b"] = \
     lambda: _case_trainer_smoke(TRAINER_SMOKE_ARCHS["trainer_smoke_b"])
 
 
+# --------------------------------------------------------------------------
+# Serving (core/serving): paged KV decode at tp2 x dp2 — pages sharded over
+# the data axis, heads over model.  Two claims:
+#   1. paged decode == dense-cache decode BITWISE on the same mesh (the
+#      gather path reconstructs the identical logical (B, T, ...) view, so
+#      the einsum/softmax work is token-for-token the same computation);
+#   2. the tp2 x dp2 pipeline matches the tp1 x dp1 reference within the
+#      harness's standard cross-mesh tolerance (psum reassociation makes
+#      bitwise cross-mesh equality impossible even for dense prefill),
+#      with identical greedy tokens at every step.
+# Explicit-collective design (shard_map + check_vma=False): exact on
+# jax 0.4 per the ROADMAP vma constraint.
+# --------------------------------------------------------------------------
+def case_serving():
+    from repro.core.serving import pages as PG
+    from repro.models import runtime as RT
+    from repro.models.common import ShapeConfig
+    from repro.models.registry import get_arch
+    from repro.train import serve as SV
+
+    for arch, codec in (("qwen3_1_7b", None), ("qwen3_1_7b", "int8"),
+                        ("gemma2_27b", None)):
+        cfg, model = get_arch(arch, smoke=True)
+        B, prompt, gen, page = 4, 12, 4, 4
+        T = prompt + gen
+        max_pages = T // page
+        toks = jax.random.randint(jax.random.PRNGKey(1), (B, prompt), 3,
+                                  cfg.vocab)
+        padded = jnp.pad(toks, ((0, 0), (0, gen)), constant_values=3)
+
+        results = {}
+        for name, mesh_shape in (("1dev", (1, 1)), ("4dev", (2, 2))):
+            dcfg = fp32_cfg(("data", "model"), mesh_shape, ("data",),
+                            kv_cache_codec=codec)
+            dp = dcfg.dp_total
+            n_pages_local = (B // dp) * max_pages + 2
+            storage = RT.init_storage(model, jax.random.PRNGKey(0), dcfg)
+            params = SV.serve_params_from_storage(model, storage, dcfg)
+            pf, mesh = SV.make_prefill_step(
+                model, dcfg, ShapeConfig("p", T, B, "prefill"))
+            dec, _ = SV.make_decode_step(
+                model, dcfg, ShapeConfig("d", T, B, "decode"), mesh=mesh)
+            pstep, _ = SV.make_paged_step(
+                model, dcfg, ShapeConfig("d", T, B, "decode"), page=page,
+                n_pages_local=n_pages_local, max_pages=max_pages,
+                mesh=mesh)
+            logits, cache = pf(params, {"tokens": padded})
+            arena, table, pools = PG.dense_to_pages(
+                cache, np.full((B,), prompt), page, n_pages_local,
+                max_pages, dp_shards=dp)
+            tbl = np.array(table)
+            filled = -(-prompt // page)
+            for b in range(B):
+                ids = pools[b // (B // dp)].alloc(max_pages - filled)
+                for j, pid in enumerate(ids):
+                    tbl[b, filled + j] = pid
+            table = jnp.asarray(tbl)
+            tok_d = tok_p = jnp.argmax(logits, -1).astype(jnp.int32)
+            step_logits, step_toks = [], []
+            for i in range(gen):
+                pos = jnp.full((B,), prompt + i, jnp.int32)
+                ld, cache = dec(params, cache, tok_d, pos)
+                lp, arena = pstep(params, arena, table, tok_p[:, None],
+                                  pos[:, None])
+                assert np.array_equal(np.asarray(ld), np.asarray(lp)), (
+                    f"serving/{arch}/codec={codec}: paged != dense "
+                    f"(bitwise) at step {i} on {name}")
+                tok_d = jnp.argmax(ld, -1).astype(jnp.int32)
+                tok_p = jnp.argmax(lp, -1).astype(jnp.int32)
+                step_logits.append(np.asarray(lp))
+                step_toks.append(np.asarray(tok_p))
+            results[name] = (step_logits, step_toks)
+
+        (l1, t1), (l4, t4) = results["1dev"], results["4dev"]
+        for i in range(gen):
+            np.testing.assert_allclose(
+                l4[i], l1[i], rtol=2e-5, atol=1e-6,
+                err_msg=f"serving/{arch}/codec={codec}: step {i} "
+                        f"tp2xdp2 vs tp1xdp1 logits")
+            assert np.array_equal(t4[i], t1[i]), (
+                f"serving/{arch}/codec={codec}: step {i} greedy tokens "
+                f"diverged across meshes")
+        print(f"PASS serving/{arch}/codec={codec} "
+              f"(paged==dense bitwise per mesh; tp2xdp2 ~ tp1xdp1)")
+
+
+CASES["serving"] = case_serving
+
+
 if __name__ == "__main__":
     names = sys.argv[1:] or list(CASES)
     for name in names:

@@ -129,6 +129,16 @@ def test_pipeline_v2_schedules():
     _run("pipeline_v2", timeout=560)
 
 
+def test_serving_paged_decode_parity():
+    """Serving (core/serving): paged KV decode at tp2 x dp2 — pages over
+    the data axis, heads over model — is BITWISE equal to the dense-cache
+    decode on the same mesh (incl. the int8 page codec), and the whole
+    prefill->decode pipeline matches the tp1 x dp1 reference within the
+    standard cross-mesh tolerance with identical greedy tokens.  Explicit
+    collectives only, so exact on every jax version."""
+    _run("serving", timeout=560)
+
+
 @pytest.mark.slow
 def test_trainer_pp_smoke_dense_family():
     """Every registered arch runs a pp2 x dp2 x tp2 Trainer smoke (2 steps

@@ -85,7 +85,7 @@ def test_prefill_decode_consistency(arch):
     dec, _ = SV.make_decode_step(
         model, DCFG, ShapeConfig("d", T - 1, B, "decode"), mesh=mesh)
     logits_b, _ = dec(params, cache, toks[:, T - 2],
-                      jnp.array([T - 2], jnp.int32))
+                      jnp.full((B,), T - 2, jnp.int32))
     # decoding token T-2 again at its own position reproduces prefill's
     # last-position logits
     np.testing.assert_allclose(np.asarray(logits_b), np.asarray(logits_a),
@@ -110,7 +110,7 @@ def test_recurrent_prefill_decode_consistency(arch):
     dec, _ = SV.make_decode_step(
         model, DCFG, ShapeConfig("d", T, B, "decode"), mesh=mesh)
     logits_dec, _ = dec(params, state, toks[:, T],
-                        jnp.array([T - 1], jnp.int32))
+                        jnp.full((B,), T - 1, jnp.int32))
     assert np.isfinite(np.asarray(logits_dec)).all()
     assert logits_dec.shape == (B, cfg.vocab)
 

@@ -1,0 +1,432 @@
+"""Serving subsystem tests: paged KV cache parity, scheduler invariants,
+prefix caching, KV codecs, and the admission router.
+
+The load-bearing claim is EXACTNESS: paged decode reconstructs the dense
+read view bit-for-bit, so `paged == dense` is asserted with
+``np.array_equal`` — no tolerances — per supported family.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dist import DistConfig
+from repro.core.serving import (ContinuousBatcher, PagePool, PrefixCache,
+                                Request, Router, dense_to_pages, plan_serve,
+                                run_virtual, simulate_trace, static_schedule,
+                                synthetic_trace)
+from repro.core.serving.scheduler import _pages_through
+from repro.kernels.quant import ops as QOPS
+from repro.models import runtime as RT
+from repro.models.common import ShapeConfig
+from repro.models.registry import get_arch
+from repro.train import serve as SV
+
+pytestmark = pytest.mark.serving
+
+# The unit tier runs with ONE device (dist_harness owns multi-device
+# parity — its `serving` case re-asserts the paged==dense claim at
+# tp2 x dp2); under XLA_FLAGS=--xla_force_host_platform_device_count=4
+# these meshes widen and the same tests exercise the sharded paths.
+# No env mutation here: subprocess-spawning tests inherit os.environ.
+_MESH4 = (2, 2) if jax.device_count() >= 4 else (1, 1)
+_MESH2 = (1, 2) if jax.device_count() >= 2 else (1, 1)
+
+DCFG = DistConfig(mesh_axes=("data", "model"), mesh_shape=_MESH4,
+                  param_dtype=jnp.float32, reduce_dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# PagePool
+# ---------------------------------------------------------------------------
+def test_page_pool_invariants():
+    pool = PagePool(8)
+    a = pool.alloc(3)
+    assert len(a) == 3 and pool.used == 3
+    assert pool.alloc(6) is None          # never partial
+    assert pool.used == 3
+    pool.retain(a[0])
+    assert not pool.release(a[0])         # still referenced
+    assert pool.release(a[0])             # now freed
+    pool.release_all(a[1:])
+    assert pool.available == 8
+    pool.check()
+    with pytest.raises(AssertionError):
+        pool.release(a[0])                # double free
+
+
+def test_pages_through():
+    assert _pages_through(0, 4) == 1
+    assert _pages_through(3, 4) == 1
+    assert _pages_through(4, 4) == 2
+    assert _pages_through(15, 16) == 1
+
+
+# ---------------------------------------------------------------------------
+# plan_serve
+# ---------------------------------------------------------------------------
+def _plan(arch="qwen3_1_7b", **kw):
+    _, model = get_arch(arch, smoke=True)
+    kw.setdefault("arena_bytes", 64 << 20)
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_seq", 128)
+    kw.setdefault("page", 16)
+    return plan_serve(model, DCFG, **kw)
+
+
+def test_plan_serve_properties():
+    plan = _plan()
+    assert plan.n_pages >= plan.max_batch
+    assert plan.max_pages_per_seq * plan.page >= 128
+    assert plan.prefill_chunk >= plan.page
+    assert plan.prefill_chunk & (plan.prefill_chunk - 1) == 0  # pow2
+    assert plan.decode_step_s > 0 and plan.prefill_tok_s > 0
+    assert plan.arena_bytes <= 64 << 20
+    # paged streams only live context; dense streams the full window
+    assert (plan.modeled_decode_tok_s(4, 32.0, paged=True)
+            >= plan.modeled_decode_tok_s(4, 32.0, paged=False))
+
+
+def test_plan_serve_rejects_recurrent():
+    _, model = get_arch("xlstm_1_3b", smoke=True)
+    with pytest.raises(ValueError, match="no paged KV"):
+        plan_serve(model, DCFG, arena_bytes=1 << 20, max_batch=2,
+                   max_seq=64)
+
+
+def test_plan_serve_rejects_tiny_arena():
+    with pytest.raises(ValueError, match="arena budget"):
+        _plan(arena_bytes=1024)
+
+
+# ---------------------------------------------------------------------------
+# KV codec (kernels/quant page storage)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("codec", ["int8", "fp8"])
+def test_kv_codec_roundtrip(codec):
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 5, 3, 96))
+    q, s = QOPS.encode_kv(x, codec)
+    assert s.shape == (2, 5, 3, QOPS.kv_chunks(96))
+    y = QOPS.decode_kv(q, s, jnp.float32)
+    assert y.shape == x.shape
+    tol = 0.02 if codec == "int8" else 0.12
+    assert float(jnp.max(jnp.abs(x - y))) <= tol * float(jnp.max(jnp.abs(x)))
+
+
+def test_kv_codec_layer_helpers_match_ops():
+    from repro.models import layers as LY
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 4, 2, 64))
+    q1, s1 = LY.kv_quantize(x, "int8")
+    q2, s2 = QOPS.encode_kv(x, "int8")
+    assert np.array_equal(np.asarray(q1), np.asarray(q2))
+    assert np.array_equal(np.asarray(s1), np.asarray(s2))
+    y = LY.kv_dequantize(q1, s1, jnp.float32)
+    assert np.array_equal(np.asarray(y),
+                          np.asarray(QOPS.decode_kv(q2, s2, jnp.float32)))
+
+
+# ---------------------------------------------------------------------------
+# Paged decode == dense decode (EXACT)
+# ---------------------------------------------------------------------------
+def _serve_setup(arch, codec=None, mesh_shape=None, B=4, prompt=12,
+                 gen=4, page=4):
+    mesh_shape = mesh_shape or _MESH4
+    dcfg = DistConfig(mesh_axes=("data", "model"), mesh_shape=mesh_shape,
+                      param_dtype=jnp.float32, reduce_dtype=jnp.float32,
+                      kv_cache_codec=codec)
+    cfg, model = get_arch(arch, smoke=True)
+    T = prompt + gen
+    dp = dcfg.dp_total
+    max_pages = T // page
+    n_pages_local = (B // dp) * max_pages + 2
+    storage = RT.init_storage(model, jax.random.PRNGKey(0), dcfg)
+    params = SV.serve_params_from_storage(model, storage, dcfg)
+    pf, mesh = SV.make_prefill_step(model, dcfg,
+                                    ShapeConfig("p", T, B, "prefill"))
+    dec, _ = SV.make_decode_step(model, dcfg,
+                                 ShapeConfig("d", T, B, "decode"), mesh=mesh)
+    pstep, _ = SV.make_paged_step(
+        model, dcfg, ShapeConfig("d", T, B, "decode"), page=page,
+        n_pages_local=n_pages_local, max_pages=max_pages, mesh=mesh)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, prompt), 3,
+                              cfg.vocab)
+    padded = jnp.pad(toks, ((0, 0), (0, gen)), constant_values=3)
+    logits, cache = pf(params, {"tokens": padded})
+    return (cfg, model, dcfg, params, dec, pstep, logits, cache,
+            dict(B=B, prompt=prompt, gen=gen, page=page, T=T,
+                 max_pages=max_pages, n_pages_local=n_pages_local, dp=dp))
+
+
+def _repage_full(cache, sh):
+    """dense_to_pages + allocate the generation pages each row needs."""
+    arena, table, pools = dense_to_pages(
+        cache, np.full((sh["B"],), sh["prompt"]), sh["page"],
+        sh["n_pages_local"], sh["max_pages"], dp_shards=sh["dp"])
+    tbl = np.array(table)
+    filled = -(-sh["prompt"] // sh["page"])
+    for b in range(sh["B"]):
+        shard = b // (sh["B"] // sh["dp"])
+        ids = pools[shard].alloc(sh["max_pages"] - filled)
+        for j, pid in enumerate(ids):
+            tbl[b, filled + j] = pid
+    return arena, jnp.asarray(tbl), pools
+
+
+@pytest.mark.parametrize("arch,codec", [
+    ("qwen3_1_7b", None), ("qwen3_1_7b", "int8"), ("qwen3_1_7b", "fp8"),
+    ("gemma2_27b", None), ("qwen2_moe_a2_7b", None),
+])
+def test_paged_decode_exact_parity(arch, codec):
+    (cfg, model, dcfg, params, dec, pstep, logits, cache,
+     sh) = _serve_setup(arch, codec=codec)
+    cache_d = jax.tree.map(jnp.copy, cache)
+    arena, table, _ = _repage_full(cache, sh)
+    tok_d = tok_p = jnp.argmax(logits, -1).astype(jnp.int32)
+    for i in range(sh["gen"]):
+        pos = jnp.full((sh["B"],), sh["prompt"] + i, jnp.int32)
+        ld, cache_d = dec(params, cache_d, tok_d, pos)
+        lp, arena = pstep(params, arena, table, tok_p[:, None],
+                          pos[:, None])
+        assert np.array_equal(np.asarray(ld), np.asarray(lp)), \
+            f"{arch}/{codec} diverged at step {i}"
+        tok_d = jnp.argmax(ld, -1).astype(jnp.int32)
+        tok_p = jnp.argmax(lp, -1).astype(jnp.int32)
+
+
+def test_paged_decode_ragged_positions():
+    """Rows at different depths decode correctly: row b of a ragged paged
+    step matches row b of a per-depth lockstep dense decode."""
+    (cfg, model, dcfg, params, dec, pstep, logits, cache,
+     sh) = _serve_setup("qwen3_1_7b", mesh_shape=_MESH2, B=2, prompt=8,
+                        gen=8, page=4)
+    B, prompt = sh["B"], sh["prompt"]
+    # advance row 0 by two extra greedy steps (dense, lockstep)
+    cache_d = jax.tree.map(jnp.copy, cache)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    toks_by_step = [tok]
+    for i in range(2):
+        l, cache_d = dec(params, cache_d, tok,
+                         jnp.full((B,), prompt + i, jnp.int32))
+        tok = jnp.argmax(l, -1).astype(jnp.int32)
+        toks_by_step.append(tok)
+    # rebuild a ragged paged state: row 0 at prompt+2, row 1 at prompt
+    lengths = np.array([prompt + 2, prompt])
+    # materialize the ragged dense cache by zeroing row 1 beyond prompt
+    def ragged(a_adv, a_base):
+        out = np.array(a_base)
+        out[:, 0] = np.asarray(a_adv)[:, 0]
+        return jnp.asarray(out)
+    cache_r = jax.tree.map(ragged, cache_d, cache)
+    arena, table, pools = dense_to_pages(
+        cache_r, lengths, sh["page"], sh["n_pages_local"], sh["max_pages"],
+        dp_shards=1)
+    tbl = np.array(table)
+    for b in range(B):
+        filled = -(-int(lengths[b]) // sh["page"])
+        ids = pools[0].alloc(sh["max_pages"] - filled)
+        for j, pid in enumerate(ids):
+            tbl[b, filled + j] = pid
+    table = jnp.asarray(tbl)
+    # ragged step: row 0 decodes token from step 2 at pos prompt+2,
+    # row 1 decodes its first generated token at pos prompt
+    rtok = jnp.stack([toks_by_step[2][0], toks_by_step[0][1]])
+    rpos = jnp.asarray(lengths, jnp.int32)
+    lp, arena = pstep(params, arena, table, rtok[:, None], rpos[:, None])
+    # reference: dense lockstep logits at the matching depths
+    l_ref0, _ = dec(params, jax.tree.map(jnp.copy, cache_d),
+                    toks_by_step[2], jnp.full((B,), prompt + 2, jnp.int32))
+    l_ref1, _ = dec(params, jax.tree.map(jnp.copy, cache),
+                    toks_by_step[0], jnp.full((B,), prompt, jnp.int32))
+    np.testing.assert_allclose(np.asarray(lp)[0], np.asarray(l_ref0)[0],
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(lp)[1], np.asarray(l_ref1)[1],
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_chunked_prefill_matches_full_prefill():
+    """Paged chunked prefill (C>1 slabs) reproduces the dense prefill
+    cache contents and final logits (no codec: chunked attends its own
+    freshly-written slab through the paged read view)."""
+    (cfg, model, dcfg, params, dec, pstep, logits, cache,
+     sh) = _serve_setup("qwen3_1_7b", mesh_shape=_MESH2, B=2, prompt=8,
+                        gen=8, page=4)
+    B, prompt, page = sh["B"], sh["prompt"], sh["page"]
+    # empty arena + tables covering the whole window
+    arena, table, pools = dense_to_pages(
+        jax.tree.map(lambda a: jnp.zeros_like(a), cache),
+        np.zeros((B,), int), page, sh["n_pages_local"], sh["max_pages"],
+        dp_shards=1)
+    tbl = np.array(table)
+    for b in range(B):
+        ids = pools[0].alloc(sh["max_pages"])
+        tbl[b] = ids
+    table = jnp.asarray(tbl)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, prompt), 3,
+                              cfg.vocab)
+    chunk = 4
+    for s in range(0, prompt, chunk):
+        qpos = jnp.arange(s, s + chunk, dtype=jnp.int32)[None, :].repeat(
+            B, 0)
+        lp, arena = pstep(params, arena, table, toks[:, s:s + chunk], qpos)
+    # reference: a prompt-length dense prefill (the fixture's `logits`
+    # came from a padded window, i.e. a LATER position — not comparable)
+    pf2, _ = SV.make_prefill_step(
+        model, dcfg, ShapeConfig("p2", prompt, B, "prefill"))
+    logits_ref, _ = pf2(params, {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(logits_ref),
+                               rtol=2e-5, atol=2e-5)
+    # and the next decode step agrees with dense decode (the padded
+    # positions >= prompt in the dense cache are masked out / rewritten)
+    tok = jnp.argmax(logits_ref, -1).astype(jnp.int32)
+    pos = jnp.full((B,), prompt, jnp.int32)
+    ld, _ = dec(params, jax.tree.map(jnp.copy, cache), tok, pos)
+    lp2, _ = pstep(params, arena, table, tok[:, None], pos[:, None])
+    np.testing.assert_allclose(np.asarray(lp2), np.asarray(ld),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler
+# ---------------------------------------------------------------------------
+def _stub_plan(n_pages=16, max_batch=4, page=4, chunk=8, interleave=2):
+    from repro.core.serving.scheduler import ServePlan
+    return ServePlan(
+        arch="stub", family="dense", page=page, n_pages=n_pages,
+        max_pages_per_seq=min(8, n_pages), max_batch=max_batch,
+        prefill_chunk=chunk, interleave=interleave, codec=None,
+        kv_token_bytes=1024, weight_bytes=1 << 20,
+        arena_bytes=n_pages * page * 1024, decode_step_s=1e-3,
+        prefill_tok_s=1e5, cp_prefill=1)
+
+
+def _reqs(n, prompt_len=10, max_new=6, spacing=0.0):
+    return [Request(rid=i, prompt=tuple(range(3, 3 + prompt_len)),
+                    max_new=max_new, arrival=i * spacing)
+            for i in range(n)]
+
+
+def test_batcher_completes_all_requests():
+    plan = _stub_plan()
+    b = run_virtual(plan, _reqs(10, spacing=1e-3))
+    assert len(b.done) == 10
+    assert all(len(s.out) == 6 for s in b.done)
+    assert b.pool.used == 0
+    b.pool.check()
+    m = b.metrics()
+    assert m["tok_s"] > 0 and m["p99_s"] >= m["p50_s"]
+    assert 0 < m["arena_util"] <= 1.0
+
+
+def test_batcher_arena_budget_invariant_and_preemption():
+    """More live demand than pages: peak never exceeds the pool and
+    preemption (LIFO) keeps everything finishing."""
+    plan = _stub_plan(n_pages=8, max_batch=4)   # 8 pages, 4 slots
+    b = run_virtual(plan, _reqs(8, prompt_len=12, max_new=8))
+    assert len(b.done) == 8
+    assert b.stats["peak_pages"] <= plan.n_pages
+    assert b.stats["preemptions"] > 0
+    assert b.pool.used == 0
+
+
+def test_batcher_interleaves_prefill_with_decode():
+    plan = _stub_plan(interleave=2, chunk=4)
+    b = ContinuousBatcher(plan)
+    for r in _reqs(4, prompt_len=12, max_new=4):
+        b.submit(r)
+    kinds = []
+    while not b.finished():
+        act = b.next_action()
+        if act is None:
+            continue
+        kinds.append(act[0])
+        if act[0] == "prefill":
+            b.on_prefill(act[1], len(act[3]))
+        else:
+            b.on_decode(act[2] if False else act[1], [7] * len(act[1]))
+    # once decode is live, prefill chunks appear between decode runs
+    joined = "".join("p" if k == "prefill" else "d" for k in kinds)
+    assert "dp" in joined and "pd" in joined, joined
+
+
+def test_prefix_cache_sharing_and_refcounts():
+    pool = PagePool(16)
+    pc = PrefixCache()
+    page = 4
+    prompt = tuple(range(3, 3 + 12))            # 3 full pages
+    table = pool.alloc(3)
+    pc.insert(prompt, table, pool, page)
+    pool.release_all(table)                      # seq done; cache holds refs
+    assert pool.used == 3
+    hit = pc.lookup(prompt, pool, page)
+    assert hit == table                          # same physical pages
+    pool.release_all(hit)
+    assert pool.used == 3                        # cache still holds them
+    freed = pc.reclaim(pool, 3)
+    assert freed == 3 and pool.used == 0
+    pool.check()
+
+
+def test_batcher_prefix_hits_skip_prefill_work():
+    plan = _stub_plan(n_pages=32, chunk=4)
+    prompt = tuple(range(3, 3 + 16))
+    reqs = [Request(rid=i, prompt=prompt, max_new=4, arrival=i * 1.0)
+            for i in range(4)]
+    pc = PrefixCache()
+    b = run_virtual(plan, reqs, prefix_cache=pc)
+    assert len(b.done) == 4
+    m = b.metrics()
+    assert m["prefix_hit_rate"] > 0.4            # later requests fast-forward
+    # shared fast-forward stops before the last prompt token
+    nochain = run_virtual(plan, reqs)
+    assert m["prefill_chunks"] < nochain.metrics()["prefill_chunks"]
+    assert b.pool.used == len(pc)                # only cache refs remain
+
+
+def test_continuous_beats_static_on_virtual_clock():
+    plan = _plan(max_batch=4, max_seq=128)
+    trace = synthetic_trace(24, seed=3, mean_interarrival_s=0.002,
+                            prompt_lens=(32, 64), gen_lens=(16, 32))
+    cont = run_virtual(plan, trace).metrics()
+    stat = static_schedule(plan, trace)
+    assert cont["gen_tokens"] == stat["gen_tokens"]
+    assert cont["tok_s"] >= stat["tok_s"]
+    assert cont["p99_s"] <= stat["p99_s"]
+
+
+# ---------------------------------------------------------------------------
+# Router
+# ---------------------------------------------------------------------------
+def test_router_balances_and_is_deterministic():
+    # smoke-model roofline service is ~20µs/request: drive arrivals well
+    # under that so a real backlog forms and spills to the second replica
+    plan = _plan(max_batch=4)
+    trace = synthetic_trace(40, seed=1, mean_interarrival_s=2e-6,
+                            gen_lens=(64, 256))
+    r1 = simulate_trace([plan, plan], trace)
+    r2 = simulate_trace([plan, plan], trace)
+    assert r1 == r2                              # fully deterministic
+    assert r1["admitted"] == 40 and r1["rejected"] == 0
+    loads = [p["assigned"] for p in r1["per_replica"]]
+    assert min(loads) > 0                        # both replicas used
+
+
+def test_router_more_replicas_no_worse_p99():
+    plan = _plan(max_batch=2)
+    trace = synthetic_trace(40, seed=2, mean_interarrival_s=0.0005,
+                            gen_lens=(64, 128))
+    one = simulate_trace([plan], trace)
+    four = simulate_trace([plan] * 4, trace)
+    assert four["p99_s"] <= one["p99_s"]
+    assert four["tok_s"] >= one["tok_s"]
+
+
+def test_router_admission_control_sheds_load():
+    plan = _plan(max_batch=2)
+    trace = synthetic_trace(60, seed=4, mean_interarrival_s=1e-5,
+                            gen_lens=(256,))
+    open_ = simulate_trace([plan], trace)
+    gated = simulate_trace([plan], trace, admit_slo_s=open_["p50_s"] / 4)
+    assert gated["rejected"] > 0
+    assert gated["admitted"] + gated["rejected"] == 60
+    assert gated["p99_s"] <= open_["p99_s"]
