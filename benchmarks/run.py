@@ -18,7 +18,12 @@ degree, the per-device sequence shard, modeled ring exposure and modeled
 peak/activation memory — the long-context sweep; serve ->
 benchmarks/results/BENCH_serving.json: ServePlan analytics — modeled paged
 vs dense decode tok/s, continuous-vs-static virtual-clock latency, prefix
-hit rates) so the perf trajectory is tracked across PRs.
+hit rates; obs -> benchmarks/results/BENCH_obs.json: instrumentation
+overhead of the metrics registry vs a smoke step, per-arch
+modeled-vs-measured drift residuals for step time / peak memory / decode
+rate, and the trace invariant — non-overlapped comm-lane time equals the
+modeled exposed_s on the pp2 x dp2 x cp2 layout) so the perf trajectory is
+tracked across PRs.
 """
 
 import os
@@ -40,6 +45,7 @@ PIPELINE_JSON = os.path.join(RESULTS_DIR, "BENCH_pipeline.json")
 MEMORY_JSON = os.path.join(RESULTS_DIR, "BENCH_memory.json")
 CONTEXT_JSON = os.path.join(RESULTS_DIR, "BENCH_context.json")
 SERVING_JSON = os.path.join(RESULTS_DIR, "BENCH_serving.json")
+OBS_JSON = os.path.join(RESULTS_DIR, "BENCH_obs.json")
 
 
 def main() -> None:
@@ -71,6 +77,8 @@ def main() -> None:
             json_path=CONTEXT_JSON if emit_json else None),
         "serve": lambda: T.serving_table(
             json_path=SERVING_JSON if emit_json else None),
+        "obs": lambda: T.obs_table(
+            json_path=OBS_JSON if emit_json else None),
         "roofline": lambda: roofline.emit_csv(T.emit),
     }
     names = names or list(benches)

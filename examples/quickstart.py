@@ -158,6 +158,9 @@ def main():
     # --- serving (core/serving): plan -> prefill -> continuous decode ----
     serving_quickstart()
 
+    # --- observability (core/obs): trace + registry + drift --------------
+    observability_quickstart()
+
     # --- DEPRECATED: bring-your-own-module simple_fsdp shim --------------
     byo_quickstart()
 
@@ -242,6 +245,58 @@ def serving_quickstart():
     print(f"continuous batching: {m['requests']} reqs "
           f"{m['tok_s']:.0f} tok/s p99={m['p99_s']*1e3:.2f}ms "
           f"preempt={m['preemptions']} arena_util={m['arena_util']:.2f}")
+
+
+def observability_quickstart():
+    """Every cost model in the repo renders into ONE timeline and ONE
+    registry (core/obs), closing the model -> measure loop:
+
+      * `plan_trace(model, plan, shape)` walks the plan's own executed
+        schedules — pooled AG/RS hiding windows, pipeline slot tables,
+        ring hops, a traced serving batcher — into Chrome-trace JSON
+        (open the saved file at https://ui.perfetto.dev).  The layout is
+        exact: comm-lane time not covered by a compute span IS the
+        planner's modeled `exposed_s` (tests assert the match within 1%).
+      * `MetricsRegistry` is the typed counter/gauge/histogram sink the
+        Trainer, batcher, and router all write through; JSONL snapshots
+        via `TrainerConfig.metrics_jsonl` / `--metrics-jsonl`.
+      * `DriftMonitor` scores measured-vs-modeled residuals per channel
+        (step time, peak memory, decode rate) and names the
+        worst-drifting cost model — `benchmarks/run.py obs --json` tracks
+        it per arch in BENCH_obs.json.
+    """
+    import tempfile
+
+    from repro.core.api import plan_parallel
+    from repro.core.obs import (DriftMonitor, MetricsRegistry,
+                                modeled_step_time, nonoverlapped_comm_s,
+                                plan_trace)
+    from repro.models.common import ShapeConfig
+    from repro.models.registry import get_arch
+
+    cfg, model = get_arch("qwen3_1_7b", smoke=True)
+    dcfg = DistConfig(mesh_axes=("data", "model"),
+                      mesh_shape=(jax.device_count(), 1),
+                      param_dtype=jnp.float32, reduce_dtype=jnp.float32,
+                      bucket_mode="auto")
+    shape = ShapeConfig("t", 64, 8, "train")
+    plan = plan_parallel(model, dcfg, shape)
+
+    # one Perfetto-openable timeline of everything the plan promises
+    tb = plan_trace(model, plan, shape, repeats=2, arch_cfg=cfg)
+    path = tempfile.mktemp(suffix=".trace.json")
+    tb.save(path)
+    print(f"trace: {len(tb.events)} events -> {path} "
+          f"(exposed comm {nonoverlapped_comm_s(tb.to_doc())*1e6:.1f}us)")
+
+    # registry + drift: record a 'measured' step against the plan's promise
+    reg = MetricsRegistry()
+    drift = DriftMonitor(reg)
+    promised = modeled_step_time(model, plan, shape)
+    drift.record("step_time", promised, promised * 1.25, step=0)
+    reg.gauge("train/step_time_s").set(promised * 1.25)
+    print(reg.record_peak("quickstart", 2 * 2**30, 3 * 2**30))
+    print(drift.report())
 
 
 VOCAB, D, H, SEQ, BATCH = 512, 64, 128, 32, 16

@@ -149,18 +149,44 @@ def rs_time(nodes: list[CommNode], cfg: DistConfig,
                                 cfg.axis_sizes, cfg.fsdp_axes)
 
 
+# Measured codec throughput (bytes of full-precision input per second),
+# installed by the dryrun's `harvest_quant_timing` — None means the
+# analytic 2x-HBM-pass estimate stands.
+_MEASURED_QUANT_RATE: float | None = None
+
+
+def set_measured_quant_rate(rate: float | None) -> float | None:
+    """Install (or clear, with None) the measured quant codec rate;
+    returns the previous value so callers can restore it."""
+    global _MEASURED_QUANT_RATE
+    prev = _MEASURED_QUANT_RATE
+    _MEASURED_QUANT_RATE = rate
+    return prev
+
+
+def quant_codec_rate() -> float:
+    """Bytes of full-precision buffer one quantize round-trip processes
+    per second: the measured rate when the dryrun harvested one, else the
+    analytic prior (2 HBM passes per endpoint = HBM_BANDWIDTH / 2)."""
+    return _MEASURED_QUANT_RATE if _MEASURED_QUANT_RATE is not None \
+        else hw.HBM_BANDWIDTH / 2.0
+
+
 def quant_overhead_s(nodes: list[CommNode], precision: str = "bf16") -> float:
-    """Encode+decode cost of quantizing a bucket: one read + one write of
-    the full-precision buffer per quantized endpoint, priced at HBM
-    bandwidth (the Pallas kernels are bandwidth-bound elementwise passes).
-    Zero for bf16 — the planner's tie-break toward bf16 then falls out of
-    the exposure objective itself."""
+    """Encode+decode cost of quantizing a bucket per quantized endpoint.
+    Priced by `quant_codec_rate()` — the analytic prior is one read + one
+    write of the full-precision buffer at HBM bandwidth (the Pallas
+    kernels are bandwidth-bound elementwise passes); the dryrun replaces
+    that with a measured per-bucket rate (`harvest_quant_timing`).  Zero
+    for bf16 — the planner's tie-break toward bf16 then falls out of the
+    exposure objective itself."""
     ag_codec, rs_codec = precision_codecs(precision)
+    rate = quant_codec_rate()
     t = 0.0
     if ag_codec is not None:
-        t += 2.0 * sum(n.ag_bytes for n in nodes) / hw.HBM_BANDWIDTH
+        t += sum(n.ag_bytes for n in nodes) / rate
     if rs_codec is not None:
-        t += 2.0 * sum(n.rs_bytes for n in nodes) / hw.HBM_BANDWIDTH
+        t += sum(n.rs_bytes for n in nodes) / rate
     return t
 
 

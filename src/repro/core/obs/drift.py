@@ -1,0 +1,129 @@
+"""Modeled-vs-measured drift monitor.
+
+The repo's planners promise numbers — step time (exposure + roofline
+compute), per-device peak (live-range memory simulator), pipeline bubble
+(schedule tables), decode rate (serving roofline).  This module records
+what actually happened next to what was promised, per step, and names the
+subsystem whose model drifts worst — the validation hook a future
+`plan_search` autotuner scores candidate plans against, and the number
+`BENCH_obs.json` tracks per arch.
+
+Residuals are relative: (measured - modeled) / modeled.  Positive means
+reality is slower/bigger than the model promised.
+"""
+
+from __future__ import annotations
+
+import math
+
+# channel -> the cost model on the hook for its residual
+SUBSYSTEMS = {
+    "step_time": "exposure/roofline cost model (core/autowrap + core/hw)",
+    "peak_memory": "live-range memory simulator (core/memory)",
+    "bubble": "pipeline schedule tables (core/pipeline)",
+    "decode_rate": "serving roofline (core/serving ServePlan)",
+}
+
+
+class DriftMonitor:
+    """Per-channel (modeled, measured) series + the pointed report.
+
+    `registry`: optional `MetricsRegistry`; every record also lands as
+    `drift/<channel>` gauges (the EWMA'd residual the router/autotuner
+    side consumes)."""
+
+    def __init__(self, registry=None):
+        self.registry = registry
+        self.records: dict[str, list[dict]] = {}
+
+    def record(self, channel: str, modeled: float, measured: float,
+               step: int | None = None) -> float:
+        """Append one observation; returns the relative residual."""
+        rel = (measured - modeled) / modeled if modeled else math.inf
+        self.records.setdefault(channel, []).append(
+            {"step": step, "modeled": modeled, "measured": measured,
+             "rel": rel})
+        if self.registry is not None:
+            self.registry.gauge(f"drift/{channel}/rel_residual").set(rel)
+            self.registry.gauge(f"drift/{channel}/measured").set(measured)
+            self.registry.gauge(f"drift/{channel}/modeled").set(modeled)
+        return rel
+
+    def residuals(self, channel: str) -> list[float]:
+        return [r["rel"] for r in self.records.get(channel, [])]
+
+    def summary(self) -> dict:
+        """{channel: {n, modeled_mean, measured_mean, mean_abs_rel,
+        last_rel, subsystem}} — the per-arch record BENCH_obs carries."""
+        out = {}
+        for ch, rows in self.records.items():
+            rels = [r["rel"] for r in rows]
+            out[ch] = {
+                "n": len(rows),
+                "modeled_mean": sum(r["modeled"] for r in rows) / len(rows),
+                "measured_mean": sum(r["measured"] for r in rows) / len(rows),
+                "mean_abs_rel": sum(abs(x) for x in rels) / len(rels),
+                "last_rel": rels[-1],
+                "subsystem": SUBSYSTEMS.get(ch, ch),
+            }
+        return out
+
+    def worst(self) -> str | None:
+        """Channel with the largest mean |relative residual|."""
+        s = self.summary()
+        if not s:
+            return None
+        return max(s, key=lambda ch: s[ch]["mean_abs_rel"])
+
+    def report(self) -> str:
+        """Human-readable drift report, worst-drifting subsystem first."""
+        s = self.summary()
+        if not s:
+            return "drift: no observations recorded"
+        w = self.worst()
+        lines = [
+            f"drift report ({sum(v['n'] for v in s.values())} observations)",
+            f"  worst-drifting subsystem: {s[w]['subsystem']} "
+            f"[{w}: mean |rel| {s[w]['mean_abs_rel']:.2f}]",
+        ]
+        for ch in sorted(s, key=lambda c: -s[c]["mean_abs_rel"]):
+            v = s[ch]
+            lines.append(
+                f"  {ch:12s} n={v['n']:<4d} modeled {v['modeled_mean']:.3e} "
+                f"measured {v['measured_mean']:.3e} "
+                f"mean|rel| {v['mean_abs_rel']:.2f} "
+                f"last {v['last_rel']:+.2f}")
+        return "\n".join(lines)
+
+
+def modeled_step_time(model, plan, shape) -> float | None:
+    """The plan's own wall-clock promise for ONE optimizer step: per-layer
+    roofline compute (forward + ~2x backward) plus the modeled exposed
+    collective time, over the stacked depth, inflated by the resolved
+    pipeline bubble.  This is the modeled side of the trainer's
+    `step_time` drift channel — deliberately built from the same
+    `exposed_comm_time` numbers the planners already trust, not a new
+    model.  None when the model carries no cost contract."""
+    from repro.core.autowrap import exposed_comm_time
+
+    dcfg = plan.dcfg
+    key = "blocks" if "blocks" in plan.bucket_plans else None
+    if key is None or not hasattr(model, "block_stats"):
+        return None
+    metas = model.metas(dcfg)
+    b_local = max(1, shape.global_batch // max(1, dcfg.batch_dp))
+    stats = model.block_stats(
+        dcfg, (b_local, shape.seq_len // max(1, dcfg.cp_size)))
+    segments = model.block_segments(dcfg) \
+        if hasattr(model, "block_segments") else None
+    r = exposed_comm_time(plan.bucket_plans[key], metas[key], dcfg, stats,
+                          segments=segments)
+    per_layer = 3.0 * r["compute_s"] + r["exposed_s"]
+    layers = max(1, plan.stacked_keys.get(key, 1))
+    step = layers * per_layer
+    if plan.pipelined:
+        from repro.core.pipeline import bubble_fraction
+        bf = bubble_fraction(plan.microbatches, plan.stage.n_stages,
+                             plan.pp_schedule, plan.pp_virtual)
+        step /= max(1e-9, 1.0 - bf)
+    return step

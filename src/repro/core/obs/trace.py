@@ -1,0 +1,441 @@
+"""Plan-aligned Chrome/Perfetto trace emitter.
+
+Walks the SAME executed schedules the cost models walk and lays them out
+as trace-event JSON (`chrome://tracing` / Perfetto "trace event format"):
+
+  * collective lanes — the pooled cyclic (AG, RS, compute) hiding windows
+    `core/autowrap.partition_exposure` scores.  The layout is constructed
+    so that the comm-lane span time NOT covered by a compute-lane span
+    equals the modeled exposure EXACTLY: window i issues pool i's
+    all-gather and pool i-1's reduce-scatter against pool i-1's compute,
+    the window advances by max(compute, comm), and the quant codec
+    overhead (never hidden — it is unoverlappable critical-path work) is
+    appended after the window.  `nonoverlapped_comm_s` recovers the
+    number from the emitted JSON alone; tests assert it matches
+    `exposed_comm_time`'s `exposed_s` within 1%.
+  * pipeline lanes — one lane per stage rank, F/B/W spans straight from
+    the `core/pipeline.PipeSchedule` tables (all four schedules).
+  * ring lanes — per-hop ppermute exchange vs per-hop attention compute
+    from `core/context.ring_cost` (live hops hide an exchange, skipped
+    hops expose theirs).
+  * serving lanes — admission / prefill chunks / decode windows /
+    preemptions from the `ContinuousBatcher`'s virtual-clock event log
+    (`enable_trace()`), which already timestamps every action.
+
+Modeled lanes live under their own pid; measured wall-clock spans
+(`measured_span`) render under a second pid next to them, so overlap is
+visually auditable plan-vs-reality in one timeline.
+
+Everything modeled here is host math over the frozen plan — two
+emissions of the same plan are byte-identical (asserted in
+tests/test_obs.py).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import json
+import time
+
+from repro.core.autowrap import _active, _cfg_precision
+from repro.core.irgraph import (ag_time, build_nodes, quant_overhead_s,
+                                rs_time)
+
+US = 1e6      # trace-event timestamps are microseconds
+
+PID_MODELED = 1
+PID_MEASURED = 2
+PID_SERVING = 3
+
+TID_COMPUTE = 0
+TID_COMM = 1
+TID_RING_COMM = 2
+TID_RING_COMPUTE = 3
+TID_PIPE_BASE = 10            # + stage rank
+
+SERVE_TID_ADMIT = 0
+SERVE_TID_PREFILL = 1
+SERVE_TID_DECODE = 2
+SERVE_TID_PREEMPT = 3
+
+
+class TraceBuilder:
+    """Accumulates trace events; serializes deterministically."""
+
+    def __init__(self):
+        self.events: list[dict] = []
+        self._origin: float | None = None   # wall-clock zero (measured pid)
+
+    # ------------------------------------------------------- metadata ----
+    def process(self, pid: int, name: str) -> None:
+        self.events.append({"ph": "M", "pid": pid, "tid": 0,
+                            "name": "process_name", "args": {"name": name}})
+
+    def thread(self, pid: int, tid: int, name: str) -> None:
+        self.events.append({"ph": "M", "pid": pid, "tid": tid,
+                            "name": "thread_name", "args": {"name": name}})
+
+    # --------------------------------------------------------- events ----
+    def span(self, pid: int, tid: int, name: str, ts_s: float, dur_s: float,
+             cat: str = "modeled", args: dict | None = None) -> None:
+        # no rounding: adjacent spans must stay exactly adjacent (the
+        # within-lane no-overlap invariant is asserted at float precision)
+        ev = {"ph": "X", "pid": pid, "tid": tid, "name": name, "cat": cat,
+              "ts": ts_s * US, "dur": dur_s * US}
+        if args:
+            ev["args"] = args
+        self.events.append(ev)
+
+    def instant(self, pid: int, tid: int, name: str, ts_s: float,
+                cat: str = "modeled", args: dict | None = None) -> None:
+        ev = {"ph": "i", "s": "t", "pid": pid, "tid": tid, "name": name,
+              "cat": cat, "ts": ts_s * US}
+        if args:
+            ev["args"] = args
+        self.events.append(ev)
+
+    # ----------------------------------------------- measured wall clock --
+    @contextlib.contextmanager
+    def measured_span(self, name: str, tid: int = 0, cat: str = "measured"):
+        """Wall-clock span hook: renders under PID_MEASURED next to the
+        modeled lanes.  First use pins the trace's wall-clock origin."""
+        t0 = time.perf_counter()
+        if self._origin is None:
+            self._origin = t0
+        try:
+            yield
+        finally:
+            t1 = time.perf_counter()
+            self.span(PID_MEASURED, tid, name, t0 - self._origin, t1 - t0,
+                      cat=cat)
+
+    # ------------------------------------------------------ serialize ----
+    def to_doc(self) -> dict:
+        order = {"M": 0, "X": 1, "i": 1}
+        evs = sorted(self.events,
+                     key=lambda e: (e["pid"], e["tid"], order[e["ph"]],
+                                    e.get("ts", -1.0), e["name"]))
+        return {"traceEvents": evs, "displayTimeUnit": "ms"}
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_doc(), sort_keys=True)
+
+    def save(self, path: str) -> str:
+        with open(path, "w") as f:
+            f.write(self.to_json())
+        return path
+
+
+# ---------------------------------------------------------------------------
+# collective lanes: the pooled cyclic hiding windows, materialized
+# ---------------------------------------------------------------------------
+def comm_windows(plan, metas_tree, cfg, stats=None, segments=None
+                 ) -> list[dict]:
+    """The pooled (ag, rs, comp, overhead) windows `partition_exposure`
+    scores, one dict per pool, resolved with the SAME rewrite
+    `exposed_comm_time` applies (split at segment boundaries,
+    segment-major order, per-bucket precisions).  Summing
+    ``overhead + max(0, ag_i + rs_{i-1} - comp_{i-1})`` cyclically over
+    these windows reproduces `exposed_s` exactly — the invariant the
+    trace layout (and its 1%-match test) rests on."""
+    nodes = {n.name: n for n in build_nodes(metas_tree, cfg, stats)}
+    pools = None
+    if _active(segments):
+        from repro.core.bucketing import (assign_segments,
+                                          split_plan_at_segments)
+        from repro.core.meta import named_leaves
+
+        plan = split_plan_at_segments(plan, metas_tree, segments)
+        names = [k for k, _ in named_leaves(metas_tree)]
+        seg_of = assign_segments(names, segments.param_globs, segments.names)
+        name_seg = dict(zip(names, seg_of))
+        pools = [name_seg[grp[0]] for grp in plan.groups]
+    groups = [[nodes[name] for name in grp] for grp in plan.groups]
+    if pools is None:
+        pools = list(range(len(groups)))
+    if plan.precisions is not None:
+        precisions = list(plan.precisions)
+    else:
+        precisions = [_cfg_precision(cfg)] * len(groups)
+
+    windows: list[dict] = []
+    cur_id = None
+    for pid, grp, prec in zip(pools, groups, precisions):
+        if pid != cur_id:
+            windows.append({"pool": pid, "ag_s": 0.0, "rs_s": 0.0,
+                            "comp_s": 0.0, "overhead_s": 0.0,
+                            "n_params": 0, "precisions": []})
+            cur_id = pid
+        w = windows[-1]
+        w["ag_s"] += ag_time(grp, cfg, prec)
+        w["rs_s"] += rs_time(grp, cfg, prec)
+        w["comp_s"] += sum(n.t_comp() for n in grp)
+        w["overhead_s"] += quant_overhead_s(grp, prec)
+        w["n_params"] += len(grp)
+        w["precisions"].append(prec)
+    return windows
+
+
+def emit_comm_lanes(tb: TraceBuilder, windows: list[dict],
+                    pid: int = PID_MODELED, t0: float = 0.0,
+                    repeats: int = 1) -> dict:
+    """Lay the cyclic steady state out as spans.  Per window step i:
+    pool i-1's compute span and, concurrently on the comm lane, pool i's
+    AG then pool i-1's RS; the clock advances by max(compute, comm), then
+    the quant codec overhead of pool i runs unhidden.  Comm-lane time not
+    covered by a compute span is therefore exactly the modeled
+    exposure."""
+    k = len(windows)
+    t = t0
+    exposed = comm_total = comp_total = 0.0
+    for rep in range(repeats):
+        for i in range(k):
+            w, prev = windows[i], windows[(i - 1) % k]
+            comp, ag, rs = prev["comp_s"], w["ag_s"], prev["rs_s"]
+            oh = w["overhead_s"]
+            if comp > 0.0:
+                tb.span(pid, TID_COMPUTE, f"compute[pool {prev['pool']}]",
+                        t, comp, cat="compute",
+                        args={"layer": rep, "pool": prev["pool"]})
+            if ag > 0.0:
+                tb.span(pid, TID_COMM, f"AG[pool {w['pool']}]", t, ag,
+                        cat="all_gather",
+                        args={"layer": rep, "pool": w["pool"],
+                              "precisions": list(w["precisions"])})
+            if rs > 0.0:
+                tb.span(pid, TID_COMM, f"RS[pool {prev['pool']}]", t + ag,
+                        rs, cat="reduce_scatter",
+                        args={"layer": rep, "pool": prev["pool"]})
+            adv = max(comp, ag + rs)
+            if oh > 0.0:
+                tb.span(pid, TID_COMM, f"quant[pool {w['pool']}]", t + adv,
+                        oh, cat="quant", args={"layer": rep})
+            exposed += max(0.0, ag + rs - comp) + oh
+            comm_total += ag + rs + oh
+            comp_total += comp
+            t += adv + oh
+    return {"end_s": t, "exposed_s": exposed, "comm_s": comm_total,
+            "compute_s": comp_total}
+
+
+# ---------------------------------------------------------------------------
+# pipeline lanes: one lane per stage rank, spans from the slot tables
+# ---------------------------------------------------------------------------
+def pipeline_lanes(tb: TraceBuilder, n_micro: int, n_stages: int,
+                   schedule: str, virtual: int = 1, slot_s: float = 1e-3,
+                   pid: int = PID_MODELED, t0: float = 0.0) -> float:
+    """F/B/W spans per stage rank, one lane each, from the schedule's own
+    slot tables: gpipe/1f1b from their closed-form tables, interleaved/zb
+    from the tabulated `PipeSchedule` (the exact tables the staged step
+    executes).  Uniform slot duration — the same unit-cost model
+    `bubble_fraction` scores; idle slots stay empty, so the bubbles are
+    visible gaps."""
+    from repro.core.pipeline import (build_pipe_schedule, gpipe_schedule,
+                                     one_f_one_b_schedule)
+
+    # (slot, stage) -> (name, cat, args) span table, schedule-specific
+    if schedule == "gpipe":
+        f = gpipe_schedule(n_micro, n_stages)
+        T = f.shape[0]
+        cells = {(t, s): (f"F{f[t, s]}", "pipe_fwd", int(f[t, s]))
+                 for t in range(T) for s in range(n_stages) if f[t, s] >= 0}
+    elif schedule == "1f1b":
+        f, b = one_f_one_b_schedule(n_micro, n_stages)
+        T = f.shape[0]
+        cells = {(t, s): (f"F{f[t, s]}", "pipe_fwd", int(f[t, s]))
+                 for t in range(T) for s in range(n_stages) if f[t, s] >= 0}
+        cells.update({(t, s): (f"B{b[t, s]}", "pipe_bwd", int(b[t, s]))
+                      for t in range(T) for s in range(n_stages)
+                      if b[t, s] >= 0})
+    else:
+        sched = build_pipe_schedule(n_micro, n_stages, schedule, virtual)
+        T = sched.slots
+        cells = {}
+        for t in range(T):
+            for s in range(n_stages):
+                if sched.f_mb[t, s] >= 0:
+                    m, c = int(sched.f_mb[t, s]), int(sched.f_chunk[t, s])
+                    name = f"F{m}" if virtual == 1 else f"F{m}.{c}"
+                    cells[(t, s)] = (name, "pipe_fwd", m)
+                elif sched.b_mb[t, s] >= 0:
+                    m, c = int(sched.b_mb[t, s]), int(sched.b_chunk[t, s])
+                    name = f"B{m}" if virtual == 1 else f"B{m}.{c}"
+                    cells[(t, s)] = (name, "pipe_bwd", m)
+                elif sched.w_idx[t, s] >= 0:
+                    cells[(t, s)] = (f"W@{int(sched.w_idx[t, s])}",
+                                     "pipe_wgrad", -1)
+    for s in range(n_stages):
+        tid = TID_PIPE_BASE + s
+        tb.thread(pid, tid, f"pipe stage {s} [{schedule}]")
+        for t in range(T):
+            cell = cells.get((t, s))
+            if cell is not None:
+                name, cat, mb = cell
+                tb.span(pid, tid, name, t0 + t * slot_s, slot_s, cat=cat,
+                        args={"mb": mb, "slot": t})
+    return t0 + T * slot_s
+
+
+# ---------------------------------------------------------------------------
+# ring lanes: per-hop ppermute exchange vs per-hop attention compute
+# ---------------------------------------------------------------------------
+def ring_lanes(tb: TraceBuilder, ring: dict, pid: int = PID_MODELED,
+               t0: float = 0.0) -> float:
+    """One layer's ring-attention schedule from `core/context.ring_cost`:
+    `live-1` exchanges ride a compute hop (hidden up to the spill), the
+    remaining `cp-1-live+1` windowed-out exchanges run bare."""
+    cp = ring["cp"]
+    if cp <= 1:
+        return t0
+    comm, comp = ring["hop_comm_s"], ring["hop_comp_s"]
+    hidden = max(0, ring["live_hops"] - 1)
+    t = t0
+    # hop 0: the local block's attention compute, exchange 1 in flight
+    tb.span(pid, TID_RING_COMPUTE, "ring attn[hop 0]", t, comp, cat="ring")
+    for h in range(cp - 1):
+        tb.span(pid, TID_RING_COMM, f"ppermute[{h}]", t, comm, cat="ring",
+                args={"hop": h, "bytes": ring["hop_bytes"]})
+        if h < hidden:
+            if h > 0:
+                tb.span(pid, TID_RING_COMPUTE, f"ring attn[hop {h}]", t,
+                        comp, cat="ring")
+            t += max(comm, comp)
+        else:
+            t += comm      # windowed-out hop: exchange runs, compute skipped
+    return t
+
+
+# ---------------------------------------------------------------------------
+# serving lanes: the batcher's virtual-clock event log
+# ---------------------------------------------------------------------------
+def serving_lanes(tb: TraceBuilder, batcher, pid: int = PID_SERVING,
+                  t0: float = 0.0) -> float:
+    """Render a `ContinuousBatcher`'s event log (`enable_trace()` before
+    driving it).  Virtual timestamps are already monotonic per lane, so
+    spans never overlap within a lane by construction."""
+    events = getattr(batcher, "events", None)
+    if events is None:
+        raise ValueError(
+            "batcher has no event log; call batcher.enable_trace() before "
+            "driving it (run_virtual(..., trace=True))")
+    tb.process(pid, "serving (virtual clock)")
+    tb.thread(pid, SERVE_TID_ADMIT, "admission")
+    tb.thread(pid, SERVE_TID_PREFILL, "prefill chunks")
+    tb.thread(pid, SERVE_TID_DECODE, "decode windows")
+    tb.thread(pid, SERVE_TID_PREEMPT, "preemption/finish")
+    end = t0
+    for ev in events:
+        kind = ev[0]
+        if kind == "admit":
+            _, t, rid = ev
+            tb.instant(pid, SERVE_TID_ADMIT, f"admit r{rid}", t0 + t,
+                       cat="serving")
+        elif kind == "prefill":
+            _, ts, te, rid, n = ev
+            tb.span(pid, SERVE_TID_PREFILL, f"prefill r{rid} +{n}", t0 + ts,
+                    te - ts, cat="serving", args={"rid": rid, "tokens": n})
+            end = max(end, t0 + te)
+        elif kind == "decode":
+            _, ts, te, nseq = ev
+            tb.span(pid, SERVE_TID_DECODE, f"decode x{nseq}", t0 + ts,
+                    te - ts, cat="serving", args={"batch": nseq})
+            end = max(end, t0 + te)
+        elif kind == "preempt":
+            _, t, rid = ev
+            tb.instant(pid, SERVE_TID_PREEMPT, f"preempt r{rid}", t0 + t,
+                       cat="serving")
+        elif kind == "finish":
+            _, t, rid = ev
+            tb.instant(pid, SERVE_TID_PREEMPT, f"finish r{rid}", t0 + t,
+                       cat="serving")
+    return end
+
+
+# ---------------------------------------------------------------------------
+# the one-call entry point: everything a ParallelPlan implies
+# ---------------------------------------------------------------------------
+def plan_comm_windows(model, plan, shape) -> list[dict]:
+    """Resolve (metas, stats, segments) for the plan's main stacked group
+    exactly the way `plan_parallel` did, then build the hiding windows."""
+    dcfg = plan.dcfg
+    metas = model.metas(dcfg)
+    key = "blocks" if "blocks" in plan.bucket_plans \
+        else next(iter(plan.bucket_plans))
+    stats = None
+    if shape is not None and hasattr(model, "block_stats") \
+            and key == "blocks":
+        b_local = max(1, shape.global_batch // max(1, dcfg.batch_dp))
+        stats = model.block_stats(
+            dcfg, (b_local, shape.seq_len // max(1, dcfg.cp_size)))
+    segments = model.block_segments(dcfg) \
+        if key == "blocks" and hasattr(model, "block_segments") else None
+    return comm_windows(plan.bucket_plans[key], metas[key], dcfg,
+                        stats=stats, segments=segments)
+
+
+def plan_trace(model, plan, shape, *, repeats: int = 1, batcher=None,
+               arch_cfg=None, tb: TraceBuilder | None = None
+               ) -> TraceBuilder:
+    """Full modeled timeline of a frozen `ParallelPlan`: collective
+    hiding windows (`repeats` steady-state layers), the pipeline slot
+    tables when the plan is pipelined, the ring-attention hops when the
+    plan has a ctx axis (needs `arch_cfg` for head geometry), and —
+    optionally — a traced serving batcher's lanes.  Pure host math:
+    deterministic, no devices touched."""
+    tb = tb or TraceBuilder()
+    dcfg = plan.dcfg
+    tb.process(PID_MODELED, f"modeled plan [{plan.describe()}]")
+    tb.thread(PID_MODELED, TID_COMPUTE, "compute")
+    tb.thread(PID_MODELED, TID_COMM, "collectives (AG/RS/quant)")
+
+    windows = plan_comm_windows(model, plan, shape)
+    layout = emit_comm_lanes(tb, windows, repeats=repeats)
+
+    if dcfg.cp_size > 1 and arch_cfg is not None:
+        from repro.core.context import ring_cost
+        tb.thread(PID_MODELED, TID_RING_COMM, "ring ppermute")
+        tb.thread(PID_MODELED, TID_RING_COMPUTE, "ring attention")
+        b_local = max(1, shape.global_batch // max(1, dcfg.batch_dp))
+        ring = ring_cost(arch_cfg, dcfg,
+                         (b_local, shape.seq_len // dcfg.cp_size),
+                         window=getattr(arch_cfg, "sliding_window", None))
+        ring_lanes(tb, ring, t0=layout["end_s"])
+
+    if plan.pipelined:
+        # slot unit: one stage's per-microbatch block compute under the
+        # plan's own workload model — visual scale, not a new cost model
+        per_layer = sum(w["comp_s"] for w in windows)
+        slot_s = max(per_layer * plan.stage.layers_per_stage
+                     / max(1, plan.microbatches), 1e-6)
+        pipeline_lanes(tb, plan.microbatches, plan.stage.n_stages,
+                       plan.pp_schedule, plan.pp_virtual, slot_s=slot_s)
+
+    if batcher is not None:
+        serving_lanes(tb, batcher)
+    return tb
+
+
+# ---------------------------------------------------------------------------
+# reading traces back (tests + drift reports)
+# ---------------------------------------------------------------------------
+def lane_spans(doc: dict, pid: int, tid: int) -> list[tuple[float, float]]:
+    """(ts, dur) of every complete event in one lane, sorted by ts."""
+    return sorted((e["ts"], e["dur"]) for e in doc["traceEvents"]
+                  if e["ph"] == "X" and e["pid"] == pid and e["tid"] == tid)
+
+
+def nonoverlapped_comm_s(doc: dict, pid: int = PID_MODELED,
+                         comm_tid: int = TID_COMM,
+                         compute_tid: int = TID_COMPUTE) -> float:
+    """Comm-lane span time NOT covered by any compute-lane span, computed
+    from the emitted JSON alone — the trace-side measurement of the
+    planner's `exposed_s` (asserted to match within 1%)."""
+    compute = [(ts, ts + d) for ts, d in lane_spans(doc, pid, compute_tid)]
+    total = 0.0
+    for ts, d in lane_spans(doc, pid, comm_tid):
+        t0, t1 = ts, ts + d
+        covered = 0.0
+        for c0, c1 in compute:
+            covered += max(0.0, min(t1, c1) - max(t0, c0))
+        total += (t1 - t0) - covered
+    return total / US

@@ -45,6 +45,10 @@ class _Replica:
     slots: list          # heap of slot free-times
     assigned: int = 0
     busy_s: float = 0.0
+    # measured-over-modeled decode-time ratio: the roofline is the
+    # prior (1.0), observed decode steps move it (the posterior the
+    # projections integrate)
+    decode_scale: float = 1.0
 
     def projected_start(self, arrival: float) -> float:
         return max(arrival, self.slots[0])
@@ -52,7 +56,7 @@ class _Replica:
     def service_time(self, req: Request) -> float:
         p = self.plan
         return (p.prefill_time(len(req.prompt))
-                + req.max_new * p.decode_step_time(
+                + req.max_new * self.decode_scale * p.decode_step_time(
                     p.max_batch, (len(req.prompt) + req.max_new / 2)))
 
 
@@ -61,14 +65,51 @@ class Router:
 
     `admit_slo_s`: a request whose best projected queue wait exceeds the
     SLO is rejected at the door (load shedding) instead of blowing up
-    the tail for everyone already admitted."""
+    the tail for everyone already admitted.
+
+    Latency projections start from each replica's roofline (the prior)
+    and are corrected by measured decode-step feedback when an executor
+    reports it (`observe_decode` / `feed_from_batcher`) — with no
+    feedback the behavior is bit-identical to the pure-model router."""
 
     def __init__(self, plans: list[ServePlan],
-                 admit_slo_s: float | None = None):
+                 admit_slo_s: float | None = None, registry=None):
         self.replicas = [
             _Replica(plan=p, slots=[0.0] * p.max_batch) for p in plans]
         self.admit_slo_s = admit_slo_s
+        self.registry = registry
         self.rejected: list[Request] = []
+
+    def observe_decode(self, idx: int, measured_step_s: float,
+                       modeled_step_s: float | None = None,
+                       alpha: float = 0.2) -> float:
+        """Fold one measured decode step into replica `idx`'s posterior.
+        `modeled_step_s` defaults to the replica's own full-batch roofline
+        step; returns the updated decode_scale."""
+        rep = self.replicas[idx]
+        if modeled_step_s is None:
+            modeled_step_s = rep.plan.decode_step_s
+        ratio = measured_step_s / modeled_step_s if modeled_step_s > 0 \
+            else 1.0
+        rep.decode_scale = alpha * ratio + (1.0 - alpha) * rep.decode_scale
+        if self.registry is not None:
+            self.registry.gauge(f"router/replica{idx}/decode_scale").set(
+                rep.decode_scale)
+        return rep.decode_scale
+
+    def feed_from_batcher(self, idx: int, batcher,
+                          alpha: float = 0.2) -> float:
+        """Pull the scale-free decode_ratio EWMA a ContinuousBatcher
+        accumulated (scheduler.decode_ratio) into replica `idx`."""
+        rep = self.replicas[idx]
+        if getattr(batcher, "decode_ratio", None) is not None:
+            rep.decode_scale = (alpha * batcher.decode_ratio
+                                + (1.0 - alpha) * rep.decode_scale)
+            if self.registry is not None:
+                self.registry.gauge(
+                    f"router/replica{idx}/decode_scale").set(
+                        rep.decode_scale)
+        return rep.decode_scale
 
     def route(self, req: Request) -> tuple[int, float] | None:
         """Pick the replica with the earliest projected start; returns
@@ -82,6 +123,8 @@ class Router:
         if (self.admit_slo_s is not None
                 and best_t - req.arrival > self.admit_slo_s):
             self.rejected.append(req)
+            if self.registry is not None:
+                self.registry.counter("router/rejected").inc()
             return None
         rep = self.replicas[best]
         start = max(heapq.heappop(rep.slots), req.arrival)
@@ -89,7 +132,11 @@ class Router:
         heapq.heappush(rep.slots, start + svc)
         rep.assigned += 1
         rep.busy_s += svc
-        return best, start + svc - req.arrival
+        lat = start + svc - req.arrival
+        if self.registry is not None:
+            self.registry.histogram("router/projected_latency_s").observe(
+                lat)
+        return best, lat
 
 
 def simulate_trace(plans: list[ServePlan], trace: list[Request],

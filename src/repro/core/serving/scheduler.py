@@ -226,7 +226,7 @@ class ContinuousBatcher:
         accounting next to the driver's wall measurements.
     """
 
-    def __init__(self, plan: ServePlan, prefix_cache=None):
+    def __init__(self, plan: ServePlan, prefix_cache=None, registry=None):
         self.plan = plan
         self.pool = PagePool(plan.n_pages)
         self.prefix = prefix_cache
@@ -239,6 +239,22 @@ class ContinuousBatcher:
         self.stats = {"decode_steps": 0, "prefill_chunks": 0,
                       "preemptions": 0, "prefix_hit_tokens": 0,
                       "prefix_lookup_tokens": 0, "peak_pages": 0}
+        # observability (core/obs): optional MetricsRegistry + trace event
+        # log.  `decode_ewma` is the measured per-step decode time the
+        # Router's posterior feeds on; `decode_ratio` its scale-free form
+        # (measured / plan roofline at the SAME batch+context, EWMA).
+        self.registry = registry
+        self.events: list[tuple] | None = None
+        self.decode_ewma: float | None = None
+        self.decode_ratio: float | None = None
+        self._ewma_alpha = 0.2
+
+    def enable_trace(self) -> None:
+        """Start logging (kind, vtime...) events for
+        `core/obs.trace.serving_lanes` — admission, prefill chunks,
+        decode windows, preemptions, finishes, all stamped by the same
+        virtual clock that prices the latency metrics."""
+        self.events = []
 
     # -------------------------------------------------------------- admit --
     def submit(self, req: Request) -> None:
@@ -273,6 +289,11 @@ class ContinuousBatcher:
             self.stats["prefix_hit_tokens"] += seq.pos
             self.stats["prefix_lookup_tokens"] += seq.prompt_len
         self.slots[slot] = seq
+        if self.events is not None:
+            self.events.append(("admit", self.vtime, req.rid))
+        if self.registry is not None:
+            self.registry.counter("serving/admitted").inc()
+            self.registry.gauge("serving/queue_depth").set(len(self.waiting))
         return seq
 
     # ------------------------------------------------------------- paging --
@@ -312,6 +333,10 @@ class ContinuousBatcher:
             req, prompt=tuple(req.prompt) + tuple(victim.out),
             max_new=req.max_new - len(victim.out)))
         self.stats["preemptions"] += 1
+        if self.events is not None:
+            self.events.append(("preempt", self.vtime, req.rid))
+        if self.registry is not None:
+            self.registry.counter("serving/preemptions").inc()
         return True
 
     def _release_seq(self, seq: _Seq) -> None:
@@ -377,19 +402,43 @@ class ContinuousBatcher:
     # ------------------------------------------------------------ results --
     def on_prefill(self, seq: _Seq, n_tokens: int,
                    wall_s: float | None = None) -> None:
+        t0 = self.vtime
         seq.pos += n_tokens
         self.vtime += (wall_s if wall_s is not None
                        else self.plan.prefill_time(n_tokens))
         self.stats["prefill_chunks"] += 1
+        if self.events is not None:
+            self.events.append(("prefill", t0, self.vtime, seq.req.rid,
+                                n_tokens))
+        if self.registry is not None:
+            self.registry.histogram("serving/prefill_chunk_s").observe(
+                self.vtime - t0)
         if seq.pos >= seq.prompt_len:
             seq.prefill_done = True
 
     def on_decode(self, seqs, tokens, wall_s: float | None = None) -> None:
         """One decode step completed: `tokens[i]` sampled for seqs[i]."""
-        self.vtime += (wall_s if wall_s is not None
-                       else self.plan.decode_step_time(
-                           len(seqs), sum(s.pos for s in seqs) / len(seqs)))
+        t0 = self.vtime
+        modeled = self.plan.decode_step_time(
+            len(seqs), sum(s.pos for s in seqs) / len(seqs))
+        dt = wall_s if wall_s is not None else modeled
+        self.vtime += dt
         self.stats["decode_steps"] += 1
+        # measured decode EWMA: the posterior signal the Router's
+        # projection consumes (ROADMAP serving follow-up (d)); on the
+        # virtual clock dt == modeled and the ratio stays 1.0, so the
+        # roofline prior is recovered exactly
+        a = self._ewma_alpha
+        self.decode_ewma = dt if self.decode_ewma is None \
+            else a * dt + (1.0 - a) * self.decode_ewma
+        ratio = dt / modeled if modeled > 0 else 1.0
+        self.decode_ratio = ratio if self.decode_ratio is None \
+            else a * ratio + (1.0 - a) * self.decode_ratio
+        if self.events is not None:
+            self.events.append(("decode", t0, self.vtime, len(seqs)))
+        if self.registry is not None:
+            self.registry.gauge("serving/decode_step_s").set(dt)
+            self.registry.gauge("serving/decode_batch").set(len(seqs))
         for s, t in zip(seqs, tokens):
             if s.t_first is None:
                 s.t_first = self.vtime
@@ -400,6 +449,8 @@ class ContinuousBatcher:
 
     def _finish(self, seq: _Seq) -> None:
         seq.t_done = self.vtime
+        if self.events is not None:
+            self.events.append(("finish", self.vtime, seq.req.rid))
         if self.prefix is not None:
             self.prefix.insert(seq.req.prompt, seq.table, self.pool,
                                self.plan.page)
@@ -427,6 +478,13 @@ class ContinuousBatcher:
             prefix_hit_rate=(
                 self.stats["prefix_hit_tokens"]
                 / max(1, self.stats["prefix_lookup_tokens"])))
+        if self.registry is not None:
+            r = self.registry
+            r.gauge("serving/p50_s").set(out["p50_s"])
+            r.gauge("serving/p99_s").set(out["p99_s"])
+            r.gauge("serving/prefix_hit_rate").set(out["prefix_hit_rate"])
+            r.gauge("serving/arena_util").set(out["arena_util"])
+            r.gauge("serving/tok_s").set(out["tok_s"])
         return out
 
 
@@ -439,11 +497,16 @@ def _pct(xs, q) -> float:
 
 
 def run_virtual(plan: ServePlan, requests, prefix_cache=None,
-                gen_token: int = 7) -> ContinuousBatcher:
+                gen_token: int = 7, registry=None,
+                trace: bool = False) -> ContinuousBatcher:
     """Execute the batcher against a stub executor: no device in the
     loop, every latency priced by the plan's virtual clock — the
-    deterministic path the bench assertions and scheduler tests use."""
-    b = ContinuousBatcher(plan, prefix_cache=prefix_cache)
+    deterministic path the bench assertions and scheduler tests use.
+    `registry`/`trace` feed core/obs (metrics + serving_lanes)."""
+    b = ContinuousBatcher(plan, prefix_cache=prefix_cache,
+                          registry=registry)
+    if trace:
+        b.enable_trace()
     for r in requests:
         b.submit(r)
     idle = 0

@@ -398,11 +398,66 @@ def harvest_memory_stats(model, dcfg: DistConfig, batch_shape,
         return None
 
 
-def _autowrap_record(model, dcfg: DistConfig, batch_shape, stats) -> dict:
+def harvest_quant_timing(bucket_elems, codec: str = "fp8", iters: int = 4,
+                         cap_elems: int = 1 << 21) -> dict | None:
+    """Time the quant round-trip kernel at the plan's actual bucket sizes
+    (jit-compiled on THIS backend) and derive a measured codec throughput,
+    replacing the analytic 2x-HBM-pass prior in `quant_overhead_s`.
+    `bucket_elems`: per-bucket element counts (each capped at `cap_elems`
+    so a 1-bucket 8B-param plan doesn't allocate the full buffer).
+    Returns {"rate_bytes_per_s", "codec", "samples"} or None when the
+    backend can't run the kernel."""
+    try:
+        import functools
+
+        import numpy as np
+
+        from repro.kernels.quant import ops as QOPS
+
+        sizes = sorted({min(int(n), cap_elems)
+                        for n in bucket_elems if n and n > 0})
+        if not sizes:
+            return None
+        # smallest / median / largest: enough to see the fixed-cost knee
+        # without timing every bucket of a 30-bucket plan
+        picks = sorted({sizes[0], sizes[len(sizes) // 2], sizes[-1]})
+        fn = jax.jit(functools.partial(QOPS.roundtrip, codec=codec))
+        samples = []
+        for n in picks:
+            n = max(QOPS.QCHUNK, (n // QOPS.QCHUNK) * QOPS.QCHUNK)
+            x = jnp.asarray(
+                np.random.default_rng(0).standard_normal(n), jnp.bfloat16)
+            fn(x).block_until_ready()             # compile + warmup
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                y = fn(x)
+            y.block_until_ready()
+            dt = (time.perf_counter() - t0) / iters
+            samples.append({"n_elems": n, "bytes": n * 2,
+                            "t_us": dt * 1e6})
+        big = samples[-1]
+        rate = big["bytes"] / max(1e-12, big["t_us"] * 1e-6)
+        return {"rate_bytes_per_s": rate, "codec": codec,
+                "samples": samples}
+    except Exception as e:
+        print(f"[harvest] quant timing unavailable "
+              f"({type(e).__name__}: {e}); analytic estimate stands",
+              flush=True)
+        return None
+
+
+def _autowrap_record(model, dcfg: DistConfig, batch_shape, stats,
+                     measure_quant: bool = False) -> dict:
     """The partition the cell will EXECUTE + its modeled exposure (logged
     into the dryrun row so perf numbers are attributable to a concrete
     plan). exposed_comm_time rewrites the plan to the executed segmented
-    partition (split + segment-major + pooled hiding), matching fig4."""
+    partition (split + segment-major + pooled hiding), matching fig4.
+
+    `measure_quant`: on quantized-comm cells, time the codec kernel at
+    this plan's bucket sizes first and price `quant_overhead_s` by the
+    measured rate (the record then carries the measured AND the analytic
+    estimate side by side)."""
+    from repro.core import irgraph
     from repro.core.autowrap import exposed_comm_time
     from repro.core.bucketing import (_active_segments, plan_for,
                                       split_plan_at_segments)
@@ -411,11 +466,28 @@ def _autowrap_record(model, dcfg: DistConfig, batch_shape, stats) -> dict:
     segments = model.block_segments(dcfg) \
         if hasattr(model, "block_segments") else None
     segments, _ = _active_segments(metas, dcfg, segments)
-    plan = plan_for(metas, dcfg, stats, segments=segments)
-    r = exposed_comm_time(plan, metas, dcfg, stats, segments=segments)
+
+    qtiming = None
+    prev_rate = None
+    if measure_quant and dcfg.comm_precision != "bf16":
+        nodes = {n.name: n for n in
+                 irgraph.build_nodes(metas, dcfg, stats)}
+        pre_plan = plan_for(metas, dcfg, stats, segments=segments)
+        qtiming = harvest_quant_timing(
+            [sum(nodes[p].n_elems for p in grp if p in nodes)
+             for grp in pre_plan.groups])
+        if qtiming is not None:
+            prev_rate = irgraph.set_measured_quant_rate(
+                qtiming["rate_bytes_per_s"])
+    try:
+        plan = plan_for(metas, dcfg, stats, segments=segments)
+        r = exposed_comm_time(plan, metas, dcfg, stats, segments=segments)
+    finally:
+        if qtiming is not None:
+            irgraph.set_measured_quant_rate(prev_rate)
     if segments is not None:
         plan = split_plan_at_segments(plan, metas, segments)   # as executed
-    return {
+    rec = {
         "bucket_mode": str(dcfg.bucket_mode),
         "stats_source": getattr(stats, "source", None) or "default",
         "n_buckets": r["n_buckets"],
@@ -427,6 +499,17 @@ def _autowrap_record(model, dcfg: DistConfig, batch_shape, stats) -> dict:
         "comm_wire_bytes": r["comm_wire_bytes"],
         "plan": [list(g) for g in plan.groups],
     }
+    if qtiming is not None:
+        meas_us = r["quant_overhead_s"] * 1e6
+        # overhead is linear in 1/rate, so the analytic counterpart is
+        # the measured figure rescaled to the 2x-HBM-pass prior
+        est_us = meas_us * (qtiming["rate_bytes_per_s"]
+                            / (hw.HBM_BANDWIDTH / 2.0))
+        rec["quant_overhead_meas_us"] = meas_us
+        rec["quant_overhead_est_us"] = est_us
+        rec["quant_rate_bytes_per_s"] = qtiming["rate_bytes_per_s"]
+        rec["quant_timing_samples"] = qtiming["samples"]
+    return rec
 
 
 # ---------------------------------------------------------------------------
@@ -686,7 +769,8 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
             if bucket_mode in ("auto", "auto_dp"):
                 stats = model0.block_stats(dcfg_plan, bshape)
                 autowrap_rec = _autowrap_record(model0, dcfg_plan, bshape,
-                                                stats)
+                                                stats,
+                                                measure_quant=harvest)
             # live-range memory model for the cell (core/memory): resolves
             # remat="auto:<GB>" to its policy vector before lowering and
             # feeds the modeled-vs-measured fits-in-HBM check below
@@ -788,10 +872,13 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
         memory_rec["modeled_over_measured"] = modeled / max(1.0, per_dev)
         rec["memory"] = memory_rec
         rec["fits_hbm_modeled"] = bool(modeled <= hw.HBM_BYTES)
-        print(f"[mem] {arch_id} x {shape_name}: modeled peak "
-              f"{modeled*gib:.2f} GiB vs memory_analysis {per_dev*gib:.2f} "
-              f"GiB (HBM {hw.HBM_BYTES*gib:.0f} GiB, "
-              f"remat={memory_rec['policy_spec']})", flush=True)
+        # the ONE audited modeled-vs-measured peak path (core/obs):
+        # same gauges + format as trainer.memory_report
+        from repro.core.obs import default_registry
+        print("[mem] " + default_registry().record_peak(
+            f"{arch_id} x {shape_name}", modeled, per_dev,
+            budget_bytes=hw.HBM_BYTES,
+            note=f"remat={memory_rec['policy_spec']}"), flush=True)
         if modeled > hw.HBM_BYTES:
             worst = max(mem_plan.breakdown, key=lambda b: b.peak_bytes)
             msg = (f"{arch_id} x {shape_name}: modeled peak "

@@ -18,6 +18,9 @@ def main():
     ap.add_argument("--devices", type=int, default=8)
     ap.add_argument("--mesh", default="2,4")
     ap.add_argument("--int8-kv", action="store_true")
+    ap.add_argument("--metrics-jsonl", default=None,
+                    help="append a metrics-registry snapshot (compile + "
+                         "steady prefill/decode timings) here (core/obs)")
     args = ap.parse_args()
 
     os.environ["XLA_FLAGS"] = (
@@ -89,6 +92,18 @@ def main():
     print(f"steady:  prefill {t_pf*1e3:.1f}ms; "
           f"decode {t_dec/n_steady*1e3:.1f}ms/tok; "
           f"tp={dcfg.tp_size} int8_kv={args.int8_kv}")
+    if args.metrics_jsonl:
+        from repro.core.obs import MetricsRegistry
+        reg = MetricsRegistry()
+        reg.gauge("serve/prefill_compile_s").set(t_pf_compile)
+        reg.gauge("serve/decode_compile_s").set(t_dec_compile)
+        reg.gauge("serve/prefill_s").set(t_pf)
+        reg.gauge("serve/decode_step_s").set(t_dec / n_steady)
+        reg.gauge("serve/decode_tok_s").set(
+            args.batch * n_steady / max(1e-9, t_dec))
+        reg.dump_jsonl(args.metrics_jsonl, arch=args.arch,
+                       batch=args.batch, gen=args.gen)
+        print(f"metrics: {args.metrics_jsonl}")
 
 
 if __name__ == "__main__":

@@ -89,6 +89,14 @@ def main():
     ap.add_argument("--grad-compression", action="store_true")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
     ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--metrics-jsonl", default=None,
+                    help="append a metrics-registry snapshot (step time, "
+                         "tokens/s, wire bytes, drift gauges) here at "
+                         "every log interval (core/obs)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome/Perfetto trace of the executed "
+                         "plan's modeled timeline here after the run "
+                         "(core/obs.plan_trace)")
     args = ap.parse_args()
 
     mesh_shape, mesh_axes = mesh_from_flags(args.mesh, args.pp, args.cp)
@@ -131,11 +139,20 @@ def main():
         cfg, model = get_arch(args.arch, smoke=args.smoke)
     shape = ShapeConfig("train", args.seq, args.batch, "train")
     tcfg = TrainerConfig(total_steps=args.steps, ckpt_every=args.steps,
-                         log_every=5, warmup=10, ckpt_dir=args.ckpt_dir)
+                         log_every=5, warmup=10, ckpt_dir=args.ckpt_dir,
+                         metrics_jsonl=args.metrics_jsonl)
     trainer = Trainer(model, dcfg, shape, AdamWConfig(lr=args.lr), tcfg)
     print(f"plan: {trainer.plan.describe()}")
     _, _, hist = trainer.run()
     print(f"done: loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}")
+    if trainer.drift.records:
+        print(trainer.drift.report())
+    if args.trace_out:
+        from repro.core.obs import plan_trace
+        tb = plan_trace(model, trainer.plan, shape, arch_cfg=cfg)
+        tb.save(args.trace_out)
+        print(f"trace: {args.trace_out} "
+              f"({len(tb.events)} events; open in Perfetto)")
 
 
 if __name__ == "__main__":

@@ -48,13 +48,19 @@ class TrainerConfig:
     stop_after: int | None = None     # pause the job early (schedule horizon
                                       # stays total_steps — used for resume
                                       # tests and preemption drills)
+    metrics_jsonl: str | None = None  # append a registry snapshot here at
+                                      # every log interval (core/obs)
 
 
 class Trainer:
     def __init__(self, model, dcfg: DistConfig, shape: ShapeConfig,
                  ocfg: AdamWConfig, tcfg: TrainerConfig,
                  failure_source: FailureSource | None = None,
-                 seed: int = 0):
+                 seed: int = 0, registry=None):
+        from repro.core.obs import (DriftMonitor, MetricsRegistry,
+                                    modeled_step_time)
+        from repro.train.train_step import step_wire_metrics
+
         self.model, self.dcfg, self.shape = model, dcfg, shape
         self.ocfg, self.tcfg = ocfg, tcfg
         self.failures = failure_source or FailureSource()
@@ -71,6 +77,21 @@ class Trainer:
         self.step_fn = self.par.train_step(ocfg, sched)
         self.history: list[dict] = []
         self.restarts = 0
+        # observability: one registry + drift monitor per trainer; the
+        # plan's own step-time promise and per-step wire bytes are frozen
+        # up front so the run loop only records measurements
+        self.registry = registry if registry is not None \
+            else MetricsRegistry()
+        self.drift = DriftMonitor(self.registry)
+        try:
+            self._modeled_step_s = modeled_step_time(model, self.plan,
+                                                     shape)
+        except Exception:
+            self._modeled_step_s = None
+        try:
+            self._wire = step_wire_metrics(model, self.plan)
+        except Exception:
+            self._wire = None
         if self.plan.memory is not None:
             log.info("plan: %s", self.plan.describe())
             for b in self.plan.memory.breakdown:
@@ -102,8 +123,13 @@ class Trainer:
             rep["measured_peak_bytes"] = meas
             if mem_plan is not None:
                 rep["modeled_over_measured"] = mem_plan.peak / max(1, meas)
-                log.info("memory: modeled %.2f GiB vs measured %.2f GiB",
-                         mem_plan.peak / 2**30, meas / 2**30)
+                # ONE audited modeled-vs-measured path (core/obs):
+                # record_peak writes the gauges and formats the line the
+                # dryrun's [mem] print shares
+                log.info("memory: %s", self.registry.record_peak(
+                    "train", mem_plan.peak, meas,
+                    note=f"remat={rep['policy_spec']}"))
+                self.drift.record("peak_memory", mem_plan.peak, meas)
         return rep
 
     # ------------------------------------------------------------------ --
@@ -146,6 +172,22 @@ class Trainer:
             batch = zigzag_batch(batch, self.dcfg)
         return batch
 
+    def _record_step(self, step: int, dt: float, metrics) -> None:
+        """Mirror one completed step into the registry + drift monitor."""
+        r = self.registry
+        r.counter("train/steps").inc()
+        r.gauge("train/step_time_s").set(dt)
+        r.gauge("train/tokens_per_s").set(
+            self.shape.seq_len * self.shape.global_batch / max(1e-9, dt))
+        r.gauge("train/grad_norm").set(float(metrics["grad_norm"]))
+        r.gauge("train/loss").set(float(metrics["loss"]))
+        if self._wire is not None:
+            for prec, nbytes in self._wire["by_precision"].items():
+                r.counter(f"train/wire_bytes/{prec}").inc(nbytes)
+        if self._modeled_step_s is not None:
+            self.drift.record("step_time", self._modeled_step_s, dt,
+                              step=step)
+
     def run(self, key=None):
         key = key if key is not None else jax.random.PRNGKey(0)
         storage, opt_state, start = self._init_or_restore(key)
@@ -170,6 +212,7 @@ class Trainer:
             if verdict == "escalate":
                 log.warning("straggler escalation at step %d", step)
             step += 1
+            self._record_step(step, t.dt, metrics)
             if step % self.tcfg.log_every == 0 or step == 1:
                 self.history.append(
                     {"step": step, "dt": t.dt,
@@ -177,6 +220,9 @@ class Trainer:
                 log.info("step %d loss %.4f gnorm %.3f %.0fms", step,
                          metrics["loss"], metrics["grad_norm"],
                          t.dt * 1e3)
+                if self.tcfg.metrics_jsonl:
+                    self.registry.dump_jsonl(self.tcfg.metrics_jsonl,
+                                             step=step)
             if step % self.tcfg.ckpt_every == 0 \
                     or step in (self.tcfg.total_steps, stop_at):
                 self._save(step, storage, opt_state)

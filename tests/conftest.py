@@ -45,6 +45,11 @@ def pytest_configure(config):
         "serving: paged KV cache, continuous batching, prefix cache, "
         "router (tests/test_serving.py; run `-m serving` after "
         "core/serving or decode-path changes)")
+    config.addinivalue_line(
+        "markers",
+        "obs: telemetry — trace emitter, metrics registry, drift monitor "
+        "(tests/test_obs.py; run `-m obs` after core/obs or "
+        "instrumentation changes)")
 
 
 def pytest_collection_modifyitems(config, items):

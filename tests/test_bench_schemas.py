@@ -141,12 +141,44 @@ def _check_serving_v1(doc):
         assert pol["continuous_prefix"]["prefix_hit_rate"] > 0.0, arch
 
 
+OBS_CHANNELS = {"step_time", "peak_memory", "decode_rate"}
+
+
+def _check_obs_v1(doc):
+    import math
+
+    ov = doc["overhead"]
+    assert ov["step_us"] > 0 and ov["instrument_us"] >= 0
+    # the headline claim: per-step instrumentation costs <=2% of a step
+    assert ov["overhead_frac"] <= doc["overhead_budget"] <= 0.02
+    assert len(doc["archs"]) >= 3
+    for arch, rec in doc["archs"].items():
+        drift = rec["drift"]
+        assert OBS_CHANNELS <= set(drift), arch
+        for ch in OBS_CHANNELS:
+            row = drift[ch]
+            assert row["n"] > 0, (arch, ch)
+            for k in ("modeled_mean", "measured_mean", "mean_abs_rel",
+                      "last_rel"):
+                assert math.isfinite(row[k]), (arch, ch, k)
+            assert row["modeled_mean"] > 0 and row["measured_mean"] > 0
+        assert rec["worst"] in drift, arch
+        assert rec["report"].startswith("drift report"), arch
+    tr = doc["trace"]
+    assert tr["n_events"] > 0
+    assert tr["exposed_s"] > 0
+    # the trace invariant: non-overlapped comm-lane time matches the
+    # modeled exposed_s within the acceptance tolerance
+    assert tr["rel_err"] <= tr["tol"] <= 0.01
+
+
 VALIDATORS = {
     "bench_overlap_v2": _check_overlap_v2,
     "bench_pipeline_v2": _check_pipeline_v2,
     "bench_memory_v1": _check_memory_v1,
     "bench_context_v1": _check_context_v1,
     "bench_serving_v1": _check_serving_v1,
+    "bench_obs_v1": _check_obs_v1,
 }
 
 

@@ -1,0 +1,383 @@
+"""Telemetry tests: trace emitter, metrics registry, drift monitor.
+
+The load-bearing claim is the trace invariant: the comm-lane span time
+NOT covered by a compute-lane span in the emitted Chrome-trace JSON
+equals the planner's modeled `exposed_s` (asserted within the 1%
+acceptance tolerance on the full pp2 x dp2 x cp2 layout — in practice it
+matches to float precision, because the layout is constructed from the
+same pooled cyclic windows `partition_exposure` scores).
+"""
+
+import json
+import math
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import irgraph
+from repro.core.dist import DistConfig
+from repro.core.obs import (PID_MODELED, TID_COMM, TID_COMPUTE, DriftMonitor,
+                            MetricsRegistry, TraceBuilder, lane_spans,
+                            modeled_step_time, nonoverlapped_comm_s,
+                            pipeline_lanes, plan_trace, serving_lanes)
+from repro.core.obs.trace import TID_PIPE_BASE
+from repro.core.serving import (Router, plan_serve, run_virtual,
+                                synthetic_trace)
+from repro.models.common import ShapeConfig
+from repro.models.registry import get_arch, get_arch_for_pp
+
+pytestmark = pytest.mark.obs
+
+DCFG = DistConfig(mesh_axes=("data", "model"), mesh_shape=(1, 1),
+                  param_dtype=jnp.float32, reduce_dtype=jnp.float32)
+
+# the acceptance layout: pipeline x data x context in one mesh
+PP_DCFG = DistConfig(
+    mesh_axes=("pipe", "data", "ctx", "model"), mesh_shape=(2, 2, 2, 1),
+    fsdp_axes=("data", "ctx"), pp_axis="pipe", cp_axis="ctx",
+    tp_axis="model", pp_schedule="1f1b",
+    param_dtype=jnp.bfloat16, reduce_dtype=jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def pp_plan():
+    from repro.core.api import plan_parallel
+    cfg, model = get_arch_for_pp("llama3_8b", n_stages=2, smoke=True)
+    shape = ShapeConfig("t", 64, 8, "train")
+    return cfg, model, shape, plan_parallel(model, PP_DCFG, shape)
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+def test_registry_typed_metrics():
+    reg = MetricsRegistry()
+    reg.counter("a").inc(3)
+    reg.counter("a").inc()
+    assert reg.counter("a").value == 4.0
+    g = reg.gauge("b")
+    g.set(1.0)
+    g.set(2.0)                       # ewma = 0.2*2 + 0.8*1 = 1.2
+    assert g.value == 2.0 and g.ewma == pytest.approx(1.2)
+    h = reg.histogram("c")
+    for v in range(100):
+        h.observe(float(v))
+    assert h.count == 100 and h.min == 0.0 and h.max == 99.0
+    assert h.percentile(50) == pytest.approx(50.0, abs=1.0)
+    assert h.percentile(99) == pytest.approx(98.0, abs=1.0)
+    assert set(reg.names()) == {"a", "b", "c"} and "a" in reg
+
+
+def test_registry_one_name_one_type():
+    reg = MetricsRegistry()
+    reg.counter("train/steps")
+    with pytest.raises(TypeError, match="one name binds one type"):
+        reg.gauge("train/steps")
+
+
+def test_registry_jsonl_sink(tmp_path):
+    reg = MetricsRegistry()
+    reg.gauge("x").set(1.5)
+    path = str(tmp_path / "m.jsonl")
+    reg.dump_jsonl(path, step=1)
+    reg.gauge("x").set(2.5)
+    reg.dump_jsonl(path, step=2, arch="a")
+    rows = [json.loads(l) for l in open(path)]
+    assert [r["step"] for r in rows] == [1, 2]
+    assert rows[1]["arch"] == "a"
+    assert rows[1]["metrics"]["x"]["value"] == 2.5
+
+
+def test_record_peak_is_the_one_audited_path():
+    reg = MetricsRegistry()
+    line = reg.record_peak("train", 2.0 * 2**30, 4.0 * 2**30,
+                           budget_bytes=32 * 2**30, note="remat=full")
+    assert line == ("train: modeled peak 2.00 GiB vs measured 4.00 GiB "
+                    "(modeled/measured 0.50, budget 32 GiB, remat=full)")
+    assert reg.gauge("train/modeled_peak_bytes").value == 2.0 * 2**30
+    assert reg.gauge("train/measured_peak_bytes").value == 4.0 * 2**30
+    assert reg.gauge("train/modeled_over_measured").value == 0.5
+
+
+# ---------------------------------------------------------------------------
+# drift monitor
+# ---------------------------------------------------------------------------
+def test_drift_monitor_residuals_and_worst():
+    reg = MetricsRegistry()
+    d = DriftMonitor(reg)
+    assert d.record("step_time", 1.0, 1.1) == pytest.approx(0.1)
+    d.record("step_time", 1.0, 0.9, step=2)
+    d.record("peak_memory", 10.0, 30.0)
+    assert d.residuals("step_time") == pytest.approx([0.1, -0.1])
+    s = d.summary()
+    assert s["step_time"]["mean_abs_rel"] == pytest.approx(0.1)
+    assert s["peak_memory"]["mean_abs_rel"] == pytest.approx(2.0)
+    assert d.worst() == "peak_memory"
+    rep = d.report()
+    assert "live-range memory simulator (core/memory)" in rep
+    # every record mirrors into the registry
+    assert reg.gauge("drift/peak_memory/rel_residual").value == \
+        pytest.approx(2.0)
+
+
+def test_drift_monitor_empty():
+    d = DriftMonitor()
+    assert d.worst() is None
+    assert d.report() == "drift: no observations recorded"
+
+
+def test_modeled_step_time_positive(pp_plan):
+    _, model, shape, plan = pp_plan
+    step_s = modeled_step_time(model, plan, shape)
+    assert step_s is not None and step_s > 0.0
+    assert math.isfinite(step_s)
+
+
+# ---------------------------------------------------------------------------
+# trace emitter: schema validity, lane invariants, determinism
+# ---------------------------------------------------------------------------
+def _full_trace(pp_plan):
+    cfg, model, shape, plan = pp_plan
+    return plan_trace(model, plan, shape, arch_cfg=cfg)
+
+
+def test_trace_schema_valid(pp_plan):
+    doc = _full_trace(pp_plan).to_doc()
+    evs = doc["traceEvents"]
+    assert evs and doc["displayTimeUnit"] == "ms"
+    for e in evs:
+        assert e["ph"] in ("M", "X", "i")
+        assert isinstance(e["pid"], int) and isinstance(e["tid"], int)
+        assert e["name"]
+        if e["ph"] == "X":
+            assert e["ts"] >= 0.0 and e["dur"] >= 0.0
+    # process/thread metadata present for the modeled pid
+    meta = {e["name"] for e in evs if e["ph"] == "M"
+            and e["pid"] == PID_MODELED}
+    assert {"process_name", "thread_name"} <= meta
+    # the pp x cp layout renders compute, comm, ring AND pipeline lanes
+    tids = {e["tid"] for e in evs if e["ph"] == "X"
+            and e["pid"] == PID_MODELED}
+    assert {TID_COMPUTE, TID_COMM} <= tids
+    assert any(t >= TID_PIPE_BASE for t in tids)
+
+
+def test_trace_no_overlap_within_lane(pp_plan):
+    doc = _full_trace(pp_plan).to_doc()
+    pids_tids = {(e["pid"], e["tid"]) for e in doc["traceEvents"]
+                 if e["ph"] == "X"}
+    for pid, tid in pids_tids:
+        spans = lane_spans(doc, pid, tid)
+        for (t0, d0), (t1, _) in zip(spans, spans[1:]):
+            assert t0 + d0 <= t1 + 1e-9, \
+                f"overlap in lane ({pid},{tid}) at ts={t1}"
+
+
+def test_trace_deterministic(pp_plan):
+    assert _full_trace(pp_plan).to_json() == _full_trace(pp_plan).to_json()
+
+
+def test_trace_comm_lane_matches_exposed(pp_plan):
+    """THE acceptance invariant: non-overlapped comm span time in the
+    emitted JSON equals the modeled exposed_s within 1%."""
+    from repro.core.autowrap import exposed_comm_time
+
+    cfg, model, shape, plan = pp_plan
+    dcfg = plan.dcfg
+    metas = model.metas(dcfg)
+    b_local = max(1, shape.global_batch // max(1, dcfg.batch_dp))
+    stats = model.block_stats(
+        dcfg, (b_local, shape.seq_len // max(1, dcfg.cp_size)))
+    segs = model.block_segments(dcfg) \
+        if hasattr(model, "block_segments") else None
+    exposed = exposed_comm_time(plan.bucket_plans["blocks"], metas["blocks"],
+                                dcfg, stats, segments=segs)["exposed_s"]
+    assert exposed > 0.0
+    for repeats in (1, 3):
+        tb = plan_trace(model, plan, shape, repeats=repeats, arch_cfg=cfg)
+        non = nonoverlapped_comm_s(tb.to_doc())
+        assert non == pytest.approx(repeats * exposed, rel=0.01)
+
+
+# ---------------------------------------------------------------------------
+# golden pipeline lanes: one per schedule (M=4, S=2, V=2 for interleaved)
+# ---------------------------------------------------------------------------
+PIPE_GOLDEN = {
+    "gpipe": (8, {0: ["F0", "F1", "F2", "F3"],
+                  1: ["F0", "F1", "F2", "F3"]}),
+    "1f1b": (16, {0: ["F0", "F1", "B0", "F2", "B1", "F3", "B2", "B3"],
+                  1: ["F0", "B0", "F1", "B1", "F2", "B2", "F3", "B3"]}),
+    "interleaved": (32, {
+        0: ["F0.0", "F1.0", "F0.1", "F1.1", "F2.0", "B0.1", "F3.0", "B0.0",
+            "B1.1", "F2.1", "B1.0", "B2.1", "F3.1", "B2.0", "B3.1", "B3.0"],
+        1: ["F0.0", "F1.0", "F0.1", "B0.1", "F1.1", "B0.0", "B1.1", "F2.0",
+            "B1.0", "F2.1", "B2.1", "F3.0", "B2.0", "F3.1", "B3.1",
+            "B3.0"]}),
+    "zb": (24, {0: ["F0", "F1", "B0", "F2", "B1", "F3", "B2", "W@0", "B3",
+                    "W@1", "W@2", "W@0"],
+                1: ["F0", "B0", "F1", "B1", "F2", "B2", "F3", "B3", "W@0",
+                    "W@1", "W@2", "W@3"]}),
+}
+
+
+@pytest.mark.parametrize("schedule", sorted(PIPE_GOLDEN))
+def test_pipeline_lanes_golden(schedule):
+    n_span, lanes = PIPE_GOLDEN[schedule]
+    tb = TraceBuilder()
+    end = pipeline_lanes(tb, 4, 2, schedule,
+                         virtual=2 if schedule == "interleaved" else 1,
+                         slot_s=1.0)
+    doc = tb.to_doc()
+    xs = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    assert len(xs) == n_span
+    for stage, want in lanes.items():
+        got = [n for _, n in sorted(
+            (e["ts"], e["name"]) for e in xs
+            if e["tid"] == TID_PIPE_BASE + stage)]
+        assert got == want, (schedule, stage)
+    assert end > 0.0
+    # every microbatch's forward appears on every stage
+    for stage in (0, 1):
+        names = lanes[stage]
+        for m in range(4):
+            assert any(n.startswith(f"F{m}") for n in names)
+
+
+# ---------------------------------------------------------------------------
+# serving: scheduler event log + registry + router posterior
+# ---------------------------------------------------------------------------
+def _serve_plan():
+    _, model = get_arch("qwen3_1_7b", smoke=True)
+    return plan_serve(model, DCFG, arena_bytes=64 << 20, max_batch=4,
+                      max_seq=128, page=16)
+
+
+def _reqs(n=16):
+    return synthetic_trace(n, seed=0, mean_interarrival_s=0.002,
+                           prompt_lens=(16, 32, 64), gen_lens=(8, 16, 32))
+
+
+def test_batcher_events_and_registry():
+    plan = _serve_plan()
+    reg = MetricsRegistry()
+    b = run_virtual(plan, _reqs(), registry=reg, trace=True)
+    m = b.metrics()
+    assert m["requests"] == 16
+    kinds = {e[0] for e in b.events}
+    assert {"admit", "prefill", "decode", "finish"} <= kinds
+    # virtual clock: measured decode == modeled decode, ratio stays 1.0
+    assert b.decode_ratio == pytest.approx(1.0)
+    assert b.decode_ewma is not None and b.decode_ewma > 0.0
+    assert reg.counter("serving/admitted").value == 16
+    assert reg.gauge("serving/p50_s").value == pytest.approx(m["p50_s"])
+    assert reg.histogram("serving/prefill_chunk_s").count == \
+        m["prefill_chunks"]
+    # event windows are monotone on each lane
+    dec = [e for e in b.events if e[0] == "decode"]
+    for (_, ts0, te0, _), (_, ts1, _, _) in zip(dec, dec[1:]):
+        assert te0 <= ts1 + 1e-12
+
+
+def test_batcher_trace_off_by_default():
+    plan = _serve_plan()
+    b = run_virtual(plan, _reqs())
+    assert b.events is None
+    with pytest.raises(ValueError, match="enable_trace"):
+        serving_lanes(TraceBuilder(), b)
+
+
+def test_serving_lanes_from_events():
+    plan = _serve_plan()
+    b = run_virtual(plan, _reqs(), trace=True)
+    tb = TraceBuilder()
+    end = serving_lanes(tb, b)
+    doc = tb.to_doc()
+    assert end > 0.0
+    xs = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    assert len(xs) == sum(1 for e in b.events
+                          if e[0] in ("prefill", "decode"))
+
+
+def test_router_posterior_feedback():
+    plan = _serve_plan()
+    reqs = _reqs()
+    # prior: identical replicas, scale 1.0, same as the pure-model router
+    r0 = Router([plan, plan])
+    base = r0.replicas[0].service_time(reqs[0])
+    # a replica observed 2x slower than its roofline projects longer
+    r1 = Router([plan, plan], registry=MetricsRegistry())
+    for _ in range(64):
+        r1.observe_decode(0, measured_step_s=2.0 * plan.decode_step_s)
+    assert r1.replicas[0].decode_scale == pytest.approx(2.0, rel=0.01)
+    slow = r1.replicas[0].service_time(reqs[0])
+    assert slow > base
+    assert r1.registry.gauge("router/replica0/decode_scale").value == \
+        pytest.approx(r1.replicas[0].decode_scale)
+    # prefill term unchanged: only the decode term scales
+    assert slow - base == pytest.approx(
+        (r1.replicas[0].decode_scale - 1.0) * reqs[0].max_new
+        * plan.decode_step_time(plan.max_batch,
+                                len(reqs[0].prompt) + reqs[0].max_new / 2))
+
+
+def test_router_feed_from_batcher():
+    plan = _serve_plan()
+    b = run_virtual(plan, _reqs(), trace=True)
+    r = Router([plan])
+    scale = r.feed_from_batcher(0, b)
+    # virtual clock: ratio EWMA is 1.0, so the posterior equals the prior
+    assert scale == pytest.approx(1.0)
+    # and with no feedback at all, routing matches the pure-model router
+    r_a, r_b = Router([plan, plan]), Router([plan, plan])
+    for req in _reqs():
+        assert r_a.route(req) == r_b.route(req)
+
+
+# ---------------------------------------------------------------------------
+# measured quant codec rate (dryrun harvest -> irgraph pricing)
+# ---------------------------------------------------------------------------
+def test_measured_quant_rate_install_restore():
+    from repro.core import hw
+    from repro.core.meta import ParamMeta
+
+    metas = {"w": ParamMeta("w", (256, 64))}
+    nodes = irgraph.build_nodes(metas, DCFG, None)
+    base = irgraph.quant_overhead_s(nodes, "fp8")
+    assert base > 0.0
+    assert irgraph.quant_codec_rate() == hw.HBM_BANDWIDTH / 2.0
+    prev = irgraph.set_measured_quant_rate(hw.HBM_BANDWIDTH / 8.0)
+    try:
+        assert prev is None
+        # 4x slower codec -> 4x the modeled overhead
+        assert irgraph.quant_overhead_s(nodes, "fp8") == \
+            pytest.approx(4.0 * base)
+        # bf16 stays free regardless of the installed rate
+        assert irgraph.quant_overhead_s(nodes, "bf16") == 0.0
+    finally:
+        irgraph.set_measured_quant_rate(prev)
+    assert irgraph.quant_overhead_s(nodes, "fp8") == pytest.approx(base)
+
+
+def test_harvest_quant_timing_smoke():
+    from repro.launch.dryrun import harvest_quant_timing
+
+    q = harvest_quant_timing([1 << 14, 1 << 16], iters=2)
+    assert q is not None
+    assert q["rate_bytes_per_s"] > 0.0 and q["codec"] == "fp8"
+    assert 1 <= len(q["samples"]) <= 3
+    for s in q["samples"]:
+        assert s["t_us"] > 0.0 and s["bytes"] == 2 * s["n_elems"]
+
+
+# ---------------------------------------------------------------------------
+# trainer wire accounting
+# ---------------------------------------------------------------------------
+def test_step_wire_metrics(pp_plan):
+    from repro.train.train_step import step_wire_metrics
+
+    _, model, _, plan = pp_plan
+    w = step_wire_metrics(model, plan)
+    assert w["total_bytes"] > 0.0
+    assert w["by_precision"]
+    assert sum(w["by_precision"].values()) == pytest.approx(
+        w["total_bytes"])
