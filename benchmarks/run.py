@@ -22,8 +22,12 @@ hit rates; obs -> benchmarks/results/BENCH_obs.json: instrumentation
 overhead of the metrics registry vs a smoke step, per-arch
 modeled-vs-measured drift residuals for step time / peak memory / decode
 rate, and the trace invariant — non-overlapped comm-lane time equals the
-modeled exposed_s on the pp2 x dp2 x cp2 layout) so the perf trajectory is
-tracked across PRs.
+modeled exposed_s on the pp2 x dp2 x cp2 layout; profile ->
+benchmarks/results/BENCH_profile.json: the closed profile -> calibrate ->
+replan loop per arch — measured wall step, the analytic plan's
+modeled-step residual vs the calibrated replanned plan's (the calibrated
+|residual| must be strictly smaller), plus the modeled-vs-measured
+overlay trace invariant) so the perf trajectory is tracked across PRs.
 """
 
 import os
@@ -46,6 +50,7 @@ MEMORY_JSON = os.path.join(RESULTS_DIR, "BENCH_memory.json")
 CONTEXT_JSON = os.path.join(RESULTS_DIR, "BENCH_context.json")
 SERVING_JSON = os.path.join(RESULTS_DIR, "BENCH_serving.json")
 OBS_JSON = os.path.join(RESULTS_DIR, "BENCH_obs.json")
+PROFILE_JSON = os.path.join(RESULTS_DIR, "BENCH_profile.json")
 
 
 def main() -> None:
@@ -79,6 +84,8 @@ def main() -> None:
             json_path=SERVING_JSON if emit_json else None),
         "obs": lambda: T.obs_table(
             json_path=OBS_JSON if emit_json else None),
+        "profile": lambda: T.profile_table(
+            json_path=PROFILE_JSON if emit_json else None),
         "roofline": lambda: roofline.emit_csv(T.emit),
     }
     names = names or list(benches)

@@ -298,6 +298,37 @@ def observability_quickstart():
     print(reg.record_peak("quickstart", 2 * 2**30, 3 * 2**30))
     print(drift.report())
 
+    # --- profile -> calibrate -> replan (core/obs/profile + calibrate) ---
+    # When the drift monitor says the step-time promise is off, close the
+    # loop: `profile_step` MEASURES the executed schedule (per-segment
+    # compute sub-steps, per-bucket flat-buffer AG/RS, quant codec rates,
+    # the wall step), `replan` re-runs every planner (bucket partition +
+    # precision DP, auto:<GB> remat, microbatches, pp_schedule='auto')
+    # against the calibrated stats and measured rates.  Attaching the
+    # profile to plan_trace adds a PID 2 'measured' track aligned
+    # span-for-span under the modeled lanes — each span carries its
+    # rel_residual, so the overlay shows WHERE the model is wrong; the
+    # modeled lanes themselves are untouched.  The same loop runs inside
+    # the Trainer (`replan_threshold=` / --replan-threshold); trust
+    # --replan-apply once the logged delta is stable across a few replans
+    # — it restarts through a checkpoint, costing one save/restore +
+    # recompile.
+    from repro.core.obs import calibrated_step_time, profile_step, replan
+
+    prof = profile_step(model, plan, shape, steps=1)
+    new_plan, delta = replan(model, plan, shape, prof)
+    resid_before = abs(promised - prof.wall_step_s) / prof.wall_step_s
+    resid_after = abs(
+        calibrated_step_time(model, new_plan, shape, prof)
+        - prof.wall_step_s) / prof.wall_step_s
+    print(f"profile: wall {prof.wall_step_s*1e3:.1f}ms, "
+          f"step-time residual {resid_before:.2f} -> {resid_after:.2e} "
+          f"(replan changed={delta['changed']})")
+    tb2 = plan_trace(model, plan, shape, arch_cfg=cfg, profile=prof)
+    path2 = tempfile.mktemp(suffix=".overlay.trace.json")
+    tb2.save(path2)
+    print(f"overlay trace: {len(tb2.events)} events -> {path2}")
+
 
 VOCAB, D, H, SEQ, BATCH = 512, 64, 128, 32, 16
 

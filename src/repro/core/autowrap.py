@@ -296,6 +296,13 @@ def dp_buckets_precision(
     (quant_overhead_s).  Values are (exposure, quantized-bucket count)
     tuples compared lexicographically, so at equal exposure the plan
     prefers bf16 — quantization must buy modeled time to be chosen.
+
+    The lattice is `AUTO_PRECISIONS` (bf16 + the fp8 and int8 codec
+    modes).  fp8 and int8 share identical wire bytes, so analytically
+    they tie and strict-< improvement keeps fp8 (listed first); they
+    separate only when measured per-codec rates are installed
+    (`irgraph.set_measured_quant_rate`, fed by the step profiler /
+    `calibration` — core/obs), which reprices quant_overhead_s per codec.
     """
     n = len(nodes)
     if n == 0:

@@ -19,11 +19,19 @@ Dtype = Any  # jnp dtype-like
 
 # Wire-precision vocabulary for the bucket collectives (see
 # DistConfig.comm_precision) and the per-bucket lattice the auto_dp planner
-# searches over.  'fp8' (stateless SR reduce-scatter, no error feedback) is
-# a valid config value but not in the auto lattice: at equal wire bytes
-# 'fp8_ef' strictly dominates it on convergence.
-COMM_PRECISIONS = ("bf16", "fp8_ag", "fp8", "fp8_ef", "auto")
-AUTO_PRECISIONS = ("bf16", "fp8_ag", "fp8_ef")
+# searches over.  'fp8'/'int8' (stateless SR reduce-scatter, no error
+# feedback) are valid config values but not in the auto lattice: at equal
+# wire bytes the *_ef variants strictly dominate them on convergence.
+# int8 and fp8 occupy the same wire format (1 byte/elem + per-chunk f32
+# scales), so the planner can only separate them through a measured codec
+# rate (`irgraph.set_measured_quant_rate(rate, codec)`, harvested by
+# `launch/dryrun.harvest_quant_timing` / the step profiler); the int8
+# entries sit AFTER fp8 in the lattice, and every planner improves on
+# strict `<` only — with no measured rates installed the resolved plans
+# are unchanged.
+COMM_PRECISIONS = ("bf16", "fp8_ag", "fp8", "fp8_ef",
+                   "int8_ag", "int8", "int8_ef", "auto")
+AUTO_PRECISIONS = ("bf16", "fp8_ag", "fp8_ef", "int8_ag", "int8_ef")
 
 
 def precision_codecs(precision: str) -> tuple[str | None, str | None]:
@@ -35,6 +43,9 @@ def precision_codecs(precision: str) -> tuple[str | None, str | None]:
         "fp8_ag": ("fp8", None),
         "fp8": ("fp8", "fp8"),
         "fp8_ef": ("fp8", "fp8"),
+        "int8_ag": ("int8", None),
+        "int8": ("int8", "int8"),
+        "int8_ef": ("int8", "int8"),
     }[precision]
 
 
@@ -148,8 +159,12 @@ class DistConfig:
     #   'fp8_ef'  — 'fp8' plus a persistent per-shard error-feedback
     #               accumulator in the optimizer state compensating the
     #               reduced shard's wire format (optim/adamw.py)
+    #   'int8_ag' / 'int8' / 'int8_ef' — the same three modes on the int8
+    #               wire codec (identical wire bytes; chosen over fp8 only
+    #               when a measured codec rate makes it cheaper)
     #   'auto'    — the auto_dp planner picks per-BUCKET from
-    #               {bf16, fp8_ag, fp8_ef} jointly with the partition
+    #               AUTO_PRECISIONS (bf16 + the fp8/int8 *_ag and *_ef
+    #               variants) jointly with the partition
     comm_precision: str = "bf16"
 
     # Quantized KV cache: serving caches/pages store wire-codec values +
@@ -182,10 +197,10 @@ class DistConfig:
     @property
     def needs_ef(self) -> bool:
         """Whether the optimizer state carries the error-feedback
-        accumulator: 'fp8_ef' always, 'auto' too (the planner may assign
-        fp8_ef to any bucket, and the state tree's structure must not
-        depend on the plan)."""
-        return self.comm_precision in ("fp8_ef", "auto")
+        accumulator: the *_ef modes always, 'auto' too (the planner may
+        assign an _ef precision to any bucket, and the state tree's
+        structure must not depend on the plan)."""
+        return self.comm_precision in ("fp8_ef", "int8_ef", "auto")
 
     def axis_size(self, name: str) -> int:
         return self.mesh_shape[self.mesh_axes.index(name)]

@@ -56,13 +56,39 @@ class AxisBandwidth:
     alpha_s: float
 
 
+# Measured per-axis collective bandwidth, installed by the step profiler
+# (core/obs/profile.py) under the calibration context
+# (core/obs/calibrate.calibration).  Empty = the analytic constants above
+# stand.  Same install/restore idiom as irgraph's measured quant rate: the
+# setter returns the previous value so callers can save/restore.
+_MEASURED_AXIS_BW: dict[str, AxisBandwidth] = {}
+
+
+def set_measured_axis_bandwidth(axis_name: str,
+                                bw: AxisBandwidth | None
+                                ) -> AxisBandwidth | None:
+    """Install (or clear, with None) a measured bandwidth for one mesh
+    axis; returns the previous override so callers can restore it."""
+    prev = _MEASURED_AXIS_BW.get(axis_name)
+    if bw is None:
+        _MEASURED_AXIS_BW.pop(axis_name, None)
+    else:
+        _MEASURED_AXIS_BW[axis_name] = bw
+    return prev
+
+
 def axis_bandwidth(axis_name: str) -> AxisBandwidth:
     """Bandwidth model per mesh axis.
 
-    'pod' is the cross-pod DCN axis; everything else rides the ICI torus. A
-    ring collective on one torus dimension uses 2 of the 4 links (bidirectional
-    ring), so an axis gets 2 links' worth of bandwidth.
+    A measured override (installed by the profiler's calibration context)
+    wins; otherwise 'pod' is the cross-pod DCN axis and everything else
+    rides the ICI torus. A ring collective on one torus dimension uses 2 of
+    the 4 links (bidirectional ring), so an axis gets 2 links' worth of
+    bandwidth.
     """
+    meas = _MEASURED_AXIS_BW.get(axis_name)
+    if meas is not None:
+        return meas
     if axis_name == "pod":
         return AxisBandwidth(bytes_per_s=DCN_BW_PER_HOST, alpha_s=DCN_ALPHA_S)
     return AxisBandwidth(

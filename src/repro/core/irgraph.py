@@ -149,44 +149,51 @@ def rs_time(nodes: list[CommNode], cfg: DistConfig,
                                 cfg.axis_sizes, cfg.fsdp_axes)
 
 
-# Measured codec throughput (bytes of full-precision input per second),
-# installed by the dryrun's `harvest_quant_timing` — None means the
-# analytic 2x-HBM-pass estimate stands.
-_MEASURED_QUANT_RATE: float | None = None
+# Measured codec throughput (bytes of full-precision input per second)
+# PER WIRE CODEC, installed by the dryrun's `harvest_quant_timing` or the
+# step profiler's calibration context — a codec absent from the dict means
+# the analytic 2x-HBM-pass estimate stands.  fp8 and int8 have identical
+# wire bytes (`wire_bytes`), so a measured rate difference is the ONLY
+# thing that separates them in the planner lattice (AUTO_PRECISIONS).
+_MEASURED_QUANT_RATE: dict[str, float] = {}
 
 
-def set_measured_quant_rate(rate: float | None) -> float | None:
-    """Install (or clear, with None) the measured quant codec rate;
-    returns the previous value so callers can restore it."""
-    global _MEASURED_QUANT_RATE
-    prev = _MEASURED_QUANT_RATE
-    _MEASURED_QUANT_RATE = rate
+def set_measured_quant_rate(rate: float | None,
+                            codec: str = "fp8") -> float | None:
+    """Install (or clear, with None) the measured quant rate for one
+    codec; returns the previous value so callers can restore it."""
+    prev = _MEASURED_QUANT_RATE.get(codec)
+    if rate is None:
+        _MEASURED_QUANT_RATE.pop(codec, None)
+    else:
+        _MEASURED_QUANT_RATE[codec] = rate
     return prev
 
 
-def quant_codec_rate() -> float:
-    """Bytes of full-precision buffer one quantize round-trip processes
-    per second: the measured rate when the dryrun harvested one, else the
-    analytic prior (2 HBM passes per endpoint = HBM_BANDWIDTH / 2)."""
-    return _MEASURED_QUANT_RATE if _MEASURED_QUANT_RATE is not None \
-        else hw.HBM_BANDWIDTH / 2.0
+def quant_codec_rate(codec: str = "fp8") -> float:
+    """Bytes of full-precision buffer one quantize round-trip of `codec`
+    processes per second: the measured rate when one was harvested, else
+    the analytic prior (2 HBM passes per endpoint = HBM_BANDWIDTH / 2)."""
+    meas = _MEASURED_QUANT_RATE.get(codec)
+    return meas if meas is not None else hw.HBM_BANDWIDTH / 2.0
 
 
 def quant_overhead_s(nodes: list[CommNode], precision: str = "bf16") -> float:
     """Encode+decode cost of quantizing a bucket per quantized endpoint.
-    Priced by `quant_codec_rate()` — the analytic prior is one read + one
-    write of the full-precision buffer at HBM bandwidth (the Pallas
-    kernels are bandwidth-bound elementwise passes); the dryrun replaces
-    that with a measured per-bucket rate (`harvest_quant_timing`).  Zero
-    for bf16 — the planner's tie-break toward bf16 then falls out of the
-    exposure objective itself."""
+    Each endpoint is priced at ITS codec's `quant_codec_rate` — the
+    analytic prior is one read + one write of the full-precision buffer at
+    HBM bandwidth (the Pallas kernels are bandwidth-bound elementwise
+    passes); the dryrun/profiler replace that with measured per-codec
+    rates (`harvest_quant_timing`), which is what lets the auto lattice
+    separate int8 from fp8 at equal wire bytes.  Zero for bf16 — the
+    planner's tie-break toward bf16 then falls out of the exposure
+    objective itself."""
     ag_codec, rs_codec = precision_codecs(precision)
-    rate = quant_codec_rate()
     t = 0.0
     if ag_codec is not None:
-        t += sum(n.ag_bytes for n in nodes) / rate
+        t += sum(n.ag_bytes for n in nodes) / quant_codec_rate(ag_codec)
     if rs_codec is not None:
-        t += sum(n.rs_bytes for n in nodes) / rate
+        t += sum(n.rs_bytes for n in nodes) / quant_codec_rate(rs_codec)
     return t
 
 

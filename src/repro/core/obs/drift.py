@@ -9,7 +9,10 @@ subsystem whose model drifts worst — the validation hook a future
 `BENCH_obs.json` tracks per arch.
 
 Residuals are relative: (measured - modeled) / modeled.  Positive means
-reality is slower/bigger than the model promised.
+reality is slower/bigger than the model promised.  A record with
+``modeled == 0`` carries no usable relative residual — it is stored with
+the NaN sentinel and EXCLUDED from every aggregate (`mean_abs_rel`,
+`worst()`), so one degenerate promise cannot poison a channel forever.
 """
 
 from __future__ import annotations
@@ -38,13 +41,16 @@ class DriftMonitor:
 
     def record(self, channel: str, modeled: float, measured: float,
                step: int | None = None) -> float:
-        """Append one observation; returns the relative residual."""
-        rel = (measured - modeled) / modeled if modeled else math.inf
+        """Append one observation; returns the relative residual (NaN
+        sentinel when ``modeled == 0`` — undefined, excluded from every
+        aggregate)."""
+        rel = (measured - modeled) / modeled if modeled else math.nan
         self.records.setdefault(channel, []).append(
             {"step": step, "modeled": modeled, "measured": measured,
              "rel": rel})
         if self.registry is not None:
-            self.registry.gauge(f"drift/{channel}/rel_residual").set(rel)
+            if math.isfinite(rel):
+                self.registry.gauge(f"drift/{channel}/rel_residual").set(rel)
             self.registry.gauge(f"drift/{channel}/measured").set(measured)
             self.registry.gauge(f"drift/{channel}/modeled").set(modeled)
         return rel
@@ -54,16 +60,19 @@ class DriftMonitor:
 
     def summary(self) -> dict:
         """{channel: {n, modeled_mean, measured_mean, mean_abs_rel,
-        last_rel, subsystem}} — the per-arch record BENCH_obs carries."""
+        last_rel, subsystem}} — the per-arch record BENCH_obs carries.
+        Sentinel (non-finite) residuals are excluded from `mean_abs_rel`
+        and `last_rel`; a channel with ONLY sentinels reports 0.0."""
         out = {}
         for ch, rows in self.records.items():
-            rels = [r["rel"] for r in rows]
+            finite = [r["rel"] for r in rows if math.isfinite(r["rel"])]
             out[ch] = {
                 "n": len(rows),
                 "modeled_mean": sum(r["modeled"] for r in rows) / len(rows),
                 "measured_mean": sum(r["measured"] for r in rows) / len(rows),
-                "mean_abs_rel": sum(abs(x) for x in rels) / len(rels),
-                "last_rel": rels[-1],
+                "mean_abs_rel": sum(abs(x) for x in finite) / len(finite)
+                if finite else 0.0,
+                "last_rel": finite[-1] if finite else 0.0,
                 "subsystem": SUBSYSTEMS.get(ch, ch),
             }
         return out

@@ -51,6 +51,7 @@ TID_COMPUTE = 0
 TID_COMM = 1
 TID_RING_COMM = 2
 TID_RING_COMPUTE = 3
+TID_STRAGGLER = 4             # per-rank straggler gauge (measured pid)
 TID_PIPE_BASE = 10            # + stage rank
 
 SERVE_TID_ADMIT = 0
@@ -219,6 +220,104 @@ def emit_comm_lanes(tb: TraceBuilder, windows: list[dict],
 
 
 # ---------------------------------------------------------------------------
+# measured overlay: the profiler's numbers, span-for-span next to modeled
+# ---------------------------------------------------------------------------
+def measured_overlay(tb: TraceBuilder, windows: list[dict], profile,
+                     repeats: int = 1, t0: float = 0.0) -> dict:
+    """Second process (PID_MEASURED): the SAME cyclic walk as
+    `emit_comm_lanes`, with span durations resolved from a frozen
+    `MeasuredProfile` instead of the cost model — compute spans carry the
+    profiled segment scales, AG/RS spans the measured-over-modeled
+    collective ratio, quant spans the measured codec rate.  Every span is
+    aligned span-for-span with its modeled twin (same name, same
+    lane, same walk order) and carries {modeled_s, measured_s,
+    rel_residual} args, so "which window is the model wrong about" is a
+    trace click.  A per-rank straggler gauge rides its own lane.  Pure
+    host math over the frozen profile — two emissions are
+    byte-identical.  PID_MODELED is untouched, so `nonoverlapped_comm_s`
+    (the PR-9 exposed_s invariant) is preserved by construction."""
+    from repro.core import hw as _hw
+
+    tb.process(PID_MEASURED,
+               f"measured profile [{profile.meta.get('plan', '?')}]")
+    tb.thread(PID_MEASURED, TID_COMPUTE, "compute (measured)")
+    tb.thread(PID_MEASURED, TID_COMM, "collectives (measured)")
+
+    # per-pool compute scale: pool ids are segment indices when the plan
+    # is segmented (seg_names carries the index -> name order), bucket
+    # indices otherwise (a single unsegmented scale covers them all)
+    seg_names = list(profile.meta.get("seg_names", []))
+    scales = profile.seg_scales or {}
+
+    def comp_scale(pool) -> float:
+        if len(seg_names) == 1:
+            return scales.get(seg_names[0], 1.0)
+        if isinstance(pool, int) and 0 <= pool < len(seg_names):
+            return scales.get(seg_names[pool], 1.0)
+        return scales.get(str(pool), 1.0)
+
+    # one global measured/modeled ratio per collective kind, from the
+    # profiler's per-bucket rows (1.0 = unseen: measured == modeled)
+    def span_ratio(cat: str) -> float:
+        meas = sum(s["dur_s"] for s in profile.spans
+                   if s.get("cat") == cat and s.get("modeled_s"))
+        mod = sum(s["modeled_s"] for s in profile.spans
+                  if s.get("cat") == cat and s.get("modeled_s"))
+        return meas / mod if mod > 0.0 and meas > 0.0 else 1.0
+
+    ag_ratio = span_ratio("all_gather")
+    rs_ratio = span_ratio("reduce_scatter")
+    q_rates = profile.quant_rates or {}
+    q_ratio = ((_hw.HBM_BANDWIDTH / 2.0)
+               / (sum(q_rates.values()) / len(q_rates))) if q_rates else 1.0
+
+    def emit(tid, name, cat, t, modeled, measured, args):
+        rel = (measured - modeled) / modeled if modeled else 0.0
+        tb.span(PID_MEASURED, tid, name, t, measured, cat=cat,
+                args={**args, "modeled_s": modeled, "measured_s": measured,
+                      "rel_residual": rel})
+
+    k = len(windows)
+    t = t0
+    for rep in range(repeats):
+        for i in range(k):
+            w, prev = windows[i], windows[(i - 1) % k]
+            comp_m = prev["comp_s"] * comp_scale(prev["pool"])
+            ag_m = w["ag_s"] * ag_ratio
+            rs_m = prev["rs_s"] * rs_ratio
+            oh_m = w["overhead_s"] * q_ratio
+            if prev["comp_s"] > 0.0:
+                emit(TID_COMPUTE, f"compute[pool {prev['pool']}]",
+                     "compute", t, prev["comp_s"], comp_m,
+                     {"layer": rep, "pool": prev["pool"]})
+            if w["ag_s"] > 0.0:
+                emit(TID_COMM, f"AG[pool {w['pool']}]", "all_gather", t,
+                     w["ag_s"], ag_m, {"layer": rep, "pool": w["pool"]})
+            if prev["rs_s"] > 0.0:
+                emit(TID_COMM, f"RS[pool {prev['pool']}]",
+                     "reduce_scatter", t + ag_m, prev["rs_s"], rs_m,
+                     {"layer": rep, "pool": prev["pool"]})
+            adv = max(comp_m, ag_m + rs_m)
+            if w["overhead_s"] > 0.0:
+                emit(TID_COMM, f"quant[pool {w['pool']}]", "quant",
+                     t + adv, w["overhead_s"], oh_m, {"layer": rep})
+            t += adv + oh_m
+
+    ranks = sorted((profile.rank_step_s or {}).items())
+    if ranks:
+        tb.thread(PID_MEASURED, TID_STRAGGLER, "straggler (per rank)")
+        mean = sum(v for _, v in ranks) / len(ranks)
+        for r, v in ranks:
+            tb.instant(PID_MEASURED, TID_STRAGGLER, f"rank {r} step", t0,
+                       cat="straggler",
+                       args={"rank": r, "step_s": v,
+                             "rel_vs_mean": (v - mean) / mean
+                             if mean else 0.0})
+    return {"end_s": t, "ag_ratio": ag_ratio, "rs_ratio": rs_ratio,
+            "quant_ratio": q_ratio}
+
+
+# ---------------------------------------------------------------------------
 # pipeline lanes: one lane per stage rank, spans from the slot tables
 # ---------------------------------------------------------------------------
 def pipeline_lanes(tb: TraceBuilder, n_micro: int, n_stages: int,
@@ -374,13 +473,15 @@ def plan_comm_windows(model, plan, shape) -> list[dict]:
 
 
 def plan_trace(model, plan, shape, *, repeats: int = 1, batcher=None,
-               arch_cfg=None, tb: TraceBuilder | None = None
-               ) -> TraceBuilder:
+               arch_cfg=None, profile=None,
+               tb: TraceBuilder | None = None) -> TraceBuilder:
     """Full modeled timeline of a frozen `ParallelPlan`: collective
     hiding windows (`repeats` steady-state layers), the pipeline slot
     tables when the plan is pipelined, the ring-attention hops when the
     plan has a ctx axis (needs `arch_cfg` for head geometry), and —
-    optionally — a traced serving batcher's lanes.  Pure host math:
+    optionally — a traced serving batcher's lanes.  Pass a frozen
+    `MeasuredProfile` as `profile` to also render the measured overlay
+    (`measured_overlay`) under PID_MEASURED.  Pure host math:
     deterministic, no devices touched."""
     tb = tb or TraceBuilder()
     dcfg = plan.dcfg
@@ -390,6 +491,8 @@ def plan_trace(model, plan, shape, *, repeats: int = 1, batcher=None,
 
     windows = plan_comm_windows(model, plan, shape)
     layout = emit_comm_lanes(tb, windows, repeats=repeats)
+    if profile is not None:
+        measured_overlay(tb, windows, profile, repeats=repeats)
 
     if dcfg.cp_size > 1 and arch_cfg is not None:
         from repro.core.context import ring_cost

@@ -752,6 +752,7 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
     memory_rec = None
     ring_rec = None
     mem_plan = None
+    step_time_rec = None
     # bucket/memory plans (and thus harvest records) only exist on the
     # training stack — serving paths run prefill/decode without apply_stack
     if shape0.kind == "train":
@@ -796,6 +797,33 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
             }
             if dcfg.remat != mem_plan.policy_spec:
                 dcfg = dcfg.with_(remat=mem_plan.policy_spec)
+            # modeled step-time promise of the cell, analytic next to
+            # calibrated: the analytic row prices the pure roofline
+            # priors; the calibrated row re-plans with the harvested
+            # measured BlockStats installed (equal when no harvest ran)
+            try:
+                from repro.core.api import plan_parallel
+                from repro.core.obs import modeled_step_time
+                saved_ms = getattr(model0, "measured_stats", None)
+                try:
+                    model0.measured_stats = None
+                    p_a = plan_parallel(model0, dcfg_plan, shape0)
+                    t_an = modeled_step_time(model0, p_a, shape0)
+                    t_cal = t_an
+                    if measured is not None:
+                        model0.measured_stats = measured
+                        p_c = plan_parallel(model0, dcfg_plan, shape0)
+                        t_cal = modeled_step_time(model0, p_c, shape0)
+                finally:
+                    model0.measured_stats = saved_ms
+                if t_an is not None:
+                    step_time_rec = {
+                        "step_time_us": t_an * 1e6,
+                        "step_time_calibrated_us": t_cal * 1e6,
+                    }
+            except Exception as e:  # keep the cell alive on model gaps
+                print(f"[step] modeled step time unavailable: {e}",
+                      flush=True)
             if dcfg.cp_size > 1:
                 # modeled ring-attention schedule of the cell (per layer):
                 # hop sizes/compute and the exposed exchange time
@@ -861,6 +889,8 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
                   f"{rec['ring']['exposed_us']:.1f}us "
                   f"(live hops {ring_rec['live_hops']}/{dcfg.cp_size})",
                   flush=True)
+    if step_time_rec is not None:
+        rec.update(step_time_rec)
     if autowrap_rec is not None:
         rec["autowrap"] = autowrap_rec
     if memory_rec is not None:
@@ -913,7 +943,8 @@ def main():
                          "cp-capable archs only)")
     ap.add_argument("--comm-precision", default=None,
                     help="override dcfg.comm_precision: bf16 | fp8_ag | "
-                         "fp8 | fp8_ef | auto (per-bucket planner choice)")
+                         "fp8 | fp8_ef | int8_ag | int8 | int8_ef | auto "
+                         "(per-bucket planner choice)")
     ap.add_argument("--microbatch", type=int, default=None,
                     help="override the simulator-picked gradient-"
                          "accumulation count")

@@ -78,13 +78,15 @@ def main():
                          "under --pp use --pp-microbatches)")
     ap.add_argument("--bucket-mode", default="block")
     ap.add_argument("--comm-precision", default="bf16",
-                    choices=("bf16", "fp8_ag", "fp8", "fp8_ef", "auto"),
+                    choices=("bf16", "fp8_ag", "fp8", "fp8_ef",
+                             "int8_ag", "int8", "int8_ef", "auto"),
                     help="collective wire precision (kernels/quant): bf16 "
                          "is bit-exact; fp8_ag quantizes param all-gathers "
                          "only; fp8 adds stochastically-rounded grad "
                          "reduce-scatters; fp8_ef adds the error-feedback "
-                         "accumulator; 'auto' lets the bucket planner pick "
-                         "per bucket")
+                         "accumulator; int8_* are the same modes on the "
+                         "int8 codec; 'auto' lets the bucket planner pick "
+                         "per bucket from the full lattice")
     ap.add_argument("--no-reorder", action="store_true")
     ap.add_argument("--grad-compression", action="store_true")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
@@ -97,6 +99,21 @@ def main():
                     help="write a Chrome/Perfetto trace of the executed "
                          "plan's modeled timeline here after the run "
                          "(core/obs.plan_trace)")
+    ap.add_argument("--profile-out", default=None,
+                    help="after the run, profile the executed schedule "
+                         "(core/obs.profile_step), write the frozen "
+                         "MeasuredProfile JSON here plus a modeled-vs-"
+                         "measured overlay trace next to it "
+                         "(<profile-out>.trace.json)")
+    ap.add_argument("--replan-threshold", type=float, default=None,
+                    help="arm profile-guided replanning: mean |rel| "
+                         "step-time drift above this for --replan-patience "
+                         "consecutive steps triggers profile_step + replan "
+                         "(core/obs)")
+    ap.add_argument("--replan-patience", type=int, default=3)
+    ap.add_argument("--replan-apply", action="store_true",
+                    help="restart the loop onto the replanned ParallelPlan "
+                         "(default: log the delta only)")
     args = ap.parse_args()
 
     mesh_shape, mesh_axes = mesh_from_flags(args.mesh, args.pp, args.cp)
@@ -140,19 +157,43 @@ def main():
     shape = ShapeConfig("train", args.seq, args.batch, "train")
     tcfg = TrainerConfig(total_steps=args.steps, ckpt_every=args.steps,
                          log_every=5, warmup=10, ckpt_dir=args.ckpt_dir,
-                         metrics_jsonl=args.metrics_jsonl)
+                         metrics_jsonl=args.metrics_jsonl,
+                         replan_threshold=args.replan_threshold,
+                         replan_patience=args.replan_patience,
+                         replan_apply=args.replan_apply)
     trainer = Trainer(model, dcfg, shape, AdamWConfig(lr=args.lr), tcfg)
     print(f"plan: {trainer.plan.describe()}")
     _, _, hist = trainer.run()
     print(f"done: loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}")
     if trainer.drift.records:
         print(trainer.drift.report())
-    if args.trace_out:
+    if trainer.replans:
+        last = trainer.replans[-1]
+        print(f"replan: changed={last['changed']} "
+              f"applied={last['applied']} gain={last['modeled_gain_s']}")
+    profile = trainer.profile
+    if args.profile_out:
+        from repro.core.obs import profile_step
+        if profile is None:
+            # reuse the measured wall from the run so the profiler only
+            # has to time segments/collectives, not re-drive full steps
+            rows = trainer.drift.records.get("step_time", [])
+            wall = rows[-1]["measured"] if rows else None
+            profile = profile_step(model, trainer.plan, shape,
+                                   wall_step_s=wall)
+        profile.save(args.profile_out)
+        print(f"profile: {args.profile_out} "
+              f"(wall {profile.wall_step_s:.4f}s, "
+              f"{len(profile.spans)} spans)")
+    if args.trace_out or (args.profile_out and profile is not None):
         from repro.core.obs import plan_trace
-        tb = plan_trace(model, trainer.plan, shape, arch_cfg=cfg)
-        tb.save(args.trace_out)
-        print(f"trace: {args.trace_out} "
-              f"({len(tb.events)} events; open in Perfetto)")
+        out = args.trace_out or f"{args.profile_out}.trace.json"
+        tb = plan_trace(model, trainer.plan, shape, arch_cfg=cfg,
+                        profile=profile)
+        tb.save(out)
+        print(f"trace: {out} ({len(tb.events)} events; "
+              f"{'overlay' if profile is not None else 'modeled only'}; "
+              f"open in Perfetto)")
 
 
 if __name__ == "__main__":

@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import logging
+import math
 
 import jax
 import numpy as np
@@ -50,6 +51,15 @@ class TrainerConfig:
                                       # tests and preemption drills)
     metrics_jsonl: str | None = None  # append a registry snapshot here at
                                       # every log interval (core/obs)
+    # profile-guided replanning (core/obs/profile + calibrate): when the
+    # step_time drift |rel| stays above replan_threshold for
+    # replan_patience consecutive steps, harvest a MeasuredProfile and
+    # re-run the planners under calibration.  replan_apply additionally
+    # restarts the loop onto the new plan through the checkpoint path.
+    replan_threshold: float | None = None
+    replan_patience: int = 3
+    replan_apply: bool = False
+    replan_profile_steps: int = 2
 
 
 class Trainer:
@@ -77,6 +87,12 @@ class Trainer:
         self.step_fn = self.par.train_step(ocfg, sched)
         self.history: list[dict] = []
         self.restarts = 0
+        # profile-guided replanning state: drift streak, the latest
+        # harvested MeasuredProfile, and one delta record per replan
+        self._drift_streak = 0
+        self._replan_pending = False
+        self.profile = None
+        self.replans: list[dict] = []
         # observability: one registry + drift monitor per trainer; the
         # plan's own step-time promise and per-step wire bytes are frozen
         # up front so the run loop only records measurements
@@ -185,8 +201,77 @@ class Trainer:
             for prec, nbytes in self._wire["by_precision"].items():
                 r.counter(f"train/wire_bytes/{prec}").inc(nbytes)
         if self._modeled_step_s is not None:
-            self.drift.record("step_time", self._modeled_step_s, dt,
-                              step=step)
+            rel = self.drift.record("step_time", self._modeled_step_s, dt,
+                                    step=step)
+            if self.tcfg.replan_threshold is not None \
+                    and math.isfinite(rel):
+                if abs(rel) > self.tcfg.replan_threshold:
+                    self._drift_streak += 1
+                    if self._drift_streak >= self.tcfg.replan_patience:
+                        self._replan_pending = True
+                else:
+                    self._drift_streak = 0
+
+    def _replan(self, step, storage, opt_state):
+        """Profile-guided replanning: harvest a `MeasuredProfile` against
+        the drifting plan, re-run the planners under calibration, log the
+        delta, and — when `replan_apply` — restart the loop onto the new
+        plan through the checkpoint path (the same topology-independent
+        restart the failure path uses).  Returns the (possibly restaged)
+        train state."""
+        from repro.core.obs import calibrated_step_time, profile_step
+        from repro.core.obs import replan as obs_replan
+
+        self._replan_pending = False
+        self._drift_streak = 0
+        rows = self.drift.records.get("step_time", [])
+        recent = [r["measured"]
+                  for r in rows[-max(1, self.tcfg.replan_patience):]]
+        wall = sum(recent) / len(recent) if recent else None
+        try:
+            self.profile = profile_step(
+                self.model, self.plan, self.shape,
+                steps=self.tcfg.replan_profile_steps, wall_step_s=wall)
+            new_plan, delta = obs_replan(self.model, self.plan, self.shape,
+                                         self.profile)
+        except Exception:
+            log.exception("replan failed at step %d; keeping current plan",
+                          step)
+            return storage, opt_state
+        delta["step"] = step
+        delta["applied"] = False
+        self.replans.append(delta)
+        r = self.registry
+        r.counter("replan/count").inc()
+        for k in ("modeled_step_before_s", "modeled_step_after_s"):
+            if delta[k] is not None:
+                r.gauge(f"replan/{k}").set(delta[k])
+        log.info("replan at step %d: changed=%s gain=%s fields=%s", step,
+                 delta["changed"], delta["modeled_gain_s"],
+                 sorted(delta["fields"]))
+        if not (self.tcfg.replan_apply and delta["changed"]):
+            return storage, opt_state
+        # restart onto the new plan: checkpoints store the plain layout,
+        # so save, rebuild the parallelized bundle, and restore staged
+        self._save(step, storage, opt_state)
+        self.ckpt.wait()
+        sched = default_schedule(self.ocfg, self.tcfg.total_steps,
+                                 self.tcfg.warmup)
+        self.par = parallelize(self.model, self.dcfg, self.shape,
+                               plan=new_plan)
+        self.plan = self.par.plan
+        self.mesh = self.par.mesh
+        self.step_fn = self.par.train_step(self.ocfg, sched)
+        try:
+            self._modeled_step_s = calibrated_step_time(
+                self.model, self.plan, self.shape, self.profile)
+        except Exception:
+            self._modeled_step_s = None
+        storage, opt_state, _ = self._init_or_restore(
+            jax.random.PRNGKey(self._seed))
+        delta["applied"] = True
+        log.info("replan applied at step %d: %s", step, self.plan.describe())
+        return storage, opt_state
 
     def run(self, key=None):
         key = key if key is not None else jax.random.PRNGKey(0)
@@ -213,6 +298,8 @@ class Trainer:
                 log.warning("straggler escalation at step %d", step)
             step += 1
             self._record_step(step, t.dt, metrics)
+            if self._replan_pending:
+                storage, opt_state = self._replan(step, storage, opt_state)
             if step % self.tcfg.log_every == 0 or step == 1:
                 self.history.append(
                     {"step": step, "dt": t.dt,

@@ -50,6 +50,12 @@ def pytest_configure(config):
         "obs: telemetry — trace emitter, metrics registry, drift monitor "
         "(tests/test_obs.py; run `-m obs` after core/obs or "
         "instrumentation changes)")
+    config.addinivalue_line(
+        "markers",
+        "profile: profile-guided replanning — step profiler, calibrated "
+        "BlockStats, measured trace overlay, replan loop "
+        "(tests/test_profile.py; run `-m profile` after core/obs/profile "
+        "or calibrate changes)")
 
 
 def pytest_collection_modifyitems(config, items):

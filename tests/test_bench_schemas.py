@@ -172,6 +172,27 @@ def _check_obs_v1(doc):
     assert tr["rel_err"] <= tr["tol"] <= 0.01
 
 
+def _check_profile_v1(doc):
+    import math
+
+    assert len(doc["archs"]) >= 3
+    for arch, rec in doc["archs"].items():
+        for k in ("wall_step_s", "modeled_before_s", "modeled_after_s",
+                  "resid_before", "resid_after", "closure_factor"):
+            assert math.isfinite(rec[k]), (arch, k)
+        assert rec["wall_step_s"] > 0, arch
+        assert rec["n_spans"] > 0, arch
+        # the closed-loop claim: the calibrated, replanned step-time
+        # promise lands STRICTLY closer to the measured wall step than
+        # the analytic prior did
+        assert 0.0 <= rec["resid_after"] < rec["resid_before"], arch
+        tr = rec["trace"]
+        assert tr["n_events"] > 0, arch
+        # the overlay must not disturb the modeled comm lanes: the PR-9
+        # invariant (non-overlapped comm time == exposed_s) still holds
+        assert tr["rel_err"] <= doc["trace_tol"] <= 0.01, arch
+
+
 VALIDATORS = {
     "bench_overlap_v2": _check_overlap_v2,
     "bench_pipeline_v2": _check_pipeline_v2,
@@ -179,6 +200,7 @@ VALIDATORS = {
     "bench_context_v1": _check_context_v1,
     "bench_serving_v1": _check_serving_v1,
     "bench_obs_v1": _check_obs_v1,
+    "bench_profile_v1": _check_profile_v1,
 }
 
 

@@ -126,6 +126,29 @@ def test_drift_monitor_empty():
     assert d.report() == "drift: no observations recorded"
 
 
+def test_drift_monitor_zero_modeled_sentinel():
+    """Regression: a record with modeled == 0 used to produce an inf
+    residual that poisoned mean_abs_rel/worst() forever.  It must come
+    back as the NaN sentinel and be EXCLUDED from every aggregate."""
+    reg = MetricsRegistry()
+    d = DriftMonitor(reg)
+    rel = d.record("step_time", 0.0, 1.0)
+    assert math.isnan(rel)
+    d.record("step_time", 1.0, 1.2)
+    d.record("bubble", 0.0, 0.5)          # channel with ONLY sentinels
+    s = d.summary()
+    assert s["step_time"]["n"] == 2       # sentinel rows still counted
+    assert s["step_time"]["mean_abs_rel"] == pytest.approx(0.2)
+    assert s["step_time"]["last_rel"] == pytest.approx(0.2)
+    assert s["bubble"]["mean_abs_rel"] == 0.0
+    assert d.worst() == "step_time"       # finite drift outranks sentinels
+    assert math.isfinite(s["step_time"]["mean_abs_rel"])
+    # the registry never sees the sentinel residual
+    assert "drift/bubble/rel_residual" not in reg
+    rep = d.report()
+    assert "inf" not in rep and "nan" not in rep
+
+
 def test_modeled_step_time_positive(pp_plan):
     _, model, shape, plan = pp_plan
     step_s = modeled_step_time(model, plan, shape)
